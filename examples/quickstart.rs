@@ -1,0 +1,69 @@
+//! Quickstart: load the AOT artifacts, solve one equilibrium with both
+//! solvers, and classify a batch — the 60-second tour of the public API.
+//!
+//! Run after `make artifacts`:
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use deq_anderson::data;
+use deq_anderson::infer;
+use deq_anderson::model::ParamSet;
+use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::solver::{self, SolveOptions, SolverKind};
+
+fn main() -> Result<()> {
+    // 1. The engine loads `artifacts/manifest.json` and lazily compiles
+    //    the HLO-text artifacts on the PJRT CPU client.
+    let engine = Engine::new("artifacts")?;
+    let m = engine.manifest();
+    println!(
+        "model: preset={} params={} latent={}x{}x{} window={}",
+        m.model.preset,
+        m.model.param_count,
+        m.model.latent_hw,
+        m.model.latent_hw,
+        m.model.channels,
+        m.solver.window
+    );
+
+    // 2. Parameters: the deterministic init checkpoint written by aot.py.
+    let params = ParamSet::load_init(m)?;
+
+    // 3. Data: synthetic CIFAR10-like images (drop-in real CIFAR-10 if
+    //    data/cifar-10-batches-bin exists).
+    let (train, _test, name) = data::load_auto(32, 8, 0);
+    println!("dataset: {name} ({} samples)", train.len());
+
+    // 4. Encode a batch and solve the equilibrium z* = f(z*, x) with both
+    //    solvers — the paper's core comparison.
+    let batch = 8;
+    let idx: Vec<usize> = (0..batch).collect();
+    let (imgs, labels) = train.gather(&idx);
+    let x_img = HostTensor::f32(m.model.image_shape(batch), imgs.clone())?;
+    let mut enc_in = params.tensors.clone();
+    enc_in.push(x_img);
+    let x_feat = engine.execute("encode", batch, &enc_in)?.remove(0);
+
+    for kind in [SolverKind::Forward, SolverKind::Anderson] {
+        let opts = SolveOptions::from_manifest(&engine, kind);
+        let rep = solver::solve(&engine, &params.tensors, &x_feat, &opts)?;
+        println!(
+            "{:<9} iters={:<3} fevals={:<3} residual={:.2e} time={:?} converged={}",
+            kind.name(),
+            rep.iters(),
+            rep.fevals(),
+            rep.final_residual(),
+            rep.total_time(),
+            rep.converged
+        );
+    }
+
+    // 5. One-call inference (encode → solve → classify, bucket-padded).
+    let opts = SolveOptions::from_manifest(&engine, SolverKind::Anderson);
+    let result = infer::infer(&engine, &params, &imgs, batch, &opts)?;
+    println!("predictions: {:?}", result.predictions);
+    println!("labels:      {labels:?}");
+    println!("(untrained params — accuracy is chance; see examples/train_cifar.rs)");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Serving demo: start the dynamic-batching router in-process, fire a
+//! closed-loop load of concurrent clients at it, and report latency /
+//! throughput / batch-fill — the serving-side view of the paper's
+//! "running inferences faster" claim.
+//!
+//!     cargo run --release --example serve_batch -- \
+//!         [--clients 8] [--requests 64] [--solver anderson] [--max-wait-ms 10]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use deq_anderson::data;
+use deq_anderson::metrics::Stats;
+use deq_anderson::model::ParamSet;
+use deq_anderson::runtime::Engine;
+use deq_anderson::server::{Router, RouterConfig};
+use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let clients = args.usize_or("clients", 8);
+    let requests = args.usize_or("requests", 64);
+    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
+        .expect("bad --solver");
+
+    let engine = Arc::new(Engine::new(args.str_or("artifacts", "artifacts"))?);
+    let params = Arc::new(ParamSet::load_init(engine.manifest())?);
+    let cfg = RouterConfig {
+        solver: SolveOptions::from_manifest(&engine, kind),
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
+        queue_cap: 4096,
+    };
+    // Warm the compiled buckets so latency numbers are steady-state.
+    let buckets = engine.manifest().batches_for("encode");
+    let warm: Vec<(&str, usize)> = buckets
+        .iter()
+        .flat_map(|&b| {
+            [("encode", b), ("cell_step", b), ("anderson_update", b), ("classify", b)]
+        })
+        .collect();
+    engine.warmup(&warm)?;
+
+    let (dataset, _, ds) = data::load_auto(64, 8, 1);
+    let dataset = Arc::new(dataset);
+    let router = Arc::new(Router::start(engine, params, cfg)?);
+    println!(
+        "serve_batch: dataset={ds} solver={} clients={clients} requests={requests} buckets={buckets:?}",
+        kind.name()
+    );
+
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let router = router.clone();
+            let dataset = dataset.clone();
+            std::thread::spawn(move || -> Vec<(Duration, usize)> {
+                let mut out = Vec::new();
+                for r in 0..per_client {
+                    let img = dataset.image((c * per_client + r) % dataset.len());
+                    match router.infer_blocking(img.to_vec()) {
+                        Ok(resp) => out.push((resp.latency, resp.batch_size)),
+                        Err(e) => eprintln!("client {c}: {e}"),
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    let mut lat = Stats::default();
+    let mut fill = Stats::default();
+    let mut served = 0usize;
+    for h in handles {
+        for (l, b) in h.join().expect("client thread") {
+            lat.push_duration(l);
+            fill.push(b as f64);
+            served += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "served {served} requests in {:.2}s → {:.1} req/s",
+        elapsed.as_secs_f64(),
+        served as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "latency: p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms (mean {:.1}ms)",
+        lat.percentile(50.0) * 1e3,
+        lat.percentile(95.0) * 1e3,
+        lat.percentile(99.0) * 1e3,
+        lat.mean() * 1e3
+    );
+    println!("mean batch size ridden: {:.2}", fill.mean());
+    println!("router metrics: {}", router.metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end training driver (the repository's E2E validation run):
+//! trains the DEQ on the CIFAR10-like dataset with BOTH solvers from the
+//! same initialization, logs the loss/accuracy curves, reports the
+//! Anderson speedup, and saves checkpoints.
+//!
+//!     cargo run --release --example train_cifar -- \
+//!         [--epochs 8] [--train-size 512] [--test-size 160] [--seed 0]
+//!
+//! Results are summarized in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+
+use deq_anderson::data;
+use deq_anderson::metrics::{fmt_duration, Csv};
+use deq_anderson::model::ParamSet;
+use deq_anderson::runtime::Engine;
+use deq_anderson::solver::SolverKind;
+use deq_anderson::train::{default_config, Trainer};
+use deq_anderson::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let epochs = args.usize_or("epochs", 8);
+    let train_size = args.usize_or("train-size", 512);
+    let test_size = args.usize_or("test-size", 160);
+    let seed = args.u64_or("seed", 0);
+
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let (train, test, ds) = data::load_auto(train_size, test_size, seed);
+    let init = ParamSet::load_init(engine.manifest())?;
+    println!(
+        "e2e training: dataset={ds} train={} test={} epochs={epochs} params={}",
+        train.len(),
+        test.len(),
+        engine.manifest().model.param_count
+    );
+
+    let mut csv = Csv::new(&[
+        "solver", "epoch", "loss", "train_acc", "test_acc", "fevals_per_batch",
+        "cumulative_time_s",
+    ]);
+    let mut summary = Vec::new();
+    for kind in [SolverKind::Anderson, SolverKind::Forward] {
+        println!("\n--- solver: {} ---", kind.name());
+        let mut cfg = default_config(&engine, kind, epochs);
+        cfg.seed = seed;
+        cfg.verbose = true;
+        let trainer = Trainer::new(&engine, cfg)?;
+        let rep = trainer.train(&init, &train, &test)?;
+        for e in &rep.epochs {
+            csv.row(&[
+                kind.name().to_string(),
+                e.epoch.to_string(),
+                format!("{:.4}", e.train_loss),
+                format!("{:.4}", e.train_acc),
+                e.test_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                format!("{:.1}", e.solver_fevals),
+                format!("{:.2}", e.cumulative_time.as_secs_f64()),
+            ]);
+        }
+        let ckpt = format!("results/ckpt_{}.bin", kind.name());
+        rep.params.save(std::path::Path::new(&ckpt))?;
+        println!(
+            "{}: {} | best test acc {:.1}% | checkpoint {ckpt}",
+            kind.name(),
+            fmt_duration(rep.total_time),
+            100.0 * rep.best_test_acc().unwrap_or(0.0)
+        );
+        summary.push((kind, rep));
+    }
+
+    // Speedup: time for Anderson to match forward's final train accuracy.
+    let (a, f) = (&summary[0].1, &summary[1].1);
+    if let Some(t) = a.time_to_train_acc(f.final_train_acc()) {
+        println!(
+            "\nanderson reached forward's final train acc ({:.1}%) in {} \
+             vs forward's {} → {:.1}x speedup",
+            100.0 * f.final_train_acc(),
+            fmt_duration(t),
+            fmt_duration(f.total_time),
+            f.total_time.as_secs_f64() / t.as_secs_f64().max(1e-9)
+        );
+    }
+    csv.save("results/e2e_train.csv")?;
+    println!("wrote results/e2e_train.csv");
+    Ok(())
+}

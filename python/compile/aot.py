@@ -1,0 +1,209 @@
+"""AOT compile path: jax → StableHLO → XlaComputation → **HLO text**.
+
+Run once by ``make artifacts``; never imported at runtime.  Emits
+
+  artifacts/<entry>_b<batch>.hlo.txt   one HLO-text module per entry point
+                                       and batch bucket
+  artifacts/manifest.json              self-describing registry: model /
+                                       solver / train config, canonical
+                                       parameter layout, and input/output
+                                       specs for every artifact
+  artifacts/init_params.bin            deterministic He-initialized f32-LE
+                                       flat checkpoint (manifest order)
+
+Interchange is HLO *text*, NOT ``lowered.compile().serialize()`` — the
+Rust side links xla_extension 0.5.1, which rejects the 64-bit instruction
+ids jax ≥ 0.5 emits in serialized HloModuleProto.  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import BuildConfig, get_preset
+
+DTYPES = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, shape: Tuple[int, ...], dtype: str = "float32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _sds(spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        tuple(spec["shape"]), jnp.dtype(spec["dtype"])
+    )
+
+
+def entry_input_specs(build: BuildConfig, entry: str, b: int) -> List[dict]:
+    """Positional input spec for one (entry, batch) artifact."""
+    cfg = build.model
+    hw, ic = cfg.image_hw, cfg.image_channels
+    hf, c = cfg.latent_hw, cfg.channels
+    m, n = build.solver.window, cfg.latent_dim
+    params = [_spec(nm, sh) for nm, sh in cfg.param_shapes()]
+    mom = [_spec("mom_" + nm, sh) for nm, sh in cfg.param_shapes()]
+    img = _spec("x_img", (b, hw, hw, ic))
+    z = _spec("z", (b, hf, hf, c))
+    xf = _spec("x_feat", (b, hf, hf, c))
+    y = _spec("y", (b,), "int32")
+
+    if entry == "encode":
+        return params + [img]
+    if entry in ("cell_step", "forward_solve_k"):
+        return params + [z, xf]
+    if entry == "anderson_update":
+        return [
+            _spec("xhist", (b, m, n)),
+            _spec("fhist", (b, m, n)),
+            _spec("mask", (m,)),
+        ]
+    if entry == "classify":
+        return params + [z]
+    if entry in ("train_update", "train_update_neumann"):
+        return params + mom + [_spec("z_star", (b, hf, hf, c)), img, y]
+    if entry == "explicit_train":
+        return params + mom + [img, y]
+    if entry == "explicit_infer":
+        return params + [img]
+    raise KeyError(entry)
+
+
+def entry_batches(build: BuildConfig, entry: str) -> Sequence[int]:
+    if entry in ("train_update", "train_update_neumann", "explicit_train"):
+        return (build.train_batch,)
+    batches = set(build.infer_batches) | {build.train_batch}
+    return tuple(sorted(batches))
+
+
+def build_artifacts(
+    build: BuildConfig, out_dir: str, *, entries: Sequence[str] | None = None,
+    verbose: bool = True,
+) -> dict:
+    """Lower every entry point and write the manifest. Returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    fns = M.make_entry_points(build)
+    entries = list(entries or fns.keys())
+
+    manifest: Dict = {
+        "format_version": 1,
+        "preset": build.model.name,
+        "model": dataclasses.asdict(build.model),
+        "solver": dataclasses.asdict(build.solver),
+        "train": dataclasses.asdict(build.train),
+        "param_count": build.model.param_count(),
+        "params": [
+            _spec(nm, sh) for nm, sh in build.model.param_shapes()
+        ],
+        "use_pallas": build.use_pallas,
+        "entries": [],
+    }
+
+    for entry in entries:
+        fn = fns[entry]
+        for b in entry_batches(build, entry):
+            t0 = time.time()
+            in_specs = entry_input_specs(build, entry, b)
+            sds = [_sds(s) for s in in_specs]
+            out_shapes = jax.eval_shape(fn, *sds)
+            # keep_unused=True: the Rust registry passes every input in the
+            # manifest signature; without it jax prunes unused parameters
+            # (e.g. cell weights in `encode`) from the HLO entry signature.
+            lowered = jax.jit(fn, keep_unused=True).lower(*sds)
+            text = to_hlo_text(lowered)
+            fname = f"{entry}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": entry,
+                    "batch": b,
+                    "file": fname,
+                    "inputs": in_specs,
+                    "outputs": [
+                        _spec(f"out{i}", tuple(o.shape), str(o.dtype))
+                        for i, o in enumerate(out_shapes)
+                    ],
+                    "hlo_sha256": hashlib.sha256(
+                        text.encode()
+                    ).hexdigest()[:16],
+                }
+            )
+            if verbose:
+                print(
+                    f"  lowered {entry:>22s} b={b:<3d} "
+                    f"{len(text) / 1024:8.1f} KiB  {time.time() - t0:5.1f}s",
+                    file=sys.stderr,
+                )
+
+    # Deterministic initial checkpoint in manifest parameter order.
+    params = M.init_params(build.model, seed=build.seed)
+    flat = np.concatenate(
+        [
+            np.asarray(params[nm], dtype=np.float32).reshape(-1)
+            for nm, _ in build.model.param_shapes()
+        ]
+    )
+    flat.astype("<f4").tofile(os.path.join(out_dir, "init_params.bin"))
+    manifest["init_params"] = {
+        "file": "init_params.bin",
+        "count": int(flat.size),
+        "seed": build.seed,
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default=os.environ.get("PRESET", "small"))
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--jnp", action="store_true",
+                    help="lower with the pure-jnp kernel twins (fast path)")
+    ap.add_argument("--entries", nargs="*", default=None)
+    args = ap.parse_args()
+
+    build = get_preset(args.preset)
+    if args.jnp:
+        build = dataclasses.replace(build, use_pallas=False)
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+
+    t0 = time.time()
+    manifest = build_artifacts(build, out_dir, entries=args.entries)
+    n = len(manifest["entries"])
+    print(
+        f"wrote {n} artifacts + manifest for preset '{args.preset}' "
+        f"({manifest['param_count']} params) to {out_dir} "
+        f"in {time.time() - t0:.1f}s",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Model / solver configuration shared by the compile path and the AOT manifest.
+
+The Rust coordinator never imports this module: everything it needs is
+serialized into ``artifacts/manifest.json`` by ``aot.py``.  Keeping a single
+source of truth here guarantees the HLO artifacts, the parameter layout and
+the Rust-side registry can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Deep-equilibrium model hyperparameters (paper Fig. 4 architecture).
+
+    The DEQ cell is ``f(z, x) = gn3(relu(z + gn2(x + W2 * gn1(relu(W1 * z)))))``
+    with 3x3 weight-tied convolutions over an ``(latent_hw, latent_hw,
+    channels)`` latent state, an input-injection encoder from 32x32x3 images
+    and a mean-pool linear classifier.
+    """
+
+    name: str = "small"
+    image_hw: int = 32
+    image_channels: int = 3
+    channels: int = 16
+    latent_hw: int = 8
+    groups: int = 4
+    num_classes: int = 10
+    # Encoder: conv3x3 stride `enc_stride`, then `enc_pool` average pooling.
+    enc_stride: int = 2
+    enc_pool: int = 2
+
+    def __post_init__(self) -> None:
+        if self.channels % self.groups != 0:
+            raise ValueError("channels must be divisible by groups")
+        if self.image_hw // self.enc_stride // self.enc_pool != self.latent_hw:
+            raise ValueError(
+                "encoder geometry inconsistent: "
+                f"{self.image_hw}/{self.enc_stride}/{self.enc_pool} != {self.latent_hw}"
+            )
+
+    @property
+    def latent_dim(self) -> int:
+        """Flattened per-sample state dimension ``n`` used by Anderson."""
+        return self.latent_hw * self.latent_hw * self.channels
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — THE canonical parameter layout.
+
+        The order here is the order in which every AOT entry point accepts
+        its leading parameter arguments and the order of the flat
+        ``init_params.bin`` checkpoint.
+        """
+        c, ic = self.channels, self.image_channels
+        return [
+            ("enc_w", (3, 3, ic, c)),
+            ("enc_b", (c,)),
+            ("enc_gn_g", (c,)),
+            ("enc_gn_b", (c,)),
+            ("w1", (3, 3, c, c)),
+            ("b1", (c,)),
+            ("w2", (3, 3, c, c)),
+            ("b2", (c,)),
+            ("gn1_g", (c,)),
+            ("gn1_b", (c,)),
+            ("gn2_g", (c,)),
+            ("gn2_b", (c,)),
+            ("gn3_g", (c,)),
+            ("gn3_b", (c,)),
+            ("cls_w", (c, self.num_classes)),
+            ("cls_b", (self.num_classes,)),
+        ]
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape in self.param_shapes():
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Anderson / fixed-point solver hyperparameters (paper Alg. 1 defaults)."""
+
+    window: int = 5  # m
+    beta: float = 1.0  # mixing parameter
+    # Paper Alg. 1 lists λ=1e-5; Kolter et al.'s reference implementation
+    # (which the paper builds on) uses 1e-4, which is markedly more robust
+    # for f32 Gram matrices on correlated windows — we follow the code.
+    lam: float = 1e-4  # Tikhonov regularization on the Gram matrix
+    tol: float = 1e-2  # relative-residual tolerance
+    max_iter: int = 50
+    fused_steps: int = 8  # K for the fused forward_solve_k artifact
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Training hyperparameters baked into the ``train_update`` artifact."""
+
+    # Calibrated at build time: 1e-3 is too slow for the reduced-scale
+    # CPU runs, 1e-1 oscillates; 3e-2 + momentum + weight decay tracks the
+    # paper's "forward iteration needs lower learning rates" observation,
+    # and the decay keeps the weight-tied cell near-contractive so the
+    # equilibrium keeps existing as training progresses.
+    lr: float = 3e-2
+    momentum: float = 0.9
+    weight_decay: float = 2e-3
+    neumann_terms: int = 3  # K for the truncated-Neumann backward ablation
+    explicit_depth: int = 6  # unrolled depth of the explicit baseline
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Everything ``aot.py`` needs: model + solver + train + batch buckets."""
+
+    model: ModelConfig
+    solver: SolverConfig
+    train: TrainConfig
+    infer_batches: Tuple[int, ...] = (1, 8, 32)
+    train_batch: int = 32
+    seed: int = 0
+    use_pallas: bool = True  # False = pure-jnp reference lowering (fast path)
+
+
+PRESETS: Dict[str, BuildConfig] = {
+    # Default: small enough that interpret-mode Pallas + CPU PJRT trains
+    # end-to-end in minutes; used by CI, tests and the quickstart example.
+    "small": BuildConfig(
+        model=ModelConfig(name="small", channels=16, latent_hw=8, groups=4),
+        solver=SolverConfig(),
+        train=TrainConfig(),
+    ),
+    # Closer to the paper's CIFAR10 setup (channels=48, 16x16 latent).
+    # Used for parameter-count reporting and full-scale (projected) runs.
+    "paper": BuildConfig(
+        model=ModelConfig(
+            name="paper",
+            channels=48,
+            latent_hw=16,
+            groups=8,
+            enc_stride=2,
+            enc_pool=1,
+        ),
+        solver=SolverConfig(),
+        train=TrainConfig(),
+    ),
+}
+
+
+def get_preset(name: str) -> BuildConfig:
+    try:
+        return PRESETS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}") from e

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+Modules:
+  matmul    — tiled MXU-shaped matmul (im2col conv, classifier head)
+  groupnorm — fused GroupNorm (+residual) (+ReLU), the cell's backbone
+  anderson  — fused Anderson mixing step (Gram, masked solve, Eq. 5 mix)
+  ref       — pure-jnp oracles for all of the above
+"""
+
+from . import anderson, groupnorm, matmul, ref  # noqa: F401

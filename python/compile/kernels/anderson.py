@@ -1,0 +1,138 @@
+"""Layer-1 Pallas kernel: the fused Anderson-extrapolation update.
+
+This is the paper's core numerical contribution (Alg. 1 / Eqs. 1-5), fused
+into a single kernel invocation per batch element:
+
+  1. residual window   G = (F - X) * mask            (m, n)
+  2. Gram matrix       H = G Gᵀ + λI + diag(1-mask)   (m, m)  -- MXU contraction
+  3. constrained solve min ‖Gα‖² s.t. 1ᵀα = 1, via the equivalent
+     unconstrained SPD form α = H⁻¹1_masked / (1ᵀ H⁻¹ 1_masked),
+     solved with an UNROLLED Gaussian elimination (m ≤ 8, exact for the
+     regularized SPD H; no LAPACK custom-call, so it lowers to portable
+     HLO the Rust CPU runtime can execute).
+  4. mixing (Eq. 5)    z⁺ = (1-β)·αᵀX + β·αᵀF
+
+Masking handles the warm-up window (k < m): invalid history slots get a
+zeroed residual row and an identity row in H, which forces α_i = 0 exactly
+— the masked solution coincides with the paper's n = min(k, m) window.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the history matrices X
+and F are the "cacheable iterations" of the paper — the kernel streams the
+(m, n) window through VMEM once, the m×m system never leaves registers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def solve_spd_unrolled(h: jax.Array, rhs: jax.Array, m: int) -> jax.Array:
+    """Solve ``h @ a = rhs`` for one SPD system via unrolled elimination.
+
+    ``h`` is (m, m), ``rhs`` is (m,), ``m`` is a static Python int.  The
+    loop structure is fully unrolled at trace time, producing straight-line
+    HLO — no dynamic control flow, no pivoting (the λI + identity-row
+    regularization keeps every pivot ≥ λ > 0).
+
+    Exposed at module level so both the Pallas kernel and the pytest /
+    hypothesis suites can exercise it directly against jnp.linalg.solve.
+    """
+    a = h
+    b = rhs
+    # Forward elimination.
+    for i in range(m):
+        piv = a[i, i]
+        for j in range(i + 1, m):
+            factor = a[j, i] / piv
+            a = a.at[j].add(-factor * a[i])
+            b = b.at[j].add(-factor * b[i])
+    # Back substitution.
+    x = jnp.zeros((m,), dtype=h.dtype)
+    for i in reversed(range(m)):
+        acc = b[i]
+        for j in range(i + 1, m):
+            acc = acc - a[i, j] * x[j]
+        x = x.at[i].set(acc / a[i, i])
+    return x
+
+
+def _anderson_kernel(x_ref, f_ref, mask_ref, z_ref, a_ref, *, m: int,
+                     beta: float, lam: float):
+    """One batch element: Gram -> solve -> mix."""
+    mask = mask_ref[...]  # (m,)
+    xh = x_ref[0]  # (m, n) history of iterates
+    fh = f_ref[0]  # (m, n) history of f(iterates)
+    g = (fh - xh) * mask[:, None]
+
+    # Gram matrix with Tikhonov + identity rows for masked-out slots.
+    h = jnp.dot(g, g.T, preferred_element_type=jnp.float32)
+    h = h + lam * jnp.eye(m, dtype=jnp.float32)
+    h = h + jnp.diag(1.0 - mask)
+
+    a = solve_spd_unrolled(h, mask, m)
+    a = a * mask
+    alpha = a / (jnp.sum(a) + 1e-30)
+
+    mixed = beta * jnp.dot(alpha, fh) + (1.0 - beta) * jnp.dot(alpha, xh)
+    z_ref[0] = mixed
+    a_ref[0] = alpha
+
+
+def anderson_update(
+    xhist: jax.Array,
+    fhist: jax.Array,
+    mask: jax.Array,
+    *,
+    beta: float = 1.0,
+    lam: float = 1e-5,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched Anderson mixing step.
+
+    Args:
+      xhist: ``(B, m, n)`` window of past iterates ``z_{k-m+1..k}`` (rows
+        beyond the valid window may hold garbage — they are masked out).
+      fhist: ``(B, m, n)`` window of ``f(z_i, x)`` evaluations.
+      mask:  ``(m,)`` float32, 1.0 for valid history slots, 0.0 otherwise.
+      beta:  mixing parameter β of Eq. 5 (static — baked into the artifact).
+      lam:   Tikhonov regularization λ (static).
+
+    Returns:
+      ``(z_next, alpha)``: the extrapolated iterate ``(B, n)`` and the
+      mixing coefficients ``(B, m)`` (masked entries exactly 0, Σα = 1).
+    """
+    b, m, n = xhist.shape
+    if fhist.shape != (b, m, n):
+        raise ValueError(f"fhist shape {fhist.shape} != xhist shape {xhist.shape}")
+    if mask.shape != (m,):
+        raise ValueError(f"mask shape {mask.shape} != ({m},)")
+    if m > 8:
+        raise ValueError(f"unrolled solver supports window m <= 8, got {m}")
+
+    kern = partial(_anderson_kernel, m=m, beta=float(beta), lam=float(lam))
+    hist = pl.BlockSpec((1, m, n), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[hist, hist, pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xhist, fhist, mask)
+
+
+def vmem_bytes(m: int, n: int) -> int:
+    """Static per-invocation VMEM estimate (bytes) for §Perf reporting:
+    two (m, n) history strips + G + the m×m system + the (n,) output."""
+    return 4 * (3 * m * n + m * m + n + 2 * m)

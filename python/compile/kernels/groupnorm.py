@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernel: fused GroupNorm (+residual) (+ReLU).
+
+The DEQ cell (paper Fig. 4) is dominated elementwise by three GroupNorm
+applications interleaved with ReLUs and residual adds:
+
+    f(z, x) = gn3(relu(z + gn2(x + conv2(gn1(relu(conv1(z)))))))
+
+A naive lowering materializes each intermediate in HBM.  This kernel fuses
+``relu? -> (+residual)? -> groupnorm`` into a single VMEM pass per sample —
+the TPU analogue of the CUDA kernel fusion the paper leans on for its
+"operational uniformity" argument (§4): one HBM read, one HBM write.
+
+Grid: one invocation per batch element; the whole ``(H, W, C)`` activation
+for a sample lives in VMEM (H*W*C*4 bytes: 4 KiB for the small preset,
+48 KiB for the paper preset — far under budget).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gn_kernel(x_ref, g_ref, b_ref, o_ref, *, groups: int, eps: float,
+               pre_relu: bool):
+    """GroupNorm over one sample, optional ReLU applied *before* the norm."""
+    x = x_ref[0]  # (H, W, C)
+    if pre_relu:
+        x = jnp.maximum(x, 0.0)
+    h, w, c = x.shape
+    cg = c // groups
+    xg = x.reshape(h * w, groups, cg)
+    mean = jnp.mean(xg, axis=(0, 2), keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=(0, 2), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(h, w, c)
+    o_ref[0] = xn * g_ref[...] + b_ref[...]
+
+
+def _gn_res_kernel(x_ref, r_ref, g_ref, b_ref, o_ref, *, groups: int,
+                   eps: float, pre_relu: bool):
+    """GroupNorm over one sample of ``relu?(x + residual)``."""
+    x = x_ref[0] + r_ref[0]
+    if pre_relu:
+        x = jnp.maximum(x, 0.0)
+    h, w, c = x.shape
+    cg = c // groups
+    xg = x.reshape(h * w, groups, cg)
+    mean = jnp.mean(xg, axis=(0, 2), keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=(0, 2), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(h, w, c)
+    o_ref[0] = xn * g_ref[...] + b_ref[...]
+
+
+def groupnorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    groups: int,
+    residual: jax.Array | None = None,
+    pre_relu: bool = False,
+    eps: float = 1e-5,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``groupnorm(relu?(x (+ residual)))``.
+
+    Args:
+      x: ``(B, H, W, C)`` float32 activations.
+      gamma / beta: ``(C,)`` scale and shift.
+      groups: number of groups; must divide C.
+      residual: optional ``(B, H, W, C)`` tensor added to ``x`` before the
+        (optional) ReLU and the normalization — covers both the
+        ``x + conv2(...)`` injection and the ``z + ...`` skip of the cell.
+      pre_relu: apply ReLU to the (summed) input before normalizing.
+      eps: variance epsilon.
+      interpret: must stay True for CPU-PJRT execution.
+    """
+    b, h, w, c = x.shape
+    if c % groups != 0:
+        raise ValueError(f"C={c} not divisible by groups={groups}")
+    if gamma.shape != (c,) or beta.shape != (c,):
+        raise ValueError("gamma/beta must have shape (C,)")
+
+    blk = pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))
+    vec = pl.BlockSpec((c,), lambda i: (0,))
+    out_shape = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+
+    if residual is None:
+        kern = partial(_gn_kernel, groups=groups, eps=eps, pre_relu=pre_relu)
+        return pl.pallas_call(
+            kern,
+            grid=(b,),
+            in_specs=[blk, vec, vec],
+            out_specs=blk,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x, gamma, beta)
+
+    if residual.shape != x.shape:
+        raise ValueError(f"residual shape {residual.shape} != x shape {x.shape}")
+    kern = partial(_gn_res_kernel, groups=groups, eps=eps, pre_relu=pre_relu)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[blk, blk, vec, vec],
+        out_specs=blk,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, residual, gamma, beta)
+
+
+def vmem_bytes(h: int, w: int, c: int, with_residual: bool) -> int:
+    """Static per-invocation VMEM estimate (bytes) for §Perf reporting."""
+    tensors = 3 if with_residual else 2  # in (+res) + out
+    return 4 * (tensors * h * w * c + 2 * c)

@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: tiled matmul.
+
+Used by the DEQ cell for its im2col 3x3 convolutions and by the classifier
+head.  The tiling is written for the TPU MXU mental model (see DESIGN.md
+§Hardware-Adaptation): the grid walks (M, N) output tiles, each kernel
+invocation loads a ``(block_m, K)`` strip of ``a`` and a ``(K, block_n)``
+strip of ``b`` into VMEM and contracts them in one ``jnp.dot`` (the MXU
+op).  K is kept un-tiled because every K in this model is small
+(9*C <= 432): a full reduction strip fits comfortably in VMEM, which is
+the cheapest correct schedule and avoids cross-invocation accumulation.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers this exact schedule to portable
+HLO that the Rust runtime can run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (block_m, block_n) output tile: full-K contraction in VMEM."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 64,
+    block_n: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """``a @ b`` via the tiled Pallas kernel.
+
+    Args:
+      a: ``(M, K)`` float32.
+      b: ``(K, N)`` float32.
+      block_m / block_n: output tile sizes.  Defaults chosen in the perf
+        pass (EXPERIMENTS.md §Perf) — (64, 64) balances VMEM footprint
+        (64*K + K*64 + 64*64 floats) against grid overhead for this
+        model's K in [144, 432].
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(M, N)`` float32.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} @ {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0))) if mp != m else a
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - n))) if np_ != n else b
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(m: int, k: int, n: int, block_m: int = 64, block_n: int = 64) -> int:
+    """Static VMEM footprint estimate for one kernel invocation (bytes).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to check the schedule against
+    the ~16 MiB/core VMEM budget a real TPU would impose.
+    """
+    bm, bn = min(block_m, m), min(block_n, n)
+    return 4 * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the ground truth the pytest / hypothesis suites compare the
+kernels against, and the implementation used when artifacts are built with
+``use_pallas=False`` (the fast XLA-fused lowering — numerically equivalent,
+validated by ``python/tests/test_kernels.py`` and again end-to-end by the
+Rust integration tests).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for ``kernels.matmul.matmul``."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def groupnorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    groups: int,
+    residual: jax.Array | None = None,
+    pre_relu: bool = False,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Oracle for ``kernels.groupnorm.groupnorm``."""
+    if residual is not None:
+        x = x + residual
+    if pre_relu:
+        x = jnp.maximum(x, 0.0)
+    b, h, w, c = x.shape
+    cg = c // groups
+    xg = x.reshape(b, h * w, groups, cg)
+    mean = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=(1, 3), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return xn * gamma + beta
+
+
+def anderson_update_bordered(
+    xhist: jax.Array,
+    fhist: jax.Array,
+    mask: jax.Array,
+    *,
+    beta: float = 1.0,
+    lam: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for ``kernels.anderson.anderson_update``.
+
+    Solves the paper's *bordered* KKT system (Eq. 4) directly with
+    ``jnp.linalg.solve`` instead of the unconstrained SPD reduction the
+    kernel uses — an independent derivation, so agreement is meaningful:
+
+        [ 0   1ᵀ ] [ν]   [1]
+        [ 1   H  ] [α] = [0]      H = GᵀG + λI
+
+    Masked-out slots get identity rows/columns in H and zeros in the
+    border so that α_i = 0 exactly.
+    """
+    b, m, n = xhist.shape
+    g = (fhist - xhist) * mask[None, :, None]
+    h = jnp.einsum("bin,bjn->bij", g, g) + lam * jnp.eye(m)
+    h = h + jnp.diag(1.0 - mask)
+
+    kkt = jnp.zeros((b, m + 1, m + 1), dtype=jnp.float32)
+    kkt = kkt.at[:, 0, 1:].set(mask[None, :])
+    kkt = kkt.at[:, 1:, 0].set(mask[None, :])
+    kkt = kkt.at[:, 1:, 1:].set(h)
+    # Masked slots keep the identity row from H; their border entries are
+    # 0, so row i of the KKT system reads (1 + λ)·α_i = 0 — exact masking.
+    rhs = jnp.zeros((b, m + 1), dtype=jnp.float32).at[:, 0].set(1.0)
+    sol = jnp.linalg.solve(kkt, rhs[..., None])[..., 0]
+    alpha = sol[:, 1:] * mask[None, :]
+
+    mixed = beta * jnp.einsum("bi,bin->bn", alpha, fhist) + (
+        1.0 - beta
+    ) * jnp.einsum("bi,bin->bn", alpha, xhist)
+    return mixed, alpha
+
+
+def anderson_update(
+    xhist: jax.Array,
+    fhist: jax.Array,
+    mask: jax.Array,
+    *,
+    beta: float = 1.0,
+    lam: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized jnp twin of the kernel's own SPD formulation.
+
+    Used for the ``use_pallas=False`` artifact build.  Deliberately avoids
+    ``jnp.linalg.solve`` — on CPU that lowers to a LAPACK *custom call*
+    which the Rust PJRT runtime cannot parse from HLO text — and instead
+    vmaps the same unrolled elimination the Pallas kernel uses.
+    """
+    b, m, n = xhist.shape
+    g = (fhist - xhist) * mask[None, :, None]
+    h = jnp.einsum("bin,bjn->bij", g, g) + lam * jnp.eye(m)
+    h = h + jnp.diag(1.0 - mask)
+
+    from . import anderson as _k  # local import to avoid an import cycle
+
+    solve = jax.vmap(lambda hh: _k.solve_spd_unrolled(hh, mask, m))
+    a = solve(h) * mask[None, :]
+    alpha = a / (jnp.sum(a, axis=1, keepdims=True) + 1e-30)
+    mixed = beta * jnp.einsum("bi,bin->bn", alpha, fhist) + (
+        1.0 - beta
+    ) * jnp.einsum("bi,bin->bn", alpha, xhist)
+    return mixed, alpha
+
+
+def relative_residual(f: jax.Array, z: jax.Array, lam: float = 1e-5) -> jax.Array:
+    """The paper's relative residual ‖f(z,x)−z‖₂ / (‖f(z,x)‖₂ + λ), per sample.
+
+    ``f`` and ``z`` are ``(B, ...)``; norms are taken over all non-batch axes.
+    """
+    b = f.shape[0]
+    num = jnp.linalg.norm((f - z).reshape(b, -1), axis=1)
+    den = jnp.linalg.norm(f.reshape(b, -1), axis=1) + lam
+    return num / den

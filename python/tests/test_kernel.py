@@ -1,0 +1,306 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: if these pass,
+the `use_pallas=True` and `use_pallas=False` artifact builds are
+numerically interchangeable, and the Rust integration tests only need to
+validate one of them end-to-end.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import anderson as ka
+from compile.kernels import groupnorm as kg
+from compile.kernels import matmul as km
+from compile.kernels import ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (7, 3, 5),
+        (64, 144, 16),
+        (65, 144, 16),  # one over a tile boundary
+        (128, 432, 48),
+        (37, 9, 10),
+        (2048, 144, 16),  # b*hf*wf patches at train batch
+    ],
+)
+def test_matmul_matches_oracle(m, k, n):
+    r = rng(m * 31 + k * 7 + n)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    got = km.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 64), (64, 16), (128, 128)])
+def test_matmul_block_shape_invariance(bm, bn):
+    """The result must not depend on the tiling choice."""
+    r = rng(42)
+    a = jnp.asarray(r.standard_normal((50, 33)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((33, 21)), jnp.float32)
+    got = km.matmul(a, b, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        km.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((3, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        km.matmul(a, jnp.zeros((5, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        km.matmul(jnp.zeros((3,), jnp.float32), a)
+
+
+def test_matmul_vmem_estimate_positive():
+    assert km.vmem_bytes(2048, 144, 16) > 0
+    # Default tiling must sit far below a 16 MiB VMEM budget.
+    assert km.vmem_bytes(2048, 432, 48) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# groupnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,w,c,g", [(1, 4, 4, 8, 2), (3, 8, 8, 16, 4), (2, 16, 16, 48, 8)])
+@pytest.mark.parametrize("pre_relu", [False, True])
+@pytest.mark.parametrize("with_res", [False, True])
+def test_groupnorm_matches_oracle(b, h, w, c, g, pre_relu, with_res):
+    r = rng(b * 100 + c + int(pre_relu) * 7 + int(with_res) * 13)
+    x = jnp.asarray(r.standard_normal((b, h, w, c)), jnp.float32)
+    gamma = jnp.asarray(r.standard_normal(c), jnp.float32)
+    beta = jnp.asarray(r.standard_normal(c), jnp.float32)
+    res = (
+        jnp.asarray(r.standard_normal((b, h, w, c)), jnp.float32)
+        if with_res
+        else None
+    )
+    got = kg.groupnorm(x, gamma, beta, groups=g, residual=res, pre_relu=pre_relu)
+    want = ref.groupnorm(x, gamma, beta, groups=g, residual=res, pre_relu=pre_relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_groupnorm_normalizes():
+    """With unit gamma / zero beta, each group is ~zero-mean unit-var."""
+    r = rng(5)
+    b, h, w, c, g = 2, 8, 8, 16, 4
+    x = jnp.asarray(5.0 + 3.0 * r.standard_normal((b, h, w, c)), jnp.float32)
+    out = kg.groupnorm(x, jnp.ones(c), jnp.zeros(c), groups=g)
+    og = np.asarray(out).reshape(b, h * w, g, c // g)
+    means = og.mean(axis=(1, 3))
+    stds = og.std(axis=(1, 3))
+    np.testing.assert_allclose(means, 0.0, atol=1e-4)
+    np.testing.assert_allclose(stds, 1.0, atol=1e-3)
+
+
+def test_groupnorm_rejects_bad_groups():
+    x = jnp.zeros((1, 4, 4, 6), jnp.float32)
+    with pytest.raises(ValueError):
+        kg.groupnorm(x, jnp.ones(6), jnp.zeros(6), groups=4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([2, 4, 8]),
+    cg=st.sampled_from([(8, 2), (12, 3), (16, 4)]),
+    pre_relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_groupnorm_hypothesis(b, hw, cg, pre_relu, seed):
+    c, g = cg
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((b, hw, hw, c)), jnp.float32)
+    gamma = jnp.asarray(r.standard_normal(c), jnp.float32)
+    beta = jnp.asarray(r.standard_normal(c), jnp.float32)
+    np.testing.assert_allclose(
+        kg.groupnorm(x, gamma, beta, groups=g, pre_relu=pre_relu),
+        ref.groupnorm(x, gamma, beta, groups=g, pre_relu=pre_relu),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# anderson
+# ---------------------------------------------------------------------------
+
+
+def _window(bsz, m, n, seed, scale=0.1):
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((bsz, m, n)), jnp.float32)
+    f = x + scale * jnp.asarray(r.standard_normal((bsz, m, n)), jnp.float32)
+    return x, f
+
+
+def test_solve_spd_unrolled_vs_numpy():
+    r = rng(1)
+    for m in (1, 2, 3, 5, 8):
+        g = r.standard_normal((m, 4 * m)).astype(np.float32)
+        h = g @ g.T + 1e-3 * np.eye(m, dtype=np.float32)
+        rhs = r.standard_normal(m).astype(np.float32)
+        got = ka.solve_spd_unrolled(jnp.asarray(h), jnp.asarray(rhs), m)
+        want = np.linalg.solve(h, rhs)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("valid", [1, 2, 3, 4, 5])
+def test_anderson_matches_bordered_oracle(valid):
+    m = 5
+    mask = jnp.asarray([1.0] * valid + [0.0] * (m - valid), jnp.float32)
+    x, f = _window(3, m, 64, seed=valid)
+    z1, a1 = ka.anderson_update(x, f, mask)
+    z2, a2 = ref.anderson_update_bordered(x, f, mask)
+    np.testing.assert_allclose(a1, a2, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(z1, z2, rtol=1e-3, atol=1e-4)
+
+
+def test_anderson_jnp_twin_matches_kernel():
+    """The use_pallas=False build must be numerically interchangeable."""
+    m = 5
+    mask = jnp.asarray([1, 1, 1, 1, 0], jnp.float32)
+    x, f = _window(4, m, 128, seed=9)
+    z1, a1 = ka.anderson_update(x, f, mask)
+    z2, a2 = ref.anderson_update(x, f, mask)
+    np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(z1, z2, rtol=1e-4, atol=1e-5)
+
+
+def test_anderson_alpha_sums_to_one_and_masked():
+    m = 5
+    for valid in range(1, m + 1):
+        mask = jnp.asarray([1.0] * valid + [0.0] * (m - valid), jnp.float32)
+        x, f = _window(2, m, 32, seed=100 + valid)
+        _, alpha = ka.anderson_update(x, f, mask)
+        np.testing.assert_allclose(np.asarray(alpha).sum(axis=1), 1.0, atol=1e-5)
+        assert np.all(np.asarray(alpha)[:, valid:] == 0.0)
+
+
+def test_anderson_single_slot_is_forward_iteration():
+    """Window of 1 valid slot with beta=1 must return exactly f(z)."""
+    m = 5
+    mask = jnp.asarray([1.0, 0, 0, 0, 0], jnp.float32)
+    x, f = _window(2, m, 32, seed=7)
+    z, alpha = ka.anderson_update(x, f, mask, beta=1.0)
+    np.testing.assert_allclose(z, f[:, 0, :], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(alpha)[:, 0], 1.0, atol=1e-6)
+
+
+def test_anderson_beta_zero_returns_x_mix():
+    """beta=0 mixes only the iterates (Eq. 5 degenerate case)."""
+    m = 3
+    mask = jnp.ones(m, jnp.float32)
+    x, f = _window(2, m, 16, seed=3)
+    z, alpha = ka.anderson_update(x, f, mask, beta=0.0)
+    want = jnp.einsum("bi,bin->bn", alpha, x)
+    np.testing.assert_allclose(z, want, rtol=1e-4, atol=1e-5)
+
+
+def test_anderson_beta_mixes_linearly():
+    m, mask = 4, jnp.ones(4, jnp.float32)
+    x, f = _window(1, 4, 24, seed=11)
+    z0, _ = ka.anderson_update(x, f, mask, beta=0.0)
+    z1, _ = ka.anderson_update(x, f, mask, beta=1.0)
+    zh, _ = ka.anderson_update(x, f, mask, beta=0.5)
+    np.testing.assert_allclose(zh, 0.5 * (z0 + z1), rtol=1e-4, atol=1e-5)
+
+
+def test_anderson_exact_on_linear_problem():
+    """AA with window >= dim solves an affine fixed point z=Az+b exactly
+    (Krylov/GMRES equivalence — He & De Sterck)."""
+    n = 4
+    r = rng(2)
+    a_mat = 0.5 * r.standard_normal((n, n)).astype(np.float32) / np.sqrt(n)
+    b_vec = r.standard_normal(n).astype(np.float32)
+    z_star = np.linalg.solve(np.eye(n) - a_mat, b_vec)
+
+    def fmap(z):
+        return z @ a_mat.T + b_vec
+
+    m = n + 1  # window spans the Krylov space
+    z = np.zeros((1, n), np.float32)
+    xs, fs = [], []
+    for k in range(m):
+        fz = fmap(z)
+        xs.append(z.copy())
+        fs.append(fz.copy())
+        nvalid = len(xs)
+        xh = np.zeros((1, m, n), np.float32)
+        fh = np.zeros((1, m, n), np.float32)
+        xh[0, :nvalid] = np.concatenate(xs, 0)
+        fh[0, :nvalid] = np.concatenate(fs, 0)
+        mask = jnp.asarray(
+            [1.0] * nvalid + [0.0] * (m - nvalid), jnp.float32
+        )
+        z_j, _ = ka.anderson_update(
+            jnp.asarray(xh), jnp.asarray(fh), mask, lam=1e-10
+        )
+        z = np.asarray(z_j)
+    np.testing.assert_allclose(z[0], z_star, rtol=1e-2, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    m=st.integers(1, 8),
+    n=st.sampled_from([8, 32, 100]),
+    valid=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_anderson_hypothesis_invariants(bsz, m, n, valid, seed):
+    valid = min(valid, m)
+    mask = jnp.asarray([1.0] * valid + [0.0] * (m - valid), jnp.float32)
+    x, f = _window(bsz, m, n, seed=seed)
+    z, alpha = ka.anderson_update(x, f, mask)
+    alpha = np.asarray(alpha)
+    assert np.all(np.isfinite(np.asarray(z)))
+    np.testing.assert_allclose(alpha.sum(axis=1), 1.0, atol=1e-4)
+    assert np.all(alpha[:, valid:] == 0.0)
+
+
+def test_anderson_rejects_bad_window():
+    x = jnp.zeros((1, 9, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        ka.anderson_update(x, x, jnp.ones(9, jnp.float32))
+
+
+def test_relative_residual_definition():
+    r = rng(0)
+    f = jnp.asarray(r.standard_normal((2, 3, 3, 2)), jnp.float32)
+    z = jnp.asarray(r.standard_normal((2, 3, 3, 2)), jnp.float32)
+    got = ref.relative_residual(f, z, lam=1e-5)
+    fn = np.asarray(f).reshape(2, -1)
+    zn = np.asarray(z).reshape(2, -1)
+    want = np.linalg.norm(fn - zn, axis=1) / (np.linalg.norm(fn, axis=1) + 1e-5)
+    np.testing.assert_allclose(got, want, rtol=1e-5)

@@ -1,0 +1,224 @@
+"""L2 model correctness: cell semantics, solver behaviour, training updates."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.config import ModelConfig, get_preset
+from compile.kernels import ref
+
+CFG = ModelConfig(name="tiny", channels=8, latent_hw=8, groups=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _img(b, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal((b, 32, 32, 3)), jnp.float32)
+
+
+def test_param_layout_roundtrip(params):
+    flat = M.params_to_list(CFG, params)
+    back = M.params_from_list(CFG, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_param_count_matches_shapes():
+    total = sum(
+        int(np.prod(s)) for _, s in CFG.param_shapes()
+    )
+    assert CFG.param_count() == total
+
+
+def test_paper_preset_param_count_scale():
+    """The paper reports 64,842 parameters; our 'paper' preset must land in
+    the same order of magnitude (exact internals of their cell differ)."""
+    n = get_preset("paper").model.param_count()
+    assert 30_000 <= n <= 130_000, n
+
+
+def test_encode_shape(params):
+    out = M.encode(CFG, params, _img(3), use_pallas=False)
+    assert out.shape == (3, CFG.latent_hw, CFG.latent_hw, CFG.channels)
+
+
+def test_cell_shape_and_kernel_equivalence(params):
+    x_feat = M.encode(CFG, params, _img(2), use_pallas=False)
+    z = jnp.zeros_like(x_feat)
+    f_pallas = M.cell(CFG, params, z, x_feat, use_pallas=True)
+    f_ref = M.cell(CFG, params, z, x_feat, use_pallas=False)
+    assert f_pallas.shape == z.shape
+    np.testing.assert_allclose(f_pallas, f_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_cell_step_residual_norms(params):
+    x_feat = M.encode(CFG, params, _img(2), use_pallas=False)
+    z = 0.1 * jnp.ones_like(x_feat)
+    f, res_num, f_norm = M.cell_step(CFG, params, z, x_feat, use_pallas=False)
+    b = 2
+    want_num = np.linalg.norm(np.asarray(f - z).reshape(b, -1), axis=1)
+    want_fn = np.linalg.norm(np.asarray(f).reshape(b, -1), axis=1)
+    np.testing.assert_allclose(res_num, want_num, rtol=1e-4)
+    np.testing.assert_allclose(f_norm, want_fn, rtol=1e-4)
+
+
+def test_forward_solve_k_equals_repeated_cell(params):
+    x_feat = M.encode(CFG, params, _img(1), use_pallas=False)
+    z = jnp.zeros_like(x_feat)
+    k = 4
+    zz = z
+    for _ in range(k - 1):
+        zz = M.cell(CFG, params, zz, x_feat, use_pallas=False)
+    want, want_rn, want_fn = M.cell_step(CFG, params, zz, x_feat, use_pallas=False)
+    got, rn, fn_ = M.forward_solve_k(CFG, params, z, x_feat, k=k, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(rn, want_rn, rtol=1e-3)
+    np.testing.assert_allclose(fn_, want_fn, rtol=1e-4)
+
+
+def _solve(cfg, params, x_feat, *, anderson: bool, iters=30, m=5,
+           beta=1.0, lam=1e-5, tol=1e-3):
+    """Reference python driver replicating the Rust solver loop; returns
+    the relative-residual trajectory."""
+    b = x_feat.shape[0]
+    n = cfg.latent_dim
+    z = jnp.zeros((b, cfg.latent_hw, cfg.latent_hw, cfg.channels), jnp.float32)
+    xs, fs = [], []
+    traj = []
+    for k in range(iters):
+        f, rn, fnorm = M.cell_step(cfg, params, z, x_feat, use_pallas=False)
+        rel = float(jnp.max(rn / (fnorm + lam)))
+        traj.append(rel)
+        if rel < tol:
+            break
+        if not anderson:
+            z = f
+            continue
+        xs.append(np.asarray(z).reshape(b, n))
+        fs.append(np.asarray(f).reshape(b, n))
+        xs, fs = xs[-m:], fs[-m:]
+        nv = len(xs)
+        xh = np.zeros((b, m, n), np.float32)
+        fh = np.zeros((b, m, n), np.float32)
+        xh[:, :nv] = np.stack(xs, 1)
+        fh[:, :nv] = np.stack(fs, 1)
+        mask = jnp.asarray([1.0] * nv + [0.0] * (m - nv), jnp.float32)
+        z_flat, _ = ref.anderson_update(
+            jnp.asarray(xh), jnp.asarray(fh), mask, beta=beta, lam=lam
+        )
+        z = z_flat.reshape(z.shape)
+    return traj
+
+
+def test_anderson_converges_deeper_than_forward(params):
+    """The paper's headline numerics (Fig. 6): on the DEQ cell, Anderson
+    reaches a deeper residual plateau than forward iteration within the
+    same iteration budget.  (On this nonsmooth f32 map both methods
+    plateau — exactly the paper's 'crossover' phenomenology — so we assert
+    on the best-achieved residual, with slack for FP noise.)"""
+    x_feat = M.encode(CFG, params, _img(2, seed=3), use_pallas=False)
+    traj_f = _solve(CFG, params, x_feat, anderson=False, iters=60, tol=1e-4)
+    traj_a = _solve(CFG, params, x_feat, anderson=True, iters=60, tol=1e-4)
+    assert min(traj_a) <= 1.2 * min(traj_f), (min(traj_a), min(traj_f))
+    # And it must get below forward's *final* residual strictly earlier or
+    # equally fast (iterations-to-target acceleration).
+    target = traj_f[-1]
+    it_a = next(i for i, v in enumerate(traj_a) if v <= target * 1.05)
+    assert it_a <= len(traj_f) - 1
+
+
+def test_classify_shape(params):
+    z = jnp.zeros((4, CFG.latent_hw, CFG.latent_hw, CFG.channels), jnp.float32)
+    logits = M.classify(CFG, params, z)
+    assert logits.shape == (4, CFG.num_classes)
+
+
+def test_loss_and_correct():
+    logits = jnp.asarray(
+        [[10.0, 0, 0], [0, 10.0, 0], [0, 0, 10.0]], jnp.float32
+    )
+    y = jnp.asarray([0, 1, 0], jnp.int32)
+    loss, correct = M.loss_and_correct(logits, y)
+    assert int(correct) == 2
+    assert float(loss) > 0
+
+
+def test_train_update_decreases_loss(params):
+    """A few JFB steps on one fixed batch must reduce the loss."""
+    x_img = _img(8, seed=1)
+    r = np.random.default_rng(1)
+    y = jnp.asarray(r.integers(0, CFG.num_classes, 8), jnp.int32)
+    p = dict(params)
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+    losses = []
+    for step in range(6):
+        x_feat = M.encode(CFG, p, x_img, use_pallas=False)
+        z = jnp.zeros_like(x_feat)
+        for _ in range(8):
+            z = M.cell(CFG, p, z, x_feat, use_pallas=False)
+        p, mom, loss, _ = M.train_update(
+            CFG, p, mom, z, x_img, y, lr=5e-2, momentum=0.9, phantom_steps=1,
+            use_pallas=False,
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_update_neumann_close_to_jfb_direction(params):
+    """K=1 (JFB) and K=3 (Neumann) updates must at least agree in sign of
+    the loss change and produce finite params."""
+    x_img = _img(4, seed=2)
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x_feat = M.encode(CFG, params, x_img, use_pallas=False)
+    z = jnp.zeros_like(x_feat)
+    for _ in range(10):
+        z = M.cell(CFG, params, z, x_feat, use_pallas=False)
+    p1, _, l1, _ = M.train_update(
+        CFG, params, mom, z, x_img, y, lr=1e-2, momentum=0.0,
+        phantom_steps=1, use_pallas=False,
+    )
+    p3, _, l3, _ = M.train_update(
+        CFG, params, mom, z, x_img, y, lr=1e-2, momentum=0.0,
+        phantom_steps=3, use_pallas=False,
+    )
+    np.testing.assert_allclose(float(l1), float(l3), rtol=1e-3)
+    for k in p1:
+        assert np.all(np.isfinite(p1[k])) and np.all(np.isfinite(p3[k]))
+
+
+def test_explicit_forward_and_train(params):
+    x_img = _img(4, seed=4)
+    y = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    logits = M.explicit_forward(CFG, params, x_img, depth=4, use_pallas=False)
+    assert logits.shape == (4, CFG.num_classes)
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    p, mom, loss, correct = M.explicit_train_update(
+        CFG, params, mom, x_img, y, depth=4, lr=1e-2, momentum=0.9,
+        use_pallas=False,
+    )
+    assert np.isfinite(float(loss))
+    assert 0 <= int(correct) <= 4
+
+
+def test_entry_points_shapes():
+    """Every AOT entry point must eval_shape cleanly for every bucket."""
+    from compile import aot
+
+    build = get_preset("small")
+    fns = M.make_entry_points(build)
+    for entry, fn in fns.items():
+        for b in aot.entry_batches(build, entry):
+            specs = [
+                jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.dtype(s["dtype"]))
+                for s in aot.entry_input_specs(build, entry, b)
+            ]
+            out = jax.eval_shape(fn, *specs)
+            assert len(out) >= 1, entry

@@ -1,0 +1,16 @@
+//! Bench wrapper regenerating paper Fig. 1 (crossover + mixing penalty).
+use deq_anderson::experiments::{self, ExpOptions};
+use deq_anderson::runtime::Engine;
+use deq_anderson::util::bench;
+
+fn main() {
+    bench::header("fig1 — crossover and mixing penalty");
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    };
+    let t0 = std::time::Instant::now();
+    experiments::run("fig1", Some(&engine), &ExpOptions::smoke())
+        .expect("fig1");
+    println!("fig1 regenerated in {:.1?}", t0.elapsed());
+}

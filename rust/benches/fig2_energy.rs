@@ -1,0 +1,8 @@
+//! Bench wrapper regenerating paper Fig. 2 (energy/carbon projection).
+use deq_anderson::experiments::{self, ExpOptions};
+use deq_anderson::util::bench;
+
+fn main() {
+    bench::header("fig2 — AI energy projection");
+    experiments::run("fig2", None, &ExpOptions::smoke()).expect("fig2");
+}

@@ -1,0 +1,15 @@
+//! Bench wrapper regenerating paper Fig. 5 (accuracy curves) at smoke scale.
+use deq_anderson::experiments::{self, ExpOptions};
+use deq_anderson::runtime::Engine;
+use deq_anderson::util::bench;
+
+fn main() {
+    bench::header("fig5 — train/test accuracy curves");
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    };
+    let mut opts = ExpOptions::smoke();
+    opts.epochs = 3;
+    experiments::run("fig5", Some(&engine), &opts).expect("fig5");
+}

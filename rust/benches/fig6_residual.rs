@@ -1,0 +1,8 @@
+//! Bench wrapper regenerating paper Fig. 6 (residual vs time, GPU vs CPU).
+use deq_anderson::experiments::{self, ExpOptions};
+use deq_anderson::util::bench;
+
+fn main() {
+    bench::header("fig6 — residual vs time for random input");
+    experiments::run("fig6", None, &ExpOptions::smoke()).expect("fig6");
+}

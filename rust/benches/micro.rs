@@ -1,0 +1,162 @@
+//! Micro-benchmarks of the hot paths across all three layers, feeding
+//! EXPERIMENTS.md §Perf:
+//!
+//!   * PJRT dispatch cost per artifact (cell_step, anderson_update,
+//!     forward_solve_k) — the L2/L3 boundary.
+//!   * Native Anderson mixing (Gram + solve + mix) at several (m, n) —
+//!     the L3 hot loop used by sweeps/simulations.
+//!   * History ring push/pack — the coordinator's per-iteration overhead.
+//!   * End-to-end equilibrium solve (anderson vs forward, fused vs
+//!     per-step).
+
+use std::time::Duration;
+
+use deq_anderson::model::ParamSet;
+use deq_anderson::native::AndersonState;
+use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::solver::{self, anderson::History, SolveOptions, SolverKind};
+use deq_anderson::util::bench::{bench, header};
+use deq_anderson::util::rng::Rng;
+
+fn main() {
+    header("micro — native anderson mixing");
+    let budget = Duration::from_millis(800);
+    let mut rng = Rng::new(1);
+    for (m, n) in [(5usize, 1024usize), (5, 12288), (8, 12288)] {
+        let mut st = AndersonState::new(m, n, 1.0, 1e-4);
+        for _ in 0..m {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            st.push(&z, &f);
+        }
+        let r = bench(
+            &format!("native_mix m={m} n={n}"),
+            3,
+            200,
+            budget,
+            || {
+                let _ = st.mix().unwrap();
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    header("micro — history ring push+pack");
+    for (b, m, n) in [(32usize, 5usize, 1024usize), (8, 5, 1024)] {
+        let mut h = History::new(b, m, n);
+        let z = vec![0.5f32; b * n];
+        let f = vec![0.25f32; b * n];
+        let r = bench(
+            &format!("history push+tensors b={b} m={m} n={n}"),
+            3,
+            300,
+            budget,
+            || {
+                h.push(&z, &f);
+                let _ = h.tensors().unwrap();
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("[skip] PJRT benches need `make artifacts`");
+        return;
+    };
+    let params = ParamSet::load_init(engine.manifest()).unwrap();
+    let meta = engine.manifest().model.clone();
+    let m = engine.manifest().solver.window;
+    let n = meta.latent_dim();
+
+    header("micro — PJRT artifact dispatch");
+    for batch in [1usize, 8, 32] {
+        let z = HostTensor::zeros(meta.latent_shape(batch));
+        let xf = HostTensor::f32(
+            meta.latent_shape(batch),
+            rng.normal_vec(batch * n, 0.5),
+        )
+        .unwrap();
+        let mut inputs = params.tensors.clone();
+        inputs.push(z);
+        inputs.push(xf.clone());
+        engine.warmup(&[("cell_step", batch)]).unwrap();
+        let r = bench(&format!("cell_step b={batch}"), 3, 200, budget, || {
+            let _ = engine.execute("cell_step", batch, &inputs).unwrap();
+        });
+        println!("{}", r.report());
+
+        let xh = HostTensor::f32(
+            vec![batch, m, n],
+            rng.normal_vec(batch * m * n, 1.0),
+        )
+        .unwrap();
+        let fh = xh.clone();
+        let mask = HostTensor::f32(vec![m], vec![1.0; m]).unwrap();
+        engine.warmup(&[("anderson_update", batch)]).unwrap();
+        let and_in = [xh, fh, mask];
+        let r = bench(
+            &format!("anderson_update b={batch}"),
+            3,
+            200,
+            budget,
+            || {
+                let _ = engine.execute("anderson_update", batch, &and_in).unwrap();
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    {
+        let batch = 32;
+        let z = HostTensor::zeros(meta.latent_shape(batch));
+        let xf = HostTensor::f32(
+            meta.latent_shape(batch),
+            rng.normal_vec(batch * n, 0.5),
+        )
+        .unwrap();
+        let mut inputs = params.tensors.clone();
+        inputs.push(z);
+        inputs.push(xf);
+        engine.warmup(&[("forward_solve_k", batch)]).unwrap();
+        let k = engine.manifest().solver.fused_steps;
+        let r = bench(
+            &format!("forward_solve_k (K={k}) b={batch}"),
+            3,
+            100,
+            budget,
+            || {
+                let _ = engine.execute("forward_solve_k", batch, &inputs).unwrap();
+            },
+        );
+        println!("{} (÷{k} per feval)", r.report());
+    }
+
+    header("micro — end-to-end equilibrium solve (b=32)");
+    let batch = 32;
+    let img = HostTensor::f32(
+        meta.image_shape(batch),
+        rng.normal_vec(batch * meta.image_dim(), 1.0),
+    )
+    .unwrap();
+    let mut enc_in = params.tensors.clone();
+    enc_in.push(img);
+    let xf = engine.execute("encode", batch, &enc_in).unwrap().remove(0);
+    for (name, kind, fused) in [
+        ("solve anderson", SolverKind::Anderson, false),
+        ("solve forward (per-step)", SolverKind::Forward, false),
+        ("solve forward (fused K)", SolverKind::Forward, true),
+    ] {
+        let opts = SolveOptions {
+            fused_forward: fused,
+            tol: 1e-2,
+            max_iter: 60,
+            ..SolveOptions::from_manifest(&engine, kind)
+        };
+        let r = bench(name, 1, 20, Duration::from_secs(3), || {
+            let _ = solver::solve(&engine, &params.tensors, &xf, &opts).unwrap();
+        });
+        println!("{}", r.report());
+    }
+
+    println!("\nper-entry engine stats:\n{}", engine.stats_report());
+}

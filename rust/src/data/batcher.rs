@@ -1,0 +1,103 @@
+//! Shuffling mini-batch iterator over a [`Dataset`].
+//!
+//! Fixed batch size (the AOT artifacts are compiled per bucket): the final
+//! partial batch of an epoch is dropped, matching the usual drop_last
+//! convention and keeping every PJRT call on the compiled shape.
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    shuffle: bool,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64, shuffle: bool) -> Self {
+        assert!(batch >= 1 && batch <= data.len());
+        let order: Vec<usize> = (0..data.len()).collect();
+        let mut b = Self {
+            data,
+            batch,
+            order,
+            cursor: 0,
+            rng: Rng::new(seed),
+            shuffle,
+        };
+        if shuffle {
+            b.rng.shuffle(&mut b.order);
+        }
+        b
+    }
+
+    /// Batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.len() / self.batch
+    }
+
+    /// Start the next epoch (reshuffles).
+    pub fn next_epoch(&mut self) {
+        self.cursor = 0;
+        if self.shuffle {
+            self.rng.shuffle(&mut self.order);
+        }
+    }
+
+    /// Next batch, or None at epoch end.
+    pub fn next_batch(&mut self) -> Option<(Vec<f32>, Vec<i32>)> {
+        if self.cursor + self.batch > self.data.len() {
+            return None;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        Some(self.data.gather(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn covers_epoch_without_repeats() {
+        let d = synthetic::generate(50, 1);
+        let mut b = Batcher::new(&d, 8, 0, true);
+        assert_eq!(b.batches_per_epoch(), 6);
+        let mut count = 0;
+        while let Some((imgs, labs)) = b.next_batch() {
+            assert_eq!(labs.len(), 8);
+            assert_eq!(imgs.len(), 8 * d.image_dim());
+            count += 1;
+        }
+        assert_eq!(count, 6);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let d = synthetic::generate(32, 2);
+        let mut b = Batcher::new(&d, 32, 3, true);
+        let (_, l1) = b.next_batch().unwrap();
+        b.next_epoch();
+        let (_, l2) = b.next_batch().unwrap();
+        // Same multiset, (almost surely) different order.
+        let mut s1 = l1.clone();
+        let mut s2 = l2.clone();
+        s1.sort_unstable();
+        s2.sort_unstable();
+        assert_eq!(s1, s2);
+        assert_ne!(l1, l2);
+    }
+
+    #[test]
+    fn unshuffled_is_sequential() {
+        let d = synthetic::generate(16, 4);
+        let mut b = Batcher::new(&d, 4, 0, false);
+        let (_, labs) = b.next_batch().unwrap();
+        assert_eq!(labs, d.labels[0..4].to_vec());
+    }
+}

@@ -1,0 +1,163 @@
+//! Real CIFAR-10 loader (binary version, `cifar-10-batches-bin`).
+//!
+//! Record format: 1 byte label + 3072 bytes pixels (R plane, then G, then
+//! B, each 32x32 row-major), 10000 records per file.  Pixels are converted
+//! to f32, per-channel standardized with the canonical CIFAR-10 statistics,
+//! and transposed to NHWC to match the model's layout.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+const HW: usize = 32;
+const C: usize = 3;
+const RECORD: usize = 1 + HW * HW * C;
+
+/// Canonical CIFAR-10 channel means / stds (of pixel/255).
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Parse one binary batch file into (images NHWC, labels), appending.
+fn parse_batch(
+    bytes: &[u8],
+    limit: usize,
+    images: &mut Vec<f32>,
+    labels: &mut Vec<i32>,
+) -> Result<usize> {
+    if bytes.len() % RECORD != 0 {
+        bail!("batch file size {} not a multiple of {}", bytes.len(), RECORD);
+    }
+    let n = (bytes.len() / RECORD).min(limit);
+    for r in 0..n {
+        let rec = &bytes[r * RECORD..(r + 1) * RECORD];
+        let label = rec[0];
+        if label > 9 {
+            bail!("record {r}: label {label} out of range");
+        }
+        labels.push(label as i32);
+        // CHW planes -> NHWC standardized floats.
+        for y in 0..HW {
+            for x in 0..HW {
+                for ch in 0..C {
+                    let v = rec[1 + ch * HW * HW + y * HW + x] as f32 / 255.0;
+                    images.push((v - MEAN[ch]) / STD[ch]);
+                }
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Load up to `train_size` training images (data_batch_1..5.bin) and
+/// `test_size` test images (test_batch.bin) from `dir`.
+pub fn load_cifar10(
+    dir: &Path,
+    train_size: usize,
+    test_size: usize,
+) -> Result<(Dataset, Dataset)> {
+    let mut tr_images = Vec::new();
+    let mut tr_labels = Vec::new();
+    let mut remaining = train_size;
+    for i in 1..=5 {
+        if remaining == 0 {
+            break;
+        }
+        let path = dir.join(format!("data_batch_{i}.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let got = parse_batch(&bytes, remaining, &mut tr_images, &mut tr_labels)?;
+        remaining -= got;
+    }
+
+    let mut te_images = Vec::new();
+    let mut te_labels = Vec::new();
+    let test_path = dir.join("test_batch.bin");
+    let bytes = std::fs::read(&test_path)
+        .with_context(|| format!("reading {}", test_path.display()))?;
+    parse_batch(&bytes, test_size, &mut te_images, &mut te_labels)?;
+
+    let mk = |images, labels| Dataset {
+        images,
+        labels,
+        hw: HW,
+        channels: C,
+        num_classes: 10,
+    };
+    Ok((mk(tr_images, tr_labels), mk(te_images, te_labels)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny fake batch file in memory.
+    fn fake_batch(n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n * RECORD);
+        for r in 0..n {
+            out.push((r % 10) as u8);
+            for p in 0..HW * HW * C {
+                out.push(((r * 31 + p) % 256) as u8);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parses_fake_batch() {
+        let bytes = fake_batch(5);
+        let mut imgs = Vec::new();
+        let mut labs = Vec::new();
+        let n = parse_batch(&bytes, 100, &mut imgs, &mut labs).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(labs, vec![0, 1, 2, 3, 4]);
+        assert_eq!(imgs.len(), 5 * HW * HW * C);
+        assert!(imgs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn respects_limit() {
+        let bytes = fake_batch(5);
+        let mut imgs = Vec::new();
+        let mut labs = Vec::new();
+        let n = parse_batch(&bytes, 2, &mut imgs, &mut labs).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(labs.len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_size() {
+        let mut imgs = Vec::new();
+        let mut labs = Vec::new();
+        assert!(parse_batch(&[0u8; 100], 1, &mut imgs, &mut labs).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let mut bytes = fake_batch(1);
+        bytes[0] = 99;
+        let mut imgs = Vec::new();
+        let mut labs = Vec::new();
+        assert!(parse_batch(&bytes, 1, &mut imgs, &mut labs).is_err());
+    }
+
+    #[test]
+    fn channel_transpose_is_nhwc() {
+        // Pixel (y=0,x=0): planes R,G,B at offsets 1, 1+1024, 1+2048.
+        let mut bytes = vec![0u8; RECORD];
+        bytes[0] = 3;
+        bytes[1] = 255; // R(0,0)
+        bytes[1 + 1024] = 0; // G(0,0)
+        bytes[1 + 2048] = 128; // B(0,0)
+        let mut imgs = Vec::new();
+        let mut labs = Vec::new();
+        parse_batch(&bytes, 1, &mut imgs, &mut labs).unwrap();
+        let r = (255.0 / 255.0 - MEAN[0]) / STD[0];
+        let g = (0.0 - MEAN[1]) / STD[1];
+        let b = (128.0 / 255.0 - MEAN[2]) / STD[2];
+        assert!((imgs[0] - r).abs() < 1e-5);
+        assert!((imgs[1] - g).abs() < 1e-5);
+        assert!((imgs[2] - b).abs() < 1e-5);
+    }
+}

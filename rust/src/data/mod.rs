@@ -1,0 +1,84 @@
+//! Data pipeline: CIFAR10-like datasets and batching.
+//!
+//! Per DESIGN.md §Substitutions: the build environment has no network, so
+//! the default dataset is a deterministic *synthetic* CIFAR10-like
+//! generator with class-conditional structure (the paper's evaluation
+//! measures solver behaviour, which needs a learnable 10-class 32x32x3
+//! task, not CIFAR's specific pixels).  If a real CIFAR-10 binary
+//! directory is present (`data/cifar-10-batches-bin/`), [`load_auto`]
+//! uses it instead.
+
+pub mod batcher;
+pub mod cifar;
+pub mod synthetic;
+
+pub use batcher::Batcher;
+
+/// An in-memory labeled image dataset, NHWC f32.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>, // (n, hw, hw, c) row-major
+    pub labels: Vec<i32>, // (n,)
+    pub hw: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_dim(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.image_dim();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    /// Gather a batch by indices into (images, labels) flat buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let d = self.image_dim();
+        let mut imgs = Vec::with_capacity(idx.len() * d);
+        let mut labs = Vec::with_capacity(idx.len());
+        for &i in idx {
+            imgs.extend_from_slice(self.image(i));
+            labs.push(self.labels[i]);
+        }
+        (imgs, labs)
+    }
+
+    /// Per-class counts (sanity checks / stratification).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Load real CIFAR-10 if available at `data/cifar-10-batches-bin`,
+/// otherwise generate the synthetic dataset.  Returns (train, test, name).
+pub fn load_auto(
+    train_size: usize,
+    test_size: usize,
+    seed: u64,
+) -> (Dataset, Dataset, &'static str) {
+    let dir = std::path::Path::new("data/cifar-10-batches-bin");
+    if dir.exists() {
+        if let Ok((train, test)) = cifar::load_cifar10(dir, train_size, test_size) {
+            return (train, test, "cifar10");
+        }
+    }
+    let train = synthetic::generate(train_size, seed);
+    let test = synthetic::generate(test_size, seed ^ 0x5EED_7E57);
+    (train, test, "synthetic-cifar10")
+}

@@ -1,0 +1,178 @@
+//! **Ablations** — the design-choice studies DESIGN.md calls out, covering
+//! the hyperparameter space the paper's §6 explicitly leaves unexplored:
+//!
+//!   A. window m ∈ {1, 2, 3, 5}: runtime-masked against the compiled m=5
+//!      artifact (real PJRT solves on an encoded batch).
+//!   B. damping β ∈ {0.5, 0.8, 1.0} and stochastic sketch sizes on the
+//!      native solver (stiff affine map) — including the paper's cited
+//!      future-work stochastic Anderson variant [Wei et al. 2021].
+//!   C. backward mode JFB vs truncated-Neumann: short training runs from
+//!      the same init, loss trajectories compared.
+
+use anyhow::Result;
+
+use crate::data;
+use crate::experiments::ExpOptions;
+use crate::metrics::Csv;
+use crate::model::ParamSet;
+use crate::native::{
+    self, maps::AffineMap, AndersonOpts, StochasticOpts,
+};
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::{self, SolveOptions, SolverKind};
+use crate::train::{default_config, Backward, Trainer};
+
+pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    let mut csv = Csv::new(&["study", "setting", "metric", "value"]);
+
+    // ---- A. window ablation on the real artifacts -------------------
+    println!("[ablation] A: Anderson window (PJRT artifacts, masked)");
+    let params = ParamSet::load_init(engine.manifest())?;
+    let meta = engine.manifest().model.clone();
+    let batch = *engine
+        .manifest()
+        .batches_for("encode")
+        .get(1)
+        .unwrap_or(&1); // second-smallest compiled bucket (8 by default)
+    let (train_data, _, _) = data::load_auto(batch.max(32), 8, opts.seed);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (imgs, _) = train_data.gather(&idx);
+    let x_img = HostTensor::f32(meta.image_shape(batch), imgs)?;
+    let mut enc_in = params.tensors.clone();
+    enc_in.push(x_img);
+    let x_feat = engine.execute("encode", batch, &enc_in)?.remove(0);
+
+    let compiled_m = engine.manifest().solver.window;
+    println!(
+        "{:>8} {:>8} {:>8} {:>14}",
+        "window", "iters", "fevals", "final_res"
+    );
+    for m in [1usize, 2, 3, compiled_m] {
+        let so = SolveOptions {
+            window: m,
+            tol: 2e-3,
+            max_iter: 80,
+            kind: SolverKind::Anderson,
+            ..SolveOptions::from_manifest(engine, SolverKind::Anderson)
+        };
+        let rep = solver::solve(engine, &params.tensors, &x_feat, &so)?;
+        println!(
+            "{:>8} {:>8} {:>8} {:>14.3e}",
+            m,
+            rep.iters(),
+            rep.fevals(),
+            rep.final_residual()
+        );
+        csv.row(&[
+            "window".into(),
+            m.to_string(),
+            "fevals".into(),
+            rep.fevals().to_string(),
+        ]);
+        csv.row(&[
+            "window".into(),
+            m.to_string(),
+            "final_res".into(),
+            format!("{:.6e}", rep.final_residual()),
+        ]);
+    }
+
+    // ---- B. damping + stochastic sketch (native, stiff map) ---------
+    println!("\n[ablation] B: damping β and stochastic sketch (native, ρ=0.97)");
+    let n = 256;
+    let map = AffineMap::random(n, 0.97, opts.seed + 1);
+    let z0 = vec![0.0f32; n];
+    println!("{:>16} {:>8} {:>14}", "setting", "iters", "final_res");
+    for beta in [0.5f32, 0.8, 1.0] {
+        let o = AndersonOpts {
+            window: 5,
+            beta,
+            lam: 1e-8,
+            tol: 1e-5,
+            max_iter: 2000,
+        };
+        let tr = native::solve_anderson(&map, &z0, o)?;
+        println!("{:>16} {:>8} {:>14.3e}", format!("beta={beta}"), tr.iters(), tr.final_residual());
+        csv.row(&[
+            "beta".into(),
+            format!("{beta}"),
+            "iters".into(),
+            tr.iters().to_string(),
+        ]);
+    }
+    for sketch in [16usize, 64, 0] {
+        let o = StochasticOpts {
+            base: AndersonOpts {
+                window: 5,
+                lam: 1e-8,
+                tol: 1e-5,
+                max_iter: 2000,
+                ..Default::default()
+            },
+            sketch,
+            beta_lo: 0.9,
+            beta_hi: 1.0,
+            seed: opts.seed,
+        };
+        let tr = native::solve_stochastic(&map, &z0, o)?;
+        let label = if sketch == 0 { "sketch=exact".to_string() } else { format!("sketch={sketch}") };
+        println!("{:>16} {:>8} {:>14.3e}", label, tr.iters(), tr.final_residual());
+        csv.row(&[
+            "stochastic".into(),
+            label,
+            "iters".into(),
+            tr.iters().to_string(),
+        ]);
+    }
+    let fw = native::solve_forward(
+        &map,
+        &z0,
+        AndersonOpts { tol: 1e-5, max_iter: 4000, ..Default::default() },
+    );
+    println!("{:>16} {:>8} {:>14.3e}", "forward", fw.iters(), fw.final_residual());
+    csv.row(&[
+        "baseline".into(),
+        "forward".into(),
+        "iters".into(),
+        fw.iters().to_string(),
+    ]);
+
+    // ---- C. backward mode: JFB vs truncated Neumann ------------------
+    println!("\n[ablation] C: backward mode (JFB vs Neumann-K), {} epochs", opts.epochs.min(3));
+    let (train_d, test_d, _) = data::load_auto(
+        opts.train_size.min(256),
+        opts.test_size.min(96),
+        opts.seed,
+    );
+    let init = ParamSet::load_init(engine.manifest())?;
+    for (label, bw) in [("jfb", Backward::Jfb), ("neumann", Backward::Neumann)] {
+        let mut cfg = default_config(engine, SolverKind::Anderson, opts.epochs.min(3));
+        cfg.backward = bw;
+        cfg.verbose = false;
+        let rep = Trainer::new(engine, cfg)?.train(&init, &train_d, &test_d)?;
+        let last = rep.epochs.last().unwrap();
+        println!(
+            "  {label:<8} final loss {:.4} train_acc {:.1}% test_acc {:.1}% ({:.1?})",
+            last.train_loss,
+            100.0 * last.train_acc,
+            100.0 * rep.best_test_acc().unwrap_or(0.0),
+            rep.total_time
+        );
+        csv.row(&[
+            "backward".into(),
+            label.into(),
+            "final_loss".into(),
+            format!("{:.4}", last.train_loss),
+        ]);
+        csv.row(&[
+            "backward".into(),
+            label.into(),
+            "train_acc".into(),
+            format!("{:.4}", last.train_acc),
+        ]);
+    }
+
+    csv.save(opts.out_dir.join("ablation.csv"))?;
+    println!("[ablation] wrote {}", opts.out_dir.join("ablation.csv").display());
+    Ok(())
+}

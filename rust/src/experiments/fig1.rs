@@ -1,0 +1,118 @@
+//! **Fig. 1**: Crossover and mixing penalty — relative residual vs time
+//! for Anderson vs forward iteration on one equilibrium solve.
+//!
+//! Measured on the real AOT artifacts (CPU wallclock), then re-timed with
+//! the V100/Xeon roofline models so the plot carries the paper's four
+//! curves.  The crossover detector reports the residual level where
+//! Anderson's wallclock advantage begins, and the per-iteration mixing
+//! penalty.
+
+use anyhow::Result;
+
+use crate::data;
+use crate::experiments::ExpOptions;
+use crate::metrics::Csv;
+use crate::model::ParamSet;
+use crate::runtime::{Engine, HostTensor};
+use crate::simulate::{simulate_timestamps, Workload, V100, XEON};
+use crate::solver::{self, crossover, SolveOptions, SolverKind};
+
+pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    let manifest = engine.manifest();
+    let batch = 32usize;
+    let (train_data, _, ds) = data::load_auto(batch.max(64), 8, opts.seed);
+    let params = ParamSet::load_init(manifest)?;
+    println!("[fig1] dataset={ds} batch={batch} solving to tol=1e-4 ...");
+
+    // Encode one batch.
+    let idx: Vec<usize> = (0..batch).collect();
+    let (imgs, _) = train_data.gather(&idx);
+    let x_img = HostTensor::f32(manifest.model.image_shape(batch), imgs)?;
+    let mut enc_in: Vec<HostTensor> = params.tensors.clone();
+    enc_in.push(x_img);
+    let x_feat = engine.execute("encode", batch, &enc_in)?.remove(0);
+
+    // Deep solves with both methods (per-step dispatch so the trace has
+    // full resolution).
+    let mk_opts = |kind| SolveOptions {
+        tol: 1e-4,
+        max_iter: 60,
+        fused_forward: false,
+        ..SolveOptions::from_manifest(engine, kind)
+    };
+    let rep_a = solver::solve(
+        engine,
+        &params.tensors,
+        &x_feat,
+        &mk_opts(SolverKind::Anderson),
+    )?;
+    let rep_f = solver::solve(
+        engine,
+        &params.tensors,
+        &x_feat,
+        &mk_opts(SolverKind::Forward),
+    )?;
+
+    let cx = crossover::analyze(&rep_a, &rep_f);
+    println!(
+        "[fig1] measured: anderson {} iters (res {:.2e}) | forward {} iters (res {:.2e})",
+        rep_a.iters(),
+        rep_a.final_residual(),
+        rep_f.iters(),
+        rep_f.final_residual()
+    );
+    println!(
+        "[fig1] mixing penalty (cost/iter ratio): {:.2}x | crossover residual: {}",
+        cx.mixing_penalty,
+        cx.crossover_residual
+            .map(|r| format!("{r:.2e}"))
+            .unwrap_or_else(|| "none within horizon".into()),
+    );
+
+    // CSV: measured + device-model curves.
+    let w = Workload {
+        batch,
+        latent_hw: manifest.model.latent_hw,
+        channels: manifest.model.channels,
+        window: manifest.solver.window,
+    };
+    let mut csv = Csv::new(&["series", "iter", "time_s", "rel_residual"]);
+    for (series, rep, anderson) in
+        [("anderson_cpu_measured", &rep_a, true), ("forward_cpu_measured", &rep_f, false)]
+    {
+        for s in &rep.steps {
+            csv.row(&[
+                series.to_string(),
+                s.iter.to_string(),
+                format!("{:.6}", s.elapsed.as_secs_f64()),
+                format!("{:.6e}", s.rel_residual),
+            ]);
+        }
+        let residuals: Vec<f32> =
+            rep.steps.iter().map(|s| s.rel_residual).collect();
+        for (dev, tag) in [(&V100, "v100_model"), (&XEON, "xeon_model")] {
+            for (k, (t, r)) in
+                simulate_timestamps(&residuals, dev, &w, anderson)
+                    .into_iter()
+                    .enumerate()
+            {
+                csv.row(&[
+                    format!(
+                        "{}_{}",
+                        if anderson { "anderson" } else { "forward" },
+                        tag
+                    ),
+                    k.to_string(),
+                    format!("{:.6e}", t.as_secs_f64()),
+                    format!("{:.6e}", r),
+                ]);
+            }
+        }
+    }
+    csv.save(opts.out_dir.join("fig1_crossover.csv"))?;
+    println!(
+        "[fig1] wrote {}",
+        opts.out_dir.join("fig1_crossover.csv").display()
+    );
+    Ok(())
+}

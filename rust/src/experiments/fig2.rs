@@ -1,0 +1,59 @@
+//! **Fig. 2**: AI carbon-footprint / electricity-demand projection to 2030
+//! with the Anderson+GPU savings overlay.  Pure model (no artifacts).
+
+use anyhow::Result;
+
+use crate::experiments::ExpOptions;
+use crate::metrics::Csv;
+use crate::simulate::EnergyModel;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let model = EnergyModel::default();
+    let series = model.series();
+
+    println!("[fig2] AI electricity projection (model assumptions in simulate::energy)");
+    println!(
+        "{:<6} {:>12} {:>10} {:>9} {:>10} {:>11} {:>12}",
+        "year", "global TWh", "DC TWh", "AI TWh", "AI share", "saved TWh", "saved MtCO2"
+    );
+    let mut csv = Csv::new(&[
+        "year",
+        "global_twh",
+        "dc_twh",
+        "ai_twh",
+        "ai_share_of_global",
+        "saved_twh",
+        "saved_mt_co2",
+    ]);
+    for p in &series {
+        println!(
+            "{:<6} {:>12.0} {:>10.0} {:>9.0} {:>9.2}% {:>11.0} {:>12.0}",
+            p.year,
+            p.global_twh,
+            p.dc_twh,
+            p.ai_twh,
+            100.0 * p.ai_share_of_global,
+            p.saved_twh,
+            p.saved_mt_co2
+        );
+        csv.row(&[
+            p.year.to_string(),
+            format!("{:.1}", p.global_twh),
+            format!("{:.1}", p.dc_twh),
+            format!("{:.1}", p.ai_twh),
+            format!("{:.4}", p.ai_share_of_global),
+            format!("{:.1}", p.saved_twh),
+            format!("{:.1}", p.saved_mt_co2),
+        ]);
+    }
+    let last = series.last().unwrap();
+    println!(
+        "[fig2] 2030: AI = {:.1}% of global demand (paper: >2%); \
+         Anderson savings = {:.0} TWh/yr (paper: ~160 TWh/yr)",
+        100.0 * last.ai_share_of_global,
+        last.saved_twh
+    );
+    csv.save(opts.out_dir.join("fig2_energy.csv"))?;
+    println!("[fig2] wrote {}", opts.out_dir.join("fig2_energy.csv").display());
+    Ok(())
+}

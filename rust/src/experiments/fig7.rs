@@ -1,0 +1,96 @@
+//! **Fig. 7**: time to stable convergence — the DEQ trains ~10x faster to a
+//! given accuracy with Anderson than with forward iteration.
+//!
+//! We train both solvers from the same init and sweep accuracy targets,
+//! reporting wallclock-to-target for each (the paper's bar/line view),
+//! plus the measured speedup band (paper Table 1: 2-8.6x / "up to an order
+//! of magnitude").
+
+use anyhow::Result;
+
+use crate::data;
+use crate::experiments::ExpOptions;
+use crate::metrics::Csv;
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::solver::SolverKind;
+use crate::train::{default_config, Trainer};
+
+pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    let (train_data, test_data, ds) =
+        data::load_auto(opts.train_size, opts.test_size, opts.seed);
+    let init = ParamSet::load_init(engine.manifest())?;
+    println!(
+        "[fig7] dataset={ds} train={} epochs={}",
+        train_data.len(),
+        opts.epochs
+    );
+
+    let mut cfg_a = default_config(engine, SolverKind::Anderson, opts.epochs);
+    cfg_a.verbose = opts.verbose;
+    let rep_a =
+        Trainer::new(engine, cfg_a)?.train(&init, &train_data, &test_data)?;
+    let mut cfg_f = default_config(engine, SolverKind::Forward, opts.epochs);
+    cfg_f.verbose = opts.verbose;
+    let rep_f =
+        Trainer::new(engine, cfg_f)?.train(&init, &train_data, &test_data)?;
+
+    // Sweep accuracy targets between chance and the best either run hit.
+    let best = rep_a
+        .final_train_acc()
+        .max(rep_f.final_train_acc())
+        .max(0.15);
+    let targets: Vec<f32> =
+        (1..=10).map(|i| 0.1 + (best - 0.1) * i as f32 / 10.0).collect();
+
+    let mut csv = Csv::new(&[
+        "train_acc_target", "anderson_time_s", "forward_time_s", "speedup",
+    ]);
+    println!(
+        "{:>10} {:>16} {:>16} {:>9}",
+        "target", "anderson_time", "forward_time", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for t in targets {
+        let ta = rep_a.time_to_train_acc(t);
+        let tf = rep_f.time_to_train_acc(t);
+        let sp = match (ta, tf) {
+            (Some(a), Some(f)) => Some(f.as_secs_f64() / a.as_secs_f64().max(1e-9)),
+            _ => None,
+        };
+        if let Some(s) = sp {
+            speedups.push(s);
+        }
+        println!(
+            "{:>9.1}% {:>16} {:>16} {:>9}",
+            100.0 * t,
+            ta.map(|d| format!("{:.2}s", d.as_secs_f64()))
+                .unwrap_or_else(|| "-".into()),
+            tf.map(|d| format!("{:.2}s", d.as_secs_f64()))
+                .unwrap_or_else(|| "-".into()),
+            sp.map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".into()),
+        );
+        csv.row(&[
+            format!("{t:.3}"),
+            ta.map(|d| format!("{:.3}", d.as_secs_f64())).unwrap_or_default(),
+            tf.map(|d| format!("{:.3}", d.as_secs_f64())).unwrap_or_default(),
+            sp.map(|s| format!("{s:.2}")).unwrap_or_default(),
+        ]);
+    }
+    if !speedups.is_empty() {
+        let (lo, hi) = speedups.iter().fold((f64::MAX, f64::MIN), |(l, h), &s| {
+            (l.min(s), h.max(s))
+        });
+        println!(
+            "[fig7] speedup band: {lo:.1}x – {hi:.1}x (paper: 2-8.6x, 'up to ~10x')"
+        );
+    } else {
+        println!("[fig7] no common accuracy target reached by both solvers");
+    }
+    csv.save(opts.out_dir.join("fig7_convergence.csv"))?;
+    println!(
+        "[fig7] wrote {}",
+        opts.out_dir.join("fig7_convergence.csv").display()
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Experiment harness: one module per table/figure in the paper's
+//! evaluation (see DESIGN.md §3 for the index).
+//!
+//! Every experiment
+//!   * regenerates the same rows/series the paper reports,
+//!   * prints a human-readable table to stdout,
+//!   * writes machine-readable CSV under `--out` (default `results/`),
+//! and is invoked either through `deq-anderson experiment <id>` or its
+//! `cargo bench` wrapper.
+//!
+//! Scale note: the paper trains on a V100 for hours; these default sizes
+//! are chosen so the full suite runs on CPU in minutes while preserving
+//! the comparisons' *shape* (who wins, by what factor, where crossovers
+//! fall).  Paper-scale projections come from the device model.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub out_dir: PathBuf,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            out_dir: PathBuf::from("results"),
+            train_size: 960,
+            test_size: 320,
+            epochs: 6,
+            seed: 0,
+            verbose: true,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Reduced sizes for bench wrappers / CI smoke.
+    pub fn smoke() -> Self {
+        Self {
+            train_size: 128,
+            test_size: 64,
+            epochs: 2,
+            verbose: false,
+            ..Self::default()
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &["table1", "fig1", "fig2", "fig5", "fig6", "fig7", "ablation"];
+
+/// Dispatch by id. `engine` may be None only for fig2/fig6 (native-only).
+pub fn run(id: &str, engine: Option<&Engine>, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "table1" => table1::run(need(engine)?, opts),
+        "fig1" => fig1::run(need(engine)?, opts),
+        "fig2" => fig2::run(opts),
+        "fig5" => fig5::run(need(engine)?, opts),
+        "fig6" => fig6::run(opts),
+        "fig7" => fig7::run(need(engine)?, opts),
+        "ablation" => ablation::run(need(engine)?, opts),
+        other => bail!("unknown experiment '{other}' (have {ALL:?})"),
+    }
+}
+
+fn need<'a>(engine: Option<&'a Engine>) -> Result<&'a Engine> {
+    engine.ok_or_else(|| {
+        anyhow::anyhow!("this experiment needs artifacts (run `make artifacts`)")
+    })
+}

@@ -1,0 +1,162 @@
+//! Inference engine: encode → equilibrium solve → classify, with batch
+//! padding to the compiled buckets and dataset-level evaluation.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::ParamSet;
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::{self, SolveOptions};
+
+/// Result of one inference call.
+#[derive(Debug, Clone)]
+pub struct InferResult {
+    pub logits: Vec<Vec<f32>>, // per sample
+    pub predictions: Vec<usize>,
+    pub solver_iters: usize,
+    pub solver_residual: f32,
+    pub latency: Duration,
+}
+
+/// Argmax over one logit row.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Softmax cross-entropy of one row against a label (host-side metric).
+pub fn cross_entropy(row: &[f32], label: usize) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+    lse - row[label]
+}
+
+/// Run inference on `images` (flat NHWC, `count` samples).  Pads up to the
+/// smallest compiled batch bucket and slices the results back.
+pub fn infer(
+    engine: &Engine,
+    params: &ParamSet,
+    images: &[f32],
+    count: usize,
+    opts: &SolveOptions,
+) -> Result<InferResult> {
+    let meta = engine.manifest().model.clone();
+    let dim = meta.image_dim();
+    anyhow::ensure!(images.len() == count * dim, "image buffer size mismatch");
+    let bucket = engine.manifest().bucket_for("encode", count)?;
+    anyhow::ensure!(count <= bucket, "batch {count} exceeds largest bucket {bucket}");
+
+    let t0 = Instant::now();
+    // Pad with zeros to the bucket.
+    let mut buf = images.to_vec();
+    buf.resize(bucket * dim, 0.0);
+    let x_img = HostTensor::f32(meta.image_shape(bucket), buf)?;
+
+    let mut enc_in: Vec<HostTensor> = params.tensors.clone();
+    enc_in.push(x_img);
+    let x_feat = engine.execute("encode", bucket, &enc_in)?.remove(0);
+
+    let report = solver::solve(engine, &params.tensors, &x_feat, opts)?;
+
+    let mut cls_in: Vec<HostTensor> = params.tensors.clone();
+    cls_in.push(report.z_star.clone());
+    let logits_t = engine.execute("classify", bucket, &cls_in)?.remove(0);
+    let nc = meta.num_classes;
+    let flat = logits_t.f32s()?;
+
+    let logits: Vec<Vec<f32>> = (0..count)
+        .map(|i| flat[i * nc..(i + 1) * nc].to_vec())
+        .collect();
+    let predictions = logits.iter().map(|r| argmax(r)).collect();
+
+    Ok(InferResult {
+        logits,
+        predictions,
+        solver_iters: report.iters(),
+        solver_residual: report.final_residual(),
+        latency: t0.elapsed(),
+    })
+}
+
+/// Dataset accuracy with the DEQ path.
+pub fn evaluate(
+    engine: &Engine,
+    params: &ParamSet,
+    data: &Dataset,
+    batch: usize,
+    opts: &SolveOptions,
+) -> Result<f32> {
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let n_batches = data.len() / batch;
+    for b in 0..n_batches {
+        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+        let (imgs, labels) = data.gather(&idx);
+        let r = infer(engine, params, &imgs, batch, opts)?;
+        for (p, l) in r.predictions.iter().zip(&labels) {
+            if *p == *l as usize {
+                correct += 1;
+            }
+        }
+        seen += batch;
+    }
+    Ok(correct as f32 / seen.max(1) as f32)
+}
+
+/// Dataset accuracy with the explicit baseline network.
+pub fn evaluate_explicit(
+    engine: &Engine,
+    params: &ParamSet,
+    data: &Dataset,
+    batch: usize,
+) -> Result<f32> {
+    let meta = engine.manifest().model.clone();
+    let nc = meta.num_classes;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let n_batches = data.len() / batch;
+    for b in 0..n_batches {
+        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+        let (imgs, labels) = data.gather(&idx);
+        let x_img = HostTensor::f32(meta.image_shape(batch), imgs)?;
+        let mut inputs: Vec<HostTensor> = params.tensors.clone();
+        inputs.push(x_img);
+        let logits_t = engine.execute("explicit_infer", batch, &inputs)?.remove(0);
+        let flat = logits_t.f32s()?;
+        for i in 0..batch {
+            if argmax(&flat[i * nc..(i + 1) * nc]) == labels[i] as usize {
+                correct += 1;
+            }
+        }
+        seen += batch;
+    }
+    Ok(correct as f32 / seen.max(1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn cross_entropy_sane() {
+        // Confident correct prediction → small loss.
+        let good = cross_entropy(&[10.0, 0.0, 0.0], 0);
+        let bad = cross_entropy(&[10.0, 0.0, 0.0], 1);
+        assert!(good < 0.01);
+        assert!(bad > 5.0);
+        // Uniform logits → ln(3).
+        let u = cross_entropy(&[1.0, 1.0, 1.0], 2);
+        assert!((u - 3.0f32.ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,29 @@
+//! # deq-anderson
+//!
+//! Production-grade reproduction of *"Accelerating AI Performance using
+//! Anderson Extrapolation on GPUs"* (Al Dajani & Keyes, 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 1 (Pallas)**: fused Anderson-mixing, tiled matmul and fused
+//!   GroupNorm kernels (`python/compile/kernels/`), AOT-lowered.
+//! - **Layer 2 (JAX)**: the deep-equilibrium model of the paper's Fig. 4,
+//!   with JFB / Neumann training updates (`python/compile/model.py`).
+//! - **Layer 3 (this crate)**: the coordinator — fixed-point solver
+//!   drivers, training loop, inference server, device/energy simulators
+//!   and the experiment harness reproducing every table and figure.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once to HLO text which [`runtime::Engine`] loads via PJRT.
+
+pub mod data;
+pub mod experiments;
+pub mod infer;
+pub mod metrics;
+pub mod model;
+pub mod native;
+pub mod runtime;
+pub mod server;
+pub mod simulate;
+pub mod solver;
+pub mod train;
+pub mod util;

@@ -1,0 +1,361 @@
+//! `deq-anderson` — CLI for the Anderson-extrapolated DEQ stack.
+//!
+//! Subcommands:
+//!   train              train the DEQ (or explicit baseline) on CIFAR10(-like)
+//!   infer              classify a few samples, report solver stats
+//!   serve              start the dynamic-batching TCP inference server
+//!   experiment <id>    regenerate a paper table/figure (table1 fig1 fig2
+//!                      fig5 fig6 fig7, or `all`)
+//!   sweep              native Anderson hyperparameter sweep (window/beta)
+//!   artifacts-check    validate artifacts + run a numeric cross-check
+//!
+//! Common flags: --artifacts DIR (default `artifacts`), --out DIR
+//! (default `results`), --seed N.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use deq_anderson::data;
+use deq_anderson::experiments::{self, ExpOptions};
+use deq_anderson::infer;
+use deq_anderson::metrics::fmt_duration;
+use deq_anderson::model::ParamSet;
+use deq_anderson::native::{self, maps::DeqLikeMap, AndersonOpts};
+use deq_anderson::runtime::Engine;
+use deq_anderson::server::{tcp, Router, RouterConfig};
+use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::train::{default_config, Backward, Trainer};
+use deq_anderson::util::cli::Args;
+
+const USAGE: &str = "\
+usage: deq-anderson <command> [flags]
+
+commands:
+  train             --solver anderson|forward|hybrid --epochs N --train-size N
+                    --test-size N --batch N --backward jfb|neumann
+                    --checkpoint PATH --explicit
+  infer             --n N --solver KIND [--checkpoint PATH]
+  serve             --addr 127.0.0.1:7070 --solver KIND --max-wait-ms N
+  experiment ID     table1|fig1|fig2|fig5|fig6|fig7|all
+                    --train-size N --test-size N --epochs N
+  sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
+  artifacts-check
+common flags: --artifacts DIR  --out DIR  --seed N  --quiet
+";
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let dir = args.str_or("artifacts", "artifacts");
+    Engine::new(PathBuf::from(&dir))
+        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        "sweep" => cmd_sweep(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
+        .context("bad --solver")?;
+    let epochs = args.usize_or("epochs", 5);
+    let mut cfg = default_config(&engine, kind, epochs);
+    cfg.batch = args.usize_or("batch", 32);
+    cfg.seed = args.u64_or("seed", 0);
+    cfg.verbose = !args.has("quiet");
+    cfg.solver.max_iter = args.usize_or("max-iter", cfg.solver.max_iter);
+    cfg.solver.tol = args.f32_or("tol", cfg.solver.tol);
+    if args.str_or("backward", "jfb") == "neumann" {
+        cfg.backward = Backward::Neumann;
+    }
+
+    let (train_data, test_data, ds) = data::load_auto(
+        args.usize_or("train-size", 960),
+        args.usize_or("test-size", 320),
+        cfg.seed,
+    );
+    println!(
+        "training DEQ: solver={} backward={:?} dataset={ds} train={} test={} \
+         epochs={epochs} params={}",
+        kind.name(),
+        cfg.backward,
+        train_data.len(),
+        test_data.len(),
+        engine.manifest().model.param_count
+    );
+
+    let init = ParamSet::load_init(engine.manifest())?;
+    let trainer = Trainer::new(&engine, cfg)?;
+    let report = if args.has("explicit") {
+        trainer.train_explicit(&init, &train_data, &test_data)?
+    } else {
+        trainer.train(&init, &train_data, &test_data)?
+    };
+
+    println!(
+        "done in {}: final train acc {:.1}%, best test acc {:.1}%{}",
+        fmt_duration(report.total_time),
+        100.0 * report.final_train_acc(),
+        100.0 * report.best_test_acc().unwrap_or(0.0),
+        if report.diverged { " [DIVERGED]" } else { "" }
+    );
+    if let Some(path) = args.get("checkpoint") {
+        report.params.save(&PathBuf::from(path))?;
+        println!("saved checkpoint to {path}");
+    }
+    if args.has("stats") {
+        println!("{}", engine.stats_report());
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
+        .context("bad --solver")?;
+    let n = args.usize_or("n", 8);
+    let params = match args.get("checkpoint") {
+        Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
+        None => ParamSet::load_init(engine.manifest())?,
+    };
+    let (data, _, ds) = data::load_auto(n.max(32), 8, args.u64_or("seed", 0));
+    let idx: Vec<usize> = (0..n).collect();
+    let (imgs, labels) = data.gather(&idx);
+    let opts = SolveOptions::from_manifest(&engine, kind);
+    let r = infer::infer(&engine, &params, &imgs, n, &opts)?;
+    println!(
+        "inference: dataset={ds} n={n} solver={} iters={} residual={:.2e} latency={}",
+        kind.name(),
+        r.solver_iters,
+        r.solver_residual,
+        fmt_duration(r.latency)
+    );
+    let correct = r
+        .predictions
+        .iter()
+        .zip(&labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    println!("predictions: {:?}", r.predictions);
+    println!("labels:      {:?}", labels);
+    println!("accuracy: {}/{n}", correct);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Arc::new(engine_from(args)?);
+    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
+        .context("bad --solver")?;
+    let params = Arc::new(match args.get("checkpoint") {
+        Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
+        None => ParamSet::load_init(engine.manifest())?,
+    });
+    let cfg = RouterConfig {
+        solver: SolveOptions::from_manifest(&engine, kind),
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
+        queue_cap: args.usize_or("queue-cap", 1024),
+    };
+    let image_dim = engine.manifest().model.image_dim();
+    // Pre-compile all serving buckets so first requests aren't slow.
+    let buckets = engine.manifest().batches_for("encode");
+    let warm: Vec<(&str, usize)> = buckets
+        .iter()
+        .flat_map(|&b| {
+            [("encode", b), ("cell_step", b), ("anderson_update", b), ("classify", b)]
+        })
+        .collect();
+    engine.warmup(&warm)?;
+    let router = Arc::new(Router::start(engine, params, cfg)?);
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    tcp::serve_tcp(router, image_dim, &addr)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("experiment id required (or 'all')")?;
+    let opts = ExpOptions {
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        train_size: args.usize_or("train-size", 960),
+        test_size: args.usize_or("test-size", 320),
+        epochs: args.usize_or("epochs", 6),
+        seed: args.u64_or("seed", 0),
+        verbose: !args.has("quiet"),
+    };
+    // fig2 / fig6 run without artifacts; the rest need the engine.
+    let needs_engine = |id: &str| !matches!(id, "fig2" | "fig6");
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    let engine = if ids.iter().any(|i| needs_engine(i)) {
+        Some(engine_from(args)?)
+    } else {
+        None
+    };
+    for id in ids {
+        println!("\n================ experiment {id} ================");
+        experiments::run(id, engine.as_ref(), &opts)?;
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    // Native hyperparameter sweep: window m and damping beta on a
+    // DEQ-like synthetic map (paper §6 limitation: "these results do not
+    // comprehensively search the Anderson hyperparameter space" — we do).
+    let dim = args.usize_or("dim", 256);
+    let windows = args.usize_list_or("windows", &[1, 2, 3, 5, 8]);
+    let betas: Vec<f32> = args
+        .str_or("betas", "0.5,0.8,1.0")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad --betas"))
+        .collect();
+    let map = DeqLikeMap::random(dim, 0.9, args.u64_or("seed", 0));
+    let z0 = vec![0.0f32; dim];
+    println!(
+        "{:>7} {:>6} {:>8} {:>14} {:>12}",
+        "window", "beta", "iters", "final_res", "converged"
+    );
+    for &m in &windows {
+        for &b in &betas {
+            let o = AndersonOpts {
+                window: m,
+                beta: b,
+                lam: 1e-4,
+                tol: 1e-6,
+                max_iter: 200,
+            };
+            let tr = native::solve_anderson(&map, &z0, o)?;
+            println!(
+                "{:>7} {:>6.2} {:>8} {:>14.3e} {:>12}",
+                m,
+                b,
+                tr.iters(),
+                tr.final_residual(),
+                tr.converged
+            );
+        }
+    }
+    let fw = native::solve_forward(
+        &map,
+        &z0,
+        AndersonOpts { tol: 1e-6, max_iter: 200, ..Default::default() },
+    );
+    println!(
+        "{:>7} {:>6} {:>8} {:>14.3e} {:>12}   (forward baseline)",
+        "-",
+        "-",
+        fw.iters(),
+        fw.final_residual(),
+        fw.converged
+    );
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let m = engine.manifest().clone();
+    println!(
+        "manifest: preset={} params={} entries={} pallas={} platform={}",
+        m.model.preset,
+        m.model.param_count,
+        m.entries.len(),
+        m.use_pallas,
+        engine.platform()
+    );
+    // Numeric cross-check: anderson_update artifact vs the native solver
+    // on identical inputs.
+    let batch = 1usize;
+    let n = m.model.latent_dim();
+    let window = m.solver.window;
+    use deq_anderson::runtime::HostTensor;
+    use deq_anderson::util::rng::Rng;
+    let mut rng = Rng::new(7);
+    let xh = rng.normal_vec(batch * window * n, 1.0);
+    let fh: Vec<f32> = xh.iter().map(|v| v + 0.1 * rng.normal()).collect();
+    let mask = vec![1.0f32; window];
+    let out = engine.execute(
+        "anderson_update",
+        batch,
+        &[
+            HostTensor::f32(vec![batch, window, n], xh.clone())?,
+            HostTensor::f32(vec![batch, window, n], fh.clone())?,
+            HostTensor::f32(vec![window], mask)?,
+        ],
+    )?;
+    // Native twin.
+    let mut st = deq_anderson::native::AndersonState::new(
+        window,
+        n,
+        m.solver.beta,
+        m.solver.lam,
+    );
+    for i in 0..window {
+        st.push(&xh[i * n..(i + 1) * n], &fh[i * n..(i + 1) * n]);
+    }
+    let (z_native, alpha_native) = st.mix()?;
+    let z_art = out[0].f32s()?;
+    let alpha_art = out[1].f32s()?;
+    let zerr = z_art
+        .iter()
+        .zip(&z_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let aerr = alpha_art
+        .iter()
+        .zip(&alpha_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "anderson artifact vs native twin: max|Δz|={zerr:.2e} max|Δα|={aerr:.2e}"
+    );
+    anyhow::ensure!(zerr < 1e-2 && aerr < 1e-2, "artifact/native divergence");
+    // Exercise every entry once at its smallest batch with zero inputs.
+    for name in [
+        "encode", "cell_step", "anderson_update", "classify",
+        "forward_solve_k", "explicit_infer",
+    ] {
+        let b = *m.batches_for(name).first().context("no buckets")?;
+        let spec = m.entry(name, b)?;
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                deq_anderson::runtime::Dtype::F32 => {
+                    HostTensor::zeros(s.shape.clone())
+                }
+                deq_anderson::runtime::Dtype::I32 => {
+                    HostTensor::i32(s.shape.clone(), vec![0; s.elements()])
+                        .unwrap()
+                }
+            })
+            .collect();
+        let out = engine.execute(name, b, &inputs)?;
+        println!("  {name}@b{b}: ok ({} outputs)", out.len());
+    }
+    println!("artifacts-check: ALL OK");
+    if args.has("stats") {
+        println!("{}", engine.stats_report());
+    }
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Model parameter management: loading the deterministic init checkpoint,
+//! save/load of training checkpoints, and the canonical flat layout the
+//! AOT entry points consume.
+
+pub mod params;
+
+pub use params::ParamSet;

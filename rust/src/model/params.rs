@@ -1,0 +1,143 @@
+//! Parameter sets in the manifest's canonical order.
+//!
+//! The AOT entry points accept parameters as their leading positional
+//! arguments, in exactly the order of `manifest.params`.  `ParamSet` keeps
+//! that invariant: a `Vec<HostTensor>` indexed identically, with flat-file
+//! (de)serialization for checkpoints.
+//!
+//! Checkpoint format (little-endian):
+//!   magic  "DEQA"        4 bytes
+//!   version u32          (=1)
+//!   count   u32          number of f32 values
+//!   data    count * f32  concatenated tensors in manifest order
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+const MAGIC: &[u8; 4] = b"DEQA";
+const VERSION: u32 = 1;
+
+/// The model parameters (and, during training, momentum buffers).
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamSet {
+    /// Split a flat f32 buffer into tensors per the manifest layout.
+    pub fn from_flat(manifest: &Manifest, flat: &[f32]) -> Result<Self> {
+        let want: usize = manifest.model.param_count;
+        if flat.len() != want {
+            bail!("flat checkpoint has {} values, manifest wants {want}", flat.len());
+        }
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut off = 0;
+        for spec in &manifest.params {
+            let n = spec.elements();
+            tensors.push(HostTensor::f32(
+                spec.shape.clone(),
+                flat[off..off + n].to_vec(),
+            )?);
+            off += n;
+        }
+        Ok(Self { tensors })
+    }
+
+    /// All-zero tensors with the parameter layout (momentum buffers).
+    pub fn zeros_like(manifest: &Manifest) -> Self {
+        Self {
+            tensors: manifest
+                .params
+                .iter()
+                .map(|s| HostTensor::zeros(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    /// Load the deterministic initial checkpoint written by `aot.py`.
+    pub fn load_init(manifest: &Manifest) -> Result<Self> {
+        Self::load_flat_f32(manifest, &manifest.init_params_path())
+    }
+
+    /// Load a raw little-endian f32 file (the init format).
+    pub fn load_flat_f32(manifest: &Manifest, path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: size not a multiple of 4", path.display());
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_flat(manifest, &flat)
+    }
+
+    /// Flatten back to manifest order.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for t in &self.tensors {
+            out.extend_from_slice(t.f32s().expect("params are f32"));
+        }
+        out
+    }
+
+    /// Save a versioned checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let flat = self.to_flat();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(flat.len() as u32).to_le_bytes())?;
+        for v in &flat {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Load a versioned checkpoint saved by [`ParamSet::save`].
+    pub fn load(manifest: &Manifest, path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut head = [0u8; 12];
+        f.read_exact(&mut head).context("checkpoint header")?;
+        if &head[0..4] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("{}: unsupported checkpoint version {version}", path.display());
+        }
+        let count = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+        let mut bytes = vec![0u8; count * 4];
+        f.read_exact(&mut bytes).context("checkpoint body")?;
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_flat(manifest, &flat)
+    }
+
+    /// Max |w| across all tensors — cheap divergence guard for training.
+    pub fn max_abs(&self) -> f32 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.f32s().unwrap().iter())
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.tensors
+            .iter()
+            .all(|t| t.f32s().unwrap().iter().all(|v| v.is_finite()))
+    }
+}

@@ -1,0 +1,343 @@
+//! Pure-Rust Anderson extrapolation over arbitrary fixed-point maps.
+//!
+//! This is the *native twin* of the AOT Anderson kernel: the same math
+//! (paper Alg. 1, Eqs. 1-5) implemented directly in Rust over a
+//! [`FixedPointMap`] trait.  It exists because the coordinator needs an
+//! XLA-independent solver for
+//!
+//!   * the device cost-model simulations behind Figs. 1 & 6 (arbitrary
+//!     problem sizes, no artifact compilation),
+//!   * property tests of the solver invariants (window masking, Σα = 1,
+//!     Krylov exactness on affine maps), cross-checked against the Pallas
+//!     kernel through the runtime integration tests,
+//!   * hyperparameter sweeps (window m, damping β, λ) that would be
+//!     wasteful through PJRT dispatch.
+
+use anyhow::Result;
+
+use crate::native::linalg;
+
+/// A vector-valued fixed-point problem z = f(z).
+pub trait FixedPointMap {
+    fn dim(&self) -> usize;
+    /// Evaluate `out = f(z)`.
+    fn apply(&self, z: &[f32], out: &mut [f32]);
+    /// Optional known solution (for tests / error tracking).
+    fn solution(&self) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+/// Solver configuration (paper Alg. 1 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct AndersonOpts {
+    pub window: usize, // m
+    pub beta: f32,
+    pub lam: f32,
+    pub tol: f32,
+    pub max_iter: usize,
+}
+
+impl Default for AndersonOpts {
+    fn default() -> Self {
+        Self { window: 5, beta: 1.0, lam: 1e-4, tol: 1e-2, max_iter: 1000 }
+    }
+}
+
+/// Per-iteration record of a solve.
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Paper residual: ‖f(z)−z‖₂ / (‖f(z)‖₂ + λ)
+    pub rel_residual: f32,
+    /// Function evaluations consumed so far (1 per iteration here).
+    pub fevals: usize,
+}
+
+/// Result of a native solve.
+#[derive(Debug, Clone)]
+pub struct SolveTrace {
+    pub z: Vec<f32>,
+    pub records: Vec<IterRecord>,
+    pub converged: bool,
+}
+
+impl SolveTrace {
+    pub fn iters(&self) -> usize {
+        self.records.len()
+    }
+    pub fn final_residual(&self) -> f32 {
+        self.records.last().map(|r| r.rel_residual).unwrap_or(f32::NAN)
+    }
+    /// First iteration index whose residual ≤ target, if reached.
+    pub fn iters_to(&self, target: f32) -> Option<usize> {
+        self.records.iter().find(|r| r.rel_residual <= target).map(|r| r.iter)
+    }
+}
+
+/// Ring-buffer window of (iterate, image) pairs + the Anderson solve.
+///
+/// Memory: 2·m·n floats — the "memory for speed" trade the paper discusses
+/// (§1.2).  The mixing step costs O(m·n + m³) per iteration on top of the
+/// function evaluation; that is the *mixing penalty* of Fig. 1.
+pub struct AndersonState {
+    m: usize,
+    n: usize,
+    beta: f32,
+    lam: f32,
+    xs: Vec<f32>, // (m, n) ring
+    fs: Vec<f32>, // (m, n) ring
+    count: usize, // total pushes
+}
+
+impl AndersonState {
+    pub fn new(m: usize, n: usize, beta: f32, lam: f32) -> Self {
+        assert!(m >= 1 && m <= 64);
+        Self {
+            m,
+            n,
+            beta,
+            lam,
+            xs: vec![0.0; m * n],
+            fs: vec![0.0; m * n],
+            count: 0,
+        }
+    }
+
+    /// Number of valid history slots (min(count, m)).
+    pub fn valid(&self) -> usize {
+        self.count.min(self.m)
+    }
+
+    /// Raw (m, n) iterate window — consumed by the stochastic variant.
+    pub fn xs_raw(&self) -> &[f32] {
+        &self.xs
+    }
+
+    /// Raw (m, n) image window.
+    pub fn fs_raw(&self) -> &[f32] {
+        &self.fs
+    }
+
+    /// Record a new (z, f(z)) pair.
+    pub fn push(&mut self, z: &[f32], fz: &[f32]) {
+        assert_eq!(z.len(), self.n);
+        assert_eq!(fz.len(), self.n);
+        let slot = self.count % self.m;
+        self.xs[slot * self.n..(slot + 1) * self.n].copy_from_slice(z);
+        self.fs[slot * self.n..(slot + 1) * self.n].copy_from_slice(fz);
+        self.count += 1;
+    }
+
+    /// Compute the Anderson-mixed next iterate from the current window.
+    /// Returns (z_next, alpha) with Σα = 1 over the valid slots.
+    pub fn mix(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let nv = self.valid();
+        assert!(nv >= 1, "mix() before any push()");
+        let n = self.n;
+
+        // G rows: residuals f_i - x_i over valid slots.
+        let mut g = vec![0.0f32; nv * n];
+        for i in 0..nv {
+            for t in 0..n {
+                g[i * n + t] = self.fs[i * n + t] - self.xs[i * n + t];
+            }
+        }
+
+        // H = G Gᵀ + λI, solve H a = 1, α = a / Σa  (the unconstrained
+        // reduction of the paper's bordered system Eq. 4).
+        let mut h = vec![0.0f32; nv * nv];
+        linalg::gram(&g, nv, n, &mut h);
+        for i in 0..nv {
+            h[i * nv + i] += self.lam;
+        }
+        let ones = vec![1.0f32; nv];
+        let a = linalg::solve_spd(&h, nv, &ones)?;
+        let sum: f32 = a.iter().sum();
+        let alpha: Vec<f32> = if sum.abs() < 1e-30 {
+            // Degenerate window — fall back to plain forward iteration.
+            let mut e = vec![0.0; nv];
+            e[(self.count - 1) % self.m.min(nv.max(1))] = 1.0;
+            e
+        } else {
+            a.iter().map(|v| v / sum).collect()
+        };
+
+        // z⁺ = (1-β)·Σ αᵢ xᵢ + β·Σ αᵢ fᵢ   (Eq. 5)
+        let mut z = vec![0.0f32; n];
+        for i in 0..nv {
+            let (ax, af) = ((1.0 - self.beta) * alpha[i], self.beta * alpha[i]);
+            let xrow = &self.xs[i * n..(i + 1) * n];
+            let frow = &self.fs[i * n..(i + 1) * n];
+            for t in 0..n {
+                z[t] += ax * xrow[t] + af * frow[t];
+            }
+        }
+        Ok((z, alpha))
+    }
+}
+
+/// Relative residual per the paper.
+pub fn rel_residual(fz: &[f32], z: &[f32], lam: f32) -> f32 {
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for (f, x) in fz.iter().zip(z) {
+        num += (f - x) * (f - x);
+        den += f * f;
+    }
+    num.sqrt() / (den.sqrt() + lam)
+}
+
+/// Solve with Anderson extrapolation; records the residual trajectory.
+pub fn solve_anderson(
+    map: &dyn FixedPointMap,
+    z0: &[f32],
+    opts: AndersonOpts,
+) -> Result<SolveTrace> {
+    let n = map.dim();
+    let mut state = AndersonState::new(opts.window, n, opts.beta, opts.lam);
+    let mut z = z0.to_vec();
+    let mut fz = vec![0.0f32; n];
+    let mut records = Vec::new();
+    let mut converged = false;
+
+    for k in 0..opts.max_iter {
+        map.apply(&z, &mut fz);
+        let rel = rel_residual(&fz, &z, opts.lam);
+        records.push(IterRecord { iter: k, rel_residual: rel, fevals: k + 1 });
+        if rel < opts.tol {
+            converged = true;
+            z = fz.clone();
+            break;
+        }
+        state.push(&z, &fz);
+        let (znext, _alpha) = state.mix()?;
+        z = znext;
+    }
+    Ok(SolveTrace { z, records, converged })
+}
+
+/// Baseline: plain forward iteration z ← f(z).
+pub fn solve_forward(
+    map: &dyn FixedPointMap,
+    z0: &[f32],
+    opts: AndersonOpts,
+) -> SolveTrace {
+    let n = map.dim();
+    let mut z = z0.to_vec();
+    let mut fz = vec![0.0f32; n];
+    let mut records = Vec::new();
+    let mut converged = false;
+
+    for k in 0..opts.max_iter {
+        map.apply(&z, &mut fz);
+        let rel = rel_residual(&fz, &z, opts.lam);
+        records.push(IterRecord { iter: k, rel_residual: rel, fevals: k + 1 });
+        std::mem::swap(&mut z, &mut fz);
+        if rel < opts.tol {
+            converged = true;
+            break;
+        }
+    }
+    SolveTrace { z, records, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::maps::AffineMap;
+    use crate::util::rng::Rng;
+
+    fn opts(m: usize, tol: f32) -> AndersonOpts {
+        AndersonOpts {
+            window: m,
+            tol,
+            lam: 1e-8,
+            max_iter: 2000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn anderson_beats_forward_on_stiff_affine() {
+        // Spectral radius 0.99 → forward needs ~ log(tol)/log(0.99) iters
+        // (~1300 to 1e-4); Anderson(m=5, small λ) needs ~100.
+        let map = AffineMap::random(40, 0.99, 7);
+        let z0 = vec![0.0; 40];
+        let fw = solve_forward(&map, &z0, opts(5, 1e-4));
+        let an = solve_anderson(&map, &z0, opts(5, 1e-4)).unwrap();
+        assert!(an.converged, "anderson did not converge");
+        assert!(
+            an.iters() < fw.iters() / 3,
+            "anderson {} vs forward {}",
+            an.iters(),
+            fw.iters()
+        );
+    }
+
+    #[test]
+    fn anderson_exact_with_full_window() {
+        // Window > dim ⇒ Krylov exactness on affine maps.
+        let map = AffineMap::random(6, 0.9, 3);
+        let z0 = vec![0.0; 6];
+        let mut o = opts(8, 1e-5);
+        o.lam = 1e-8;
+        let tr = solve_anderson(&map, &z0, o).unwrap();
+        assert!(tr.converged);
+        assert!(tr.iters() <= 10, "iters={}", tr.iters());
+        let sol = map.solution().unwrap();
+        let err: f32 = tr
+            .z
+            .iter()
+            .zip(&sol)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-2, "err={err}");
+    }
+
+    #[test]
+    fn window_one_equals_forward() {
+        // m=1, β=1: z⁺ = f(z) exactly.
+        let map = AffineMap::random(10, 0.7, 1);
+        let z0 = vec![0.5; 10];
+        let a = solve_anderson(&map, &z0, opts(1, 1e-5)).unwrap();
+        let f = solve_forward(&map, &z0, opts(1, 1e-5));
+        assert_eq!(a.iters(), f.iters());
+        for (x, y) in a.z.iter().zip(&f.z) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn alpha_sums_to_one() {
+        let mut st = AndersonState::new(4, 8, 1.0, 1e-5);
+        let mut r = Rng::new(3);
+        for _ in 0..6 {
+            let z = r.normal_vec(8, 1.0);
+            let f = r.normal_vec(8, 1.0);
+            st.push(&z, &f);
+            let (_, alpha) = st.mix().unwrap();
+            let s: f32 = alpha.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum={s}");
+            assert_eq!(alpha.len(), st.valid());
+        }
+    }
+
+    #[test]
+    fn residual_definition() {
+        let f = vec![3.0, 4.0];
+        let z = vec![0.0, 0.0];
+        // ||f-z|| = 5, ||f|| = 5 → 5/(5+λ)
+        let r = rel_residual(&f, &z, 1.0);
+        assert!((r - 5.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trace_iters_to() {
+        let map = AffineMap::random(12, 0.8, 5);
+        let tr = solve_forward(&map, &vec![0.0; 12], opts(1, 1e-6));
+        let t = tr.iters_to(1e-3).unwrap();
+        assert!(t > 0 && t < tr.iters());
+        assert!(tr.iters_to(0.0).is_none());
+    }
+}

@@ -1,0 +1,216 @@
+//! Small dense linear algebra for the native (pure-Rust) solver twin.
+//!
+//! Sized for Anderson's needs: Gram matrices up to m=8, batched solves,
+//! plus general gemm/gemv for the synthetic fixed-point test maps.  All
+//! row-major `&[f32]`.
+
+use anyhow::{bail, Result};
+
+/// y = A x, A is (m, n) row-major.
+pub fn gemv(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// C = A B, A (m, k), B (k, n), C (m, n), all row-major.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // ikj loop order: streams B rows, vectorizes the inner j loop.
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+/// Gram matrix H = G Gᵀ for G (m, n) row-major → H (m, m).
+pub fn gram(g: &[f32], m: usize, n: usize, h: &mut [f32]) {
+    assert_eq!(g.len(), m * n);
+    assert_eq!(h.len(), m * m);
+    for i in 0..m {
+        for j in i..m {
+            let (ri, rj) = (&g[i * n..(i + 1) * n], &g[j * n..(j + 1) * n]);
+            let mut acc = 0.0f32;
+            for t in 0..n {
+                acc += ri[t] * rj[t];
+            }
+            h[i * m + j] = acc;
+            h[j * m + i] = acc;
+        }
+    }
+}
+
+/// In-place Cholesky factorization of an SPD matrix (m, m): A = L Lᵀ,
+/// L stored in the lower triangle. Errors on a non-positive pivot.
+pub fn cholesky(a: &mut [f32], m: usize) -> Result<()> {
+    assert_eq!(a.len(), m * m);
+    for j in 0..m {
+        let mut d = a[j * m + j];
+        for k in 0..j {
+            d -= a[j * m + k] * a[j * m + k];
+        }
+        if d <= 0.0 {
+            bail!("cholesky: non-positive pivot {d} at {j}");
+        }
+        let d = d.sqrt();
+        a[j * m + j] = d;
+        for i in (j + 1)..m {
+            let mut s = a[i * m + j];
+            for k in 0..j {
+                s -= a[i * m + k] * a[j * m + k];
+            }
+            a[i * m + j] = s / d;
+        }
+    }
+    Ok(())
+}
+
+/// Solve A x = b given the Cholesky factor from [`cholesky`] (in `a`).
+pub fn cholesky_solve(a: &[f32], m: usize, b: &mut [f32]) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m);
+    // Forward: L y = b
+    for i in 0..m {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= a[i * m + k] * b[k];
+        }
+        b[i] = s / a[i * m + i];
+    }
+    // Backward: Lᵀ x = y
+    for i in (0..m).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..m {
+            s -= a[k * m + i] * b[k];
+        }
+        b[i] = s / a[i * m + i];
+    }
+}
+
+/// Solve SPD A x = b (copies A; convenience wrapper).
+pub fn solve_spd(a: &[f32], m: usize, b: &[f32]) -> Result<Vec<f32>> {
+    let mut fac = a.to_vec();
+    cholesky(&mut fac, m)?;
+    let mut x = b.to_vec();
+    cholesky_solve(&fac, m, &mut x);
+    Ok(x)
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// a ← a + s·b
+pub fn axpy(s: f32, b: &[f32], a: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    for (ai, bi) in a.iter_mut().zip(b) {
+        *ai += s * bi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemv_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = vec![3.0, 4.0];
+        let mut y = vec![0.0; 2];
+        gemv(&a, &x, 2, 2, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn gemm_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0; 4];
+        let mut c = vec![0.0; 4];
+        gemm(&a, &b, 2, 2, 2, &mut c);
+        assert_eq!(c, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gram_is_gg_t() {
+        let mut r = Rng::new(1);
+        let (m, n) = (4, 17);
+        let g = r.normal_vec(m * n, 1.0);
+        let mut h = vec![0.0; m * m];
+        gram(&g, m, n, &mut h);
+        // Check against gemm with explicit transpose.
+        let mut gt = vec![0.0; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                gt[j * m + i] = g[i * n + j];
+            }
+        }
+        let mut h2 = vec![0.0; m * m];
+        gemm(&g, &gt, m, n, m, &mut h2);
+        for (x, y) in h.iter().zip(&h2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // Symmetry
+        for i in 0..m {
+            for j in 0..m {
+                assert!((h[i * m + j] - h[j * m + i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        let mut r = Rng::new(2);
+        for m in [1usize, 2, 3, 5, 8] {
+            let g = r.normal_vec(m * (3 * m), 1.0);
+            let mut h = vec![0.0; m * m];
+            gram(&g, m, 3 * m, &mut h);
+            for i in 0..m {
+                h[i * m + i] += 1e-3;
+            }
+            let b = r.normal_vec(m, 1.0);
+            let x = solve_spd(&h, m, &b).unwrap();
+            let mut ax = vec![0.0; m];
+            gemv(&h, &x, m, m, &mut ax);
+            for (l, r_) in ax.iter().zip(&b) {
+                assert!((l - r_).abs() < 1e-2, "m={m}: {l} vs {r_}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn norm_and_axpy() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        let mut a = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut a);
+        assert_eq!(a, vec![3.0, 5.0]);
+    }
+}

@@ -1,0 +1,247 @@
+//! Synthetic fixed-point maps for the native solver: the workloads behind
+//! the paper's "random input" residual studies (Fig. 6) and the property
+//! tests.
+
+use crate::native::anderson::FixedPointMap;
+use crate::native::linalg;
+use crate::util::rng::Rng;
+
+/// Affine map f(z) = A z + b with controlled spectral radius.
+///
+/// `A = rho * Q / |λ_max(Q)|`: we draw a random matrix and scale by a
+/// power-iteration estimate of its dominant eigenvalue magnitude, so the
+/// spectral radius is ≈ `rho`.  Forward iteration then converges linearly
+/// at asymptotic rate `rho`; Anderson accelerates like GMRES on (I - A).
+pub struct AffineMap {
+    n: usize,
+    a: Vec<f32>, // (n, n)
+    b: Vec<f32>,
+}
+
+impl AffineMap {
+    pub fn random(n: usize, rho: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut a = rng.normal_vec(n * n, 1.0 / (n as f32).sqrt());
+        // Power iteration on A itself → |λ_max| (the spectral radius for
+        // a generic random matrix, whose dominant eigenvalue is simple).
+        let mut v = rng.normal_vec(n, 1.0);
+        let mut av = vec![0.0; n];
+        let mut lam = 1.0f32;
+        for _ in 0..200 {
+            linalg::gemv(&a, &v, n, n, &mut av);
+            lam = linalg::norm2(&av).max(1e-12);
+            for (vi, ai) in v.iter_mut().zip(&av) {
+                *vi = ai / lam;
+            }
+        }
+        let scale = rho / lam;
+        for x in a.iter_mut() {
+            *x *= scale;
+        }
+        let b = rng.normal_vec(n, 1.0);
+        Self { n, a, b }
+    }
+}
+
+impl FixedPointMap for AffineMap {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, z: &[f32], out: &mut [f32]) {
+        linalg::gemv(&self.a, z, self.n, self.n, out);
+        linalg::axpy(1.0, &self.b, out);
+    }
+
+    /// z* = (I - A)⁻¹ b via dense Gaussian elimination (small n only).
+    fn solution(&self) -> Option<Vec<f32>> {
+        let n = self.n;
+        if n > 256 {
+            return None;
+        }
+        // Build I - A and solve with partial-pivot elimination.
+        let mut m = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                m[i * n + j] = (i == j) as i32 as f32 - self.a[i * n + j];
+            }
+        }
+        let mut rhs = self.b.clone();
+        for col in 0..n {
+            // pivot
+            let mut piv = col;
+            for r in (col + 1)..n {
+                if m[r * n + col].abs() > m[piv * n + col].abs() {
+                    piv = r;
+                }
+            }
+            if m[piv * n + col].abs() < 1e-12 {
+                return None;
+            }
+            if piv != col {
+                for j in 0..n {
+                    m.swap(col * n + j, piv * n + j);
+                }
+                rhs.swap(col, piv);
+            }
+            let d = m[col * n + col];
+            for r in (col + 1)..n {
+                let f = m[r * n + col] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in col..n {
+                    m[r * n + j] -= f * m[col * n + j];
+                }
+                rhs[r] -= f * rhs[col];
+            }
+        }
+        let mut x = vec![0.0f32; n];
+        for i in (0..n).rev() {
+            let mut s = rhs[i];
+            for j in (i + 1)..n {
+                s -= m[i * n + j] * x[j];
+            }
+            x[i] = s / m[i * n + i];
+        }
+        Some(x)
+    }
+}
+
+/// Nonlinear contactive map f(z) = tanh(A z + b): smooth, contraction for
+/// spectral radius < 1, exercises the solvers off the affine fast path.
+pub struct TanhMap {
+    inner: AffineMap,
+}
+
+impl TanhMap {
+    pub fn random(n: usize, rho: f32, seed: u64) -> Self {
+        Self { inner: AffineMap::random(n, rho, seed) }
+    }
+}
+
+impl FixedPointMap for TanhMap {
+    fn dim(&self) -> usize {
+        self.inner.n
+    }
+
+    fn apply(&self, z: &[f32], out: &mut [f32]) {
+        self.inner.apply(z, out);
+        for v in out.iter_mut() {
+            *v = v.tanh();
+        }
+    }
+}
+
+/// A "DEQ-like" map mimicking the cell's structure on the cheap:
+/// f(z) = normalize(relu(W1 z) * W2-ish + x), with the normalization giving
+/// the near-unit spectral radius behaviour of GroupNorm cells.  Used by the
+/// device-model experiments at paper scale without paying XLA dispatch.
+pub struct DeqLikeMap {
+    n: usize,
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    x: Vec<f32>,
+    mix: f32,
+}
+
+impl DeqLikeMap {
+    pub fn random(n: usize, mix: f32, seed: u64) -> Self {
+        Self::with_gain(n, mix, 1.0, seed)
+    }
+
+    /// `gain` scales the second weight matrix: larger gain pushes the
+    /// effective contraction factor toward 1, slowing forward iteration —
+    /// the stiff regime where the paper's Fig. 6 comparison lives.
+    pub fn with_gain(n: usize, mix: f32, gain: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let s = 1.0 / (n as f32).sqrt();
+        Self {
+            n,
+            w1: rng.normal_vec(n * n, s),
+            w2: rng.normal_vec(n * n, gain * s),
+            x: rng.normal_vec(n, 1.0),
+            mix,
+        }
+    }
+}
+
+impl FixedPointMap for DeqLikeMap {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, z: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        let mut h = vec![0.0f32; n];
+        linalg::gemv(&self.w1, z, n, n, &mut h);
+        for v in h.iter_mut() {
+            *v = v.max(0.0); // relu
+        }
+        linalg::gemv(&self.w2, &h, n, n, out);
+        // inject input + soft normalization (keeps iterates bounded, like
+        // the cell's GroupNorm)
+        for i in 0..n {
+            out[i] += self.x[i];
+        }
+        let nrm = linalg::norm2(out).max(1e-6);
+        let target = (n as f32).sqrt();
+        let g = self.mix * target / nrm + (1.0 - self.mix);
+        for v in out.iter_mut() {
+            *v *= g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::anderson::{solve_forward, AndersonOpts};
+
+    #[test]
+    fn affine_solution_is_fixed_point() {
+        let map = AffineMap::random(20, 0.8, 11);
+        let sol = map.solution().unwrap();
+        let mut out = vec![0.0; 20];
+        map.apply(&sol, &mut out);
+        for (a, b) in out.iter().zip(&sol) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn affine_spectral_radius_bounded() {
+        // Forward iteration must converge for rho < 1.
+        let map = AffineMap::random(30, 0.6, 2);
+        let tr = solve_forward(
+            &map,
+            &vec![0.0; 30],
+            AndersonOpts { tol: 1e-5, max_iter: 200, ..Default::default() },
+        );
+        assert!(tr.converged, "residual={}", tr.final_residual());
+    }
+
+    #[test]
+    fn tanh_map_contracts() {
+        let map = TanhMap::random(16, 0.7, 9);
+        let tr = solve_forward(
+            &map,
+            &vec![0.1; 16],
+            AndersonOpts { tol: 1e-5, max_iter: 300, ..Default::default() },
+        );
+        assert!(tr.converged);
+    }
+
+    #[test]
+    fn deq_like_stays_bounded() {
+        let map = DeqLikeMap::random(32, 0.9, 4);
+        let mut z = vec![0.0; 32];
+        let mut out = vec![0.0; 32];
+        for _ in 0..50 {
+            map.apply(&z, &mut out);
+            std::mem::swap(&mut z, &mut out);
+        }
+        let n = linalg::norm2(&z);
+        assert!(n.is_finite() && n < 100.0, "norm={n}");
+    }
+}

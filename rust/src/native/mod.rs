@@ -1,0 +1,15 @@
+//! Native (pure-Rust) solver substrate: small linear algebra, the Anderson
+//! twin of the AOT kernel, and synthetic fixed-point maps.  Powers the
+//! device-model simulations, property tests and hyperparameter sweeps
+//! without touching PJRT.
+
+pub mod anderson;
+pub mod linalg;
+pub mod maps;
+pub mod stochastic;
+
+pub use stochastic::{solve_stochastic, StochasticOpts};
+pub use anderson::{
+    rel_residual, solve_anderson, solve_forward, AndersonOpts, AndersonState,
+    FixedPointMap, IterRecord, SolveTrace,
+};

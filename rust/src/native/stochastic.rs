@@ -1,0 +1,246 @@
+//! Stochastic Anderson mixing — the paper's named future-work direction
+//! (§5, citing Wei, Bao & Liu, *Stochastic Anderson Mixing for Nonconvex
+//! Stochastic Optimization*, NeurIPS 2021).
+//!
+//! Two stochastic ingredients over the deterministic state:
+//!
+//!  * **sketched Gram**: the m×m Gram matrix is estimated from a random
+//!    coordinate subsample of the residual rows (a column sketch of G),
+//!    cutting the O(m²·n) mixing cost to O(m²·s), s ≪ n — the "low-memory
+//!    acceleration" knob at the cost of a noisy α;
+//!  * **damped updates**: β is drawn per-iteration from [β_lo, β_hi],
+//!    which the SAM paper shows stabilizes nonconvex trajectories.
+//!
+//! Exposed through `solve_stochastic` with the same trace type as the
+//! deterministic drivers, so the ablation bench can compare all three.
+
+use anyhow::Result;
+
+use crate::native::anderson::{
+    rel_residual, AndersonOpts, AndersonState, FixedPointMap, IterRecord,
+    SolveTrace,
+};
+use crate::native::linalg;
+use crate::util::rng::Rng;
+
+/// Stochastic-mixing options.
+#[derive(Debug, Clone, Copy)]
+pub struct StochasticOpts {
+    pub base: AndersonOpts,
+    /// Coordinates sampled for the Gram sketch (0 = use all, i.e. exact).
+    pub sketch: usize,
+    /// Per-iteration mixing draw range.
+    pub beta_lo: f32,
+    pub beta_hi: f32,
+    pub seed: u64,
+}
+
+impl Default for StochasticOpts {
+    fn default() -> Self {
+        Self {
+            base: AndersonOpts::default(),
+            sketch: 64,
+            beta_lo: 0.7,
+            beta_hi: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Sketched constrained Anderson solve over an explicit window.
+///
+/// Returns (alpha, used_coords). Exact when `sketch == 0 || sketch >= n`.
+pub fn sketched_alpha(
+    xs: &[f32],
+    fs: &[f32],
+    nv: usize,
+    n: usize,
+    lam: f32,
+    sketch: usize,
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, usize)> {
+    let use_all = sketch == 0 || sketch >= n;
+    let s = if use_all { n } else { sketch };
+
+    // Residual rows restricted to the sampled coordinates.
+    let mut g = vec![0.0f32; nv * s];
+    let mut coords: Vec<usize> = Vec::with_capacity(s);
+    if use_all {
+        coords.extend(0..n);
+    } else {
+        for _ in 0..s {
+            coords.push(rng.below(n));
+        }
+    }
+    for i in 0..nv {
+        for (t, &c) in coords.iter().enumerate() {
+            g[i * s + t] = fs[i * n + c] - xs[i * n + c];
+        }
+    }
+    // Scale so the sketched Gram is an unbiased estimate of GᵀG.
+    let scale = (n as f32 / s as f32).sqrt();
+    for v in g.iter_mut() {
+        *v *= scale;
+    }
+
+    let mut h = vec![0.0f32; nv * nv];
+    linalg::gram(&g, nv, s, &mut h);
+    for i in 0..nv {
+        h[i * nv + i] += lam;
+    }
+    let ones = vec![1.0f32; nv];
+    let a = linalg::solve_spd(&h, nv, &ones)?;
+    let sum: f32 = a.iter().sum();
+    let alpha: Vec<f32> = if sum.abs() < 1e-30 {
+        let mut e = vec![0.0; nv];
+        e[nv - 1] = 1.0;
+        e
+    } else {
+        a.iter().map(|v| v / sum).collect()
+    };
+    Ok((alpha, s))
+}
+
+/// Solve with stochastic Anderson mixing.
+pub fn solve_stochastic(
+    map: &dyn FixedPointMap,
+    z0: &[f32],
+    opts: StochasticOpts,
+) -> Result<SolveTrace> {
+    let n = map.dim();
+    let o = opts.base;
+    let mut rng = Rng::new(opts.seed ^ 0x5A3D);
+    // Reuse AndersonState purely as the ring buffer; mixing happens here
+    // with the sketched alpha.
+    let mut state = AndersonState::new(o.window, n, 1.0, o.lam);
+    let mut z = z0.to_vec();
+    let mut fz = vec![0.0f32; n];
+    let mut records = Vec::new();
+    let mut converged = false;
+
+    for k in 0..o.max_iter {
+        map.apply(&z, &mut fz);
+        let rel = rel_residual(&fz, &z, o.lam);
+        records.push(IterRecord { iter: k, rel_residual: rel, fevals: k + 1 });
+        if rel < o.tol {
+            converged = true;
+            z = fz.clone();
+            break;
+        }
+        state.push(&z, &fz);
+        let nv = state.valid();
+        let (alpha, _s) = sketched_alpha(
+            state.xs_raw(),
+            state.fs_raw(),
+            nv,
+            n,
+            o.lam,
+            opts.sketch,
+            &mut rng,
+        )?;
+        let beta = rng.range(opts.beta_lo, opts.beta_hi);
+        let (xs, fs) = (state.xs_raw(), state.fs_raw());
+        for t in 0..n {
+            let mut acc = 0.0f32;
+            for i in 0..nv {
+                acc += alpha[i]
+                    * ((1.0 - beta) * xs[i * n + t] + beta * fs[i * n + t]);
+            }
+            z[t] = acc;
+        }
+    }
+    Ok(SolveTrace { z, records, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::maps::AffineMap;
+    use crate::native::solve_forward;
+
+    fn base(tol: f32) -> AndersonOpts {
+        AndersonOpts { window: 5, lam: 1e-6, tol, max_iter: 2000, ..Default::default() }
+    }
+
+    #[test]
+    fn exact_sketch_matches_deterministic_alpha() {
+        let mut rng = Rng::new(1);
+        let (m, n) = (4usize, 32usize);
+        let mut st = AndersonState::new(m, n, 1.0, 1e-5);
+        for _ in 0..m {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            st.push(&z, &f);
+        }
+        let (_, alpha_det) = st.mix().unwrap();
+        let (alpha_sk, s) = sketched_alpha(
+            st.xs_raw(),
+            st.fs_raw(),
+            m,
+            n,
+            1e-5,
+            0, // exact
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(s, n);
+        for (a, b) in alpha_sk.iter().zip(&alpha_det) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stochastic_converges_on_affine() {
+        let map = AffineMap::random(48, 0.95, 5);
+        let z0 = vec![0.0; 48];
+        let o = StochasticOpts {
+            base: base(1e-4),
+            sketch: 24,
+            beta_lo: 0.9,
+            beta_hi: 1.0,
+            seed: 3,
+        };
+        let tr = solve_stochastic(&map, &z0, o).unwrap();
+        assert!(tr.converged, "res={}", tr.final_residual());
+        // Still beats forward despite the sketch noise.
+        let fw = solve_forward(&map, &z0, base(1e-4));
+        assert!(tr.iters() < fw.iters(), "{} vs {}", tr.iters(), fw.iters());
+    }
+
+    #[test]
+    fn alpha_sums_to_one_under_sketch() {
+        let mut rng = Rng::new(7);
+        let (m, n) = (5usize, 100usize);
+        let mut st = AndersonState::new(m, n, 1.0, 1e-5);
+        for _ in 0..m {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            st.push(&z, &f);
+        }
+        for sketch in [8usize, 32, 64] {
+            let (alpha, _) = sketched_alpha(
+                st.xs_raw(),
+                st.fs_raw(),
+                m,
+                n,
+                1e-5,
+                sketch,
+                &mut rng,
+            )
+            .unwrap();
+            let s: f32 = alpha.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "sketch={sketch} sum={s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let map = AffineMap::random(32, 0.9, 9);
+        let z0 = vec![0.0; 32];
+        let o = StochasticOpts { seed: 11, ..Default::default() };
+        let a = solve_stochastic(&map, &z0, o).unwrap();
+        let b = solve_stochastic(&map, &z0, o).unwrap();
+        assert_eq!(a.iters(), b.iters());
+        assert_eq!(a.z, b.z);
+    }
+}

@@ -1,0 +1,236 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them once
+//! on the CPU client, and executes them from the coordinator's hot path.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.  Every
+//! artifact returns a 1-tuple or n-tuple (lowered with `return_tuple=True`),
+//! which `execute_entry` decomposes back into `HostTensor`s.
+//!
+//! The engine also keeps per-entry execution statistics (count, total time)
+//! — the raw material for EXPERIMENTS.md §Perf and the device simulator's
+//! calibration.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{EntrySpec, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// Cumulative execution stats for one artifact.
+#[derive(Debug, Clone, Default)]
+pub struct EntryStats {
+    pub calls: u64,
+    pub total: Duration,
+    pub compile_time: Duration,
+}
+
+impl EntryStats {
+    pub fn mean(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.calls as u32
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: EntrySpec,
+}
+
+/// PJRT client + compiled-executable cache + stats.
+///
+/// `Engine` is shared across threads by the serving stack.  The `xla`
+/// crate's wrappers hold `Rc`/raw pointers and are not `Send`/`Sync`, so
+/// every PJRT interaction (compile *and* execute) is serialized behind
+/// `pjrt_lock`; with that discipline the underlying PJRT CPU client is
+/// thread-safe, which justifies the manual `Send`/`Sync` impls below.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), &'static Compiled>>,
+    stats: Mutex<HashMap<(String, usize), EntryStats>>,
+    /// Serializes all PJRT calls (see struct docs).
+    pjrt_lock: Mutex<()>,
+}
+
+// SAFETY: all uses of the non-Send `xla` wrapper types (`client`, the
+// cached executables) happen while holding `pjrt_lock`, so cross-thread
+// access is serialized; the wrappers' Rc refcounts are never touched
+// concurrently.  Literal conversion happens on caller threads but operates
+// on thread-local literals only.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            pjrt_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an entry point at a batch bucket.
+    fn compiled(&self, name: &str, batch: usize) -> Result<&'static Compiled> {
+        let key = (name.to_string(), batch);
+        if let Some(c) = self.cache.lock().unwrap().get(&key) {
+            return Ok(c);
+        }
+        let spec = self.manifest.entry(name, batch)?.clone();
+        let path = self.manifest.artifact_path(&spec);
+        let t0 = Instant::now();
+        let _pjrt = self.pjrt_lock.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.file))?;
+        let compile_time = t0.elapsed();
+
+        // Executables live for the engine's lifetime; engines live for the
+        // process's lifetime in every binary here. Leaking the box gives
+        // stable references without self-referential lifetimes.
+        let leaked: &'static Compiled = Box::leak(Box::new(Compiled { exe, spec }));
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_default()
+            .compile_time = compile_time;
+        self.cache.lock().unwrap().insert(key, leaked);
+        Ok(leaked)
+    }
+
+    /// Eagerly compile a set of entries (so hot paths never hit compile).
+    pub fn warmup(&self, entries: &[(&str, usize)]) -> Result<()> {
+        for (name, batch) in entries {
+            self.compiled(name, *batch)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact: validates inputs against the manifest spec,
+    /// runs, decomposes the output tuple, validates output count.
+    pub fn execute(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let c = self.compiled(name, batch)?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "{name}@b{batch}: expected {} inputs, got {}",
+                c.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
+            if t.shape != s.shape {
+                bail!(
+                    "{name}@b{batch} input {i} ({}): shape {:?} != spec {:?}",
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!(
+                    "{name}@b{batch} input {i} ({}): dtype mismatch",
+                    s.name
+                );
+            }
+        }
+
+        let _pjrt = self.pjrt_lock.lock().unwrap();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {name}@b{batch}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let elapsed = t0.elapsed();
+
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let e = stats.entry((name.to_string(), batch)).or_default();
+            e.calls += 1;
+            e.total += elapsed;
+        }
+
+        let parts = root.to_tuple().context("decompose output tuple")?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "{name}@b{batch}: expected {} outputs, got {}",
+                c.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+
+    /// Snapshot of per-entry stats, sorted by total time descending.
+    pub fn stats(&self) -> Vec<((String, usize), EntryStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        v
+    }
+
+    /// Human-readable stats table (for `--stats` / experiment footers).
+    pub fn stats_report(&self) -> String {
+        let mut out = String::from(
+            "entry                         batch    calls     mean       total      compile\n",
+        );
+        for ((name, batch), s) in self.stats() {
+            out.push_str(&format!(
+                "{:<30}{:>5}{:>9}{:>12.3?}{:>12.3?}{:>12.3?}\n",
+                name,
+                batch,
+                s.calls,
+                s.mean(),
+                s.total,
+                s.compile_time
+            ));
+        }
+        out
+    }
+}

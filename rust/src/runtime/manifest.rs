@@ -1,0 +1,379 @@
+//! Typed view of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest is the single contract between the build-time Python layer
+//! and the Rust coordinator: model/solver/train hyperparameters, the
+//! canonical parameter layout, and the input/output specs of every AOT
+//! artifact.  Nothing in the Rust tree hard-codes shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::Dtype;
+use crate::util::json::{self, Json};
+
+/// One tensor slot in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("spec missing name"))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+        )?;
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One compiled artifact: an entry point at a fixed batch size.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model geometry (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub image_hw: usize,
+    pub image_channels: usize,
+    pub channels: usize,
+    pub latent_hw: usize,
+    pub groups: usize,
+    pub num_classes: usize,
+    pub param_count: usize,
+}
+
+impl ModelMeta {
+    /// Flattened per-sample latent dimension `n` used by Anderson.
+    pub fn latent_dim(&self) -> usize {
+        self.latent_hw * self.latent_hw * self.channels
+    }
+
+    pub fn latent_shape(&self, batch: usize) -> Vec<usize> {
+        vec![batch, self.latent_hw, self.latent_hw, self.channels]
+    }
+
+    pub fn image_shape(&self, batch: usize) -> Vec<usize> {
+        vec![batch, self.image_hw, self.image_hw, self.image_channels]
+    }
+
+    pub fn image_dim(&self) -> usize {
+        self.image_hw * self.image_hw * self.image_channels
+    }
+}
+
+/// Solver defaults baked into the artifacts (beta/lam are *compiled in*;
+/// window/tol/max_iter are runtime knobs seeded from these defaults).
+#[derive(Debug, Clone)]
+pub struct SolverMeta {
+    pub window: usize,
+    pub beta: f32,
+    pub lam: f32,
+    pub tol: f32,
+    pub max_iter: usize,
+    pub fused_steps: usize,
+}
+
+/// Training hyperparameters compiled into train_update artifacts.
+#[derive(Debug, Clone)]
+pub struct TrainMeta {
+    pub lr: f32,
+    pub momentum: f32,
+    pub neumann_terms: usize,
+    pub explicit_depth: usize,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub solver: SolverMeta,
+    pub train: TrainMeta,
+    pub params: Vec<TensorSpec>,
+    pub entries: Vec<EntrySpec>,
+    pub init_params_file: String,
+    pub use_pallas: bool,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing '{key}'"))
+}
+
+fn req_f32(v: &Json, key: &str) -> Result<f32> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|f| f as f32)
+        .ok_or_else(|| anyhow!("manifest missing '{key}'"))
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let fv = req_usize(&v, "format_version")?;
+        if fv != 1 {
+            bail!("unsupported manifest format_version {fv}");
+        }
+
+        let m = v.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model = ModelMeta {
+            preset: m
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            image_hw: req_usize(m, "image_hw")?,
+            image_channels: req_usize(m, "image_channels")?,
+            channels: req_usize(m, "channels")?,
+            latent_hw: req_usize(m, "latent_hw")?,
+            groups: req_usize(m, "groups")?,
+            num_classes: req_usize(m, "num_classes")?,
+            param_count: req_usize(&v, "param_count")?,
+        };
+
+        let s = v.get("solver").ok_or_else(|| anyhow!("missing solver"))?;
+        let solver = SolverMeta {
+            window: req_usize(s, "window")?,
+            beta: req_f32(s, "beta")?,
+            lam: req_f32(s, "lam")?,
+            tol: req_f32(s, "tol")?,
+            max_iter: req_usize(s, "max_iter")?,
+            fused_steps: req_usize(s, "fused_steps")?,
+        };
+
+        let t = v.get("train").ok_or_else(|| anyhow!("missing train"))?;
+        let train = TrainMeta {
+            lr: req_f32(t, "lr")?,
+            momentum: req_f32(t, "momentum")?,
+            neumann_terms: req_usize(t, "neumann_terms")?,
+            explicit_depth: req_usize(t, "explicit_depth")?,
+        };
+
+        let params = v
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing entries"))?
+        {
+            entries.push(EntrySpec {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                batch: req_usize(e, "batch")?,
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+
+        let init_params_file = v
+            .path(&["init_params", "file"])
+            .and_then(Json::as_str)
+            .unwrap_or("init_params.bin")
+            .to_string();
+        let use_pallas = v
+            .get("use_pallas")
+            .and_then(Json::as_bool)
+            .unwrap_or(true);
+
+        let manifest = Self {
+            dir,
+            model,
+            solver,
+            train,
+            params,
+            entries,
+            init_params_file,
+            use_pallas,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(TensorSpec::elements).sum();
+        if total != self.model.param_count {
+            bail!(
+                "param shapes sum to {total}, manifest says {}",
+                self.model.param_count
+            );
+        }
+        if self.solver.window == 0 || self.solver.window > 8 {
+            bail!("solver window {} out of range", self.solver.window);
+        }
+        for e in &self.entries {
+            if !self.dir.join(&e.file).exists() {
+                bail!("artifact file missing: {}", e.file);
+            }
+        }
+        Ok(())
+    }
+
+    /// Find an entry by name + batch.
+    pub fn entry(&self, name: &str, batch: usize) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.batch == batch)
+            .ok_or_else(|| {
+                let have: Vec<usize> = self.batches_for(name);
+                anyhow!(
+                    "no artifact '{name}' at batch {batch} (have batches {have:?})"
+                )
+            })
+    }
+
+    /// All batch buckets compiled for an entry, ascending.
+    pub fn batches_for(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest compiled bucket that can hold `n` samples (for serving);
+    /// falls back to the largest bucket when `n` exceeds all of them.
+    pub fn bucket_for(&self, name: &str, n: usize) -> Result<usize> {
+        let batches = self.batches_for(name);
+        if batches.is_empty() {
+            bail!("no artifacts for entry '{name}'");
+        }
+        Ok(*batches
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(batches.last().unwrap()))
+    }
+
+    pub fn artifact_path(&self, e: &EntrySpec) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    pub fn init_params_path(&self) -> PathBuf {
+        self.dir.join(&self.init_params_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// A miniature manifest for unit tests (no artifact files on disk →
+    /// validate() relaxed by creating the files).
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in ["a_b1.hlo.txt"] {
+            std::fs::File::create(dir.join(f)).unwrap();
+        }
+        let text = r#"{
+          "format_version": 1,
+          "param_count": 6,
+          "model": {"name":"t","image_hw":8,"image_channels":3,"channels":2,
+                    "latent_hw":2,"groups":1,"num_classes":10,
+                    "enc_stride":2,"enc_pool":2},
+          "solver": {"window":5,"beta":1.0,"lam":1e-5,"tol":1e-2,
+                     "max_iter":50,"fused_steps":8},
+          "train": {"lr":1e-3,"momentum":0.9,"weight_decay":0.0,
+                    "neumann_terms":3,"explicit_depth":6},
+          "params": [{"name":"w","shape":[2,3],"dtype":"float32"}],
+          "entries": [{"name":"a","batch":1,"file":"a_b1.hlo.txt",
+                       "inputs":[{"name":"x","shape":[1,4],"dtype":"float32"}],
+                       "outputs":[{"name":"out0","shape":[1,4],"dtype":"float32"}]}],
+          "init_params": {"file":"init_params.bin","count":6,"seed":0},
+          "use_pallas": true
+        }"#;
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("deqa_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.channels, 2);
+        assert_eq!(m.model.latent_dim(), 8);
+        assert_eq!(m.solver.window, 5);
+        assert_eq!(m.entry("a", 1).unwrap().inputs[0].shape, vec![1, 4]);
+        assert!(m.entry("a", 2).is_err());
+        assert_eq!(m.batches_for("a"), vec![1]);
+        assert_eq!(m.bucket_for("a", 1).unwrap(), 1);
+        assert_eq!(m.bucket_for("a", 99).unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercised against the actual artifacts when they exist
+        // (`make artifacts`); skipped otherwise so unit tests stay hermetic.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.model.param_count > 0);
+            assert!(!m.entries.is_empty());
+            assert!(m.entry("cell_step", 32).is_ok());
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: manifest registry, host tensors, execution engine.
+//!
+//! The coordinator's only gateway to the AOT-compiled JAX/Pallas compute:
+//! `Engine::execute(entry, batch, inputs)` over `HostTensor`s, with
+//! shapes/dtypes validated against `artifacts/manifest.json`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta};
+pub use tensor::{Dtype, HostTensor, TensorData};

@@ -1,0 +1,210 @@
+//! Host-side tensors and conversion to/from PJRT `Literal`s.
+//!
+//! Everything the coordinator moves across the PJRT boundary goes through
+//! `HostTensor`: a shape plus flat row-major data (f32 or i32 — the only
+//! dtypes the model artifacts use).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: row-major data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!(
+                "shape {:?} wants {} elements, data has {}",
+                shape,
+                want,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!(
+                "shape {:?} wants {} elements, data has {}",
+                shape,
+                want,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 data (errors on dtype mismatch).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    /// Single scalar value (errors unless exactly one element).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn item_i32(&self) -> Result<i32> {
+        let v = self.i32s()?;
+        if v.len() != 1 {
+            bail!("item_i32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != self.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Convert to a PJRT literal (copies once).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        lit.reshape(&dims)
+            .with_context(|| format!("reshape literal to {:?}", self.shape))
+    }
+
+    /// Convert back from a PJRT literal (copies once).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = match lit.shape().context("literal shape")? {
+            xla::Shape::Array(a) => a,
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().context("literal to_vec f32")?;
+                HostTensor::f32(dims, data)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().context("literal to_vec i32")?;
+                HostTensor::i32(dims, data)
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.f32s().unwrap()[3], 4.0);
+        assert!(t.i32s().is_err());
+        assert!(t.item_f32().is_err());
+        assert_eq!(HostTensor::scalar_f32(5.0).item_f32().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = HostTensor::zeros(vec![4, 2]);
+        assert!(t.clone().reshaped(vec![2, 4]).is_ok());
+        assert!(t.reshaped(vec![3, 3]).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("float64").is_err());
+    }
+
+    // Literal round-trips are covered by rust/tests/integration_runtime.rs
+    // (they need the PJRT shared library at runtime).
+}

@@ -1,0 +1,103 @@
+//! The dynamic-batching loop: bucket selection + wait policy.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::server::{run_batch, Request, RouterConfig, ServerMetrics};
+
+pub(crate) type QueueHandle = Arc<super::Queue>;
+
+/// Pick the compiled bucket for `n` queued requests: the smallest bucket
+/// ≥ n, else the largest (and we take only that many requests).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    debug_assert!(!buckets.is_empty());
+    *buckets
+        .iter()
+        .find(|&&b| b >= n)
+        .unwrap_or(buckets.last().unwrap())
+}
+
+/// Decide whether to fire now: full bucket, or oldest waiter exceeded
+/// `max_wait`.
+pub fn should_fire(
+    queued: usize,
+    oldest_wait: Option<Duration>,
+    max_bucket: usize,
+    max_wait: Duration,
+) -> bool {
+    if queued == 0 {
+        return false;
+    }
+    queued >= max_bucket || oldest_wait.map(|w| w >= max_wait).unwrap_or(false)
+}
+
+/// The batcher thread body.
+pub(crate) fn run(
+    engine: Arc<Engine>,
+    params: Arc<ParamSet>,
+    queue: QueueHandle,
+    metrics: Arc<ServerMetrics>,
+    cfg: RouterConfig,
+    buckets: Vec<usize>,
+) {
+    let max_bucket = *buckets.last().unwrap();
+    loop {
+        // Wait for work (or shutdown), with the timeout needed to honor
+        // max_wait on partially filled batches.
+        let batch: Vec<Request> = {
+            let mut items = queue.items.lock().unwrap();
+            loop {
+                if queue.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let oldest = items.first().map(|r| r.enqueued.elapsed());
+                if should_fire(items.len(), oldest, max_bucket, cfg.max_wait) {
+                    let take = items.len().min(max_bucket);
+                    break items.drain(..take).collect();
+                }
+                // Sleep until notified or until the oldest request ages out.
+                let wait = match items.first() {
+                    Some(r) => cfg
+                        .max_wait
+                        .saturating_sub(r.enqueued.elapsed())
+                        .max(Duration::from_micros(100)),
+                    None => Duration::from_millis(50),
+                };
+                let (guard, _timeout) =
+                    queue.signal.wait_timeout(items, wait).unwrap();
+                items = guard;
+            }
+        };
+
+        let bucket = pick_bucket(&buckets, batch.len());
+        run_batch(&engine, &params, &cfg.solver, batch, bucket, &metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = vec![1, 8, 32];
+        assert_eq!(pick_bucket(&b, 1), 1);
+        assert_eq!(pick_bucket(&b, 2), 8);
+        assert_eq!(pick_bucket(&b, 8), 8);
+        assert_eq!(pick_bucket(&b, 9), 32);
+        assert_eq!(pick_bucket(&b, 100), 32);
+    }
+
+    #[test]
+    fn fire_policy() {
+        let w = Duration::from_millis(5);
+        assert!(!should_fire(0, None, 32, w));
+        assert!(should_fire(32, Some(Duration::ZERO), 32, w));
+        assert!(should_fire(40, Some(Duration::ZERO), 32, w));
+        assert!(!should_fire(3, Some(Duration::from_millis(1)), 32, w));
+        assert!(should_fire(3, Some(Duration::from_millis(6)), 32, w));
+    }
+}

@@ -1,0 +1,237 @@
+//! Inference serving stack: a dynamic-batching request router in the
+//! vLLM-router mold, sized for the DEQ workload.
+//!
+//! Architecture (std-only; the offline crate set has no tokio — threads +
+//! condvar stand in for the async runtime, see DESIGN.md §Substitutions):
+//!
+//!   clients → [`Router::submit`] → shared queue → batcher thread
+//!           → bucket-padded PJRT inference → per-request responses
+//!
+//! The batcher implements the classic dynamic-batching policy: wait until
+//! either (a) the largest compiled bucket fills, or (b) the oldest queued
+//! request has waited `max_wait`; then take the best-fitting bucket.
+//! A TCP front-end (`serve_tcp`) speaks newline-delimited JSON for the
+//! `deq-anderson serve` subcommand and the serving example.
+
+pub mod batcher;
+pub mod tcp;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::infer;
+use crate::metrics::Stats;
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::solver::SolveOptions;
+
+/// One inference request: a flat NHWC image.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub solver_iters: usize,
+    /// Total time in the system (queue + solve).
+    pub latency: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub solver: SolveOptions,
+    /// Max time the oldest request may wait before a partial batch fires.
+    pub max_wait: Duration,
+    /// Upper bound on queued requests (backpressure).
+    pub queue_cap: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub latency: Mutex<Stats>,
+    pub batch_fill: Mutex<Stats>,
+}
+
+impl ServerMetrics {
+    pub fn record(&self, latency: Duration, batch: usize, bucket: usize) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().push_duration(latency);
+        let _ = batch;
+        self.batch_fill
+            .lock()
+            .unwrap()
+            .push(batch as f64 / bucket as f64);
+    }
+
+    pub fn summary(&self) -> String {
+        let lat = self.latency.lock().unwrap();
+        let fill = self.batch_fill.lock().unwrap();
+        format!(
+            "served={} batches={} p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_fill={:.2}",
+            self.served.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            lat.percentile(50.0) * 1e3,
+            lat.percentile(95.0) * 1e3,
+            lat.percentile(99.0) * 1e3,
+            fill.mean(),
+        )
+    }
+}
+
+pub(crate) struct Queue {
+    pub(crate) items: Mutex<Vec<Request>>,
+    pub(crate) signal: Condvar,
+    pub(crate) shutdown: AtomicBool,
+}
+
+/// The dynamic-batching inference router.
+pub struct Router {
+    queue: Arc<Queue>,
+    pub metrics: Arc<ServerMetrics>,
+    next_id: AtomicU64,
+    worker: Option<std::thread::JoinHandle<()>>,
+    cfg: RouterConfig,
+}
+
+impl Router {
+    /// Spawn the batcher thread over an engine + parameters.
+    pub fn start(
+        engine: Arc<Engine>,
+        params: Arc<ParamSet>,
+        cfg: RouterConfig,
+    ) -> Result<Self> {
+        let queue = Arc::new(Queue {
+            items: Mutex::new(Vec::new()),
+            signal: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(ServerMetrics::default());
+        let buckets = engine.manifest().batches_for("encode");
+        anyhow::ensure!(!buckets.is_empty(), "no encode artifacts");
+
+        let worker = {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let cfg2 = cfg.clone();
+            std::thread::Builder::new()
+                .name("deq-batcher".into())
+                .spawn(move || {
+                    batcher::run(engine, params, queue, metrics, cfg2, buckets)
+                })?
+        };
+
+        Ok(Self {
+            queue,
+            metrics,
+            next_id: AtomicU64::new(1),
+            worker: Some(worker),
+            cfg,
+        })
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    /// Errors when the queue is at capacity (backpressure).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.items.lock().unwrap();
+            anyhow::ensure!(
+                q.len() < self.cfg.queue_cap,
+                "queue full ({} requests)",
+                q.len()
+            );
+            q.push(Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                image,
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+        }
+        self.queue.signal.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("router dropped request"))
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.items.lock().unwrap().len()
+    }
+
+    /// Stop the batcher thread (drains nothing; pending requests error out).
+    pub fn shutdown(mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.signal.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.signal.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The inference work a batch performs — shared by the batcher thread.
+pub(crate) fn run_batch(
+    engine: &Engine,
+    params: &ParamSet,
+    solver: &SolveOptions,
+    mut batch: Vec<Request>,
+    bucket: usize,
+    metrics: &ServerMetrics,
+) {
+    let dim = engine.manifest().model.image_dim();
+    let count = batch.len();
+    let mut images = Vec::with_capacity(count * dim);
+    for r in &batch {
+        images.extend_from_slice(&r.image);
+    }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    match infer::infer(engine, params, &images, count, solver) {
+        Ok(result) => {
+            for (i, req) in batch.drain(..).enumerate() {
+                let latency = req.enqueued.elapsed();
+                metrics.record(latency, count, bucket);
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    class: result.predictions[i],
+                    logits: result.logits[i].clone(),
+                    solver_iters: result.solver_iters,
+                    latency,
+                    batch_size: count,
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("[server] batch failed: {e:#}");
+            // Drop senders → clients see RecvError.
+        }
+    }
+}

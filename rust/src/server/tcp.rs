@@ -1,0 +1,124 @@
+//! TCP front-end: newline-delimited JSON over a `std::net` listener.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"id": <any>, "image": [f32; hw*hw*c]}
+//!             {"cmd": "stats"}    → server metrics
+//!             {"cmd": "ping"}     → {"ok": true}
+//!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n}
+//!             {"error": "..."}    on malformed input
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::server::Router;
+use crate::util::json::{self, Json};
+
+/// Handle one client connection (blocking, one request at a time per
+/// connection; concurrency comes from one thread per connection).
+fn handle_client(router: &Router, image_dim: usize, stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = process_line(router, image_dim, &line);
+        let text = json::to_string(&reply);
+        if writer.write_all(text.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Parse and execute one protocol line. Pure function → unit-testable.
+pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
+    let parsed = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return json::obj(vec![("error", json::s(&format!("{e}")))]),
+    };
+
+    if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "ping" => json::obj(vec![("ok", Json::Bool(true))]),
+            "stats" => json::obj(vec![(
+                "stats",
+                json::s(&router.metrics.summary()),
+            )]),
+            other => json::obj(vec![(
+                "error",
+                json::s(&format!("unknown cmd '{other}'")),
+            )]),
+        };
+    }
+
+    let image: Vec<f32> = match parsed.get("image").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|v| v as f32)
+            .collect(),
+        None => {
+            return json::obj(vec![("error", json::s("missing 'image' array"))])
+        }
+    };
+    if image.len() != image_dim {
+        return json::obj(vec![(
+            "error",
+            json::s(&format!(
+                "image has {} values, model wants {image_dim}",
+                image.len()
+            )),
+        )]);
+    }
+
+    match router.infer_blocking(image) {
+        Ok(resp) => {
+            let mut pairs = vec![
+                ("class", json::num(resp.class as f64)),
+                ("latency_ms", json::num(resp.latency.as_secs_f64() * 1e3)),
+                ("batch", json::num(resp.batch_size as f64)),
+                ("solver_iters", json::num(resp.solver_iters as f64)),
+            ];
+            if let Some(id) = parsed.get("id") {
+                pairs.push(("id", id.clone()));
+            }
+            json::obj(pairs)
+        }
+        Err(e) => json::obj(vec![("error", json::s(&format!("{e}")))]),
+    }
+}
+
+/// Serve until the process is killed.  One thread per connection; the
+/// router's batcher thread does the actual batching across connections.
+pub fn serve_tcp(router: Arc<Router>, image_dim: usize, addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    println!("[server] listening on {addr} (ndjson protocol)");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let router = router.clone();
+                std::thread::spawn(move || handle_client(&router, image_dim, s));
+            }
+            Err(e) => eprintln!("[server] accept error: {e}"),
+        }
+    }
+    Ok(())
+}

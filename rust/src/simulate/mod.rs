@@ -1,0 +1,9 @@
+//! Hardware and impact simulators (DESIGN.md §6 substitutions):
+//! roofline device cost models (V100 vs Xeon) for the paper's GPU-vs-CPU
+//! figures, and the Fig. 2 energy/carbon projection model.
+
+pub mod device;
+pub mod energy;
+
+pub use device::{simulate_timestamps, DeviceModel, OpCount, Workload, V100, XEON};
+pub use energy::{EnergyModel, YearPoint};

@@ -1,0 +1,214 @@
+//! Anderson-extrapolated solver (paper Alg. 1) over the AOT artifacts.
+//!
+//! The coordinator owns the history window: a ring buffer of the last m
+//! (iterate, image) pairs, flattened to `(batch, m, n)` tensors that feed
+//! the fused L1 `anderson_update` kernel (Gram → masked solve → Eq. 5
+//! mixing).  The warm-up window (k < m) is expressed through the mask
+//! vector, so a single compiled artifact serves every iteration.
+//!
+//! Cost anatomy per iteration (the paper's "mixing penalty", Fig. 1):
+//!   cell_step:        the function evaluation f(z, x)
+//!   anderson_update:  2·m·n history streaming + m² Gram + m³ solve
+//! The history buffers are the "cacheable iterations": they live in
+//! preallocated host ring storage and are re-packed, not re-allocated.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+
+/// Ring-buffer history for batched Anderson over flattened latents.
+///
+/// `m` is the *effective* window (ring size); `slots` is the artifact's
+/// compiled window (tensor extent).  Slots beyond `m` stay zeroed and
+/// masked out, so one compiled artifact serves every window ≤ its size.
+pub struct History {
+    batch: usize,
+    m: usize,
+    slots: usize,
+    n: usize,
+    /// (batch, slots, n) windows, slot-major within each sample.
+    xhist: Vec<f32>,
+    fhist: Vec<f32>,
+    count: usize,
+}
+
+impl History {
+    pub fn new(batch: usize, m: usize, n: usize) -> Self {
+        Self::with_padded_slots(batch, m, m, n)
+    }
+
+    /// Effective window `m` inside a tensor padded to `slots` ≥ m.
+    pub fn with_padded_slots(batch: usize, m: usize, slots: usize, n: usize) -> Self {
+        assert!(m >= 1 && m <= slots);
+        Self {
+            batch,
+            m,
+            slots,
+            n,
+            xhist: vec![0.0; batch * slots * n],
+            fhist: vec![0.0; batch * slots * n],
+            count: 0,
+        }
+    }
+
+    pub fn valid(&self) -> usize {
+        self.count.min(self.m)
+    }
+
+    /// Record (z, f(z)) — both flat (batch * n).
+    pub fn push(&mut self, z: &[f32], fz: &[f32]) {
+        assert_eq!(z.len(), self.batch * self.n);
+        assert_eq!(fz.len(), self.batch * self.n);
+        let slot = self.count % self.m;
+        for b in 0..self.batch {
+            let dst = (b * self.slots + slot) * self.n;
+            let src = b * self.n;
+            self.xhist[dst..dst + self.n].copy_from_slice(&z[src..src + self.n]);
+            self.fhist[dst..dst + self.n]
+                .copy_from_slice(&fz[src..src + self.n]);
+        }
+        self.count += 1;
+    }
+
+    /// Mask vector over the padded slots: 1.0 for valid ring entries.
+    pub fn mask(&self) -> Vec<f32> {
+        let nv = self.valid();
+        (0..self.slots)
+            .map(|i| if i < nv { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Materialize the (batch, slots, n) history tensors for the kernel.
+    pub fn tensors(&self) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let shape = vec![self.batch, self.slots, self.n];
+        Ok((
+            HostTensor::f32(shape.clone(), self.xhist.clone())?,
+            HostTensor::f32(shape, self.fhist.clone())?,
+            HostTensor::f32(vec![self.slots], self.mask())?,
+        ))
+    }
+}
+
+/// Solve to tolerance with Anderson extrapolation.
+pub fn solve(
+    engine: &Engine,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let batch = x_feat.shape[0];
+    let meta = engine.manifest().model.clone();
+    let n = meta.latent_dim();
+    let m = opts.window;
+    // The anderson_update artifact is compiled for the manifest window;
+    // smaller runtime windows ride the same artifact through the mask
+    // (the kernel zeroes masked slots exactly), enabling window ablations
+    // without recompiling.
+    let compiled_m = engine.manifest().solver.window;
+    anyhow::ensure!(
+        m <= compiled_m,
+        "anderson window {m} > compiled window {compiled_m} \
+         (rebuild artifacts with a larger SolverConfig.window)"
+    );
+
+    let mut z = HostTensor::zeros(x_feat.shape.clone());
+    let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
+    let mut steps: Vec<SolveStep> = Vec::new();
+    let mut converged = false;
+    let t0 = Instant::now();
+
+    let mut cell_inputs: Vec<HostTensor> = params.to_vec();
+    let z_slot = cell_inputs.len();
+    cell_inputs.push(z.clone());
+    cell_inputs.push(x_feat.clone());
+
+    for k in 0..opts.max_iter {
+        // f(z, x) + fused residual norms.
+        cell_inputs[z_slot] = z.clone();
+        let out = engine.execute("cell_step", batch, &cell_inputs)?;
+        let f = &out[0];
+        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        steps.push(SolveStep {
+            iter: k,
+            rel_residual: rel,
+            elapsed: t0.elapsed(),
+            fevals: k + 1,
+            mixed: k > 0,
+        });
+        if rel < opts.tol {
+            converged = true;
+            z = f.clone();
+            break;
+        }
+
+        // Window update + Anderson mixing.
+        hist.push(z.f32s()?, f.f32s()?);
+        let (xh, fh, mask) = hist.tensors()?;
+        let mixed = engine.execute("anderson_update", batch, &[xh, fh, mask])?;
+        z = mixed[0]
+            .clone()
+            .reshaped(meta.latent_shape(batch))?;
+    }
+
+    Ok(SolveReport { kind: SolverKind::Anderson, steps, converged, z_star: z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_ring_and_mask() {
+        let mut h = History::new(2, 3, 4);
+        assert_eq!(h.valid(), 0);
+        let z = vec![1.0; 8];
+        let f = vec![2.0; 8];
+        h.push(&z, &f);
+        assert_eq!(h.valid(), 1);
+        assert_eq!(h.mask(), vec![1.0, 0.0, 0.0]);
+        h.push(&z, &f);
+        h.push(&z, &f);
+        h.push(&z, &f); // wraps
+        assert_eq!(h.valid(), 3);
+        assert_eq!(h.mask(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn history_layout_is_batch_major() {
+        let mut h = History::new(2, 2, 3);
+        let z: Vec<f32> = (0..6).map(|v| v as f32).collect(); // sample0: 0,1,2
+        let f: Vec<f32> = (10..16).map(|v| v as f32).collect();
+        h.push(&z, &f);
+        let (xh, fh, mask) = h.tensors().unwrap();
+        assert_eq!(xh.shape, vec![2, 2, 3]);
+        // sample 0, slot 0 = z[0..3]
+        assert_eq!(&xh.f32s().unwrap()[0..3], &[0.0, 1.0, 2.0]);
+        // sample 1, slot 0 = z[3..6] at offset (1*2+0)*3 = 6
+        assert_eq!(&xh.f32s().unwrap()[6..9], &[3.0, 4.0, 5.0]);
+        assert_eq!(&fh.f32s().unwrap()[0..3], &[10.0, 11.0, 12.0]);
+        assert_eq!(mask.f32s().unwrap(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn padded_history_masks_unused_slots() {
+        // Effective window 2 inside 5 compiled slots: ring wraps at 2,
+        // slots 2..5 stay zero and masked out forever.
+        let mut h = History::with_padded_slots(1, 2, 5, 3);
+        for step in 0..4 {
+            let v = vec![step as f32; 3];
+            h.push(&v, &v);
+        }
+        assert_eq!(h.valid(), 2);
+        let (xh, _, mask) = h.tensors().unwrap();
+        assert_eq!(xh.shape, vec![1, 5, 3]);
+        assert_eq!(mask.f32s().unwrap(), &[1.0, 1.0, 0.0, 0.0, 0.0]);
+        let x = xh.f32s().unwrap();
+        // Ring of size 2: slot 0 holds step 2, slot 1 holds step 3.
+        assert_eq!(&x[0..3], &[2.0, 2.0, 2.0]);
+        assert_eq!(&x[3..6], &[3.0, 3.0, 3.0]);
+        assert_eq!(&x[6..15], &[0.0; 9]);
+    }
+}

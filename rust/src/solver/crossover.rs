@@ -1,0 +1,157 @@
+//! Crossover-point and mixing-penalty analysis (paper Fig. 1 & §4).
+//!
+//! Given residual-vs-time traces from two solvers, locate:
+//!  * the **crossover point**: the residual level below which Anderson's
+//!    wallclock beats forward iteration (above it, the per-iteration
+//!    mixing penalty dominates and forward is cheaper);
+//!  * the **mixing penalty**: the per-iteration cost ratio
+//!    anderson/forward (>1 by construction).
+
+use std::time::Duration;
+
+use crate::solver::SolveReport;
+
+/// A point on a residual-vs-time curve.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub t: Duration,
+    pub residual: f32,
+}
+
+pub fn trace(report: &SolveReport) -> Vec<TracePoint> {
+    report
+        .steps
+        .iter()
+        .map(|s| TracePoint { t: s.elapsed, residual: s.rel_residual })
+        .collect()
+}
+
+/// Time for a trace to first reach `target` (linear scan; traces are short).
+pub fn time_to_target(trace: &[TracePoint], target: f32) -> Option<Duration> {
+    trace.iter().find(|p| p.residual <= target).map(|p| p.t)
+}
+
+/// Result of comparing two solvers' traces.
+#[derive(Debug, Clone)]
+pub struct CrossoverReport {
+    /// Residual targets swept (log-spaced between the traces' extremes).
+    pub targets: Vec<f32>,
+    /// time-to-target for (anderson, forward); None = never reached.
+    pub times: Vec<(Option<Duration>, Option<Duration>)>,
+    /// First target where Anderson is strictly faster (the crossover).
+    pub crossover_residual: Option<f32>,
+    /// Mean per-iteration cost ratio anderson/forward (the mixing penalty).
+    pub mixing_penalty: f32,
+}
+
+/// Compare solver traces across log-spaced residual targets.
+pub fn analyze(anderson: &SolveReport, forward: &SolveReport) -> CrossoverReport {
+    let ta = trace(anderson);
+    let tf = trace(forward);
+
+    // Sweep targets from the max starting residual down to the best
+    // residual either solver achieved.
+    let hi = ta
+        .first()
+        .map(|p| p.residual)
+        .unwrap_or(1.0)
+        .max(tf.first().map(|p| p.residual).unwrap_or(1.0));
+    let lo = anderson
+        .best_residual()
+        .min(forward.best_residual())
+        .max(1e-9);
+    let steps = 24usize;
+    let (lh, ll) = (hi.ln(), lo.ln());
+    let targets: Vec<f32> = (0..=steps)
+        .map(|i| (lh + (ll - lh) * i as f32 / steps as f32).exp())
+        .collect();
+
+    let times: Vec<(Option<Duration>, Option<Duration>)> = targets
+        .iter()
+        .map(|&tg| (time_to_target(&ta, tg), time_to_target(&tf, tg)))
+        .collect();
+
+    let crossover_residual = targets
+        .iter()
+        .zip(&times)
+        .find(|(_, (a, f))| match (a, f) {
+            (Some(a), Some(f)) => a < f,
+            (Some(_), None) => true,
+            _ => false,
+        })
+        .map(|(t, _)| *t);
+
+    let per_iter = |r: &SolveReport| -> f32 {
+        if r.steps.is_empty() {
+            return f32::NAN;
+        }
+        r.total_time().as_secs_f32() / r.steps.len() as f32
+    };
+    let mixing_penalty = per_iter(anderson) / per_iter(forward);
+
+    CrossoverReport { targets, times, crossover_residual, mixing_penalty }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+    use crate::solver::{SolveStep, SolverKind};
+
+    fn fake_report(kind: SolverKind, per_iter_us: u64, rate: f32, n: usize) -> SolveReport {
+        let steps = (0..n)
+            .map(|k| SolveStep {
+                iter: k,
+                rel_residual: rate.powi(k as i32),
+                elapsed: Duration::from_micros(per_iter_us * (k as u64 + 1)),
+                fevals: k + 1,
+                mixed: kind == SolverKind::Anderson,
+            })
+            .collect();
+        SolveReport {
+            kind,
+            steps,
+            converged: true,
+            z_star: HostTensor::zeros(vec![1]),
+        }
+    }
+
+    #[test]
+    fn crossover_detected_when_anderson_converges_faster() {
+        // Anderson: 3x cost per iter but rate 0.5 vs forward rate 0.9.
+        let a = fake_report(SolverKind::Anderson, 300, 0.5, 30);
+        let f = fake_report(SolverKind::Forward, 100, 0.9, 200);
+        let rep = analyze(&a, &f);
+        assert!(rep.mixing_penalty > 2.5 && rep.mixing_penalty < 3.5);
+        let x = rep.crossover_residual.expect("crossover exists");
+        // Deep targets favor anderson; the crossover is below 1.0.
+        assert!(x < 1.0);
+        // At the deepest target BOTH solvers reach, anderson must be faster.
+        let (ta, tf) = rep
+            .times
+            .iter()
+            .rev()
+            .find(|(a, f)| a.is_some() && f.is_some())
+            .unwrap();
+        assert!(ta.unwrap() < tf.unwrap());
+    }
+
+    #[test]
+    fn no_crossover_when_anderson_slower_everywhere() {
+        // Same rate, higher cost: anderson never wins.
+        let a = fake_report(SolverKind::Anderson, 300, 0.9, 50);
+        let f = fake_report(SolverKind::Forward, 100, 0.9, 50);
+        let rep = analyze(&a, &f);
+        assert!(rep.crossover_residual.is_none());
+    }
+
+    #[test]
+    fn time_to_target_monotone() {
+        let r = fake_report(SolverKind::Forward, 10, 0.8, 40);
+        let tr = trace(&r);
+        let t1 = time_to_target(&tr, 0.5).unwrap();
+        let t2 = time_to_target(&tr, 0.1).unwrap();
+        assert!(t1 <= t2);
+        assert!(time_to_target(&tr, 0.0).is_none());
+    }
+}

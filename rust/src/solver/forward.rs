@@ -1,0 +1,67 @@
+//! Forward-iteration solver (the paper's baseline): z ← f(z, x).
+//!
+//! Two dispatch modes:
+//!  * per-step: one `cell_step` artifact call per iteration — full residual
+//!    trace resolution (used by the residual-vs-time experiments);
+//!  * fused: `forward_solve_k` runs K cell applications inside one HLO
+//!    while-loop, amortizing PJRT dispatch (the L2 perf-pass artifact);
+//!    residuals are then sampled every K evaluations.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+
+/// Solve to tolerance with plain forward iteration.
+pub fn solve(
+    engine: &Engine,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let batch = x_feat.shape[0];
+    let fused_k = engine.manifest().solver.fused_steps.max(1);
+    let use_fused = opts.fused_forward
+        && fused_k > 1
+        && engine.manifest().entry("forward_solve_k", batch).is_ok();
+
+    let mut z = HostTensor::zeros(x_feat.shape.clone());
+    let mut steps: Vec<SolveStep> = Vec::new();
+    let mut converged = false;
+    let mut fevals = 0usize;
+    let t0 = Instant::now();
+
+    let mut inputs: Vec<HostTensor> = params.to_vec();
+    let z_slot = inputs.len();
+    inputs.push(z.clone());
+    inputs.push(x_feat.clone());
+
+    while fevals < opts.max_iter {
+        let (entry, evals_this_call) = if use_fused {
+            ("forward_solve_k", fused_k)
+        } else {
+            ("cell_step", 1)
+        };
+        inputs[z_slot] = z;
+        let out = engine.execute(entry, batch, &inputs)?;
+        let f = out[0].clone();
+        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        fevals += evals_this_call;
+        steps.push(SolveStep {
+            iter: steps.len(),
+            rel_residual: rel,
+            elapsed: t0.elapsed(),
+            fevals,
+            mixed: false,
+        });
+        z = f;
+        if rel < opts.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(SolveReport { kind: SolverKind::Forward, steps, converged, z_star: z })
+}

@@ -1,0 +1,206 @@
+//! Fixed-point solver drivers over the AOT artifacts — the coordinator
+//! half of the paper's contribution.
+//!
+//! The Python/Pallas layer owns the *math* of one step (`cell_step`,
+//! `anderson_update`); this module owns the *policy*: when to evaluate,
+//! when to mix, when to stop, what to record.  Three drivers:
+//!
+//! * [`forward`] — the paper's baseline, z ← f(z,x), optionally through
+//!   the fused `forward_solve_k` artifact (K steps per PJRT dispatch).
+//! * [`anderson`] — windowed Anderson extrapolation (Alg. 1): ring-buffer
+//!   history management on the host, mixing via the fused L1 kernel.
+//! * [`policy`] — the paper's §4 suggestion: run Anderson, watch for
+//!   stagnation, fall back to damped forward steps.
+//!
+//! Each solve returns a [`SolveReport`] with the per-iteration residual /
+//! wallclock trace — the raw series behind Figs. 1, 6 and 7.
+
+pub mod anderson;
+pub mod crossover;
+pub mod forward;
+pub mod policy;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostTensor};
+
+/// Which solver to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Forward,
+    Anderson,
+    /// Anderson with stagnation fallback (paper §4).
+    Hybrid,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "forward" => Some(Self::Forward),
+            "anderson" => Some(Self::Anderson),
+            "hybrid" => Some(Self::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Forward => "forward",
+            Self::Anderson => "anderson",
+            Self::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Runtime solver options (seeded from the manifest's SolverMeta).
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOptions {
+    pub kind: SolverKind,
+    pub window: usize,
+    pub tol: f32,
+    pub max_iter: usize,
+    pub lam: f32,
+    /// Use the fused K-step artifact for forward solves when available.
+    pub fused_forward: bool,
+    /// Stagnation threshold for the hybrid policy: minimum relative
+    /// improvement per window before switching.
+    pub stagnation_eps: f32,
+}
+
+impl SolveOptions {
+    pub fn from_manifest(engine: &Engine, kind: SolverKind) -> Self {
+        let s = &engine.manifest().solver;
+        Self {
+            kind,
+            window: s.window,
+            tol: s.tol,
+            max_iter: s.max_iter,
+            lam: s.lam,
+            fused_forward: true,
+            stagnation_eps: 0.03,
+        }
+    }
+}
+
+/// One recorded solver iteration.
+#[derive(Debug, Clone)]
+pub struct SolveStep {
+    pub iter: usize,
+    /// Max-over-batch relative residual ‖f−z‖/(‖f‖+λ).
+    pub rel_residual: f32,
+    /// Cumulative wallclock since solve start.
+    pub elapsed: Duration,
+    /// Cumulative cell evaluations (per sample).
+    pub fevals: usize,
+    /// True if this step applied Anderson mixing (vs a plain forward step).
+    pub mixed: bool,
+}
+
+/// Outcome of one equilibrium solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub kind: SolverKind,
+    pub steps: Vec<SolveStep>,
+    pub converged: bool,
+    pub z_star: HostTensor,
+}
+
+impl SolveReport {
+    pub fn iters(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn fevals(&self) -> usize {
+        self.steps.last().map(|s| s.fevals).unwrap_or(0)
+    }
+
+    pub fn final_residual(&self) -> f32 {
+        self.steps.last().map(|s| s.rel_residual).unwrap_or(f32::NAN)
+    }
+
+    pub fn total_time(&self) -> Duration {
+        self.steps.last().map(|s| s.elapsed).unwrap_or(Duration::ZERO)
+    }
+
+    /// Wallclock to first residual ≤ target (None if never reached).
+    pub fn time_to(&self, target: f32) -> Option<Duration> {
+        self.steps
+            .iter()
+            .find(|s| s.rel_residual <= target)
+            .map(|s| s.elapsed)
+    }
+
+    /// Best residual achieved.
+    pub fn best_residual(&self) -> f32 {
+        self.steps
+            .iter()
+            .map(|s| s.rel_residual)
+            .fold(f32::INFINITY, f32::min)
+    }
+}
+
+/// Dispatch a solve by kind.
+pub fn solve(
+    engine: &Engine,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    match opts.kind {
+        SolverKind::Forward => forward::solve(engine, params, x_feat, opts),
+        SolverKind::Anderson => anderson::solve(engine, params, x_feat, opts),
+        SolverKind::Hybrid => policy::solve(engine, params, x_feat, opts),
+    }
+}
+
+/// Max-over-batch relative residual from the fused cell_step outputs.
+pub(crate) fn max_rel_residual(
+    res_num: &HostTensor,
+    f_norm: &HostTensor,
+    lam: f32,
+) -> Result<f32> {
+    let num = res_num.f32s()?;
+    let den = f_norm.f32s()?;
+    Ok(num
+        .iter()
+        .zip(den)
+        .map(|(n, d)| n / (d + lam))
+        .fold(0.0f32, f32::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+            assert_eq!(SolverKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn max_rel_residual_takes_max() {
+        let num = HostTensor::f32(vec![3], vec![1.0, 4.0, 2.0]).unwrap();
+        let den = HostTensor::f32(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
+        let r = max_rel_residual(&num, &den, 0.0).unwrap();
+        assert!((r - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn report_accessors_empty() {
+        let r = SolveReport {
+            kind: SolverKind::Forward,
+            steps: vec![],
+            converged: false,
+            z_star: HostTensor::zeros(vec![1]),
+        };
+        assert_eq!(r.iters(), 0);
+        assert!(r.final_residual().is_nan());
+        assert_eq!(r.total_time(), Duration::ZERO);
+        assert!(r.time_to(1.0).is_none());
+    }
+}

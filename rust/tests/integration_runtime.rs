@@ -1,0 +1,322 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they are skipped (not failed)
+//! when `artifacts/manifest.json` is absent so `cargo test` stays usable
+//! in a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use deq_anderson::model::ParamSet;
+use deq_anderson::native;
+use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::solver::{self, SolveOptions, SolverKind};
+use deq_anderson::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<&'static Engine> {
+    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            if artifacts_dir().join("manifest.json").exists() {
+                Some(Engine::new(artifacts_dir()).expect("engine"))
+            } else {
+                eprintln!("[skip] artifacts not built");
+                None
+            }
+        })
+        .as_ref()
+}
+
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn literal_roundtrip_f32_i32() {
+    // Tensor ↔ literal conversion needs the xla shared lib: test here.
+    let t = HostTensor::f32(vec![2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
+    let lit = t.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+
+    let ti = HostTensor::i32(vec![4], vec![1, -2, 3, -4]).unwrap();
+    let lit = ti.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(ti, back);
+}
+
+#[test]
+fn manifest_and_params_load() {
+    let e = require_engine!();
+    let m = e.manifest();
+    assert!(m.model.param_count > 1000);
+    let p = ParamSet::load_init(m).unwrap();
+    assert_eq!(p.tensors.len(), m.params.len());
+    assert!(p.all_finite());
+    assert!(p.max_abs() > 0.0);
+    // Round-trip through the checkpoint format.
+    let path = std::env::temp_dir().join("deqa_ckpt_test.bin");
+    p.save(&path).unwrap();
+    let p2 = ParamSet::load(m, &path).unwrap();
+    assert_eq!(p.to_flat(), p2.to_flat());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn engine_validates_shapes() {
+    let e = require_engine!();
+    // Wrong input count.
+    let err = e.execute("anderson_update", 1, &[]).unwrap_err();
+    assert!(format!("{err}").contains("expected 3 inputs"), "{err}");
+    // Wrong shape.
+    let m = e.manifest().solver.window;
+    let n = e.manifest().model.latent_dim();
+    let bad = [
+        HostTensor::zeros(vec![1, m, n + 1]),
+        HostTensor::zeros(vec![1, m, n + 1]),
+        HostTensor::zeros(vec![m]),
+    ];
+    assert!(e.execute("anderson_update", 1, &bad).is_err());
+    // Unknown entry.
+    assert!(e.execute("nope", 1, &[]).is_err());
+}
+
+#[test]
+fn anderson_artifact_matches_native_twin() {
+    // The L1 Pallas kernel and the pure-Rust solver implement the same
+    // math; cross-validate on random windows, per batch element.
+    let e = require_engine!();
+    let m = e.manifest().solver.window;
+    let n = e.manifest().model.latent_dim();
+    let (beta, lam) = (e.manifest().solver.beta, e.manifest().solver.lam);
+    let batch = 8;
+    let mut rng = Rng::new(42);
+    let xh = rng.normal_vec(batch * m * n, 1.0);
+    let fh: Vec<f32> = xh.iter().map(|v| v + 0.05 * rng.normal()).collect();
+    let out = e
+        .execute(
+            "anderson_update",
+            batch,
+            &[
+                HostTensor::f32(vec![batch, m, n], xh.clone()).unwrap(),
+                HostTensor::f32(vec![batch, m, n], fh.clone()).unwrap(),
+                HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let z_art = out[0].f32s().unwrap();
+    let a_art = out[1].f32s().unwrap();
+    for b in 0..batch {
+        let mut st = native::AndersonState::new(m, n, beta, lam);
+        for i in 0..m {
+            let off = (b * m + i) * n;
+            st.push(&xh[off..off + n], &fh[off..off + n]);
+        }
+        let (z_nat, _a_nat) = st.mix().unwrap();
+        for (x, y) in z_art[b * n..(b + 1) * n].iter().zip(&z_nat) {
+            assert!((x - y).abs() < 2e-2, "b={b}: {x} vs {y}");
+        }
+        let asum: f32 = a_art[b * m..(b + 1) * m].iter().sum();
+        assert!((asum - 1.0).abs() < 1e-3, "alpha sum {asum}");
+    }
+}
+
+#[test]
+fn anderson_warmup_mask_single_slot_is_forward() {
+    // mask = [1,0,...] with beta=1 must return exactly fhist[0].
+    let e = require_engine!();
+    let m = e.manifest().solver.window;
+    let n = e.manifest().model.latent_dim();
+    let mut rng = Rng::new(3);
+    let xh = rng.normal_vec(m * n, 1.0);
+    let fh = rng.normal_vec(m * n, 1.0);
+    let mut mask = vec![0.0f32; m];
+    mask[0] = 1.0;
+    let out = e
+        .execute(
+            "anderson_update",
+            1,
+            &[
+                HostTensor::f32(vec![1, m, n], xh.clone()).unwrap(),
+                HostTensor::f32(vec![1, m, n], fh.clone()).unwrap(),
+                HostTensor::f32(vec![m], mask).unwrap(),
+            ],
+        )
+        .unwrap();
+    let z = out[0].f32s().unwrap();
+    for (a, b) in z.iter().zip(&fh[0..n]) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn cell_step_residual_consistency() {
+    // The fused residual outputs must match norms recomputed on the host.
+    let e = require_engine!();
+    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let meta = e.manifest().model.clone();
+    let batch = 1;
+    let mut rng = Rng::new(9);
+    let z = HostTensor::f32(
+        meta.latent_shape(batch),
+        rng.normal_vec(meta.latent_dim(), 1.0),
+    )
+    .unwrap();
+    let xf = HostTensor::f32(
+        meta.latent_shape(batch),
+        rng.normal_vec(meta.latent_dim(), 1.0),
+    )
+    .unwrap();
+    let mut inputs = p.tensors.clone();
+    inputs.push(z.clone());
+    inputs.push(xf);
+    let out = e.execute("cell_step", batch, &inputs).unwrap();
+    let f = out[0].f32s().unwrap();
+    let zv = z.f32s().unwrap();
+    let want_num: f32 = f
+        .iter()
+        .zip(zv)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt();
+    let want_fn: f32 = f.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!((out[1].f32s().unwrap()[0] - want_num).abs() / want_num < 1e-3);
+    assert!((out[2].f32s().unwrap()[0] - want_fn).abs() / want_fn < 1e-3);
+}
+
+#[test]
+fn forward_solve_k_consistent_with_cell_steps() {
+    // K fused steps == K sequential cell_step calls (same final iterate).
+    let e = require_engine!();
+    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let meta = e.manifest().model.clone();
+    let k = e.manifest().solver.fused_steps;
+    let batch = 1;
+    let mut rng = Rng::new(17);
+    let xf = HostTensor::f32(
+        meta.latent_shape(batch),
+        rng.normal_vec(meta.latent_dim(), 0.5),
+    )
+    .unwrap();
+    // Sequential.
+    let mut z = HostTensor::zeros(meta.latent_shape(batch));
+    for _ in 0..k {
+        let mut inputs = p.tensors.clone();
+        inputs.push(z.clone());
+        inputs.push(xf.clone());
+        let out = e.execute("cell_step", batch, &inputs).unwrap();
+        z = out[0].clone();
+    }
+    // Fused: forward_solve_k runs k-1 loop iterations then one tracked
+    // step, i.e. k evaluations total, returning z_k.
+    let mut inputs = p.tensors.clone();
+    inputs.push(HostTensor::zeros(meta.latent_shape(batch)));
+    inputs.push(xf);
+    let fused = e.execute("forward_solve_k", batch, &inputs).unwrap();
+    let zf = fused[0].f32s().unwrap();
+    let zs = z.f32s().unwrap();
+    let maxerr = zf
+        .iter()
+        .zip(zs)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxerr < 1e-3, "fused vs sequential maxerr={maxerr}");
+}
+
+#[test]
+fn solvers_reach_tolerance_on_init_params() {
+    let e = require_engine!();
+    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let meta = e.manifest().model.clone();
+    let batch = 8;
+    // Encode a random image batch.
+    let mut rng = Rng::new(5);
+    let img = HostTensor::f32(
+        meta.image_shape(batch),
+        rng.normal_vec(batch * meta.image_dim(), 1.0),
+    )
+    .unwrap();
+    let mut enc_in = p.tensors.clone();
+    enc_in.push(img);
+    let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
+
+    for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+        let opts = SolveOptions {
+            tol: 1e-2,
+            max_iter: 80,
+            ..SolveOptions::from_manifest(e, kind)
+        };
+        let rep = solver::solve(e, &p.tensors, &xf, &opts).unwrap();
+        assert!(
+            rep.converged,
+            "{}: residual {:.2e} after {} iters",
+            kind.name(),
+            rep.final_residual(),
+            rep.iters()
+        );
+        assert_eq!(rep.z_star.shape, meta.latent_shape(batch));
+        // Residual trace is recorded and timestamps are monotone.
+        assert!(rep.steps.len() >= 2);
+        for w in rep.steps.windows(2) {
+            assert!(w[0].elapsed <= w[1].elapsed);
+        }
+    }
+}
+
+#[test]
+fn anderson_uses_fewer_fevals_than_forward() {
+    // The paper's core claim, measured on the real artifacts at init.
+    let e = require_engine!();
+    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let meta = e.manifest().model.clone();
+    let batch = 8;
+    let mut rng = Rng::new(23);
+    let img = HostTensor::f32(
+        meta.image_shape(batch),
+        rng.normal_vec(batch * meta.image_dim(), 1.0),
+    )
+    .unwrap();
+    let mut enc_in = p.tensors.clone();
+    enc_in.push(img);
+    let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
+
+    let solve = |kind| {
+        let opts = SolveOptions {
+            tol: 2e-3,
+            max_iter: 120,
+            fused_forward: false,
+            ..SolveOptions::from_manifest(e, kind)
+        };
+        solver::solve(e, &p.tensors, &xf, &opts).unwrap()
+    };
+    let fw = solve(SolverKind::Forward);
+    let an = solve(SolverKind::Anderson);
+    assert!(
+        an.best_residual() <= fw.best_residual() * 1.5,
+        "anderson best {:.2e} vs forward best {:.2e}",
+        an.best_residual(),
+        fw.best_residual()
+    );
+    // To the residual forward ends at, anderson should need no more evals.
+    let target = fw.final_residual() * 1.05;
+    let a_fevals = an
+        .steps
+        .iter()
+        .find(|s| s.rel_residual <= target)
+        .map(|s| s.fevals)
+        .unwrap_or(usize::MAX);
+    assert!(
+        a_fevals <= fw.fevals(),
+        "anderson {a_fevals} fevals vs forward {}",
+        fw.fevals()
+    );
+}

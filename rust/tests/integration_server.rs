@@ -1,0 +1,141 @@
+//! Serving-stack integration tests: router, dynamic batcher, TCP protocol.
+//! Skipped when artifacts are absent.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use deq_anderson::data;
+use deq_anderson::model::ParamSet;
+use deq_anderson::runtime::Engine;
+use deq_anderson::server::{tcp, Router, RouterConfig};
+use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::util::json::{self, Json};
+
+fn make_router(max_wait_ms: u64) -> Option<(Arc<Router>, usize)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts not built");
+        return None;
+    }
+    let engine = Arc::new(Engine::new(dir).expect("engine"));
+    let image_dim = engine.manifest().model.image_dim();
+    let params = Arc::new(ParamSet::load_init(engine.manifest()).unwrap());
+    let cfg = RouterConfig {
+        solver: SolveOptions::from_manifest(&engine, SolverKind::Anderson),
+        max_wait: Duration::from_millis(max_wait_ms),
+        queue_cap: 256,
+    };
+    Some((Arc::new(Router::start(engine, params, cfg).unwrap()), image_dim))
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some((router, dim)) = make_router(5) else { return };
+    let (data, _, _) = data::load_auto(8, 8, 1);
+    let resp = router.infer_blocking(data.image(0).to_vec()).unwrap();
+    assert!(resp.class < 10);
+    assert_eq!(resp.batch_size, 1);
+    assert!(resp.latency > Duration::ZERO);
+    assert_eq!(dim, data.image_dim());
+}
+
+#[test]
+fn concurrent_requests_get_batched() {
+    let Some((router, _)) = make_router(25) else { return };
+    let (data, _, _) = data::load_auto(16, 8, 2);
+    // Submit 8 requests quickly; with a 25ms window they should share
+    // batches rather than each going out alone.
+    let receivers: Vec<_> = (0..8)
+        .map(|i| router.submit(data.image(i).to_vec()).unwrap())
+        .collect();
+    let responses: Vec<_> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().expect("response"))
+        .collect();
+    assert_eq!(responses.len(), 8);
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch > 1, "no batching happened (all singletons)");
+    // All served, metrics recorded.
+    assert_eq!(
+        router
+            .metrics
+            .served
+            .load(std::sync::atomic::Ordering::Relaxed),
+        8
+    );
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    let Some((router, dim)) = make_router(1_000) else { return };
+    // Tiny queue: rebuild a router with cap 2 is not exposed; instead rely
+    // on the 1s wait: fill beyond queue_cap=256 would be slow, so instead
+    // just verify queue_depth grows while the batcher waits.
+    let img = vec![0.0f32; dim];
+    let _r1 = router.submit(img.clone()).unwrap();
+    let _r2 = router.submit(img).unwrap();
+    assert!(router.queue_depth() <= 2);
+}
+
+#[test]
+fn tcp_protocol_end_to_end() {
+    let Some((router, dim)) = make_router(5) else { return };
+    let addr = "127.0.0.1:17973";
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = tcp::serve_tcp(router, dim, addr);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    // ping
+    stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+
+    // malformed
+    line.clear();
+    stream.write_all(b"{nope}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+
+    // wrong image size
+    line.clear();
+    stream.write_all(b"{\"image\":[1,2,3]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+
+    // real request
+    let (data, _, _) = data::load_auto(4, 4, 3);
+    let img: Vec<String> =
+        data.image(0).iter().map(|v| format!("{v:.4}")).collect();
+    let req = format!("{{\"id\":7,\"image\":[{}]}}\n", img.join(","));
+    line.clear();
+    stream.write_all(req.as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("id").and_then(Json::as_i64), Some(7));
+    let class = v.get("class").and_then(Json::as_i64).expect("class");
+    assert!((0..10).contains(&class));
+
+    // stats
+    line.clear();
+    stream.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("served="));
+}
+
+#[test]
+fn router_shutdown_is_clean() {
+    let Some((router, _)) = make_router(5) else { return };
+    let router = Arc::try_unwrap(router).ok().expect("sole owner");
+    router.shutdown();
+}

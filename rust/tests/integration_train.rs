@@ -1,0 +1,149 @@
+//! End-to-end training + inference integration tests (real artifacts).
+//! Skipped when artifacts are absent.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use deq_anderson::data;
+use deq_anderson::infer;
+use deq_anderson::model::ParamSet;
+use deq_anderson::runtime::Engine;
+use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::train::{default_config, Backward, Trainer};
+
+fn engine() -> Option<&'static Engine> {
+    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            if dir.join("manifest.json").exists() {
+                Some(Engine::new(dir).expect("engine"))
+            } else {
+                eprintln!("[skip] artifacts not built");
+                None
+            }
+        })
+        .as_ref()
+}
+
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn one_epoch_reduces_loss_and_updates_params() {
+    let e = require_engine!();
+    let (train, test, _) = data::load_auto(128, 32, 1);
+    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let mut cfg = default_config(e, SolverKind::Anderson, 2);
+    cfg.eval_every = 0;
+    let rep = Trainer::new(e, cfg)
+        .unwrap()
+        .train(&init, &train, &test)
+        .unwrap();
+    assert_eq!(rep.epochs.len(), 2);
+    assert!(!rep.diverged);
+    assert!(
+        rep.epochs[1].train_loss < rep.epochs[0].train_loss,
+        "loss did not decrease: {:?}",
+        rep.epochs.iter().map(|e| e.train_loss).collect::<Vec<_>>()
+    );
+    // Params actually moved.
+    let d: f32 = rep
+        .params
+        .to_flat()
+        .iter()
+        .zip(init.to_flat())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 1e-4, "params unchanged");
+    assert!(rep.params.all_finite());
+}
+
+#[test]
+fn neumann_backward_also_trains() {
+    let e = require_engine!();
+    let (train, test, _) = data::load_auto(64, 32, 2);
+    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let mut cfg = default_config(e, SolverKind::Anderson, 2);
+    cfg.backward = Backward::Neumann;
+    cfg.eval_every = 0;
+    let rep = Trainer::new(e, cfg)
+        .unwrap()
+        .train(&init, &train, &test)
+        .unwrap();
+    assert!(rep.epochs[1].train_loss < rep.epochs[0].train_loss + 0.05);
+    assert!(rep.params.all_finite());
+}
+
+#[test]
+fn explicit_baseline_trains() {
+    let e = require_engine!();
+    let (train, test, _) = data::load_auto(64, 32, 3);
+    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let mut cfg = default_config(e, SolverKind::Anderson, 2);
+    cfg.eval_every = 2;
+    let rep = Trainer::new(e, cfg)
+        .unwrap()
+        .train_explicit(&init, &train, &test)
+        .unwrap();
+    assert_eq!(rep.epochs.len(), 2);
+    assert!(rep.epochs[1].train_loss < rep.epochs[0].train_loss + 0.05);
+    assert!(rep.epochs[1].test_acc.is_some());
+}
+
+#[test]
+fn inference_pads_to_buckets() {
+    let e = require_engine!();
+    let params = ParamSet::load_init(e.manifest()).unwrap();
+    let (data, _, _) = data::load_auto(40, 8, 4);
+    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    // Sizes that are NOT compiled buckets must still work via padding.
+    for n in [1usize, 3, 5, 8, 17, 32] {
+        let idx: Vec<usize> = (0..n).collect();
+        let (imgs, _) = data.gather(&idx);
+        let r = infer::infer(e, &params, &imgs, n, &opts).unwrap();
+        assert_eq!(r.predictions.len(), n);
+        assert_eq!(r.logits.len(), n);
+        assert!(r.logits.iter().all(|row| row.len() == 10));
+    }
+    // Oversized request is rejected.
+    let idx: Vec<usize> = (0..33).collect();
+    let (imgs, _) = data.gather(&idx);
+    assert!(infer::infer(e, &params, &imgs, 33, &opts).is_err());
+}
+
+#[test]
+fn padding_does_not_change_predictions() {
+    // The same sample must classify identically at batch 1 and inside a
+    // padded bucket (guards against cross-sample leakage; GroupNorm is
+    // per-sample so this must hold exactly up to fp noise).
+    let e = require_engine!();
+    let params = ParamSet::load_init(e.manifest()).unwrap();
+    let (data, _, _) = data::load_auto(8, 8, 5);
+    let opts = SolveOptions::from_manifest(e, SolverKind::Forward);
+    let (img1, _) = data.gather(&[0]);
+    let r1 = infer::infer(e, &params, &img1, 1, &opts).unwrap();
+    let (img3, _) = data.gather(&[0, 1, 2]);
+    let r3 = infer::infer(e, &params, &img3, 3, &opts).unwrap();
+    for (a, b) in r1.logits[0].iter().zip(&r3.logits[0]) {
+        assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn evaluate_runs_on_test_set() {
+    let e = require_engine!();
+    let params = ParamSet::load_init(e.manifest()).unwrap();
+    let (_, test, _) = data::load_auto(32, 64, 6);
+    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    let acc = infer::evaluate(e, &params, &test, 32, &opts).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    let acc_e = infer::evaluate_explicit(e, &params, &test, 32).unwrap();
+    assert!((0.0..=1.0).contains(&acc_e));
+}

@@ -1,0 +1,204 @@
+//! Property-based tests of the solver invariants (DESIGN.md §4).
+//!
+//! No `proptest` in the offline crate set, so this is a seeded-case
+//! harness over the deterministic PRNG: each property runs across a sweep
+//! of random seeds/shapes and shrinks failures by reporting the seed.
+
+use deq_anderson::native::{
+    self, maps::AffineMap, maps::TanhMap, AndersonOpts, AndersonState,
+    FixedPointMap,
+};
+use deq_anderson::solver::crossover;
+use deq_anderson::util::rng::Rng;
+
+/// Run `prop` over `cases` seeds; panic with the failing seed.
+fn for_seeds(cases: u64, prop: impl Fn(u64)) {
+    for seed in 0..cases {
+        // Catch nothing — a panic inside already names the seed via the
+        // assert messages below.
+        prop(seed);
+    }
+}
+
+#[test]
+fn prop_alpha_sums_to_one_any_window_fill() {
+    for_seeds(30, |seed| {
+        let mut rng = Rng::new(seed);
+        let m = 1 + (seed as usize % 8);
+        let n = 4 + (seed as usize % 60);
+        let mut st = AndersonState::new(m, n, 1.0, 1e-5);
+        let pushes = 1 + (seed as usize % (2 * m));
+        for _ in 0..pushes {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            st.push(&z, &f);
+        }
+        let (z, alpha) = st.mix().unwrap();
+        let s: f32 = alpha.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "seed={seed} m={m} n={n} sum={s}");
+        assert!(z.iter().all(|v| v.is_finite()), "seed={seed}: non-finite z");
+        assert_eq!(alpha.len(), st.valid());
+    });
+}
+
+#[test]
+fn prop_anderson_never_slower_on_affine_maps() {
+    // On smooth affine contractions Anderson (m>=2, small λ) must need at
+    // most as many iterations as forward to the same tolerance.
+    for_seeds(12, |seed| {
+        let n = 10 + (seed as usize % 40);
+        let rho = 0.7 + 0.02 * (seed % 10) as f32; // 0.7 .. 0.88
+        let map = AffineMap::random(n, rho, seed + 100);
+        let z0 = vec![0.0; n];
+        let opts = AndersonOpts {
+            window: 4,
+            lam: 1e-8,
+            tol: 1e-4,
+            max_iter: 800,
+            ..Default::default()
+        };
+        let fw = native::solve_forward(&map, &z0, opts);
+        let an = native::solve_anderson(&map, &z0, opts).unwrap();
+        assert!(an.converged, "seed={seed}: anderson failed to converge");
+        assert!(
+            an.iters() <= fw.iters(),
+            "seed={seed} rho={rho}: anderson {} > forward {}",
+            an.iters(),
+            fw.iters()
+        );
+    });
+}
+
+#[test]
+fn prop_converged_point_is_fixed_point() {
+    for_seeds(10, |seed| {
+        let n = 8 + (seed as usize % 24);
+        let map = TanhMap::random(n, 0.8, seed + 7);
+        let opts = AndersonOpts {
+            tol: 1e-5,
+            max_iter: 500,
+            ..Default::default()
+        };
+        let tr = native::solve_anderson(&map, &vec![0.0; n], opts).unwrap();
+        assert!(tr.converged, "seed={seed}");
+        let mut out = vec![0.0; n];
+        map.apply(&tr.z, &mut out);
+        let rel = native::rel_residual(&out, &tr.z, opts.lam);
+        assert!(rel < 10.0 * opts.tol, "seed={seed}: residual {rel}");
+    });
+}
+
+#[test]
+fn prop_beta_zero_keeps_iterate_in_x_span() {
+    // β=0 mixes only past iterates: starting from identical X rows, the
+    // mixed iterate equals that row regardless of F.
+    for_seeds(20, |seed| {
+        let mut rng = Rng::new(seed);
+        let (m, n) = (3usize, 12usize);
+        let mut st = AndersonState::new(m, n, 0.0, 1e-6);
+        let x = rng.normal_vec(n, 1.0);
+        for _ in 0..m {
+            let f = rng.normal_vec(n, 1.0);
+            st.push(&x, &f);
+        }
+        let (z, _) = st.mix().unwrap();
+        for (a, b) in z.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-3, "seed={seed}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_residual_scale_invariance() {
+    // rel_residual(c·f, c·z) is invariant for λ→0 (homogeneity check).
+    for_seeds(20, |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 16;
+        let f = rng.normal_vec(n, 1.0);
+        let z = rng.normal_vec(n, 1.0);
+        let r1 = native::rel_residual(&f, &z, 0.0);
+        let c = 7.5f32;
+        let fc: Vec<f32> = f.iter().map(|v| c * v).collect();
+        let zc: Vec<f32> = z.iter().map(|v| c * v).collect();
+        let r2 = native::rel_residual(&fc, &zc, 0.0);
+        assert!((r1 - r2).abs() < 1e-4, "seed={seed}: {r1} vs {r2}");
+    });
+}
+
+#[test]
+fn prop_solver_determinism() {
+    // Identical seeds → bitwise identical traces.
+    for_seeds(5, |seed| {
+        let map = AffineMap::random(20, 0.9, seed);
+        let opts = AndersonOpts { tol: 1e-5, max_iter: 200, ..Default::default() };
+        let a = native::solve_anderson(&map, &vec![0.0; 20], opts).unwrap();
+        let b = native::solve_anderson(&map, &vec![0.0; 20], opts).unwrap();
+        assert_eq!(a.iters(), b.iters());
+        assert_eq!(a.z, b.z);
+    });
+}
+
+#[test]
+fn prop_crossover_consistency() {
+    // For any pair of solve traces, time_to_target is monotone in target
+    // and the mixing penalty is positive.
+    for_seeds(8, |seed| {
+        let n = 24;
+        let map = AffineMap::random(n, 0.9, seed + 50);
+        let opts = AndersonOpts {
+            tol: 1e-5,
+            lam: 1e-8,
+            max_iter: 500,
+            ..Default::default()
+        };
+        let _fw = native::solve_forward(&map, &vec![0.0; n], opts);
+        let an = native::solve_anderson(&map, &vec![0.0; n], opts).unwrap();
+        let trace: Vec<crossover::TracePoint> = an
+            .records
+            .iter()
+            .enumerate()
+            .map(|(k, r)| crossover::TracePoint {
+                t: std::time::Duration::from_micros(k as u64 + 1),
+                residual: r.rel_residual,
+            })
+            .collect();
+        let mut last = None;
+        for target in [1e-1f32, 1e-2, 1e-3, 1e-4] {
+            let t = crossover::time_to_target(&trace, target);
+            if let (Some(prev), Some(cur)) = (last, t) {
+                assert!(cur >= prev, "seed={seed}: non-monotone time-to-target");
+            }
+            if t.is_some() {
+                last = t;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_window_monotonicity_on_hard_affine() {
+    // Bigger windows shouldn't catastrophically hurt on smooth problems:
+    // m=5 converges within 2x the iterations of the best of {1,2,5}.
+    for_seeds(6, |seed| {
+        let n = 30;
+        let map = AffineMap::random(n, 0.95, seed + 11);
+        let iters = |m: usize| {
+            let o = AndersonOpts {
+                window: m,
+                lam: 1e-8,
+                tol: 1e-4,
+                max_iter: 1500,
+                ..Default::default()
+            };
+            native::solve_anderson(&map, &vec![0.0; n], o)
+                .unwrap()
+                .iters()
+        };
+        let (i1, i2, i5) = (iters(1), iters(2), iters(5));
+        let best = i1.min(i2).min(i5);
+        assert!(
+            i5 <= 2 * best,
+            "seed={seed}: m=5 took {i5}, best {best} (m1={i1} m2={i2})"
+        );
+    });
+}
