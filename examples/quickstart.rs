@@ -1,24 +1,25 @@
-//! Quickstart: load the AOT artifacts, solve one equilibrium with both
+//! Quickstart: pick an execution backend, solve one equilibrium with both
 //! solvers, and classify a batch — the 60-second tour of the public API.
 //!
-//! Run after `make artifacts`:
+//! Runs hermetically on the pure-Rust `NativeEngine`; with the `pjrt`
+//! feature and `make artifacts`, the same code drives the AOT artifacts:
 //!     cargo run --release --example quickstart
 
 use anyhow::Result;
 
 use deq_anderson::data;
 use deq_anderson::infer;
-use deq_anderson::model::ParamSet;
-use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
 use deq_anderson::solver::{self, SolveOptions, SolverKind};
 
 fn main() -> Result<()> {
-    // 1. The engine loads `artifacts/manifest.json` and lazily compiles
-    //    the HLO-text artifacts on the PJRT CPU client.
-    let engine = Engine::new("artifacts")?;
+    // 1. Backend selection: PJRT over `artifacts/manifest.json` when
+    //    available, the hermetic pure-Rust NativeEngine otherwise.
+    let engine = backend_from_dir("artifacts")?;
     let m = engine.manifest();
     println!(
-        "model: preset={} params={} latent={}x{}x{} window={}",
+        "backend: {} | model: preset={} params={} latent={}x{}x{} window={}",
+        engine.platform(),
         m.model.preset,
         m.model.param_count,
         m.model.latent_hw,
@@ -27,8 +28,8 @@ fn main() -> Result<()> {
         m.solver.window
     );
 
-    // 2. Parameters: the deterministic init checkpoint written by aot.py.
-    let params = ParamSet::load_init(m)?;
+    // 2. Parameters: the backend's deterministic init checkpoint.
+    let params = engine.init_params()?;
 
     // 3. Data: synthetic CIFAR10-like images (drop-in real CIFAR-10 if
     //    data/cifar-10-batches-bin exists).
@@ -46,8 +47,8 @@ fn main() -> Result<()> {
     let x_feat = engine.execute("encode", batch, &enc_in)?.remove(0);
 
     for kind in [SolverKind::Forward, SolverKind::Anderson] {
-        let opts = SolveOptions::from_manifest(&engine, kind);
-        let rep = solver::solve(&engine, &params.tensors, &x_feat, &opts)?;
+        let opts = SolveOptions::from_manifest(engine.as_ref(), kind);
+        let rep = solver::solve(engine.as_ref(), &params.tensors, &x_feat, &opts)?;
         println!(
             "{:<9} iters={:<3} fevals={:<3} residual={:.2e} time={:?} converged={}",
             kind.name(),
@@ -60,8 +61,8 @@ fn main() -> Result<()> {
     }
 
     // 5. One-call inference (encode → solve → classify, bucket-padded).
-    let opts = SolveOptions::from_manifest(&engine, SolverKind::Anderson);
-    let result = infer::infer(&engine, &params, &imgs, batch, &opts)?;
+    let opts = SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson);
+    let result = infer::infer(engine.as_ref(), &params, &imgs, batch, &opts)?;
     println!("predictions: {:?}", result.predictions);
     println!("labels:      {labels:?}");
     println!("(untrained params — accuracy is chance; see examples/train_cifar.rs)");

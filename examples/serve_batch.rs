@@ -13,8 +13,7 @@ use anyhow::Result;
 
 use deq_anderson::data;
 use deq_anderson::metrics::Stats;
-use deq_anderson::model::ParamSet;
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::{backend_from_dir, Backend};
 use deq_anderson::server::{Router, RouterConfig};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::util::cli::Args;
@@ -26,10 +25,10 @@ fn main() -> Result<()> {
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
         .expect("bad --solver");
 
-    let engine = Arc::new(Engine::new(args.str_or("artifacts", "artifacts"))?);
-    let params = Arc::new(ParamSet::load_init(engine.manifest())?);
+    let engine = backend_from_dir(args.str_or("artifacts", "artifacts"))?;
+    let params = Arc::new(engine.init_params()?);
     let cfg = RouterConfig {
-        solver: SolveOptions::from_manifest(&engine, kind),
+        solver: SolveOptions::from_manifest(engine.as_ref(), kind),
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: 4096,
     };

@@ -12,8 +12,7 @@ use anyhow::Result;
 
 use deq_anderson::data;
 use deq_anderson::metrics::{fmt_duration, Csv};
-use deq_anderson::model::ParamSet;
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::{backend_from_dir, Backend};
 use deq_anderson::solver::SolverKind;
 use deq_anderson::train::{default_config, Trainer};
 use deq_anderson::util::cli::Args;
@@ -25,9 +24,9 @@ fn main() -> Result<()> {
     let test_size = args.usize_or("test-size", 160);
     let seed = args.u64_or("seed", 0);
 
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let engine = backend_from_dir(args.str_or("artifacts", "artifacts"))?;
     let (train, test, ds) = data::load_auto(train_size, test_size, seed);
-    let init = ParamSet::load_init(engine.manifest())?;
+    let init = engine.init_params()?;
     println!(
         "e2e training: dataset={ds} train={} test={} epochs={epochs} params={}",
         train.len(),
@@ -42,10 +41,10 @@ fn main() -> Result<()> {
     let mut summary = Vec::new();
     for kind in [SolverKind::Anderson, SolverKind::Forward] {
         println!("\n--- solver: {} ---", kind.name());
-        let mut cfg = default_config(&engine, kind, epochs);
+        let mut cfg = default_config(engine.as_ref(), kind, epochs);
         cfg.seed = seed;
         cfg.verbose = true;
-        let trainer = Trainer::new(&engine, cfg)?;
+        let trainer = Trainer::new(engine.as_ref(), cfg)?;
         let rep = trainer.train(&init, &train, &test)?;
         for e in &rep.epochs {
             csv.row(&[

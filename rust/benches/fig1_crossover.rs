@@ -1,16 +1,14 @@
 //! Bench wrapper regenerating paper Fig. 1 (crossover + mixing penalty).
 use deq_anderson::experiments::{self, ExpOptions};
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::util::bench;
 
 fn main() {
     bench::header("fig1 — crossover and mixing penalty");
-    let Ok(engine) = Engine::new("artifacts") else {
-        eprintln!("[skip] run `make artifacts` first");
-        return;
-    };
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
     let t0 = std::time::Instant::now();
-    experiments::run("fig1", Some(&engine), &ExpOptions::smoke())
+    experiments::run("fig1", Some(engine.as_ref()), &ExpOptions::smoke())
         .expect("fig1");
     println!("fig1 regenerated in {:.1?}", t0.elapsed());
 }

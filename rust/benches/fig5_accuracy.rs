@@ -1,15 +1,13 @@
 //! Bench wrapper regenerating paper Fig. 5 (accuracy curves) at smoke scale.
 use deq_anderson::experiments::{self, ExpOptions};
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::util::bench;
 
 fn main() {
     bench::header("fig5 — train/test accuracy curves");
-    let Ok(engine) = Engine::new("artifacts") else {
-        eprintln!("[skip] run `make artifacts` first");
-        return;
-    };
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
     let mut opts = ExpOptions::smoke();
     opts.epochs = 3;
-    experiments::run("fig5", Some(&engine), &opts).expect("fig5");
+    experiments::run("fig5", Some(engine.as_ref()), &opts).expect("fig5");
 }

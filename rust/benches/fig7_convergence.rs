@@ -1,15 +1,13 @@
 //! Bench wrapper regenerating paper Fig. 7 (time to stable convergence).
 use deq_anderson::experiments::{self, ExpOptions};
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::util::bench;
 
 fn main() {
     bench::header("fig7 — time to stable convergence");
-    let Ok(engine) = Engine::new("artifacts") else {
-        eprintln!("[skip] run `make artifacts` first");
-        return;
-    };
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
     let mut opts = ExpOptions::smoke();
     opts.epochs = 3;
-    experiments::run("fig7", Some(&engine), &opts).expect("fig7");
+    experiments::run("fig7", Some(engine.as_ref()), &opts).expect("fig7");
 }

@@ -11,9 +11,8 @@
 
 use std::time::Duration;
 
-use deq_anderson::model::ParamSet;
 use deq_anderson::native::AndersonState;
-use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
 use deq_anderson::solver::{self, anderson::History, SolveOptions, SolverKind};
 use deq_anderson::util::bench::{bench, header};
 use deq_anderson::util::rng::Rng;
@@ -59,16 +58,14 @@ fn main() {
         println!("{}", r.report());
     }
 
-    let Ok(engine) = Engine::new("artifacts") else {
-        eprintln!("[skip] PJRT benches need `make artifacts`");
-        return;
-    };
-    let params = ParamSet::load_init(engine.manifest()).unwrap();
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
+    let params = engine.init_params().unwrap();
     let meta = engine.manifest().model.clone();
     let m = engine.manifest().solver.window;
     let n = meta.latent_dim();
 
-    header("micro — PJRT artifact dispatch");
+    header("micro — backend entry dispatch");
     for batch in [1usize, 8, 32] {
         let z = HostTensor::zeros(meta.latent_shape(batch));
         let xf = HostTensor::f32(
@@ -150,10 +147,10 @@ fn main() {
             fused_forward: fused,
             tol: 1e-2,
             max_iter: 60,
-            ..SolveOptions::from_manifest(&engine, kind)
+            ..SolveOptions::from_manifest(engine.as_ref(), kind)
         };
         let r = bench(name, 1, 20, Duration::from_secs(3), || {
-            let _ = solver::solve(&engine, &params.tensors, &xf, &opts).unwrap();
+            let _ = solver::solve(engine.as_ref(), &params.tensors, &xf, &opts).unwrap();
         });
         println!("{}", r.report());
     }

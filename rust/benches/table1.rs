@@ -1,17 +1,15 @@
 //! Bench wrapper regenerating paper Table 1 at smoke scale.
 //! Full scale: `deq-anderson experiment table1`.
 use deq_anderson::experiments::{self, ExpOptions};
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::util::bench;
 
 fn main() {
     bench::header("table1 — training/inference improvements");
-    let Ok(engine) = Engine::new("artifacts") else {
-        eprintln!("[skip] run `make artifacts` first");
-        return;
-    };
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
     let t0 = std::time::Instant::now();
-    experiments::run("table1", Some(&engine), &ExpOptions::smoke())
+    experiments::run("table1", Some(engine.as_ref()), &ExpOptions::smoke())
         .expect("table1");
     println!("table1 (smoke) regenerated in {:.1?}", t0.elapsed());
 }

@@ -14,20 +14,19 @@ use anyhow::Result;
 use crate::data;
 use crate::experiments::ExpOptions;
 use crate::metrics::Csv;
-use crate::model::ParamSet;
 use crate::native::{
     self, maps::AffineMap, AndersonOpts, StochasticOpts,
 };
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::{self, SolveOptions, SolverKind};
 use crate::train::{default_config, Backward, Trainer};
 
-pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let mut csv = Csv::new(&["study", "setting", "metric", "value"]);
 
     // ---- A. window ablation on the real artifacts -------------------
     println!("[ablation] A: Anderson window (PJRT artifacts, masked)");
-    let params = ParamSet::load_init(engine.manifest())?;
+    let params = engine.init_params()?;
     let meta = engine.manifest().model.clone();
     let batch = *engine
         .manifest()
@@ -144,7 +143,7 @@ pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
         opts.test_size.min(96),
         opts.seed,
     );
-    let init = ParamSet::load_init(engine.manifest())?;
+    let init = engine.init_params()?;
     for (label, bw) in [("jfb", Backward::Jfb), ("neumann", Backward::Neumann)] {
         let mut cfg = default_config(engine, SolverKind::Anderson, opts.epochs.min(3));
         cfg.backward = bw;

@@ -12,16 +12,15 @@ use anyhow::Result;
 use crate::data;
 use crate::experiments::ExpOptions;
 use crate::metrics::Csv;
-use crate::model::ParamSet;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::simulate::{simulate_timestamps, Workload, V100, XEON};
 use crate::solver::{self, crossover, SolveOptions, SolverKind};
 
-pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let manifest = engine.manifest();
     let batch = 32usize;
     let (train_data, _, ds) = data::load_auto(batch.max(64), 8, opts.seed);
-    let params = ParamSet::load_init(manifest)?;
+    let params = engine.init_params()?;
     println!("[fig1] dataset={ds} batch={batch} solving to tol=1e-4 ...");
 
     // Encode one batch.

@@ -11,15 +11,14 @@ use anyhow::Result;
 use crate::data;
 use crate::experiments::ExpOptions;
 use crate::metrics::Csv;
-use crate::model::ParamSet;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::solver::SolverKind;
 use crate::train::{default_config, Trainer};
 
-pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let (train_data, test_data, ds) =
         data::load_auto(opts.train_size, opts.test_size, opts.seed);
-    let init = ParamSet::load_init(engine.manifest())?;
+    let init = engine.init_params()?;
     println!(
         "[fig7] dataset={ds} train={} epochs={}",
         train_data.len(),

@@ -25,7 +25,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// Shared experiment options.
 #[derive(Debug, Clone)]
@@ -68,7 +68,7 @@ impl ExpOptions {
 pub const ALL: &[&str] = &["table1", "fig1", "fig2", "fig5", "fig6", "fig7", "ablation"];
 
 /// Dispatch by id. `engine` may be None only for fig2/fig6 (native-only).
-pub fn run(id: &str, engine: Option<&Engine>, opts: &ExpOptions) -> Result<()> {
+pub fn run(id: &str, engine: Option<&dyn Backend>, opts: &ExpOptions) -> Result<()> {
     match id {
         "table1" => table1::run(need(engine)?, opts),
         "fig1" => fig1::run(need(engine)?, opts),
@@ -81,8 +81,8 @@ pub fn run(id: &str, engine: Option<&Engine>, opts: &ExpOptions) -> Result<()> {
     }
 }
 
-fn need<'a>(engine: Option<&'a Engine>) -> Result<&'a Engine> {
+fn need<'a>(engine: Option<&'a dyn Backend>) -> Result<&'a dyn Backend> {
     engine.ok_or_else(|| {
-        anyhow::anyhow!("this experiment needs artifacts (run `make artifacts`)")
+        anyhow::anyhow!("this experiment needs an execution backend")
     })
 }

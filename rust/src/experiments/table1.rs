@@ -18,13 +18,12 @@ use crate::data;
 use crate::experiments::ExpOptions;
 use crate::infer;
 use crate::metrics::{fmt_duration, fmt_pct, Csv};
-use crate::model::ParamSet;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::simulate::{Workload, V100, XEON};
 use crate::solver::{SolveOptions, SolverKind};
 use crate::train::{default_config, Trainer};
 
-pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let manifest = engine.manifest();
     let (train_data, test_data, ds_name) =
         data::load_auto(opts.train_size, opts.test_size, opts.seed);
@@ -36,7 +35,7 @@ pub fn run(engine: &Engine, opts: &ExpOptions) -> Result<()> {
         manifest.model.param_count
     );
 
-    let init = ParamSet::load_init(manifest)?;
+    let init = engine.init_params()?;
 
     // --- Standard DEQ: forward iteration ---
     let mut cfg_f = default_config(engine, SolverKind::Forward, opts.epochs);

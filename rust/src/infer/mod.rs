@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::model::ParamSet;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::{self, SolveOptions};
 
 /// Result of one inference call.
@@ -39,7 +39,7 @@ pub fn cross_entropy(row: &[f32], label: usize) -> f32 {
 /// Run inference on `images` (flat NHWC, `count` samples).  Pads up to the
 /// smallest compiled batch bucket and slices the results back.
 pub fn infer(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &ParamSet,
     images: &[f32],
     count: usize,
@@ -85,7 +85,7 @@ pub fn infer(
 
 /// Dataset accuracy with the DEQ path.
 pub fn evaluate(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &ParamSet,
     data: &Dataset,
     batch: usize,
@@ -110,7 +110,7 @@ pub fn evaluate(
 
 /// Dataset accuracy with the explicit baseline network.
 pub fn evaluate_explicit(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &ParamSet,
     data: &Dataset,
     batch: usize,

@@ -12,8 +12,34 @@
 //!   drivers, training loop, inference server, device/energy simulators
 //!   and the experiment harness reproducing every table and figure.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the
-//! model once to HLO text which [`runtime::Engine`] loads via PJRT.
+//! ## Execution backends
+//!
+//! The coordinator's policy layer (when to evaluate, when to mix, when to
+//! stop) is substrate-independent: everything above `runtime/` speaks to
+//! compute through the [`runtime::Backend`] trait.  Two engines implement
+//! it:
+//!
+//! | backend                     | feature | substrate                       |
+//! |-----------------------------|---------|---------------------------------|
+//! | [`runtime::NativeEngine`]   | always  | pure Rust (`native/` substrate) |
+//! | `runtime::Engine` (PJRT)    | `pjrt`  | AOT HLO artifacts via XLA       |
+//!
+//! The default build is **hermetic**: no XLA install, no `make artifacts`
+//! — `cargo test` exercises solvers, trainer, server and experiments
+//! against the native twin, and parity tests pin its `anderson_update` to
+//! the reference math.  With `--features pjrt` (and real `xla` bindings
+//! patched over the in-tree API stub in `vendor/xla`), the same
+//! coordinator drives the compiled artifacts: Python never runs on the
+//! request path; `make artifacts` lowers the model once to HLO text which
+//! the PJRT engine loads.
+//!
+//! Backend selection at runtime: [`runtime::backend_from_dir`] (binaries
+//! expose it as `--backend auto|native|pjrt`).
+// The crate is dense-numeric-kernel heavy (native/, runtime/native_engine)
+// and its style throughout is explicit (row, col) indexing; the iterator
+// forms this lint suggests obscure that math, so it is allowed crate-wide.
+// Other lints stay at default severity (CI runs clippy -D warnings).
+#![allow(clippy::needless_range_loop)]
 
 pub mod data;
 pub mod experiments;

@@ -7,10 +7,12 @@
 //!   experiment <id>    regenerate a paper table/figure (table1 fig1 fig2
 //!                      fig5 fig6 fig7, or `all`)
 //!   sweep              native Anderson hyperparameter sweep (window/beta)
-//!   artifacts-check    validate artifacts + run a numeric cross-check
+//!   artifacts-check    validate the selected backend + numeric cross-check
 //!
-//! Common flags: --artifacts DIR (default `artifacts`), --out DIR
-//! (default `results`), --seed N.
+//! Common flags: --artifacts DIR (default `artifacts`), --backend
+//! auto|native|pjrt (default `auto`: PJRT over artifacts when available,
+//! the hermetic pure-Rust NativeEngine otherwise), --out DIR (default
+//! `results`), --seed N.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -24,7 +26,7 @@ use deq_anderson::infer;
 use deq_anderson::metrics::fmt_duration;
 use deq_anderson::model::ParamSet;
 use deq_anderson::native::{self, maps::DeqLikeMap, AndersonOpts};
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::{select_backend, Backend};
 use deq_anderson::server::{tcp, Router, RouterConfig};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::train::{default_config, Backward, Trainer};
@@ -43,13 +45,18 @@ commands:
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
   artifacts-check
-common flags: --artifacts DIR  --out DIR  --seed N  --quiet
+common flags: --artifacts DIR  --backend auto|native|pjrt  --out DIR
+              --seed N  --quiet
 ";
 
-fn engine_from(args: &Args) -> Result<Engine> {
+/// Build the execution backend selected by `--backend` (default `auto`:
+/// PJRT over `--artifacts` when available, the hermetic native twin
+/// otherwise).
+fn backend_from(args: &Args) -> Result<Arc<dyn Backend>> {
     let dir = args.str_or("artifacts", "artifacts");
-    Engine::new(PathBuf::from(&dir))
-        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))
+    let choice = args.str_or("backend", "auto");
+    select_backend(&choice, std::path::Path::new(&dir))
+        .with_context(|| format!("creating '{choice}' backend over '{dir}'"))
 }
 
 fn main() -> Result<()> {
@@ -71,7 +78,7 @@ fn main() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    let engine = backend_from(args)?;
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
         .context("bad --solver")?;
     let epochs = args.usize_or("epochs", 5);
@@ -91,17 +98,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed,
     );
     println!(
-        "training DEQ: solver={} backward={:?} dataset={ds} train={} test={} \
-         epochs={epochs} params={}",
+        "training DEQ: solver={} backward={:?} backend={} dataset={ds} \
+         train={} test={} epochs={epochs} params={}",
         kind.name(),
         cfg.backward,
+        engine.platform(),
         train_data.len(),
         test_data.len(),
         engine.manifest().model.param_count
     );
 
-    let init = ParamSet::load_init(engine.manifest())?;
-    let trainer = Trainer::new(&engine, cfg)?;
+    let init = engine.init_params()?;
+    let trainer = Trainer::new(engine.as_ref(), cfg)?;
     let report = if args.has("explicit") {
         trainer.train_explicit(&init, &train_data, &test_data)?
     } else {
@@ -126,19 +134,19 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    let engine = backend_from(args)?;
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
         .context("bad --solver")?;
     let n = args.usize_or("n", 8);
     let params = match args.get("checkpoint") {
         Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
-        None => ParamSet::load_init(engine.manifest())?,
+        None => engine.init_params()?,
     };
     let (data, _, ds) = data::load_auto(n.max(32), 8, args.u64_or("seed", 0));
     let idx: Vec<usize> = (0..n).collect();
     let (imgs, labels) = data.gather(&idx);
-    let opts = SolveOptions::from_manifest(&engine, kind);
-    let r = infer::infer(&engine, &params, &imgs, n, &opts)?;
+    let opts = SolveOptions::from_manifest(engine.as_ref(), kind);
+    let r = infer::infer(engine.as_ref(), &params, &imgs, n, &opts)?;
     println!(
         "inference: dataset={ds} n={n} solver={} iters={} residual={:.2e} latency={}",
         kind.name(),
@@ -159,15 +167,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = Arc::new(engine_from(args)?);
+    let engine = backend_from(args)?;
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
         .context("bad --solver")?;
     let params = Arc::new(match args.get("checkpoint") {
         Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
-        None => ParamSet::load_init(engine.manifest())?,
+        None => engine.init_params()?,
     });
     let cfg = RouterConfig {
-        solver: SolveOptions::from_manifest(&engine, kind),
+        solver: SolveOptions::from_manifest(engine.as_ref(), kind),
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: args.usize_or("queue-cap", 1024),
     };
@@ -200,21 +208,21 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0),
         verbose: !args.has("quiet"),
     };
-    // fig2 / fig6 run without artifacts; the rest need the engine.
+    // fig2 / fig6 are native-only analyses; the rest need a backend.
     let needs_engine = |id: &str| !matches!(id, "fig2" | "fig6");
     let ids: Vec<&str> = if id == "all" {
         experiments::ALL.to_vec()
     } else {
         vec![id]
     };
-    let engine = if ids.iter().any(|i| needs_engine(i)) {
-        Some(engine_from(args)?)
+    let engine: Option<Arc<dyn Backend>> = if ids.iter().any(|i| needs_engine(i)) {
+        Some(backend_from(args)?)
     } else {
         None
     };
     for id in ids {
         println!("\n================ experiment {id} ================");
-        experiments::run(id, engine.as_ref(), &opts)?;
+        experiments::run(id, engine.as_deref(), &opts)?;
     }
     Ok(())
 }
@@ -273,7 +281,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_artifacts_check(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    let engine = backend_from(args)?;
     let m = engine.manifest().clone();
     println!(
         "manifest: preset={} params={} entries={} pallas={} platform={}",

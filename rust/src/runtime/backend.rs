@@ -1,0 +1,256 @@
+//! The execution-backend abstraction: the engine contract the coordinator
+//! actually uses.
+//!
+//! Everything above the runtime layer (solvers, trainer, inference,
+//! serving, experiments) speaks to compute through [`Backend`]:
+//! `execute(entry, batch, inputs)` over [`HostTensor`]s, plus the manifest
+//! that names every entry point's signature.  Two implementations ship:
+//!
+//!   * [`crate::runtime::NativeEngine`] — pure Rust, hermetic, serves every
+//!     entry point from the `native/` substrate; the default backend and
+//!     the one CI tests against.
+//!   * [`crate::runtime::Engine`] (feature `pjrt`) — loads and executes the
+//!     AOT HLO artifacts through PJRT.
+//!
+//! Both share the manifest-driven input validation and the per-entry
+//! execution statistics defined here, so a solver trace or a serving
+//! benchmark reads identically regardless of substrate.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::model::ParamSet;
+use crate::runtime::manifest::{EntrySpec, Manifest};
+use crate::runtime::native_engine::NativeEngine;
+use crate::runtime::tensor::HostTensor;
+
+/// Cumulative execution stats for one (entry, batch) pair.
+#[derive(Debug, Clone, Default)]
+pub struct EntryStats {
+    pub calls: u64,
+    pub total: Duration,
+    pub compile_time: Duration,
+}
+
+impl EntryStats {
+    pub fn mean(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.calls as u32
+        }
+    }
+}
+
+/// An execution substrate serving the manifest's entry points.
+pub trait Backend: Send + Sync {
+    /// The contract: entry signatures, model geometry, solver defaults.
+    fn manifest(&self) -> &Manifest;
+
+    /// Human-readable substrate name (e.g. "cpu", "native-cpu").
+    fn platform(&self) -> String;
+
+    /// Execute one entry point at a batch bucket.  Implementations must
+    /// validate `inputs` against the manifest spec (see [`check_inputs`])
+    /// and return exactly the spec'd outputs.
+    fn execute(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>>;
+
+    /// The deterministic initial parameter set this backend was built for
+    /// (the AOT init checkpoint for PJRT; a seeded init for the native
+    /// twin).
+    fn init_params(&self) -> Result<ParamSet>;
+
+    /// Prepare a set of entries so hot paths pay no first-call cost.
+    /// Default: just validate the entries exist.
+    fn warmup(&self, entries: &[(&str, usize)]) -> Result<()> {
+        for (name, batch) in entries {
+            self.manifest().entry(name, *batch)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot of per-entry stats, sorted by total time descending.
+    fn stats(&self) -> Vec<((String, usize), EntryStats)>;
+
+    /// Human-readable stats table (for `--stats` / experiment footers).
+    fn stats_report(&self) -> String {
+        render_stats(&self.stats())
+    }
+}
+
+/// Validate an input list against an entry spec (count, shape, dtype).
+/// Shared by every backend so error messages are uniform.
+pub fn check_inputs(
+    spec: &EntrySpec,
+    name: &str,
+    batch: usize,
+    inputs: &[HostTensor],
+) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{name}@b{batch}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape != s.shape {
+            bail!(
+                "{name}@b{batch} input {i} ({}): shape {:?} != spec {:?}",
+                s.name,
+                t.shape,
+                s.shape
+            );
+        }
+        if t.dtype() != s.dtype {
+            bail!("{name}@b{batch} input {i} ({}): dtype mismatch", s.name);
+        }
+    }
+    Ok(())
+}
+
+/// Thread-safe per-entry stats ledger shared by backend implementations.
+#[derive(Debug, Default)]
+pub struct StatsBook {
+    inner: Mutex<HashMap<(String, usize), EntryStats>>,
+}
+
+impl StatsBook {
+    pub fn record(&self, name: &str, batch: usize, elapsed: Duration) {
+        let mut book = self.inner.lock().unwrap();
+        let e = book.entry((name.to_string(), batch)).or_default();
+        e.calls += 1;
+        e.total += elapsed;
+    }
+
+    pub fn record_compile(&self, name: &str, batch: usize, t: Duration) {
+        let mut book = self.inner.lock().unwrap();
+        book.entry((name.to_string(), batch)).or_default().compile_time = t;
+    }
+
+    /// Sorted snapshot (total time descending).
+    pub fn snapshot(&self) -> Vec<((String, usize), EntryStats)> {
+        let mut v: Vec<_> = self
+            .inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        v
+    }
+}
+
+/// Render a stats snapshot as the standard fixed-width table.
+pub fn render_stats(rows: &[((String, usize), EntryStats)]) -> String {
+    let mut out = String::from(
+        "entry                         batch    calls     mean       total      compile\n",
+    );
+    for ((name, batch), s) in rows {
+        out.push_str(&format!(
+            "{:<30}{:>5}{:>9}{:>12.3?}{:>12.3?}{:>12.3?}\n",
+            name,
+            batch,
+            s.calls,
+            s.mean(),
+            s.total,
+            s.compile_time
+        ));
+    }
+    out
+}
+
+/// Build a backend by explicit choice:
+///
+///   * `"native"` — the hermetic pure-Rust [`NativeEngine`];
+///   * `"pjrt"`   — the PJRT `Engine` over `dir` (errors unless built
+///     with the `pjrt` feature);
+///   * `"auto"`   — PJRT when the feature is enabled *and*
+///     `dir/manifest.json` exists, native otherwise.
+pub fn select_backend(choice: &str, dir: &Path) -> Result<Arc<dyn Backend>> {
+    if choice == "native" {
+        return Ok(Arc::new(NativeEngine::tiny()));
+    }
+    if choice == "pjrt" {
+        #[cfg(feature = "pjrt")]
+        return Ok(Arc::new(crate::runtime::engine::Engine::new(dir)?));
+        #[cfg(not(feature = "pjrt"))]
+        bail!(
+            "backend 'pjrt' unavailable: this build has no XLA support \
+             (rebuild with `--features pjrt`)"
+        );
+    }
+    if choice != "auto" {
+        bail!("unknown backend '{choice}' (expected auto|native|pjrt)");
+    }
+    #[cfg(feature = "pjrt")]
+    if dir.join("manifest.json").exists() {
+        return Ok(Arc::new(crate::runtime::engine::Engine::new(dir)?));
+    }
+    let _ = dir;
+    Ok(Arc::new(NativeEngine::tiny()))
+}
+
+/// `select_backend("auto", dir)` — the common entry point for binaries,
+/// benches and tests: PJRT over real artifacts when available, the
+/// hermetic native twin otherwise.
+pub fn backend_from_dir(dir: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
+    select_backend("auto", dir.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_stats_mean() {
+        let mut s = EntryStats::default();
+        assert_eq!(s.mean(), Duration::ZERO);
+        s.calls = 4;
+        s.total = Duration::from_millis(8);
+        assert_eq!(s.mean(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn stats_book_records_and_sorts() {
+        let book = StatsBook::default();
+        book.record("a", 1, Duration::from_millis(1));
+        book.record("b", 8, Duration::from_millis(5));
+        book.record("a", 1, Duration::from_millis(1));
+        book.record_compile("a", 1, Duration::from_millis(9));
+        let snap = book.snapshot();
+        assert_eq!(snap.len(), 2);
+        // b has the larger total, so it sorts first.
+        assert_eq!(snap[0].0, ("b".to_string(), 8));
+        assert_eq!(snap[1].1.calls, 2);
+        assert_eq!(snap[1].1.compile_time, Duration::from_millis(9));
+        let table = render_stats(&snap);
+        assert!(table.contains("entry"));
+        assert!(table.contains('b'));
+    }
+
+    #[test]
+    fn select_backend_native_and_unknown() {
+        let b = select_backend("native", Path::new(".")).unwrap();
+        assert_eq!(b.platform(), "native-cpu");
+        assert!(select_backend("bogus", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_to_native_without_artifacts() {
+        let dir = std::env::temp_dir().join("deqa_no_artifacts_here");
+        let b = backend_from_dir(&dir).unwrap();
+        // Without artifacts (or without the pjrt feature) auto == native.
+        assert!(!b.manifest().entries.is_empty());
+    }
+}

@@ -1,5 +1,7 @@
 //! The PJRT execution engine: loads HLO-text artifacts, compiles them once
 //! on the CPU client, and executes them from the coordinator's hot path.
+//! Only built with the `pjrt` cargo feature; the hermetic default build
+//! uses [`crate::runtime::NativeEngine`] instead.
 //!
 //! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.  Every
@@ -13,30 +15,14 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::ParamSet;
+use crate::runtime::backend::{self, Backend, EntryStats, StatsBook};
 use crate::runtime::manifest::{EntrySpec, Manifest};
 use crate::runtime::tensor::HostTensor;
-
-/// Cumulative execution stats for one artifact.
-#[derive(Debug, Clone, Default)]
-pub struct EntryStats {
-    pub calls: u64,
-    pub total: Duration,
-    pub compile_time: Duration,
-}
-
-impl EntryStats {
-    pub fn mean(&self) -> Duration {
-        if self.calls == 0 {
-            Duration::ZERO
-        } else {
-            self.total / self.calls as u32
-        }
-    }
-}
 
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
@@ -54,7 +40,7 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: Mutex<HashMap<(String, usize), &'static Compiled>>,
-    stats: Mutex<HashMap<(String, usize), EntryStats>>,
+    stats: StatsBook,
     /// Serializes all PJRT calls (see struct docs).
     pjrt_lock: Mutex<()>,
 }
@@ -76,7 +62,7 @@ impl Engine {
             client,
             manifest,
             cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(HashMap::new()),
+            stats: StatsBook::default(),
             pjrt_lock: Mutex::new(()),
         })
     }
@@ -108,18 +94,12 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compile {}", spec.file))?;
-        let compile_time = t0.elapsed();
+        self.stats.record_compile(name, batch, t0.elapsed());
 
         // Executables live for the engine's lifetime; engines live for the
         // process's lifetime in every binary here. Leaking the box gives
         // stable references without self-referential lifetimes.
         let leaked: &'static Compiled = Box::leak(Box::new(Compiled { exe, spec }));
-        self.stats
-            .lock()
-            .unwrap()
-            .entry(key.clone())
-            .or_default()
-            .compile_time = compile_time;
         self.cache.lock().unwrap().insert(key, leaked);
         Ok(leaked)
     }
@@ -141,29 +121,7 @@ impl Engine {
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
         let c = self.compiled(name, batch)?;
-        if inputs.len() != c.spec.inputs.len() {
-            bail!(
-                "{name}@b{batch}: expected {} inputs, got {}",
-                c.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, s)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
-            if t.shape != s.shape {
-                bail!(
-                    "{name}@b{batch} input {i} ({}): shape {:?} != spec {:?}",
-                    s.name,
-                    t.shape,
-                    s.shape
-                );
-            }
-            if t.dtype() != s.dtype {
-                bail!(
-                    "{name}@b{batch} input {i} ({}): dtype mismatch",
-                    s.name
-                );
-            }
-        }
+        backend::check_inputs(&c.spec, name, batch, inputs)?;
 
         let _pjrt = self.pjrt_lock.lock().unwrap();
         let lits: Vec<xla::Literal> = inputs
@@ -179,14 +137,7 @@ impl Engine {
         let root = result[0][0]
             .to_literal_sync()
             .context("fetch result literal")?;
-        let elapsed = t0.elapsed();
-
-        {
-            let mut stats = self.stats.lock().unwrap();
-            let e = stats.entry((name.to_string(), batch)).or_default();
-            e.calls += 1;
-            e.total += elapsed;
-        }
+        self.stats.record(name, batch, t0.elapsed());
 
         let parts = root.to_tuple().context("decompose output tuple")?;
         if parts.len() != c.spec.outputs.len() {
@@ -204,33 +155,46 @@ impl Engine {
 
     /// Snapshot of per-entry stats, sorted by total time descending.
     pub fn stats(&self) -> Vec<((String, usize), EntryStats)> {
-        let mut v: Vec<_> = self
-            .stats
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, s)| (k.clone(), s.clone()))
-            .collect();
-        v.sort_by(|a, b| b.1.total.cmp(&a.1.total));
-        v
+        self.stats.snapshot()
     }
 
     /// Human-readable stats table (for `--stats` / experiment footers).
     pub fn stats_report(&self) -> String {
-        let mut out = String::from(
-            "entry                         batch    calls     mean       total      compile\n",
-        );
-        for ((name, batch), s) in self.stats() {
-            out.push_str(&format!(
-                "{:<30}{:>5}{:>9}{:>12.3?}{:>12.3?}{:>12.3?}\n",
-                name,
-                batch,
-                s.calls,
-                s.mean(),
-                s.total,
-                s.compile_time
-            ));
-        }
-        out
+        backend::render_stats(&self.stats())
+    }
+}
+
+impl Backend for Engine {
+    fn manifest(&self) -> &Manifest {
+        Engine::manifest(self)
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn execute(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        Engine::execute(self, name, batch, inputs)
+    }
+
+    fn init_params(&self) -> Result<ParamSet> {
+        ParamSet::load_init(self.manifest())
+    }
+
+    fn warmup(&self, entries: &[(&str, usize)]) -> Result<()> {
+        Engine::warmup(self, entries)
+    }
+
+    fn stats(&self) -> Vec<((String, usize), EntryStats)> {
+        Engine::stats(self)
+    }
+
+    fn stats_report(&self) -> String {
+        Engine::stats_report(self)
     }
 }

@@ -1,13 +1,27 @@
-//! PJRT runtime: manifest registry, host tensors, execution engine.
+//! Runtime layer: the [`Backend`] execution abstraction, manifest
+//! registry, host tensors, and the two engines that implement it.
 //!
-//! The coordinator's only gateway to the AOT-compiled JAX/Pallas compute:
-//! `Engine::execute(entry, batch, inputs)` over `HostTensor`s, with
-//! shapes/dtypes validated against `artifacts/manifest.json`.
+//! The coordinator's only gateway to compute is
+//! `Backend::execute(entry, batch, inputs)` over [`HostTensor`]s, with
+//! shapes/dtypes validated against the manifest:
+//!
+//!   * [`NativeEngine`] — hermetic pure-Rust twin (always available, the
+//!     default; what CI and the integration test tier run against);
+//!   * [`Engine`] — PJRT execution of the AOT HLO artifacts from
+//!     `artifacts/manifest.json` (behind the `pjrt` cargo feature).
+//!
+//! [`backend::backend_from_dir`] picks between them automatically.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native_engine;
 pub mod tensor;
 
+pub use backend::{backend_from_dir, select_backend, Backend, EntryStats};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta};
+pub use native_engine::{NativeConfig, NativeEngine};
 pub use tensor::{Dtype, HostTensor, TensorData};

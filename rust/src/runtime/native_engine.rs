@@ -1,0 +1,1094 @@
+//! `NativeEngine`: the pure-Rust twin of the PJRT [`Engine`], serving every
+//! manifest entry point from the `native/` substrate with no XLA, no AOT
+//! artifacts, and no files on disk.
+//!
+//! The engine exists so the coordinator's *policy* layer — windowed
+//! Anderson mixing, crossover detection, stagnation fallback, dynamic
+//! batching, JFB training — is testable hermetically: the integration test
+//! tier runs against this backend in CI instead of skipping when
+//! `artifacts/manifest.json` is absent, and parity tests cross-check its
+//! `anderson_update` against the reference math in [`crate::native`].
+//!
+//! The served model is a deliberately small DEQ with the same tensor
+//! contract as the AOT artifacts:
+//!
+//! ```text
+//! encode:    x_feat = W_enc·vec(x_img) + b_enc            (random proj)
+//! cell_step: f(z,x) = tanh(W_cell·z + b_cell + x)          (contraction)
+//! classify:  logits = W_cls·z + b_cls
+//! ```
+//!
+//! `W_cell` is initialized with spectral radius < 1, so forward iteration
+//! converges linearly and Anderson accelerates exactly as on the compiled
+//! artifacts.  Masking semantics, residual outputs (`‖f−z‖`, `‖f‖` per
+//! sample), batch bucketing and the training-update output layout
+//! (params, momentum, loss, correct) are identical to the PJRT entries.
+//!
+//! [`Engine`]: crate::runtime::Engine
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::ParamSet;
+use crate::native::linalg;
+use crate::runtime::backend::{check_inputs, Backend, EntryStats, StatsBook};
+use crate::runtime::manifest::{
+    EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta,
+};
+use crate::runtime::tensor::{Dtype, HostTensor};
+use crate::util::rng::Rng;
+
+/// Parameter slots, in canonical manifest order.
+const P_W_ENC: usize = 0;
+const P_B_ENC: usize = 1;
+const P_W_CELL: usize = 2;
+const P_B_CELL: usize = 3;
+const P_W_CLS: usize = 4;
+const P_B_CLS: usize = 5;
+/// Number of parameter tensors.
+const NP: usize = 6;
+
+/// Geometry + hyperparameters of the native model.  The defaults mirror
+/// the AOT pipeline's shapes where it matters (32×32×3 images, 10
+/// classes, window-5 Anderson) at a latent size small enough that the
+/// full integration tier runs in seconds.
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    pub image_hw: usize,
+    pub image_channels: usize,
+    pub latent_hw: usize,
+    pub channels: usize,
+    pub groups: usize,
+    pub num_classes: usize,
+    /// Batch buckets entries are "compiled" for (ascending).
+    pub buckets: Vec<usize>,
+    pub solver: SolverMeta,
+    pub train: TrainMeta,
+    /// Spectral scale of the cell weight init (< 1 ⇒ contraction).
+    pub cell_gain: f32,
+    /// Seed of the deterministic parameter init.
+    pub init_seed: u64,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self {
+            image_hw: 32,
+            image_channels: 3,
+            latent_hw: 4,
+            channels: 4,
+            groups: 1,
+            num_classes: 10,
+            buckets: vec![1, 8, 32],
+            solver: SolverMeta {
+                window: 5,
+                beta: 1.0,
+                lam: 1e-4,
+                tol: 1e-3,
+                max_iter: 60,
+                fused_steps: 8,
+            },
+            train: TrainMeta {
+                lr: 0.01,
+                momentum: 0.9,
+                neumann_terms: 3,
+                explicit_depth: 6,
+            },
+            cell_gain: 0.8,
+            init_seed: 17,
+        }
+    }
+}
+
+impl NativeConfig {
+    pub fn image_dim(&self) -> usize {
+        self.image_hw * self.image_hw * self.image_channels
+    }
+
+    pub fn latent_dim(&self) -> usize {
+        self.latent_hw * self.latent_hw * self.channels
+    }
+
+    /// Canonical parameter layout (order defines the flat checkpoint).
+    fn param_specs(&self) -> Vec<TensorSpec> {
+        let (idim, n, nc) = (self.image_dim(), self.latent_dim(), self.num_classes);
+        let f32spec = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+        };
+        vec![
+            f32spec("w_enc", vec![idim, n]),
+            f32spec("b_enc", vec![n]),
+            f32spec("w_cell", vec![n, n]),
+            f32spec("b_cell", vec![n]),
+            f32spec("w_cls", vec![n, nc]),
+            f32spec("b_cls", vec![nc]),
+        ]
+    }
+}
+
+/// out[j] = b[j] + Σ_i x[i]·w[i·out_dim + j]   (w row-major (in_dim, out_dim))
+fn affine(x: &[f32], w: &[f32], b: &[f32], in_dim: usize, out_dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), in_dim);
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(b.len(), out_dim);
+    debug_assert_eq!(out.len(), out_dim);
+    out.copy_from_slice(b);
+    for i in 0..in_dim {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for j in 0..out_dim {
+            out[j] += xi * row[j];
+        }
+    }
+}
+
+/// One cell application f = tanh(W_cell·z + b_cell + x) for one sample.
+fn cell_apply(w_cell: &[f32], b_cell: &[f32], z: &[f32], x: &[f32], n: usize, out: &mut [f32]) {
+    affine(z, w_cell, b_cell, n, n, out);
+    for j in 0..n {
+        out[j] = (out[j] + x[j]).tanh();
+    }
+}
+
+/// Softmax cross-entropy on one logits row.  Returns the loss, whether
+/// the argmax equals `label`, and dL/dlogits pre-scaled by `inv_b`.
+fn softmax_xent(logits: &[f32], label: usize, inv_b: f32) -> (f32, bool, Vec<f32>) {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = logits.iter().map(|v| (v - mx).exp()).collect();
+    let psum: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= psum;
+    }
+    let loss = psum.ln() + mx - logits[label];
+    let pred = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut dl = probs;
+    dl[label] -= 1.0;
+    for d in dl.iter_mut() {
+        *d *= inv_b;
+    }
+    (loss, pred == label, dl)
+}
+
+/// v = W_cls·dl — the loss cotangent pulled back to the classifier input.
+fn vjp_classifier(w_cls: &[f32], dl: &[f32], n: usize, nc: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    for j in 0..n {
+        let row = &w_cls[j * nc..(j + 1) * nc];
+        let mut acc = 0.0f32;
+        for c in 0..nc {
+            acc += row[c] * dl[c];
+        }
+        v[j] = acc;
+    }
+    v
+}
+
+/// Per-sample parameter-gradient accumulation shared by every training
+/// entry: classifier grads from (`cls_feat`, `dl`), cell grads from the
+/// final cell step's input `cell_in` and pre-activation cotangent `u`,
+/// encoder grads from the image `xb` (x_feat enters the cell additively).
+#[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
+fn add_param_grads(
+    grads: &mut [Vec<f32>],
+    cls_feat: &[f32],
+    cell_in: &[f32],
+    xb: &[f32],
+    dl: &[f32],
+    u: &[f32],
+    idim: usize,
+    n: usize,
+    nc: usize,
+) {
+    for j in 0..n {
+        let zj = cls_feat[j];
+        if zj != 0.0 {
+            let grow = &mut grads[P_W_CLS][j * nc..(j + 1) * nc];
+            for c in 0..nc {
+                grow[c] += zj * dl[c];
+            }
+        }
+    }
+    for c in 0..nc {
+        grads[P_B_CLS][c] += dl[c];
+    }
+    for kk in 0..n {
+        let zk = cell_in[kk];
+        if zk != 0.0 {
+            let grow = &mut grads[P_W_CELL][kk * n..(kk + 1) * n];
+            for j in 0..n {
+                grow[j] += zk * u[j];
+            }
+        }
+    }
+    for j in 0..n {
+        grads[P_B_CELL][j] += u[j];
+        grads[P_B_ENC][j] += u[j];
+    }
+    for i in 0..idim {
+        let xi = xb[i];
+        if xi != 0.0 {
+            let grow = &mut grads[P_W_ENC][i * n..(i + 1) * n];
+            for j in 0..n {
+                grow[j] += xi * u[j];
+            }
+        }
+    }
+}
+
+/// The hermetic pure-Rust backend.
+pub struct NativeEngine {
+    cfg: NativeConfig,
+    manifest: Manifest,
+    stats: StatsBook,
+}
+
+impl NativeEngine {
+    /// The default test-scale engine (see [`NativeConfig::default`]).
+    pub fn tiny() -> Self {
+        Self::new(NativeConfig::default())
+    }
+
+    pub fn new(cfg: NativeConfig) -> Self {
+        let manifest = build_manifest(&cfg);
+        Self { cfg, manifest, stats: StatsBook::default() }
+    }
+
+    pub fn config(&self) -> &NativeConfig {
+        &self.cfg
+    }
+
+    fn dispatch(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        match name {
+            "encode" => self.encode(batch, inputs),
+            "cell_step" => self.cell_step(batch, inputs),
+            "forward_solve_k" => self.forward_solve_k(batch, inputs),
+            "anderson_update" => self.anderson_update(batch, inputs),
+            "classify" => self.classify(batch, inputs),
+            "explicit_infer" => self.explicit_infer(batch, inputs),
+            "train_update" => self.train_update(batch, inputs, 1),
+            "train_update_neumann" => {
+                self.train_update(batch, inputs, self.cfg.train.neumann_terms.max(1))
+            }
+            "explicit_train" => self.explicit_train(batch, inputs),
+            other => bail!("native backend has no entry '{other}'"),
+        }
+    }
+
+    /// x_feat = W_enc·vec(x_img) + b_enc, per sample.
+    fn encode(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (idim, n) = (self.cfg.image_dim(), self.cfg.latent_dim());
+        let w = inputs[P_W_ENC].f32s()?;
+        let b = inputs[P_B_ENC].f32s()?;
+        let x = inputs[NP].f32s()?;
+        let mut feat = vec![0.0f32; batch * n];
+        for s in 0..batch {
+            affine(
+                &x[s * idim..(s + 1) * idim],
+                w,
+                b,
+                idim,
+                n,
+                &mut feat[s * n..(s + 1) * n],
+            );
+        }
+        Ok(vec![HostTensor::f32(self.manifest.model.latent_shape(batch), feat)?])
+    }
+
+    /// f = tanh(W_cell·z + b_cell + x) with fused per-sample residual norms.
+    fn cell_step(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let n = self.cfg.latent_dim();
+        let w = inputs[P_W_CELL].f32s()?;
+        let b = inputs[P_B_CELL].f32s()?;
+        let z = inputs[NP].f32s()?;
+        let x = inputs[NP + 1].f32s()?;
+        let mut f = vec![0.0f32; batch * n];
+        let mut res = vec![0.0f32; batch];
+        let mut fnorm = vec![0.0f32; batch];
+        for s in 0..batch {
+            let zs = &z[s * n..(s + 1) * n];
+            let xs = &x[s * n..(s + 1) * n];
+            let fs = &mut f[s * n..(s + 1) * n];
+            cell_apply(w, b, zs, xs, n, fs);
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for j in 0..n {
+                let d = fs[j] - zs[j];
+                num += d * d;
+                den += fs[j] * fs[j];
+            }
+            res[s] = num.sqrt();
+            fnorm[s] = den.sqrt();
+        }
+        Ok(vec![
+            HostTensor::f32(self.manifest.model.latent_shape(batch), f)?,
+            HostTensor::f32(vec![batch], res)?,
+            HostTensor::f32(vec![batch], fnorm)?,
+        ])
+    }
+
+    /// K fused forward steps; residual outputs describe the *last* step,
+    /// matching the AOT `forward_solve_k` artifact semantics.
+    fn forward_solve_k(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let n = self.cfg.latent_dim();
+        let k = self.cfg.solver.fused_steps.max(1);
+        let w = inputs[P_W_CELL].f32s()?;
+        let b = inputs[P_B_CELL].f32s()?;
+        let z0 = inputs[NP].f32s()?;
+        let x = inputs[NP + 1].f32s()?;
+        let mut z = z0.to_vec();
+        let mut f = vec![0.0f32; batch * n];
+        for _ in 0..k {
+            for s in 0..batch {
+                cell_apply(
+                    w,
+                    b,
+                    &z[s * n..(s + 1) * n],
+                    &x[s * n..(s + 1) * n],
+                    n,
+                    &mut f[s * n..(s + 1) * n],
+                );
+            }
+            std::mem::swap(&mut z, &mut f);
+        }
+        // After the swap `z` holds z_K and `f` holds z_{K-1}.
+        let mut res = vec![0.0f32; batch];
+        let mut fnorm = vec![0.0f32; batch];
+        for s in 0..batch {
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for j in 0..n {
+                let t = s * n + j;
+                let d = z[t] - f[t];
+                num += d * d;
+                den += z[t] * z[t];
+            }
+            res[s] = num.sqrt();
+            fnorm[s] = den.sqrt();
+        }
+        Ok(vec![
+            HostTensor::f32(self.manifest.model.latent_shape(batch), z)?,
+            HostTensor::f32(vec![batch], res)?,
+            HostTensor::f32(vec![batch], fnorm)?,
+        ])
+    }
+
+    /// Masked windowed Anderson mixing (paper Alg. 1, Eqs. 4–5), batched.
+    ///
+    /// Slots with `mask ≈ 0` are excluded from the Gram system and receive
+    /// α = 0, so a single entry serves every warm-up fill and every
+    /// runtime window ≤ the compiled one — the same contract as the fused
+    /// Pallas kernel.  With no valid slots the update degenerates to zero
+    /// output (the artifact's behaviour on an all-zero mask).
+    fn anderson_update(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let m = self.cfg.solver.window;
+        let n = self.cfg.latent_dim();
+        let (beta, lam) = (self.cfg.solver.beta, self.cfg.solver.lam);
+        let xh = inputs[0].f32s()?;
+        let fh = inputs[1].f32s()?;
+        let mask = inputs[2].f32s()?;
+        let valid: Vec<usize> = (0..m).filter(|&i| mask[i] > 0.5).collect();
+        let nv = valid.len();
+        let mut z = vec![0.0f32; batch * n];
+        let mut alpha_out = vec![0.0f32; batch * m];
+        if nv > 0 {
+            for s in 0..batch {
+                // Residual rows G_i = f_i − x_i over the valid slots.
+                let mut g = vec![0.0f32; nv * n];
+                for (r, &i) in valid.iter().enumerate() {
+                    let off = (s * m + i) * n;
+                    for t in 0..n {
+                        g[r * n + t] = fh[off + t] - xh[off + t];
+                    }
+                }
+                // H = G Gᵀ + λI;  H a = 1;  α = a / Σa.
+                let mut h = vec![0.0f32; nv * nv];
+                linalg::gram(&g, nv, n, &mut h);
+                for i in 0..nv {
+                    h[i * nv + i] += lam;
+                }
+                let ones = vec![1.0f32; nv];
+                // λ > 0 keeps H SPD on finite inputs, so like the
+                // reference AndersonState::mix we propagate a factorization
+                // failure instead of papering over it.
+                let a = linalg::solve_spd(&h, nv, &ones)?;
+                let sum: f32 = a.iter().sum();
+                let alpha: Vec<f32> = if sum.abs() < 1e-30 {
+                    // Σa = 1ᵀH⁻¹1 > 0 for SPD H, so this branch is dead
+                    // except under catastrophic f32 rounding.  The kernel
+                    // only sees the masked window (not push order), so the
+                    // best degenerate choice it can make is the last valid
+                    // slot — an arbitrary plain forward step.
+                    let mut e = vec![0.0; nv];
+                    e[nv - 1] = 1.0;
+                    e
+                } else {
+                    a.iter().map(|v| v / sum).collect()
+                };
+                // z⁺ = Σ αᵢ ((1−β)·xᵢ + β·fᵢ)   (Eq. 5)
+                let zrow = &mut z[s * n..(s + 1) * n];
+                for (r, &i) in valid.iter().enumerate() {
+                    let off = (s * m + i) * n;
+                    let (ax, af) = ((1.0 - beta) * alpha[r], beta * alpha[r]);
+                    for t in 0..n {
+                        zrow[t] += ax * xh[off + t] + af * fh[off + t];
+                    }
+                    alpha_out[s * m + i] = alpha[r];
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![batch, n], z)?,
+            HostTensor::f32(vec![batch, m], alpha_out)?,
+        ])
+    }
+
+    /// logits = W_cls·z + b_cls.
+    fn classify(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (n, nc) = (self.cfg.latent_dim(), self.cfg.num_classes);
+        let w = inputs[P_W_CLS].f32s()?;
+        let b = inputs[P_B_CLS].f32s()?;
+        let z = inputs[NP].f32s()?;
+        let mut logits = vec![0.0f32; batch * nc];
+        for s in 0..batch {
+            affine(
+                &z[s * n..(s + 1) * n],
+                w,
+                b,
+                n,
+                nc,
+                &mut logits[s * nc..(s + 1) * nc],
+            );
+        }
+        Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
+    }
+
+    /// Explicit weight-tied baseline: encode → D cell steps → classify.
+    fn explicit_infer(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let n = self.cfg.latent_dim();
+        let feat_t = self.encode(batch, inputs)?.remove(0);
+        let feat = feat_t.f32s()?;
+        let w_cell = inputs[P_W_CELL].f32s()?;
+        let b_cell = inputs[P_B_CELL].f32s()?;
+        let mut z = vec![0.0f32; batch * n];
+        let mut f = vec![0.0f32; batch * n];
+        for _ in 0..self.cfg.train.explicit_depth.max(1) {
+            for s in 0..batch {
+                cell_apply(
+                    w_cell,
+                    b_cell,
+                    &z[s * n..(s + 1) * n],
+                    &feat[s * n..(s + 1) * n],
+                    n,
+                    &mut f[s * n..(s + 1) * n],
+                );
+            }
+            std::mem::swap(&mut z, &mut f);
+        }
+        let (nc, w_cls, b_cls) =
+            (self.cfg.num_classes, inputs[P_W_CLS].f32s()?, inputs[P_B_CLS].f32s()?);
+        let mut logits = vec![0.0f32; batch * nc];
+        for s in 0..batch {
+            affine(
+                &z[s * n..(s + 1) * n],
+                w_cls,
+                b_cls,
+                n,
+                nc,
+                &mut logits[s * nc..(s + 1) * nc],
+            );
+        }
+        Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
+    }
+
+    /// Fused backward + SGD-momentum update at the equilibrium.
+    ///
+    /// `k_terms = 1` is Jacobian-Free Backpropagation (one phantom cell
+    /// step); `k_terms > 1` accumulates the truncated Neumann series
+    /// Σ_{k<K} (Jᵀ)^k of the implicit-function gradient.  Output layout
+    /// matches the AOT artifact: new params, new momentum, mean loss,
+    /// correct count.
+    fn train_update(
+        &self,
+        batch: usize,
+        inputs: &[HostTensor],
+        k_terms: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let (idim, n, nc) = (
+            self.cfg.image_dim(),
+            self.cfg.latent_dim(),
+            self.cfg.num_classes,
+        );
+        let w_enc = inputs[P_W_ENC].f32s()?;
+        let b_enc = inputs[P_B_ENC].f32s()?;
+        let w_cell = inputs[P_W_CELL].f32s()?;
+        let b_cell = inputs[P_B_CELL].f32s()?;
+        let w_cls = inputs[P_W_CLS].f32s()?;
+        let b_cls = inputs[P_B_CLS].f32s()?;
+        let z_star = inputs[2 * NP].f32s()?;
+        let x_img = inputs[2 * NP + 1].f32s()?;
+        let y = inputs[2 * NP + 2].i32s()?;
+
+        let mut grads: Vec<Vec<f32>> = self
+            .manifest
+            .params
+            .iter()
+            .map(|s| vec![0.0f32; s.elements()])
+            .collect();
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0i32;
+        let inv_b = 1.0 / batch as f32;
+
+        let mut xf = vec![0.0f32; n];
+        let mut f = vec![0.0f32; n];
+        let mut logits = vec![0.0f32; nc];
+        for s in 0..batch {
+            let zb = &z_star[s * n..(s + 1) * n];
+            let xb = &x_img[s * idim..(s + 1) * idim];
+            affine(xb, w_enc, b_enc, idim, n, &mut xf);
+            // Phantom cell step at the equilibrium — the JFB trick.
+            cell_apply(w_cell, b_cell, zb, &xf, n, &mut f);
+            affine(zb, w_cls, b_cls, n, nc, &mut logits);
+
+            let yb = y[s];
+            ensure!(
+                (0..nc as i32).contains(&yb),
+                "label {yb} out of range (num_classes {nc})"
+            );
+            // Loss + classifier cotangent (logits read z* directly).
+            let (loss, hit, dl) = softmax_xent(&logits, yb as usize, inv_b);
+            loss_sum += loss;
+            correct += hit as i32;
+
+            // Truncated Neumann: acc = Σ_{k<K} (Jᵀ)^k v₀ with
+            // J = diag(1−f²)·W_cell evaluated at the phantom step.
+            let v0 = vjp_classifier(w_cls, &dl, n, nc);
+            let mut acc = v0.clone();
+            let mut cur = v0;
+            for _ in 1..k_terms {
+                let uk: Vec<f32> = cur
+                    .iter()
+                    .zip(f.iter())
+                    .map(|(c, fj)| c * (1.0 - fj * fj))
+                    .collect();
+                let mut nxt = vec![0.0f32; n];
+                for kk in 0..n {
+                    let row = &w_cell[kk * n..(kk + 1) * n];
+                    let mut sacc = 0.0f32;
+                    for j in 0..n {
+                        sacc += row[j] * uk[j];
+                    }
+                    nxt[kk] = sacc;
+                }
+                for (a, b2) in acc.iter_mut().zip(nxt.iter()) {
+                    *a += b2;
+                }
+                cur = nxt;
+            }
+            // Cotangent on the pre-activation of the phantom step.
+            let u: Vec<f32> = acc
+                .iter()
+                .zip(f.iter())
+                .map(|(a, fj)| a * (1.0 - fj * fj))
+                .collect();
+            add_param_grads(&mut grads, zb, zb, xb, &dl, &u, idim, n, nc);
+        }
+
+        self.apply_sgd(inputs, &grads, loss_sum * inv_b, correct)
+    }
+
+    /// Explicit-baseline update: unrolled forward, backward truncated to
+    /// the last cell step (the JFB-style approximation the native twin
+    /// documents; sufficient for the loss-descent contracts the tier
+    /// checks).
+    fn explicit_train(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (idim, n, nc) = (
+            self.cfg.image_dim(),
+            self.cfg.latent_dim(),
+            self.cfg.num_classes,
+        );
+        let w_enc = inputs[P_W_ENC].f32s()?;
+        let b_enc = inputs[P_B_ENC].f32s()?;
+        let w_cell = inputs[P_W_CELL].f32s()?;
+        let b_cell = inputs[P_B_CELL].f32s()?;
+        let w_cls = inputs[P_W_CLS].f32s()?;
+        let b_cls = inputs[P_B_CLS].f32s()?;
+        let x_img = inputs[2 * NP].f32s()?;
+        let y = inputs[2 * NP + 1].i32s()?;
+        let depth = self.cfg.train.explicit_depth.max(1);
+
+        let mut grads: Vec<Vec<f32>> = self
+            .manifest
+            .params
+            .iter()
+            .map(|s| vec![0.0f32; s.elements()])
+            .collect();
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0i32;
+        let inv_b = 1.0 / batch as f32;
+
+        let mut xf = vec![0.0f32; n];
+        let mut z_prev = vec![0.0f32; n];
+        let mut z = vec![0.0f32; n];
+        let mut logits = vec![0.0f32; nc];
+        for s in 0..batch {
+            let xb = &x_img[s * idim..(s + 1) * idim];
+            affine(xb, w_enc, b_enc, idim, n, &mut xf);
+            z.fill(0.0);
+            for _ in 0..depth {
+                z_prev.copy_from_slice(&z);
+                let mut f = vec![0.0f32; n];
+                cell_apply(w_cell, b_cell, &z_prev, &xf, n, &mut f);
+                z.copy_from_slice(&f);
+            }
+            affine(&z, w_cls, b_cls, n, nc, &mut logits);
+
+            let yb = y[s];
+            ensure!(
+                (0..nc as i32).contains(&yb),
+                "label {yb} out of range (num_classes {nc})"
+            );
+            let (loss, hit, dl) = softmax_xent(&logits, yb as usize, inv_b);
+            loss_sum += loss;
+            correct += hit as i32;
+
+            // Backprop through the final cell step only (JFB-style
+            // truncation of the depth-D chain).
+            let v0 = vjp_classifier(w_cls, &dl, n, nc);
+            let u: Vec<f32> = v0
+                .iter()
+                .zip(z.iter())
+                .map(|(v, zj)| v * (1.0 - zj * zj))
+                .collect();
+            add_param_grads(&mut grads, &z, &z_prev, xb, &dl, &u, idim, n, nc);
+        }
+
+        self.apply_sgd(inputs, &grads, loss_sum * inv_b, correct)
+    }
+
+    /// SGD-with-momentum step producing the artifact output layout:
+    /// `[params'…, momentum'…, loss, correct]`.
+    fn apply_sgd(
+        &self,
+        inputs: &[HostTensor],
+        grads: &[Vec<f32>],
+        loss: f32,
+        correct: i32,
+    ) -> Result<Vec<HostTensor>> {
+        let (lr, mu) = (self.cfg.train.lr, self.cfg.train.momentum);
+        let mut new_params = Vec::with_capacity(NP);
+        let mut new_moms = Vec::with_capacity(NP);
+        for pi in 0..NP {
+            let p = inputs[pi].f32s()?;
+            let v = inputs[NP + pi].f32s()?;
+            let g = &grads[pi];
+            let mut vm = Vec::with_capacity(p.len());
+            let mut pn = Vec::with_capacity(p.len());
+            for t in 0..p.len() {
+                let m2 = mu * v[t] + g[t];
+                vm.push(m2);
+                pn.push(p[t] - lr * m2);
+            }
+            new_params.push(HostTensor::f32(inputs[pi].shape.clone(), pn)?);
+            new_moms.push(HostTensor::f32(inputs[pi].shape.clone(), vm)?);
+        }
+        let mut out = new_params;
+        out.extend(new_moms);
+        out.push(HostTensor::scalar_f32(loss));
+        out.push(HostTensor::i32(vec![], vec![correct])?);
+        Ok(out)
+    }
+}
+
+impl Backend for NativeEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn execute(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.entry(name, batch)?;
+        check_inputs(spec, name, batch, inputs)?;
+        let n_outputs = spec.outputs.len();
+        let t0 = Instant::now();
+        let out = self.dispatch(name, batch, inputs)?;
+        self.stats.record(name, batch, t0.elapsed());
+        debug_assert_eq!(out.len(), n_outputs, "{name}: output arity drifted from spec");
+        Ok(out)
+    }
+
+    /// Deterministic seeded init: weights scaled so encode features are
+    /// O(1) and the cell is a contraction (spectral scale `cell_gain`).
+    fn init_params(&self) -> Result<ParamSet> {
+        let mut rng = Rng::new(self.cfg.init_seed);
+        let (idim, n) = (self.cfg.image_dim(), self.cfg.latent_dim());
+        let mut flat: Vec<f32> = Vec::with_capacity(self.manifest.model.param_count);
+        for spec in &self.manifest.params {
+            let count = spec.elements();
+            match spec.name.as_str() {
+                "w_enc" => flat.extend(rng.normal_vec(count, 1.0 / (idim as f32).sqrt())),
+                "w_cell" => {
+                    flat.extend(rng.normal_vec(count, self.cfg.cell_gain / (n as f32).sqrt()))
+                }
+                "w_cls" => flat.extend(rng.normal_vec(count, 1.0 / (n as f32).sqrt())),
+                _ => flat.resize(flat.len() + count, 0.0),
+            }
+        }
+        ParamSet::from_flat(&self.manifest, &flat)
+    }
+
+    fn stats(&self) -> Vec<((String, usize), EntryStats)> {
+        self.stats.snapshot()
+    }
+}
+
+/// Output layout shared by the three training entries:
+/// `[params'…, momentum'…, loss, correct]`.
+fn train_output_specs(params: &[TensorSpec]) -> Vec<TensorSpec> {
+    let mut outs: Vec<TensorSpec> = params.to_vec();
+    outs.extend(params.iter().map(|s| TensorSpec {
+        name: format!("mom_{}", s.name),
+        shape: s.shape.clone(),
+        dtype: s.dtype,
+    }));
+    outs.push(TensorSpec {
+        name: "loss".to_string(),
+        shape: vec![],
+        dtype: Dtype::F32,
+    });
+    outs.push(TensorSpec {
+        name: "correct".to_string(),
+        shape: vec![],
+        dtype: Dtype::I32,
+    });
+    outs
+}
+
+/// Assemble the in-memory manifest describing the native entry points.
+fn build_manifest(cfg: &NativeConfig) -> Manifest {
+    let params = cfg.param_specs();
+    let param_count: usize = params.iter().map(TensorSpec::elements).sum();
+    let model = ModelMeta {
+        preset: "native-tiny".to_string(),
+        image_hw: cfg.image_hw,
+        image_channels: cfg.image_channels,
+        channels: cfg.channels,
+        latent_hw: cfg.latent_hw,
+        groups: cfg.groups,
+        num_classes: cfg.num_classes,
+        param_count,
+    };
+    let f32spec = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: Dtype::F32,
+    };
+    let i32spec = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: Dtype::I32,
+    };
+
+    let mut entries = Vec::new();
+    for &b in &cfg.buckets {
+        let latent = model.latent_shape(b);
+        let image = model.image_shape(b);
+        let n = model.latent_dim();
+        let nc = cfg.num_classes;
+        let m = cfg.solver.window;
+        let mut entry = |name: &str, extra_in: Vec<TensorSpec>, outputs: Vec<TensorSpec>,
+                         with_params: bool, with_momentum: bool| {
+            let mut inputs = Vec::new();
+            if with_params {
+                inputs.extend(params.iter().cloned());
+            }
+            if with_momentum {
+                inputs.extend(params.iter().map(|s| TensorSpec {
+                    name: format!("mom_{}", s.name),
+                    shape: s.shape.clone(),
+                    dtype: s.dtype,
+                }));
+            }
+            inputs.extend(extra_in);
+            entries.push(EntrySpec {
+                name: name.to_string(),
+                batch: b,
+                file: "<native>".to_string(),
+                inputs,
+                outputs,
+            });
+        };
+
+        entry(
+            "encode",
+            vec![f32spec("x_img", image.clone())],
+            vec![f32spec("x_feat", latent.clone())],
+            true,
+            false,
+        );
+        let step_outputs = vec![
+            f32spec("f", latent.clone()),
+            f32spec("res_num", vec![b]),
+            f32spec("f_norm", vec![b]),
+        ];
+        entry(
+            "cell_step",
+            vec![f32spec("z", latent.clone()), f32spec("x_feat", latent.clone())],
+            step_outputs.clone(),
+            true,
+            false,
+        );
+        entry(
+            "forward_solve_k",
+            vec![f32spec("z", latent.clone()), f32spec("x_feat", latent.clone())],
+            step_outputs,
+            true,
+            false,
+        );
+        entry(
+            "anderson_update",
+            vec![
+                f32spec("xhist", vec![b, m, n]),
+                f32spec("fhist", vec![b, m, n]),
+                f32spec("mask", vec![m]),
+            ],
+            vec![f32spec("z_mixed", vec![b, n]), f32spec("alpha", vec![b, m])],
+            false,
+            false,
+        );
+        entry(
+            "classify",
+            vec![f32spec("z", latent.clone())],
+            vec![f32spec("logits", vec![b, nc])],
+            true,
+            false,
+        );
+        entry(
+            "explicit_infer",
+            vec![f32spec("x_img", image.clone())],
+            vec![f32spec("logits", vec![b, nc])],
+            true,
+            false,
+        );
+        entry(
+            "train_update",
+            vec![
+                f32spec("z_star", latent.clone()),
+                f32spec("x_img", image.clone()),
+                i32spec("y", vec![b]),
+            ],
+            train_output_specs(&params),
+            true,
+            true,
+        );
+        entry(
+            "train_update_neumann",
+            vec![
+                f32spec("z_star", latent.clone()),
+                f32spec("x_img", image.clone()),
+                i32spec("y", vec![b]),
+            ],
+            train_output_specs(&params),
+            true,
+            true,
+        );
+        entry(
+            "explicit_train",
+            vec![f32spec("x_img", image), i32spec("y", vec![b])],
+            train_output_specs(&params),
+            true,
+            true,
+        );
+    }
+
+    Manifest {
+        dir: PathBuf::from("<native>"),
+        model,
+        solver: cfg.solver.clone(),
+        train: cfg.train.clone(),
+        params,
+        entries,
+        init_params_file: "<native-init>".to_string(),
+        use_pallas: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::AndersonState;
+
+    #[test]
+    fn manifest_is_self_consistent() {
+        let e = NativeEngine::tiny();
+        let m = e.manifest();
+        let total: usize = m.params.iter().map(TensorSpec::elements).sum();
+        assert_eq!(total, m.model.param_count);
+        for name in [
+            "encode",
+            "cell_step",
+            "anderson_update",
+            "forward_solve_k",
+            "classify",
+            "explicit_infer",
+            "train_update",
+            "train_update_neumann",
+            "explicit_train",
+        ] {
+            for &b in &e.config().buckets {
+                assert!(m.entry(name, b).is_ok(), "{name}@b{b} missing");
+            }
+        }
+        assert_eq!(m.batches_for("encode"), vec![1, 8, 32]);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_finite() {
+        let a = NativeEngine::tiny().init_params().unwrap();
+        let b = NativeEngine::tiny().init_params().unwrap();
+        assert_eq!(a.to_flat(), b.to_flat());
+        assert!(a.all_finite());
+        assert!(a.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn cell_step_matches_manual_math() {
+        let e = NativeEngine::tiny();
+        let p = e.init_params().unwrap();
+        let n = e.config().latent_dim();
+        let mut rng = Rng::new(3);
+        let z = rng.normal_vec(n, 1.0);
+        let x = rng.normal_vec(n, 1.0);
+        let mut inputs = p.tensors.clone();
+        inputs.push(
+            HostTensor::f32(e.manifest().model.latent_shape(1), z.clone()).unwrap(),
+        );
+        inputs.push(
+            HostTensor::f32(e.manifest().model.latent_shape(1), x.clone()).unwrap(),
+        );
+        let out = e.execute("cell_step", 1, &inputs).unwrap();
+        let f = out[0].f32s().unwrap();
+        let w = p.tensors[P_W_CELL].f32s().unwrap();
+        let b = p.tensors[P_B_CELL].f32s().unwrap();
+        let mut want = vec![0.0f32; n];
+        cell_apply(w, b, &z, &x, n, &mut want);
+        for (a, b2) in f.iter().zip(&want) {
+            assert!((a - b2).abs() < 1e-6);
+        }
+        // Residual outputs match host-recomputed norms.
+        let num: f32 = f
+            .iter()
+            .zip(&z)
+            .map(|(a, b2)| (a - b2) * (a - b2))
+            .sum::<f32>()
+            .sqrt();
+        let den: f32 = f.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((out[1].f32s().unwrap()[0] - num).abs() < 1e-4);
+        assert!((out[2].f32s().unwrap()[0] - den).abs() < 1e-4);
+    }
+
+    #[test]
+    fn anderson_update_matches_reference_state() {
+        let e = NativeEngine::tiny();
+        let m = e.config().solver.window;
+        let n = e.config().latent_dim();
+        let (beta, lam) = (e.config().solver.beta, e.config().solver.lam);
+        let mut rng = Rng::new(11);
+        let xh = rng.normal_vec(m * n, 1.0);
+        let fh: Vec<f32> = xh.iter().map(|v| v + 0.1 * rng.normal()).collect();
+        let out = e
+            .execute(
+                "anderson_update",
+                1,
+                &[
+                    HostTensor::f32(vec![1, m, n], xh.clone()).unwrap(),
+                    HostTensor::f32(vec![1, m, n], fh.clone()).unwrap(),
+                    HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let mut st = AndersonState::new(m, n, beta, lam);
+        for i in 0..m {
+            st.push(&xh[i * n..(i + 1) * n], &fh[i * n..(i + 1) * n]);
+        }
+        let (z_ref, a_ref) = st.mix().unwrap();
+        for (a, b) in out[0].f32s().unwrap().iter().zip(&z_ref) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for (a, b) in out[1].f32s().unwrap().iter().zip(&a_ref) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn anderson_update_zero_mask_degenerates_to_zero() {
+        let e = NativeEngine::tiny();
+        let m = e.config().solver.window;
+        let n = e.config().latent_dim();
+        let out = e
+            .execute(
+                "anderson_update",
+                1,
+                &[
+                    HostTensor::f32(vec![1, m, n], vec![1.0; m * n]).unwrap(),
+                    HostTensor::f32(vec![1, m, n], vec![2.0; m * n]).unwrap(),
+                    HostTensor::f32(vec![m], vec![0.0; m]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert!(out[0].f32s().unwrap().iter().all(|&v| v == 0.0));
+        assert!(out[1].f32s().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn execute_validates_against_spec() {
+        let e = NativeEngine::tiny();
+        let err = e.execute("anderson_update", 1, &[]).unwrap_err();
+        assert!(format!("{err}").contains("expected 3 inputs"), "{err}");
+        assert!(e.execute("nope", 1, &[]).is_err());
+        assert!(e.execute("encode", 7, &[]).is_err(), "7 is not a bucket");
+    }
+
+    #[test]
+    fn stats_recorded_per_entry() {
+        let e = NativeEngine::tiny();
+        let m = e.config().solver.window;
+        let n = e.config().latent_dim();
+        let inputs = [
+            HostTensor::zeros(vec![1, m, n]),
+            HostTensor::zeros(vec![1, m, n]),
+            HostTensor::zeros(vec![m]),
+        ];
+        e.execute("anderson_update", 1, &inputs).unwrap();
+        e.execute("anderson_update", 1, &inputs).unwrap();
+        let stats = Backend::stats(&e);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].0, ("anderson_update".to_string(), 1));
+        assert_eq!(stats[0].1.calls, 2);
+        assert!(e.stats_report().contains("anderson_update"));
+    }
+}

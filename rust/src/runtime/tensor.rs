@@ -1,10 +1,13 @@
-//! Host-side tensors and conversion to/from PJRT `Literal`s.
+//! Host-side tensors, plus conversion to/from PJRT `Literal`s when the
+//! `pjrt` feature is enabled.
 //!
-//! Everything the coordinator moves across the PJRT boundary goes through
-//! `HostTensor`: a shape plus flat row-major data (f32 or i32 — the only
-//! dtypes the model artifacts use).
+//! Everything the coordinator moves across a [`crate::runtime::Backend`]
+//! boundary goes through `HostTensor`: a shape plus flat row-major data
+//! (f32 or i32 — the only dtypes the model entry points use).
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
@@ -137,7 +140,11 @@ impl HostTensor {
         self.shape = shape;
         Ok(self)
     }
+}
 
+/// PJRT literal round-trips (feature `pjrt` only).
+#[cfg(feature = "pjrt")]
+impl HostTensor {
     /// Convert to a PJRT literal (copies once).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::model::ParamSet;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::server::{run_batch, Request, RouterConfig, ServerMetrics};
 
 pub(crate) type QueueHandle = Arc<super::Queue>;
@@ -36,7 +36,7 @@ pub fn should_fire(
 
 /// The batcher thread body.
 pub(crate) fn run(
-    engine: Arc<Engine>,
+    engine: Arc<dyn Backend>,
     params: Arc<ParamSet>,
     queue: QueueHandle,
     metrics: Arc<ServerMetrics>,
@@ -73,7 +73,7 @@ pub(crate) fn run(
         };
 
         let bucket = pick_bucket(&buckets, batch.len());
-        run_batch(&engine, &params, &cfg.solver, batch, bucket, &metrics);
+        run_batch(engine.as_ref(), &params, &cfg.solver, batch, bucket, &metrics);
     }
 }
 

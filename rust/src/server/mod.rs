@@ -26,7 +26,7 @@ use anyhow::Result;
 use crate::infer;
 use crate::metrics::Stats;
 use crate::model::ParamSet;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::solver::SolveOptions;
 
 /// One inference request: a flat NHWC image.
@@ -113,7 +113,7 @@ pub struct Router {
 impl Router {
     /// Spawn the batcher thread over an engine + parameters.
     pub fn start(
-        engine: Arc<Engine>,
+        engine: Arc<dyn Backend>,
         params: Arc<ParamSet>,
         cfg: RouterConfig,
     ) -> Result<Self> {
@@ -200,7 +200,7 @@ impl Drop for Router {
 
 /// The inference work a batch performs — shared by the batcher thread.
 pub(crate) fn run_batch(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &ParamSet,
     solver: &SolveOptions,
     mut batch: Vec<Request>,

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
 
 /// Ring-buffer history for batched Anderson over flattened latents.
@@ -94,7 +94,7 @@ impl History {
 
 /// Solve to tolerance with Anderson extrapolation.
 pub fn solve(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &[HostTensor],
     x_feat: &HostTensor,
     opts: &SolveOptions,
@@ -131,12 +131,16 @@ pub fn solve(
         let out = engine.execute("cell_step", batch, &cell_inputs)?;
         let f = &out[0];
         let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        // `mixed` is back-filled once mixing actually runs below, so the
+        // flag describes the update applied to THIS step's iterate: the
+        // terminal (converged) step takes f directly and stays unmixed,
+        // while step 0 is mixed as soon as its pair enters the window.
         steps.push(SolveStep {
             iter: k,
             rel_residual: rel,
             elapsed: t0.elapsed(),
             fevals: k + 1,
-            mixed: k > 0,
+            mixed: false,
         });
         if rel < opts.tol {
             converged = true;
@@ -147,10 +151,11 @@ pub fn solve(
         // Window update + Anderson mixing.
         hist.push(z.f32s()?, f.f32s()?);
         let (xh, fh, mask) = hist.tensors()?;
-        let mixed = engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-        z = mixed[0]
+        let update = engine.execute("anderson_update", batch, &[xh, fh, mask])?;
+        z = update[0]
             .clone()
             .reshaped(meta.latent_shape(batch))?;
+        steps.last_mut().expect("step recorded above").mixed = true;
     }
 
     Ok(SolveReport { kind: SolverKind::Anderson, steps, converged, z_star: z })

@@ -11,12 +11,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
 
 /// Solve to tolerance with plain forward iteration.
 pub fn solve(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &[HostTensor],
     x_feat: &HostTensor,
     opts: &SolveOptions,

@@ -1,19 +1,21 @@
-//! Fixed-point solver drivers over the AOT artifacts — the coordinator
+//! Fixed-point solver drivers over any [`Backend`] — the coordinator
 //! half of the paper's contribution.
 //!
-//! The Python/Pallas layer owns the *math* of one step (`cell_step`,
+//! The execution backend owns the *math* of one step (`cell_step`,
 //! `anderson_update`); this module owns the *policy*: when to evaluate,
 //! when to mix, when to stop, what to record.  Three drivers:
 //!
 //! * [`forward`] — the paper's baseline, z ← f(z,x), optionally through
-//!   the fused `forward_solve_k` artifact (K steps per PJRT dispatch).
+//!   the fused `forward_solve_k` entry (K steps per dispatch).
 //! * [`anderson`] — windowed Anderson extrapolation (Alg. 1): ring-buffer
-//!   history management on the host, mixing via the fused L1 kernel.
+//!   history management on the host, mixing via the fused kernel entry.
 //! * [`policy`] — the paper's §4 suggestion: run Anderson, watch for
 //!   stagnation, fall back to damped forward steps.
 //!
 //! Each solve returns a [`SolveReport`] with the per-iteration residual /
-//! wallclock trace — the raw series behind Figs. 1, 6 and 7.
+//! wallclock trace — the raw series behind Figs. 1, 6 and 7.  Reports
+//! round-trip through JSON (see [`SolveReport::to_json`]) so experiment
+//! output formats are pinned by golden tests.
 
 pub mod anderson;
 pub mod crossover;
@@ -22,9 +24,10 @@ pub mod policy;
 
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
+use crate::util::json::{self, Json};
 
 /// Which solver to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,7 +65,7 @@ pub struct SolveOptions {
     pub tol: f32,
     pub max_iter: usize,
     pub lam: f32,
-    /// Use the fused K-step artifact for forward solves when available.
+    /// Use the fused K-step entry for forward solves when available.
     pub fused_forward: bool,
     /// Stagnation threshold for the hybrid policy: minimum relative
     /// improvement per window before switching.
@@ -70,7 +73,7 @@ pub struct SolveOptions {
 }
 
 impl SolveOptions {
-    pub fn from_manifest(engine: &Engine, kind: SolverKind) -> Self {
+    pub fn from_manifest(engine: &dyn Backend, kind: SolverKind) -> Self {
         let s = &engine.manifest().solver;
         Self {
             kind,
@@ -94,8 +97,42 @@ pub struct SolveStep {
     pub elapsed: Duration,
     /// Cumulative cell evaluations (per sample).
     pub fevals: usize,
-    /// True if this step applied Anderson mixing (vs a plain forward step).
+    /// True if Anderson mixing produced this step's *next* iterate —
+    /// false for plain forward steps and for the terminal step (which
+    /// takes f directly).  Note step 0's output IS mixed once its
+    /// (z, f) pair is in the history window.
     pub mixed: bool,
+}
+
+impl SolveStep {
+    /// JSON object form (keys sorted; `elapsed` as seconds).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("elapsed_s", json::num(self.elapsed.as_secs_f64())),
+            ("fevals", json::num(self.fevals as f64)),
+            ("iter", json::num(self.iter as f64)),
+            ("mixed", Json::Bool(self.mixed)),
+            ("rel_residual", json::num(self.rel_residual as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let f64field = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("SolveStep missing '{key}'"))
+        };
+        Ok(Self {
+            iter: f64field("iter")? as usize,
+            rel_residual: f64field("rel_residual")? as f32,
+            elapsed: Duration::from_secs_f64(f64field("elapsed_s")?),
+            fevals: f64field("fevals")? as usize,
+            mixed: v
+                .get("mixed")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("SolveStep missing 'mixed'"))?,
+        })
+    }
 }
 
 /// Outcome of one equilibrium solve.
@@ -139,11 +176,83 @@ impl SolveReport {
             .map(|s| s.rel_residual)
             .fold(f32::INFINITY, f32::min)
     }
+
+    /// JSON form of the full report (the experiment trace format).
+    /// `z_star` serializes as f32 data + shape — the only latent dtype.
+    pub fn to_json(&self) -> Json {
+        let steps = Json::Arr(self.steps.iter().map(SolveStep::to_json).collect());
+        let data: Vec<Json> = self
+            .z_star
+            .f32s()
+            .map(|d| d.iter().map(|&v| json::num(v as f64)).collect())
+            .unwrap_or_default();
+        let shape: Vec<Json> = self
+            .z_star
+            .shape
+            .iter()
+            .map(|&d| json::num(d as f64))
+            .collect();
+        json::obj(vec![
+            ("converged", Json::Bool(self.converged)),
+            ("kind", json::s(self.kind.name())),
+            ("steps", steps),
+            (
+                "z_star",
+                json::obj(vec![("data", Json::Arr(data)), ("shape", Json::Arr(shape))]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind_name = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("SolveReport missing 'kind'"))?;
+        let kind = SolverKind::parse(kind_name)
+            .ok_or_else(|| anyhow!("unknown solver kind '{kind_name}'"))?;
+        let steps = v
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("SolveReport missing 'steps'"))?
+            .iter()
+            .map(SolveStep::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let z = v
+            .get("z_star")
+            .ok_or_else(|| anyhow!("SolveReport missing 'z_star'"))?;
+        let shape: Vec<usize> = z
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("z_star missing 'shape'"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad z_star dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let data: Vec<f32> = z
+            .get("data")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("z_star missing 'data'"))?
+            .iter()
+            .map(|d| {
+                d.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| anyhow!("bad z_star value"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            kind,
+            steps,
+            converged: v
+                .get("converged")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("SolveReport missing 'converged'"))?,
+            z_star: HostTensor::f32(shape, data)?,
+        })
+    }
 }
 
 /// Dispatch a solve by kind.
 pub fn solve(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &[HostTensor],
     x_feat: &HostTensor,
     opts: &SolveOptions,
@@ -202,5 +311,30 @@ mod tests {
         assert!(r.final_residual().is_nan());
         assert_eq!(r.total_time(), Duration::ZERO);
         assert!(r.time_to(1.0).is_none());
+    }
+
+    #[test]
+    fn step_json_roundtrip() {
+        let s = SolveStep {
+            iter: 3,
+            rel_residual: 0.25,
+            elapsed: Duration::from_millis(1500),
+            fevals: 4,
+            mixed: true,
+        };
+        let back = SolveStep::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.iter, 3);
+        assert_eq!(back.rel_residual, 0.25);
+        assert_eq!(back.elapsed, Duration::from_millis(1500));
+        assert_eq!(back.fevals, 4);
+        assert!(back.mixed);
+    }
+
+    #[test]
+    fn report_json_rejects_malformed() {
+        let v = json::parse(r#"{"kind":"anderson"}"#).unwrap();
+        assert!(SolveReport::from_json(&v).is_err());
+        let v = json::parse(r#"{"kind":"warp","steps":[],"converged":true}"#).unwrap();
+        assert!(SolveReport::from_json(&v).is_err());
     }
 }

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::anderson::History;
 use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
 
@@ -31,7 +31,7 @@ pub fn stagnated(residuals: &[f32], window: usize, eps: f32) -> bool {
 
 /// Anderson-with-fallback solve.
 pub fn solve(
-    engine: &Engine,
+    engine: &dyn Backend,
     params: &[HostTensor],
     x_feat: &HostTensor,
     opts: &SolveOptions,
@@ -62,12 +62,14 @@ pub fn solve(
         let f = &out[0];
         let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
         residuals.push(rel);
+        // As in the anderson driver, `mixed` is back-filled below so it
+        // describes the update that produced this step's next iterate.
         steps.push(SolveStep {
             iter: k,
             rel_residual: rel,
             elapsed: t0.elapsed(),
             fevals: k + 1,
-            mixed: anderson_active && k > 0,
+            mixed: false,
         });
         if rel < opts.tol {
             converged = true;
@@ -83,9 +85,10 @@ pub fn solve(
         if anderson_active {
             hist.push(z.f32s()?, f.f32s()?);
             let (xh, fh, mask) = hist.tensors()?;
-            let mixed =
+            let update =
                 engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-            z = mixed[0].clone().reshaped(meta.latent_shape(batch))?;
+            z = update[0].clone().reshaped(meta.latent_shape(batch))?;
+            steps.last_mut().expect("step recorded above").mixed = true;
         } else {
             z = f.clone();
         }

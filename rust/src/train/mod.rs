@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::{Batcher, Dataset};
 use crate::infer;
 use crate::model::ParamSet;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::solver::{self, SolveOptions, SolverKind};
 
 /// Which backward-pass artifact to use.
@@ -109,12 +109,12 @@ impl TrainReport {
 
 /// The DEQ trainer.
 pub struct Trainer<'e> {
-    engine: &'e Engine,
+    engine: &'e dyn Backend,
     cfg: TrainConfig,
 }
 
 impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Self> {
+    pub fn new(engine: &'e dyn Backend, cfg: TrainConfig) -> Result<Self> {
         // Fail fast if the artifacts for this config are missing.
         engine.manifest().entry(cfg.backward.entry(), cfg.batch)?;
         engine.manifest().entry("encode", cfg.batch)?;
@@ -346,7 +346,7 @@ impl<'e> Trainer<'e> {
 }
 
 /// Default training config from the manifest + a solver kind.
-pub fn default_config(engine: &Engine, kind: SolverKind, epochs: usize) -> TrainConfig {
+pub fn default_config(engine: &dyn Backend, kind: SolverKind, epochs: usize) -> TrainConfig {
     let mut solver = SolveOptions::from_manifest(engine, kind);
     // Training solves are capped at 30 evaluations (Kolter et al.'s
     // reference uses 25-30): once the trained cell drifts toward the edge

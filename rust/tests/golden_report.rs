@@ -1,0 +1,94 @@
+//! Golden-trace regression tests for the solver report JSON format.
+//!
+//! Experiment outputs (residual traces, solve summaries) serialize through
+//! `SolveReport::to_json` / `util::json::to_string`.  These tests pin the
+//! exact byte-level format — key order (sorted), number rendering, nesting
+//! — so downstream tooling that parses result files can't silently break.
+//! Fixture values are dyadic (0.25, 0.5, 1.5 …) so f32→f64→text→f64→f32
+//! round-trips are exact.
+
+use std::time::Duration;
+
+use deq_anderson::runtime::HostTensor;
+use deq_anderson::solver::{SolveReport, SolveStep, SolverKind};
+use deq_anderson::util::json;
+
+fn fixture() -> SolveReport {
+    SolveReport {
+        kind: SolverKind::Anderson,
+        converged: true,
+        steps: vec![
+            SolveStep {
+                iter: 0,
+                rel_residual: 1.0,
+                elapsed: Duration::from_secs_f64(0.25),
+                fevals: 1,
+                mixed: true,
+            },
+            SolveStep {
+                iter: 1,
+                rel_residual: 0.125,
+                elapsed: Duration::from_secs_f64(0.5),
+                fevals: 2,
+                mixed: false,
+            },
+        ],
+        z_star: HostTensor::f32(vec![2], vec![1.5, -2.0]).unwrap(),
+    }
+}
+
+/// The pinned wire format.  If this test fails because of an intentional
+/// format change, bump the experiment docs and update the string — never
+/// regenerate it blindly.
+const GOLDEN: &str = "{\"converged\":true,\"kind\":\"anderson\",\"steps\":[\
+{\"elapsed_s\":0.25,\"fevals\":1,\"iter\":0,\"mixed\":true,\"rel_residual\":1},\
+{\"elapsed_s\":0.5,\"fevals\":2,\"iter\":1,\"mixed\":false,\"rel_residual\":0.125}\
+],\"z_star\":{\"data\":[1.5,-2],\"shape\":[2]}}";
+
+#[test]
+fn report_serializes_to_golden_string() {
+    let text = json::to_string(&fixture().to_json());
+    assert_eq!(text, GOLDEN);
+}
+
+#[test]
+fn golden_string_parses_back_to_report() {
+    let v = json::parse(GOLDEN).unwrap();
+    let rep = SolveReport::from_json(&v).unwrap();
+    assert_eq!(rep.kind, SolverKind::Anderson);
+    assert!(rep.converged);
+    assert_eq!(rep.iters(), 2);
+    assert_eq!(rep.steps[0].iter, 0);
+    assert_eq!(rep.steps[0].rel_residual, 1.0);
+    assert_eq!(rep.steps[0].elapsed, Duration::from_secs_f64(0.25));
+    assert_eq!(rep.steps[0].fevals, 1);
+    assert!(rep.steps[0].mixed);
+    assert!(!rep.steps[1].mixed);
+    assert_eq!(rep.z_star.shape, vec![2]);
+    assert_eq!(rep.z_star.f32s().unwrap(), &[1.5, -2.0]);
+}
+
+#[test]
+fn roundtrip_is_identity_on_the_wire() {
+    // serialize → parse → serialize must be byte-stable.
+    let once = json::to_string(&fixture().to_json());
+    let rep = SolveReport::from_json(&json::parse(&once).unwrap()).unwrap();
+    let twice = json::to_string(&rep.to_json());
+    assert_eq!(once, twice);
+}
+
+#[test]
+fn empty_report_roundtrips() {
+    let rep = SolveReport {
+        kind: SolverKind::Forward,
+        converged: false,
+        steps: vec![],
+        z_star: HostTensor::f32(vec![0], vec![]).unwrap(),
+    };
+    let text = json::to_string(&rep.to_json());
+    let back = SolveReport::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.kind, SolverKind::Forward);
+    assert!(!back.converged);
+    assert_eq!(back.iters(), 0);
+    assert!(back.z_star.is_empty());
+}

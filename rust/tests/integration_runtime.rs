@@ -1,48 +1,29 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
-//!
-//! These need `make artifacts` to have run; they are skipped (not failed)
-//! when `artifacts/manifest.json` is absent so `cargo test` stays usable
-//! in a fresh checkout.
+//! Integration tests over the runtime layer, hermetic by construction:
+//! they run against whatever [`Backend`] `backend_from_dir` selects — the
+//! PJRT engine when AOT artifacts are present (and the `pjrt` feature is
+//! on), the pure-Rust `NativeEngine` otherwise.  Nothing here skips.
 
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use deq_anderson::model::ParamSet;
 use deq_anderson::native;
-use deq_anderson::runtime::{Engine, HostTensor};
+use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
 use deq_anderson::solver::{self, SolveOptions, SolverKind};
 use deq_anderson::util::rng::Rng;
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+fn backend() -> &'static Arc<dyn Backend> {
+    static B: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    B.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        backend_from_dir(dir).expect("backend selection never fails in auto mode")
+    })
 }
 
-fn engine() -> Option<&'static Engine> {
-    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
-    ENGINE
-        .get_or_init(|| {
-            if artifacts_dir().join("manifest.json").exists() {
-                Some(Engine::new(artifacts_dir()).expect("engine"))
-            } else {
-                eprintln!("[skip] artifacts not built");
-                None
-            }
-        })
-        .as_ref()
-}
-
-macro_rules! require_engine {
-    () => {
-        match engine() {
-            Some(e) => e,
-            None => return,
-        }
-    };
-}
-
+#[cfg(feature = "pjrt")]
 #[test]
 fn literal_roundtrip_f32_i32() {
-    // Tensor ↔ literal conversion needs the xla shared lib: test here.
+    // Tensor ↔ literal conversion (vendored stub or real bindings).
     let t = HostTensor::f32(vec![2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
     let lit = t.to_literal().unwrap();
     let back = HostTensor::from_literal(&lit).unwrap();
@@ -55,11 +36,25 @@ fn literal_roundtrip_f32_i32() {
 }
 
 #[test]
+fn backend_selection_is_hermetic() {
+    let b = backend();
+    assert!(!b.platform().is_empty());
+    assert!(!b.manifest().entries.is_empty());
+    // The serving entry points every coordinator path relies on exist.
+    for name in ["encode", "cell_step", "anderson_update", "classify"] {
+        assert!(
+            !b.manifest().batches_for(name).is_empty(),
+            "missing entry '{name}'"
+        );
+    }
+}
+
+#[test]
 fn manifest_and_params_load() {
-    let e = require_engine!();
+    let e = backend();
     let m = e.manifest();
     assert!(m.model.param_count > 1000);
-    let p = ParamSet::load_init(m).unwrap();
+    let p = e.init_params().unwrap();
     assert_eq!(p.tensors.len(), m.params.len());
     assert!(p.all_finite());
     assert!(p.max_abs() > 0.0);
@@ -73,7 +68,7 @@ fn manifest_and_params_load() {
 
 #[test]
 fn engine_validates_shapes() {
-    let e = require_engine!();
+    let e = backend();
     // Wrong input count.
     let err = e.execute("anderson_update", 1, &[]).unwrap_err();
     assert!(format!("{err}").contains("expected 3 inputs"), "{err}");
@@ -91,10 +86,11 @@ fn engine_validates_shapes() {
 }
 
 #[test]
-fn anderson_artifact_matches_native_twin() {
-    // The L1 Pallas kernel and the pure-Rust solver implement the same
-    // math; cross-validate on random windows, per batch element.
-    let e = require_engine!();
+fn anderson_update_matches_native_reference() {
+    // THE parity contract: whatever backend serves `anderson_update`, its
+    // output must match the reference math in native::AndersonState on
+    // identical windows, per batch element.
+    let e = backend();
     let m = e.manifest().solver.window;
     let n = e.manifest().model.latent_dim();
     let (beta, lam) = (e.manifest().solver.beta, e.manifest().solver.lam);
@@ -121,19 +117,22 @@ fn anderson_artifact_matches_native_twin() {
             let off = (b * m + i) * n;
             st.push(&xh[off..off + n], &fh[off..off + n]);
         }
-        let (z_nat, _a_nat) = st.mix().unwrap();
+        let (z_nat, a_nat) = st.mix().unwrap();
         for (x, y) in z_art[b * n..(b + 1) * n].iter().zip(&z_nat) {
             assert!((x - y).abs() < 2e-2, "b={b}: {x} vs {y}");
         }
         let asum: f32 = a_art[b * m..(b + 1) * m].iter().sum();
         assert!((asum - 1.0).abs() < 1e-3, "alpha sum {asum}");
+        for (x, y) in a_art[b * m..(b + 1) * m].iter().zip(&a_nat) {
+            assert!((x - y).abs() < 2e-2, "b={b} alpha: {x} vs {y}");
+        }
     }
 }
 
 #[test]
 fn anderson_warmup_mask_single_slot_is_forward() {
     // mask = [1,0,...] with beta=1 must return exactly fhist[0].
-    let e = require_engine!();
+    let e = backend();
     let m = e.manifest().solver.window;
     let n = e.manifest().model.latent_dim();
     let mut rng = Rng::new(3);
@@ -161,8 +160,8 @@ fn anderson_warmup_mask_single_slot_is_forward() {
 #[test]
 fn cell_step_residual_consistency() {
     // The fused residual outputs must match norms recomputed on the host.
-    let e = require_engine!();
-    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let e = backend();
+    let p = e.init_params().unwrap();
     let meta = e.manifest().model.clone();
     let batch = 1;
     let mut rng = Rng::new(9);
@@ -196,8 +195,8 @@ fn cell_step_residual_consistency() {
 #[test]
 fn forward_solve_k_consistent_with_cell_steps() {
     // K fused steps == K sequential cell_step calls (same final iterate).
-    let e = require_engine!();
-    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let e = backend();
+    let p = e.init_params().unwrap();
     let meta = e.manifest().model.clone();
     let k = e.manifest().solver.fused_steps;
     let batch = 1;
@@ -216,8 +215,7 @@ fn forward_solve_k_consistent_with_cell_steps() {
         let out = e.execute("cell_step", batch, &inputs).unwrap();
         z = out[0].clone();
     }
-    // Fused: forward_solve_k runs k-1 loop iterations then one tracked
-    // step, i.e. k evaluations total, returning z_k.
+    // Fused: k evaluations total, returning z_k.
     let mut inputs = p.tensors.clone();
     inputs.push(HostTensor::zeros(meta.latent_shape(batch)));
     inputs.push(xf);
@@ -234,8 +232,8 @@ fn forward_solve_k_consistent_with_cell_steps() {
 
 #[test]
 fn solvers_reach_tolerance_on_init_params() {
-    let e = require_engine!();
-    let p = ParamSet::load_init(e.manifest()).unwrap();
+    let e = backend();
+    let p = e.init_params().unwrap();
     let meta = e.manifest().model.clone();
     let batch = 8;
     // Encode a random image batch.
@@ -253,9 +251,9 @@ fn solvers_reach_tolerance_on_init_params() {
         let opts = SolveOptions {
             tol: 1e-2,
             max_iter: 80,
-            ..SolveOptions::from_manifest(e, kind)
+            ..SolveOptions::from_manifest(e.as_ref(), kind)
         };
-        let rep = solver::solve(e, &p.tensors, &xf, &opts).unwrap();
+        let rep = solver::solve(e.as_ref(), &p.tensors, &xf, &opts).unwrap();
         assert!(
             rep.converged,
             "{}: residual {:.2e} after {} iters",
@@ -269,14 +267,26 @@ fn solvers_reach_tolerance_on_init_params() {
         for w in rep.steps.windows(2) {
             assert!(w[0].elapsed <= w[1].elapsed);
         }
+        // `mixed` flag semantics: the terminal (converged) step takes f
+        // directly, so it is never mixed; for Anderson every earlier step
+        // is (including step 0, whose output rides the one-slot window).
+        assert!(!rep.steps.last().unwrap().mixed);
+        if kind == SolverKind::Anderson {
+            for s in &rep.steps[..rep.steps.len() - 1] {
+                assert!(s.mixed, "anderson step {} not marked mixed", s.iter);
+            }
+        }
+        if kind == SolverKind::Forward {
+            assert!(rep.steps.iter().all(|s| !s.mixed));
+        }
     }
 }
 
 #[test]
 fn anderson_uses_fewer_fevals_than_forward() {
-    // The paper's core claim, measured on the real artifacts at init.
-    let e = require_engine!();
-    let p = ParamSet::load_init(e.manifest()).unwrap();
+    // The paper's core claim, measured on the selected backend at init.
+    let e = backend();
+    let p = e.init_params().unwrap();
     let meta = e.manifest().model.clone();
     let batch = 8;
     let mut rng = Rng::new(23);
@@ -294,9 +304,9 @@ fn anderson_uses_fewer_fevals_than_forward() {
             tol: 2e-3,
             max_iter: 120,
             fused_forward: false,
-            ..SolveOptions::from_manifest(e, kind)
+            ..SolveOptions::from_manifest(e.as_ref(), kind)
         };
-        solver::solve(e, &p.tensors, &xf, &opts).unwrap()
+        solver::solve(e.as_ref(), &p.tensors, &xf, &opts).unwrap()
     };
     let fw = solve(SolverKind::Forward);
     let an = solve(SolverKind::Anderson);
@@ -319,4 +329,22 @@ fn anderson_uses_fewer_fevals_than_forward() {
         "anderson {a_fevals} fevals vs forward {}",
         fw.fevals()
     );
+}
+
+#[test]
+fn backend_records_execution_stats() {
+    let e = backend();
+    let m = e.manifest().solver.window;
+    let n = e.manifest().model.latent_dim();
+    let inputs = [
+        HostTensor::zeros(vec![1, m, n]),
+        HostTensor::zeros(vec![1, m, n]),
+        HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+    ];
+    e.execute("anderson_update", 1, &inputs).unwrap();
+    let stats = e.stats();
+    assert!(stats
+        .iter()
+        .any(|((name, batch), s)| name == "anderson_update" && *batch == 1 && s.calls >= 1));
+    assert!(e.stats_report().contains("anderson_update"));
 }

@@ -1,45 +1,29 @@
-//! End-to-end training + inference integration tests (real artifacts).
-//! Skipped when artifacts are absent.
+//! End-to-end training + inference integration tests, hermetic: they run
+//! on whatever backend `backend_from_dir` selects (the pure-Rust
+//! `NativeEngine` when AOT artifacts are absent), so nothing here skips.
 
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use deq_anderson::data;
 use deq_anderson::infer;
-use deq_anderson::model::ParamSet;
-use deq_anderson::runtime::Engine;
+use deq_anderson::runtime::{backend_from_dir, Backend};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::train::{default_config, Backward, Trainer};
 
-fn engine() -> Option<&'static Engine> {
-    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
-    ENGINE
-        .get_or_init(|| {
-            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-            if dir.join("manifest.json").exists() {
-                Some(Engine::new(dir).expect("engine"))
-            } else {
-                eprintln!("[skip] artifacts not built");
-                None
-            }
-        })
-        .as_ref()
-}
-
-macro_rules! require_engine {
-    () => {
-        match engine() {
-            Some(e) => e,
-            None => return,
-        }
-    };
+fn backend() -> &'static Arc<dyn Backend> {
+    static B: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    B.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        backend_from_dir(dir).expect("backend")
+    })
 }
 
 #[test]
 fn one_epoch_reduces_loss_and_updates_params() {
-    let e = require_engine!();
+    let e = backend().as_ref();
     let (train, test, _) = data::load_auto(128, 32, 1);
-    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let init = e.init_params().unwrap();
     let mut cfg = default_config(e, SolverKind::Anderson, 2);
     cfg.eval_every = 0;
     let rep = Trainer::new(e, cfg)
@@ -67,9 +51,9 @@ fn one_epoch_reduces_loss_and_updates_params() {
 
 #[test]
 fn neumann_backward_also_trains() {
-    let e = require_engine!();
+    let e = backend().as_ref();
     let (train, test, _) = data::load_auto(64, 32, 2);
-    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let init = e.init_params().unwrap();
     let mut cfg = default_config(e, SolverKind::Anderson, 2);
     cfg.backward = Backward::Neumann;
     cfg.eval_every = 0;
@@ -83,9 +67,9 @@ fn neumann_backward_also_trains() {
 
 #[test]
 fn explicit_baseline_trains() {
-    let e = require_engine!();
+    let e = backend().as_ref();
     let (train, test, _) = data::load_auto(64, 32, 3);
-    let init = ParamSet::load_init(e.manifest()).unwrap();
+    let init = e.init_params().unwrap();
     let mut cfg = default_config(e, SolverKind::Anderson, 2);
     cfg.eval_every = 2;
     let rep = Trainer::new(e, cfg)
@@ -99,8 +83,8 @@ fn explicit_baseline_trains() {
 
 #[test]
 fn inference_pads_to_buckets() {
-    let e = require_engine!();
-    let params = ParamSet::load_init(e.manifest()).unwrap();
+    let e = backend().as_ref();
+    let params = e.init_params().unwrap();
     let (data, _, _) = data::load_auto(40, 8, 4);
     let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
     // Sizes that are NOT compiled buckets must still work via padding.
@@ -121,10 +105,10 @@ fn inference_pads_to_buckets() {
 #[test]
 fn padding_does_not_change_predictions() {
     // The same sample must classify identically at batch 1 and inside a
-    // padded bucket (guards against cross-sample leakage; GroupNorm is
-    // per-sample so this must hold exactly up to fp noise).
-    let e = require_engine!();
-    let params = ParamSet::load_init(e.manifest()).unwrap();
+    // padded bucket (guards against cross-sample leakage; both the native
+    // cell and GroupNorm are per-sample so this must hold up to fp noise).
+    let e = backend().as_ref();
+    let params = e.init_params().unwrap();
     let (data, _, _) = data::load_auto(8, 8, 5);
     let opts = SolveOptions::from_manifest(e, SolverKind::Forward);
     let (img1, _) = data.gather(&[0]);
@@ -138,8 +122,8 @@ fn padding_does_not_change_predictions() {
 
 #[test]
 fn evaluate_runs_on_test_set() {
-    let e = require_engine!();
-    let params = ParamSet::load_init(e.manifest()).unwrap();
+    let e = backend().as_ref();
+    let params = e.init_params().unwrap();
     let (_, test, _) = data::load_auto(32, 64, 6);
     let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
     let acc = infer::evaluate(e, &params, &test, 32, &opts).unwrap();

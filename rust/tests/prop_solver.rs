@@ -8,6 +8,7 @@ use deq_anderson::native::{
     self, maps::AffineMap, maps::TanhMap, AndersonOpts, AndersonState,
     FixedPointMap,
 };
+use deq_anderson::solver::anderson::History;
 use deq_anderson::solver::crossover;
 use deq_anderson::util::rng::Rng;
 
@@ -172,6 +173,107 @@ fn prop_crossover_consistency() {
                 last = t;
             }
         }
+    });
+}
+
+#[test]
+fn prop_history_and_native_state_agree_on_ring_layout() {
+    // The coordinator's batched History and the native AndersonState must
+    // place identical push sequences into identical ring slots (slot =
+    // push_count mod m) and agree on the valid count / mask — including
+    // under wraparound, where the oldest slot is overwritten first.
+    for_seeds(25, |seed| {
+        let mut rng = Rng::new(seed);
+        let m = 1 + (seed as usize % 6);
+        let n = 3 + (seed as usize % 10);
+        let pushes = 1 + (seed as usize % (3 * m));
+        let mut hist = History::new(1, m, n);
+        let mut st = AndersonState::new(m, n, 1.0, 1e-6);
+        for _ in 0..pushes {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            hist.push(&z, &f);
+            st.push(&z, &f);
+        }
+        assert_eq!(hist.valid(), st.valid(), "seed={seed}");
+        let (xh, fh, mask) = hist.tensors().unwrap();
+        assert_eq!(
+            xh.f32s().unwrap(),
+            st.xs_raw(),
+            "seed={seed} m={m} n={n} pushes={pushes}: x ring diverged"
+        );
+        assert_eq!(fh.f32s().unwrap(), st.fs_raw(), "seed={seed}: f ring diverged");
+        // Mask is a 1-prefix of length valid().
+        let mv = mask.f32s().unwrap();
+        for (i, &v) in mv.iter().enumerate() {
+            let want = if i < st.valid() { 1.0 } else { 0.0 };
+            assert_eq!(v, want, "seed={seed} slot {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_padded_history_matches_native_window_prefix() {
+    // A runtime window m padded into `slots` > m compiled slots must hold
+    // exactly the native m-ring in its first m slots, zeros elsewhere.
+    for_seeds(15, |seed| {
+        let mut rng = Rng::new(seed ^ 0xA11CE);
+        let m = 1 + (seed as usize % 4);
+        let slots = m + 1 + (seed as usize % 4);
+        let n = 4 + (seed as usize % 6);
+        let mut hist = History::with_padded_slots(1, m, slots, n);
+        let mut st = AndersonState::new(m, n, 1.0, 1e-6);
+        for _ in 0..(2 * m + 1) {
+            let z = rng.normal_vec(n, 1.0);
+            let f = rng.normal_vec(n, 1.0);
+            hist.push(&z, &f);
+            st.push(&z, &f);
+        }
+        let (xh, _, mask) = hist.tensors().unwrap();
+        let x = xh.f32s().unwrap();
+        assert_eq!(&x[..m * n], st.xs_raw(), "seed={seed}: ring prefix diverged");
+        assert!(
+            x[m * n..].iter().all(|&v| v == 0.0),
+            "seed={seed}: padded slots not zero"
+        );
+        let mv = mask.f32s().unwrap();
+        assert_eq!(mv.len(), slots);
+        assert!(mv[..m].iter().all(|&v| v == 1.0), "seed={seed}");
+        assert!(mv[m..].iter().all(|&v| v == 0.0), "seed={seed}");
+    });
+}
+
+#[test]
+fn prop_krylov_exactness_on_affine_maps() {
+    // With window ≥ dim + 1 and tiny regularization, Anderson on an
+    // affine map is GMRES in disguise: it must converge in at most
+    // dim + O(1) iterations (f32 rounding allows a small slack).
+    for_seeds(10, |seed| {
+        let n = 3 + (seed as usize % 6);
+        let rho = 0.75 + 0.05 * (seed % 3) as f32;
+        let map = AffineMap::random(n, rho, seed + 31);
+        let opts = AndersonOpts {
+            window: n + 2,
+            lam: 1e-8,
+            tol: 1e-4,
+            max_iter: 60,
+            ..Default::default()
+        };
+        let tr = native::solve_anderson(&map, &vec![0.0; n], opts).unwrap();
+        assert!(tr.converged, "seed={seed} n={n}: did not converge");
+        assert!(
+            tr.iters() <= n + 6,
+            "seed={seed} n={n}: {} iters breaks Krylov exactness",
+            tr.iters()
+        );
+        let sol = map.solution().expect("small affine maps have solutions");
+        let err: f32 = tr
+            .z
+            .iter()
+            .zip(&sol)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-2, "seed={seed}: err={err}");
     });
 }
 

@@ -1,0 +1,260 @@
+//! API stub of the `xla` / PJRT Rust bindings.
+//!
+//! The offline build environment cannot vendor the real XLA bindings, so
+//! this crate mirrors exactly the API surface `deq-anderson` compiles
+//! against when the `pjrt` feature is enabled:
+//!
+//!   * [`Literal`] is a real host-side container (shape + typed data), so
+//!     tensor construction and round-trips work even in stub builds;
+//!   * the PJRT client / compile / execute entry points return a uniform
+//!     "bindings unavailable" error at *runtime*.
+//!
+//! To execute actual HLO artifacts, patch this dependency with the real
+//! bindings, e.g. in the workspace `Cargo.toml`:
+//!
+//! ```toml
+//! [patch."..."]
+//! xla = { path = "/path/to/real/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Stub error type (compatible with `anyhow` contexts).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} requires the real xla/PJRT bindings \
+         (patch the `xla` dependency; see rust/vendor/xla)"
+    )))
+}
+
+/// Element types the coordinator exchanges with PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A literal's shape: array or tuple.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host scalar types a [`Literal`] can hold.
+pub trait NativeType: sealed::Sealed + Copy {
+    fn element_type() -> ElementType;
+    fn store(data: &[Self]) -> Storage;
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+
+    fn store(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+
+    fn store(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// Host literal: shape + typed data (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Storage,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Self {
+        Self { dims: vec![v.len() as i64], data: T::store(v) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() as i64 {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Self { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        let ty = match self.data {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+        };
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty }))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.data)
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Arguments accepted by [`PjRtLoadedExecutable::execute`].
+pub trait AsLiteral {}
+
+impl AsLiteral for Literal {}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsLiteral>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_container_works() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        match r.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[2, 2]);
+                assert_eq!(a.ty(), ElementType::F32);
+            }
+            Shape::Tuple(_) => panic!("expected array"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
