@@ -4,7 +4,8 @@
 //! "running inferences faster" claim.
 //!
 //!     cargo run --release --example serve_batch -- \
-//!         [--clients 8] [--requests 64] [--solver anderson] [--max-wait-ms 10]
+//!         [--clients 8] [--requests 64] [--solver anderson] \
+//!         [--sched iteration|batch] [--max-wait-ms 10]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -14,7 +15,7 @@ use anyhow::Result;
 use deq_anderson::data;
 use deq_anderson::metrics::Stats;
 use deq_anderson::runtime::{backend_from_dir, Backend};
-use deq_anderson::server::{Router, RouterConfig};
+use deq_anderson::server::{Router, RouterConfig, SchedMode};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::util::cli::Args;
 
@@ -25,10 +26,13 @@ fn main() -> Result<()> {
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
         .expect("bad --solver");
 
+    let mode = SchedMode::parse(&args.str_or("sched", "iteration"))
+        .expect("bad --sched");
     let engine = backend_from_dir(args.str_or("artifacts", "artifacts"))?;
     let params = Arc::new(engine.init_params()?);
     let cfg = RouterConfig {
         solver: SolveOptions::from_manifest(engine.as_ref(), kind),
+        mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: 4096,
     };
@@ -46,8 +50,9 @@ fn main() -> Result<()> {
     let dataset = Arc::new(dataset);
     let router = Arc::new(Router::start(engine, params, cfg)?);
     println!(
-        "serve_batch: dataset={ds} solver={} clients={clients} requests={requests} buckets={buckets:?}",
-        kind.name()
+        "serve_batch: dataset={ds} solver={} sched={} clients={clients} requests={requests} buckets={buckets:?}",
+        kind.name(),
+        mode.name()
     );
 
     let t0 = Instant::now();

@@ -8,7 +8,7 @@ fn main() {
     // PJRT over real artifacts when available, hermetic native otherwise.
     let engine = backend_from_dir("artifacts").expect("backend");
     let t0 = std::time::Instant::now();
-    experiments::run("fig1", Some(engine.as_ref()), &ExpOptions::smoke())
+    experiments::run("fig1", Some(&engine), &ExpOptions::smoke())
         .expect("fig1");
     println!("fig1 regenerated in {:.1?}", t0.elapsed());
 }

@@ -9,5 +9,5 @@ fn main() {
     let engine = backend_from_dir("artifacts").expect("backend");
     let mut opts = ExpOptions::smoke();
     opts.epochs = 3;
-    experiments::run("fig5", Some(engine.as_ref()), &opts).expect("fig5");
+    experiments::run("fig5", Some(&engine), &opts).expect("fig5");
 }

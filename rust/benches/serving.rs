@@ -1,0 +1,93 @@
+//! Serving bench: iteration-level continuous batching vs the
+//! batch-granular baseline at smoke scale, with a machine-readable JSON
+//! summary for trend tracking (the CI `bench-smoke` job uploads it).
+//!
+//!     cargo bench --bench serving -- [--requests 48] [--stiff-frac 0.5] \
+//!         [--out BENCH_serving.json]
+
+use std::sync::Arc;
+
+use deq_anderson::experiments::serving::{drive, mixed_traffic, ModeOutcome};
+use deq_anderson::runtime::backend_from_dir;
+use deq_anderson::server::SchedMode;
+use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::util::bench;
+use deq_anderson::util::cli::Args;
+use deq_anderson::util::json::{self, Json};
+
+fn mode_json(name: &str, o: &ModeOutcome) -> Json {
+    json::obj(vec![
+        ("mode", json::s(name)),
+        ("p50_ms", json::num(o.p50.as_secs_f64() * 1e3)),
+        ("p95_ms", json::num(o.p95.as_secs_f64() * 1e3)),
+        ("served", json::num(o.served as f64)),
+        ("throughput_rps", json::num(o.throughput())),
+        ("total_fevals", json::num(o.total_fevals as f64)),
+        ("total_iters", json::num(o.total_iters as f64)),
+    ])
+}
+
+fn main() {
+    let args = Args::from_env();
+    bench::header("serving — iteration-level vs batch-granular");
+    let requests = args.usize_or("requests", 48);
+    let stiff_frac = args.f32_or("stiff-frac", 0.5);
+    let out_path = args.str_or("out", "BENCH_serving.json");
+
+    // PJRT over real artifacts when available, hermetic native otherwise.
+    let engine = backend_from_dir("artifacts").expect("backend");
+    let params = Arc::new(engine.init_params().expect("params"));
+    let solver = SolveOptions {
+        tol: 1e-4,
+        max_iter: 80,
+        ..SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson)
+    };
+    let images = mixed_traffic(requests, stiff_frac, 1);
+
+    let base = drive(&engine, &params, &images, SchedMode::BatchGranular, &solver)
+        .expect("batch-granular drive");
+    let sched =
+        drive(&engine, &params, &images, SchedMode::IterationLevel, &solver)
+            .expect("iteration-level drive");
+    let mismatches = base
+        .predictions
+        .iter()
+        .zip(&sched.predictions)
+        .filter(|(a, b)| a != b)
+        .count();
+
+    for (name, o) in [("batch-granular", &base), ("iteration-level", &sched)] {
+        println!(
+            "{name:<16} served={} fevals={} p50={:.1}ms p95={:.1}ms {:.0} req/s",
+            o.served,
+            o.total_fevals,
+            o.p50.as_secs_f64() * 1e3,
+            o.p95.as_secs_f64() * 1e3,
+            o.throughput()
+        );
+    }
+    println!(
+        "fevals saved: {} ({} → {}), occupancy {:.2}, prediction mismatches {mismatches}",
+        base.total_fevals.saturating_sub(sched.total_fevals),
+        base.total_fevals,
+        sched.total_fevals,
+        sched.occupancy
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("serving")),
+        (
+            "modes",
+            Json::Arr(vec![
+                mode_json("batch-granular", &base),
+                mode_json("iteration-level", &sched),
+            ]),
+        ),
+        ("prediction_mismatches", json::num(mismatches as f64)),
+        ("requests", json::num(requests as f64)),
+        ("stiff_frac", json::num(stiff_frac as f64)),
+    ]);
+    std::fs::write(&out_path, json::to_string(&summary) + "\n")
+        .expect("write bench summary");
+    println!("wrote {out_path}");
+}

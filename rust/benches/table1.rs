@@ -9,7 +9,7 @@ fn main() {
     // PJRT over real artifacts when available, hermetic native otherwise.
     let engine = backend_from_dir("artifacts").expect("backend");
     let t0 = std::time::Instant::now();
-    experiments::run("table1", Some(engine.as_ref()), &ExpOptions::smoke())
+    experiments::run("table1", Some(&engine), &ExpOptions::smoke())
         .expect("table1");
     println!("table1 (smoke) regenerated in {:.1?}", t0.elapsed());
 }

@@ -19,9 +19,11 @@ pub mod fig2;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod serving;
 pub mod table1;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -64,24 +66,34 @@ impl ExpOptions {
     }
 }
 
-/// All experiment ids, in paper order.
-pub const ALL: &[&str] = &["table1", "fig1", "fig2", "fig5", "fig6", "fig7", "ablation"];
+/// All experiment ids, in paper order (plus the serving scenario).
+pub const ALL: &[&str] =
+    &["table1", "fig1", "fig2", "fig5", "fig6", "fig7", "ablation", "serving"];
 
 /// Dispatch by id. `engine` may be None only for fig2/fig6 (native-only).
-pub fn run(id: &str, engine: Option<&dyn Backend>, opts: &ExpOptions) -> Result<()> {
+/// The engine rides in an `Arc` because the serving scenario spawns the
+/// router's worker thread over it.
+pub fn run(
+    id: &str,
+    engine: Option<&Arc<dyn Backend>>,
+    opts: &ExpOptions,
+) -> Result<()> {
     match id {
-        "table1" => table1::run(need(engine)?, opts),
-        "fig1" => fig1::run(need(engine)?, opts),
+        "table1" => table1::run(need(engine)?.as_ref(), opts),
+        "fig1" => fig1::run(need(engine)?.as_ref(), opts),
         "fig2" => fig2::run(opts),
-        "fig5" => fig5::run(need(engine)?, opts),
+        "fig5" => fig5::run(need(engine)?.as_ref(), opts),
         "fig6" => fig6::run(opts),
-        "fig7" => fig7::run(need(engine)?, opts),
-        "ablation" => ablation::run(need(engine)?, opts),
+        "fig7" => fig7::run(need(engine)?.as_ref(), opts),
+        "ablation" => ablation::run(need(engine)?.as_ref(), opts),
+        "serving" => serving::run(need(engine)?, opts),
         other => bail!("unknown experiment '{other}' (have {ALL:?})"),
     }
 }
 
-fn need<'a>(engine: Option<&'a dyn Backend>) -> Result<&'a dyn Backend> {
+fn need<'a>(
+    engine: Option<&'a Arc<dyn Backend>>,
+) -> Result<&'a Arc<dyn Backend>> {
     engine.ok_or_else(|| {
         anyhow::anyhow!("this experiment needs an execution backend")
     })

@@ -15,7 +15,16 @@ use crate::solver::{self, SolveOptions};
 pub struct InferResult {
     pub logits: Vec<Vec<f32>>, // per sample
     pub predictions: Vec<usize>,
+    /// Solve-loop iterations (what the whole batch waited for).
     pub solver_iters: usize,
+    /// Cumulative cell evaluations of a lane active the whole solve.
+    pub solver_fevals: usize,
+    /// Per-sample iterations until each lane froze (lane order).
+    pub sample_iters: Vec<usize>,
+    /// Per-sample cell evaluations actually charged.
+    pub sample_fevals: Vec<usize>,
+    /// Per-sample converged flags.
+    pub sample_converged: Vec<bool>,
     pub solver_residual: f32,
     pub latency: Duration,
 }
@@ -36,6 +45,41 @@ pub fn cross_entropy(row: &[f32], label: usize) -> f32 {
     lse - row[label]
 }
 
+/// Zero-pad `count` flat NHWC images up to `bucket` rows as the image
+/// tensor every dispatch path shares (offline inference, the explicit
+/// baseline, and the serving scheduler's admissions).
+pub fn padded_image_tensor(
+    meta: &crate::runtime::ModelMeta,
+    images: &[f32],
+    count: usize,
+    bucket: usize,
+) -> Result<HostTensor> {
+    let dim = meta.image_dim();
+    anyhow::ensure!(images.len() == count * dim, "image buffer size mismatch");
+    anyhow::ensure!(count <= bucket, "batch {count} exceeds bucket {bucket}");
+    let mut buf = images.to_vec();
+    buf.resize(bucket * dim, 0.0);
+    HostTensor::f32(meta.image_shape(bucket), buf)
+}
+
+/// Encode `count` images through the smallest compiled bucket that fits:
+/// pad → params + x_img → `encode`.  Returns the feature tensor and the
+/// bucket it rode.
+pub fn encode_padded(
+    engine: &dyn Backend,
+    params: &ParamSet,
+    images: &[f32],
+    count: usize,
+) -> Result<(HostTensor, usize)> {
+    let meta = &engine.manifest().model;
+    let bucket = engine.manifest().bucket_for("encode", count)?;
+    let x_img = padded_image_tensor(meta, images, count, bucket)?;
+    let mut enc_in: Vec<HostTensor> = params.tensors.clone();
+    enc_in.push(x_img);
+    let x_feat = engine.execute("encode", bucket, &enc_in)?.remove(0);
+    Ok((x_feat, bucket))
+}
+
 /// Run inference on `images` (flat NHWC, `count` samples).  Pads up to the
 /// smallest compiled batch bucket and slices the results back.
 pub fn infer(
@@ -46,20 +90,8 @@ pub fn infer(
     opts: &SolveOptions,
 ) -> Result<InferResult> {
     let meta = engine.manifest().model.clone();
-    let dim = meta.image_dim();
-    anyhow::ensure!(images.len() == count * dim, "image buffer size mismatch");
-    let bucket = engine.manifest().bucket_for("encode", count)?;
-    anyhow::ensure!(count <= bucket, "batch {count} exceeds largest bucket {bucket}");
-
     let t0 = Instant::now();
-    // Pad with zeros to the bucket.
-    let mut buf = images.to_vec();
-    buf.resize(bucket * dim, 0.0);
-    let x_img = HostTensor::f32(meta.image_shape(bucket), buf)?;
-
-    let mut enc_in: Vec<HostTensor> = params.tensors.clone();
-    enc_in.push(x_img);
-    let x_feat = engine.execute("encode", bucket, &enc_in)?.remove(0);
+    let (x_feat, bucket) = encode_padded(engine, params, images, count)?;
 
     let report = solver::solve(engine, &params.tensors, &x_feat, opts)?;
 
@@ -74,16 +106,31 @@ pub fn infer(
         .collect();
     let predictions = logits.iter().map(|r| argmax(r)).collect();
 
+    // Per-sample traces cover the padded bucket; slice to real samples.
+    let take = |v: &[usize]| -> Vec<usize> {
+        v.iter().take(count).copied().collect()
+    };
     Ok(InferResult {
         logits,
         predictions,
         solver_iters: report.iters(),
+        solver_fevals: report.fevals(),
+        sample_iters: take(&report.sample_iters),
+        sample_fevals: take(&report.sample_fevals),
+        sample_converged: report
+            .sample_converged
+            .iter()
+            .take(count)
+            .copied()
+            .collect(),
         solver_residual: report.final_residual(),
         latency: t0.elapsed(),
     })
 }
 
-/// Dataset accuracy with the DEQ path.
+/// Dataset accuracy with the DEQ path.  The final partial batch (when
+/// `data.len()` is not a multiple of `batch`) is evaluated through the
+/// same bucket-padding path, so accuracy covers the whole dataset.
 pub fn evaluate(
     engine: &dyn Backend,
     params: &ParamSet,
@@ -93,22 +140,26 @@ pub fn evaluate(
 ) -> Result<f32> {
     let mut correct = 0usize;
     let mut seen = 0usize;
-    let n_batches = data.len() / batch;
-    for b in 0..n_batches {
-        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+    let mut start = 0usize;
+    while start < data.len() {
+        let take = batch.min(data.len() - start);
+        let idx: Vec<usize> = (start..start + take).collect();
         let (imgs, labels) = data.gather(&idx);
-        let r = infer(engine, params, &imgs, batch, opts)?;
+        let r = infer(engine, params, &imgs, take, opts)?;
         for (p, l) in r.predictions.iter().zip(&labels) {
             if *p == *l as usize {
                 correct += 1;
             }
         }
-        seen += batch;
+        seen += take;
+        start += take;
     }
     Ok(correct as f32 / seen.max(1) as f32)
 }
 
-/// Dataset accuracy with the explicit baseline network.
+/// Dataset accuracy with the explicit baseline network.  Like
+/// [`evaluate`], the tail remainder rides a zero-padded bucket instead of
+/// being dropped.
 pub fn evaluate_explicit(
     engine: &dyn Backend,
     params: &ParamSet,
@@ -119,21 +170,24 @@ pub fn evaluate_explicit(
     let nc = meta.num_classes;
     let mut correct = 0usize;
     let mut seen = 0usize;
-    let n_batches = data.len() / batch;
-    for b in 0..n_batches {
-        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+    let mut start = 0usize;
+    while start < data.len() {
+        let take = batch.min(data.len() - start);
+        let idx: Vec<usize> = (start..start + take).collect();
         let (imgs, labels) = data.gather(&idx);
-        let x_img = HostTensor::f32(meta.image_shape(batch), imgs)?;
+        let bucket = engine.manifest().bucket_for("explicit_infer", take)?;
+        let x_img = padded_image_tensor(&meta, &imgs, take, bucket)?;
         let mut inputs: Vec<HostTensor> = params.tensors.clone();
         inputs.push(x_img);
-        let logits_t = engine.execute("explicit_infer", batch, &inputs)?.remove(0);
+        let logits_t = engine.execute("explicit_infer", bucket, &inputs)?.remove(0);
         let flat = logits_t.f32s()?;
-        for i in 0..batch {
+        for i in 0..take {
             if argmax(&flat[i * nc..(i + 1) * nc]) == labels[i] as usize {
                 correct += 1;
             }
         }
-        seen += batch;
+        seen += take;
+        start += take;
     }
     Ok(correct as f32 / seen.max(1) as f32)
 }

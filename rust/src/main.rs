@@ -3,9 +3,9 @@
 //! Subcommands:
 //!   train              train the DEQ (or explicit baseline) on CIFAR10(-like)
 //!   infer              classify a few samples, report solver stats
-//!   serve              start the dynamic-batching TCP inference server
+//!   serve              start the continuous-batching TCP inference server
 //!   experiment <id>    regenerate a paper table/figure (table1 fig1 fig2
-//!                      fig5 fig6 fig7, or `all`)
+//!                      fig5 fig6 fig7 ablation serving, or `all`)
 //!   sweep              native Anderson hyperparameter sweep (window/beta)
 //!   artifacts-check    validate the selected backend + numeric cross-check
 //!
@@ -27,7 +27,7 @@ use deq_anderson::metrics::fmt_duration;
 use deq_anderson::model::ParamSet;
 use deq_anderson::native::{self, maps::DeqLikeMap, AndersonOpts};
 use deq_anderson::runtime::{select_backend, Backend};
-use deq_anderson::server::{tcp, Router, RouterConfig};
+use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::train::{default_config, Backward, Trainer};
 use deq_anderson::util::cli::Args;
@@ -41,7 +41,9 @@ commands:
                     --checkpoint PATH --explicit
   infer             --n N --solver KIND [--checkpoint PATH]
   serve             --addr 127.0.0.1:7070 --solver KIND --max-wait-ms N
-  experiment ID     table1|fig1|fig2|fig5|fig6|fig7|all
+                    --sched iteration|batch (default iteration: lanes
+                    retire the moment their sample converges)
+  experiment ID     table1|fig1|fig2|fig5|fig6|fig7|ablation|serving|all
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
   artifacts-check
@@ -174,8 +176,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
         None => engine.init_params()?,
     });
+    let mode = SchedMode::parse(&args.str_or("sched", "iteration"))
+        .context("bad --sched (expected iteration|batch)")?;
     let cfg = RouterConfig {
         solver: SolveOptions::from_manifest(engine.as_ref(), kind),
+        mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: args.usize_or("queue-cap", 1024),
     };
@@ -189,6 +194,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     engine.warmup(&warm)?;
+    println!("[server] scheduling mode: {}", mode.name());
     let router = Arc::new(Router::start(engine, params, cfg)?);
     let addr = args.str_or("addr", "127.0.0.1:7070");
     tcp::serve_tcp(router, image_dim, &addr)
@@ -222,7 +228,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     for id in ids {
         println!("\n================ experiment {id} ================");
-        experiments::run(id, engine.as_deref(), &opts)?;
+        experiments::run(id, engine.as_ref(), &opts)?;
     }
     Ok(())
 }

@@ -109,6 +109,14 @@ impl AndersonState {
         self.count.min(self.m)
     }
 
+    /// Ring slot holding the newest pushed pair: `(count − 1) mod m`.
+    /// Because the ring fills slots 0..m in order before wrapping, this
+    /// index is always `< valid()`, so it is safe to address α by it.
+    pub fn newest_slot(&self) -> usize {
+        assert!(self.count >= 1, "newest_slot() before any push()");
+        (self.count - 1) % self.m
+    }
+
     /// Raw (m, n) iterate window — consumed by the stochastic variant.
     pub fn xs_raw(&self) -> &[f32] {
         &self.xs
@@ -155,9 +163,15 @@ impl AndersonState {
         let a = linalg::solve_spd(&h, nv, &ones)?;
         let sum: f32 = a.iter().sum();
         let alpha: Vec<f32> = if sum.abs() < 1e-30 {
-            // Degenerate window — fall back to plain forward iteration.
+            // Degenerate window — fall back to a plain forward step from
+            // the newest pair.  The previous `(count − 1) % min(m, nv)`
+            // index only named the right slot through the side condition
+            // nv == min(count, m); `newest_slot()` states the ring
+            // invariant directly (and the regression test pins it), so a
+            // future change to the fill rule can't silently turn this
+            // into a stale-slot read.
             let mut e = vec![0.0; nv];
-            e[(self.count - 1) % self.m.min(nv.max(1))] = 1.0;
+            e[self.newest_slot()] = 1.0;
             e
         } else {
             a.iter().map(|v| v / sum).collect()
@@ -320,6 +334,26 @@ mod tests {
             let s: f32 = alpha.iter().sum();
             assert!((s - 1.0).abs() < 1e-4, "sum={s}");
             assert_eq!(alpha.len(), st.valid());
+        }
+    }
+
+    #[test]
+    fn degenerate_fallback_targets_newest_slot() {
+        // Regression: the fallback index must name the slot of the pair
+        // pushed last — including under ring wraparound — and stay below
+        // valid() so it can address the α vector.  Pins the ring
+        // invariant `newest = (count − 1) % m` that the degenerate
+        // branch of mix() relies on.
+        let mut st = AndersonState::new(3, 2, 1.0, 1e-4);
+        for k in 1usize..=8 {
+            let pair = vec![k as f32; 2];
+            st.push(&pair, &pair);
+            assert_eq!(st.newest_slot(), (k - 1) % 3, "after push {k}");
+            assert!(st.newest_slot() < st.valid(), "slot must be valid");
+            // The named slot holds exactly the pair just pushed.
+            let s = st.newest_slot();
+            assert_eq!(st.xs_raw()[s * 2], k as f32, "after push {k}");
+            assert_eq!(st.fs_raw()[s * 2 + 1], k as f32, "after push {k}");
         }
     }
 

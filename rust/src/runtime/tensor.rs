@@ -140,6 +140,68 @@ impl HostTensor {
         self.shape = shape;
         Ok(self)
     }
+
+    /// Elements per batch-major row (the product of every axis after the
+    /// leading one).  Scalars and rank-1 tensors have row length 1.
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Borrow batch-major row `i` as f32 data.
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        let w = self.row_len();
+        let v = self.f32s()?;
+        if (i + 1) * w > v.len() {
+            bail!("row {i} out of range for shape {:?}", self.shape);
+        }
+        Ok(&v[i * w..(i + 1) * w])
+    }
+
+    /// Overwrite batch-major row `i` with `src`.
+    pub fn set_row_f32(&mut self, i: usize, src: &[f32]) -> Result<()> {
+        let w = self.row_len();
+        if src.len() != w {
+            bail!("row data has {} elements, row wants {w}", src.len());
+        }
+        let v = self.f32s_mut()?;
+        if (i + 1) * w > v.len() {
+            bail!("row {i} out of range");
+        }
+        v[i * w..(i + 1) * w].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Per-lane masking helper: replace this tensor's row `i` with `src`'s
+    /// row `i` wherever `mask[i]` is true.  Shapes must match and the
+    /// leading axis must equal `mask.len()`.  This is how solver drivers
+    /// and the lane scheduler freeze converged samples while the rest of
+    /// the batch keeps iterating.
+    pub fn overwrite_rows_where(
+        &mut self,
+        src: &HostTensor,
+        mask: &[bool],
+    ) -> Result<()> {
+        if self.shape != src.shape {
+            bail!(
+                "row merge shape mismatch: {:?} vs {:?}",
+                self.shape,
+                src.shape
+            );
+        }
+        let batch = *self.shape.first().unwrap_or(&0);
+        if mask.len() != batch {
+            bail!("mask has {} lanes, leading axis is {batch}", mask.len());
+        }
+        let w = self.row_len();
+        let s = src.f32s()?;
+        let d = self.f32s_mut()?;
+        for (i, &take) in mask.iter().enumerate() {
+            if take {
+                d[i * w..(i + 1) * w].copy_from_slice(&s[i * w..(i + 1) * w]);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// PJRT literal round-trips (feature `pjrt` only).
@@ -210,6 +272,31 @@ mod tests {
         assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
         assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
         assert!(Dtype::parse("float64").is_err());
+    }
+
+    #[test]
+    fn row_accessors() {
+        let mut t =
+            HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(t.row_len(), 3);
+        assert_eq!(t.row_f32(1).unwrap(), &[4.0, 5.0, 6.0]);
+        assert!(t.row_f32(2).is_err());
+        t.set_row_f32(0, &[7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(t.row_f32(0).unwrap(), &[7.0, 8.0, 9.0]);
+        assert!(t.set_row_f32(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn overwrite_rows_masked() {
+        let mut dst = HostTensor::zeros(vec![3, 2]);
+        let src =
+            HostTensor::f32(vec![3, 2], vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]).unwrap();
+        dst.overwrite_rows_where(&src, &[true, false, true]).unwrap();
+        assert_eq!(dst.f32s().unwrap(), &[1.0, 1.0, 0.0, 0.0, 3.0, 3.0]);
+        // Mask arity and shape are checked.
+        assert!(dst.overwrite_rows_where(&src, &[true]).is_err());
+        let wrong = HostTensor::zeros(vec![2, 3]);
+        assert!(dst.overwrite_rows_where(&wrong, &[true, false, true]).is_err());
     }
 
     // Literal round-trips are covered by rust/tests/integration_runtime.rs

@@ -1,4 +1,10 @@
-//! The dynamic-batching loop: bucket selection + wait policy.
+//! The batch-granular fire-and-wait loop: bucket selection + wait policy.
+//!
+//! This is the classic dynamic-batching baseline the iteration-level
+//! scheduler ([`super::scheduler`]) is measured against: wait until either
+//! (a) the largest compiled bucket fills, or (b) the oldest queued request
+//! has waited `max_wait`; then solve the whole batch to the slowest
+//! sample's convergence and respond all at once.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -6,7 +12,9 @@ use std::time::Duration;
 
 use crate::model::ParamSet;
 use crate::runtime::Backend;
-use crate::server::{run_batch, Request, RouterConfig, ServerMetrics};
+use crate::server::{
+    drain_with_error, run_batch, Request, RouterConfig, ServerMetrics,
+};
 
 pub(crate) type QueueHandle = Arc<super::Queue>;
 
@@ -51,6 +59,7 @@ pub(crate) fn run(
             let mut items = queue.items.lock().unwrap();
             loop {
                 if queue.shutdown.load(Ordering::SeqCst) {
+                    drain_with_error(&mut items, "server shutting down");
                     return;
                 }
                 let oldest = items.first().map(|r| r.enqueued.elapsed());

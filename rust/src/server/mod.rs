@@ -1,19 +1,33 @@
-//! Inference serving stack: a dynamic-batching request router in the
-//! vLLM-router mold, sized for the DEQ workload.
+//! Inference serving stack: an iteration-level continuous-batching router
+//! in the vLLM mold, applied to DEQ equilibrium solves.
 //!
 //! Architecture (std-only; the offline crate set has no tokio — threads +
 //! condvar stand in for the async runtime, see DESIGN.md §Substitutions):
 //!
-//!   clients → [`Router::submit`] → shared queue → batcher thread
-//!           → bucket-padded PJRT inference → per-request responses
+//!   clients → [`Router::submit`] → shared queue → worker thread
+//!           → per-lane equilibrium solve → per-request responses
 //!
-//! The batcher implements the classic dynamic-batching policy: wait until
-//! either (a) the largest compiled bucket fills, or (b) the oldest queued
-//! request has waited `max_wait`; then take the best-fitting bucket.
+//! Two scheduling modes ([`SchedMode`]):
+//!
+//!  * **Iteration-level** (default, [`scheduler`]): a persistent solve
+//!    loop over `max_bucket` lanes.  A lane is *retired the iteration its
+//!    sample converges* — the response carries that sample's own
+//!    `solver_iters` — and queued requests are admitted into freed lanes
+//!    at iteration boundaries by re-encoding into the lane's slice.  A
+//!    stiff sample therefore never delays an easy one, and nobody pays
+//!    for the slowest sample in the batch.
+//!  * **Batch-granular** ([`batcher`]): the classic fire-and-wait policy
+//!    (wait for a full bucket or `max_wait`, solve, respond all at once).
+//!    Kept as the measured baseline for the serving experiment and bench.
+//!
+//! Replies are `Result`-shaped: on shutdown the queue is drained with an
+//! explicit "server shutting down" error instead of silently dropping
+//! senders, and solve failures report the error text to every waiter.
 //! A TCP front-end (`serve_tcp`) speaks newline-delimited JSON for the
 //! `deq-anderson serve` subcommand and the serving example.
 
 pub mod batcher;
+pub mod scheduler;
 pub mod tcp;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,8 +48,12 @@ pub struct Request {
     pub id: u64,
     pub image: Vec<f32>,
     pub enqueued: Instant,
-    pub respond: Sender<Response>,
+    pub respond: Sender<Reply>,
 }
+
+/// What a waiter receives: the answer, or a structured failure (backend
+/// error, shutdown drain) instead of a silently dropped channel.
+pub type Reply = Result<Response, String>;
 
 /// The server's answer.
 #[derive(Debug, Clone)]
@@ -43,18 +61,59 @@ pub struct Response {
     pub id: u64,
     pub class: usize,
     pub logits: Vec<f32>,
+    /// Iteration-level mode: this sample's own solve iterations.
+    /// Batch-granular mode: the batch's iteration count — what the
+    /// request actually waited for (every rider pays the slowest lane).
     pub solver_iters: usize,
+    /// Cell evaluations on the same accounting as `solver_iters`.
+    pub solver_fevals: usize,
+    /// False when the lane was retired at `max_iter` without crossing
+    /// `tol` — the logits come from a non-converged iterate.
+    pub converged: bool,
     /// Total time in the system (queue + solve).
     pub latency: Duration,
-    /// Size of the batch this request rode in.
+    /// Lanes occupied at retirement (iteration-level) or the batch size
+    /// this request rode in (batch-granular).
     pub batch_size: usize,
+}
+
+/// How the worker schedules queued requests onto the solve loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Slot-based continuous batching: admit/retire at iteration
+    /// boundaries (the default).
+    #[default]
+    IterationLevel,
+    /// Fire-and-wait dynamic batching: the measured baseline.
+    BatchGranular,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "iteration" | "iteration-level" => Some(Self::IterationLevel),
+            "batch" | "batch-granular" => Some(Self::BatchGranular),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::IterationLevel => "iteration-level",
+            Self::BatchGranular => "batch-granular",
+        }
+    }
 }
 
 /// Router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
     pub solver: SolveOptions,
-    /// Max time the oldest request may wait before a partial batch fires.
+    /// Scheduling mode (see [`SchedMode`]).
+    pub mode: SchedMode,
+    /// Batch-granular only: max time the oldest request may wait before a
+    /// partial batch fires.  The iteration-level scheduler admits at
+    /// every iteration boundary and never waits.
     pub max_wait: Duration,
     /// Upper bound on queued requests (backpressure).
     pub queue_cap: usize,
@@ -64,26 +123,78 @@ pub struct RouterConfig {
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     pub served: AtomicU64,
+    /// Batch-granular: batches fired.  Iteration-level: solve-loop
+    /// iterations executed.
     pub batches: AtomicU64,
     pub latency: Mutex<Stats>,
     pub batch_fill: Mutex<Stats>,
+    /// Iteration-level gauge: occupied-lane fraction, sampled once per
+    /// solve-loop iteration.
+    pub lane_occupancy: Mutex<Stats>,
+    /// Iteration-level gauge: wallclock from lane admission to
+    /// retirement, per request (solve time excluding queue wait).
+    pub time_to_retire: Mutex<Stats>,
+    /// Cell evaluations actually charged to samples (Σ occupied lanes
+    /// over iterations).
+    pub lane_fevals: AtomicU64,
+    /// What a lockstep batch-granular solve of the *same occupied set*
+    /// would have charged per iteration (its padded bucket, not the full
+    /// lane width — so idle lanes never count as savings); see
+    /// [`Self::fevals_saved`].
+    pub lockstep_fevals: AtomicU64,
 }
 
 impl ServerMetrics {
     pub fn record(&self, latency: Duration, batch: usize, bucket: usize) {
         self.served.fetch_add(1, Ordering::Relaxed);
         self.latency.lock().unwrap().push_duration(latency);
-        let _ = batch;
         self.batch_fill
             .lock()
             .unwrap()
             .push(batch as f64 / bucket as f64);
     }
 
+    /// One solve-loop iteration over `occupied` of `lanes` total lanes;
+    /// `lockstep_bucket` is the compiled bucket a batch-granular solve of
+    /// just the occupied samples would have ridden (its padding is the
+    /// honest per-iteration baseline cost — a conservative estimate, as
+    /// it excludes the baseline's early-retirement losses).
+    pub fn record_iteration(
+        &self,
+        occupied: usize,
+        lanes: usize,
+        lockstep_bucket: usize,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.lane_occupancy
+            .lock()
+            .unwrap()
+            .push(occupied as f64 / lanes.max(1) as f64);
+        self.lane_fevals.fetch_add(occupied as u64, Ordering::Relaxed);
+        self.lockstep_fevals
+            .fetch_add(lockstep_bucket as u64, Ordering::Relaxed);
+    }
+
+    /// One lane retired after `solve` wallclock in its lane.
+    pub fn record_retire(&self, solve: Duration) {
+        self.time_to_retire.lock().unwrap().push_duration(solve);
+    }
+
+    /// Cell evaluations saved vs a lockstep batch-granular solve of the
+    /// same occupied samples (early-retired lanes stop paying; idle
+    /// lanes never counted on either side).
+    pub fn fevals_saved(&self) -> u64 {
+        self.lockstep_fevals
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.lane_fevals.load(Ordering::Relaxed))
+    }
+
     pub fn summary(&self) -> String {
         let lat = self.latency.lock().unwrap();
         let fill = self.batch_fill.lock().unwrap();
-        format!(
+        let occ = self.lane_occupancy.lock().unwrap();
+        let retire = self.time_to_retire.lock().unwrap();
+        let mut s = format!(
             "served={} batches={} p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_fill={:.2}",
             self.served.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -91,7 +202,17 @@ impl ServerMetrics {
             lat.percentile(95.0) * 1e3,
             lat.percentile(99.0) * 1e3,
             fill.mean(),
-        )
+        );
+        if occ.count() > 0 {
+            s.push_str(&format!(
+                " occupancy={:.2} retire_p50={:.1}ms retire_p95={:.1}ms fevals_saved={}",
+                occ.mean(),
+                retire.percentile(50.0) * 1e3,
+                retire.percentile(95.0) * 1e3,
+                self.fevals_saved(),
+            ));
+        }
+        s
     }
 }
 
@@ -101,17 +222,30 @@ pub(crate) struct Queue {
     pub(crate) shutdown: AtomicBool,
 }
 
-/// The dynamic-batching inference router.
+/// Reply to and drop every queued request with an error message — the
+/// shutdown path, so waiters see "server shutting down" instead of a
+/// closed channel.
+pub(crate) fn drain_with_error(items: &mut Vec<Request>, why: &str) {
+    for req in items.drain(..) {
+        let _ = req.respond.send(Err(why.to_string()));
+    }
+}
+
+/// The continuous-batching inference router.
 pub struct Router {
     queue: Arc<Queue>,
     pub metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
     worker: Option<std::thread::JoinHandle<()>>,
     cfg: RouterConfig,
+    /// Flat image length the model expects; checked at submission so one
+    /// malformed request can never fail a whole batch downstream.
+    image_dim: usize,
 }
 
 impl Router {
-    /// Spawn the batcher thread over an engine + parameters.
+    /// Spawn the worker thread (scheduler or batcher, per `cfg.mode`)
+    /// over an engine + parameters.
     pub fn start(
         engine: Arc<dyn Backend>,
         params: Arc<ParamSet>,
@@ -125,16 +259,27 @@ impl Router {
         let metrics = Arc::new(ServerMetrics::default());
         let buckets = engine.manifest().batches_for("encode");
         anyhow::ensure!(!buckets.is_empty(), "no encode artifacts");
+        let image_dim = engine.manifest().model.image_dim();
 
         let worker = {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let cfg2 = cfg.clone();
-            std::thread::Builder::new()
-                .name("deq-batcher".into())
-                .spawn(move || {
-                    batcher::run(engine, params, queue, metrics, cfg2, buckets)
-                })?
+            let (name, body): (&str, Box<dyn FnOnce() + Send>) = match cfg.mode {
+                SchedMode::IterationLevel => (
+                    "deq-scheduler",
+                    Box::new(move || {
+                        scheduler::run(engine, params, queue, metrics, cfg2, buckets)
+                    }),
+                ),
+                SchedMode::BatchGranular => (
+                    "deq-batcher",
+                    Box::new(move || {
+                        batcher::run(engine, params, queue, metrics, cfg2, buckets)
+                    }),
+                ),
+            };
+            std::thread::Builder::new().name(name.into()).spawn(body)?
         };
 
         Ok(Self {
@@ -143,15 +288,30 @@ impl Router {
             next_id: AtomicU64::new(1),
             worker: Some(worker),
             cfg,
+            image_dim,
         })
     }
 
-    /// Submit one image; returns a receiver for the response.
-    /// Errors when the queue is at capacity (backpressure).
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Submit one image; returns a receiver for the reply.
+    /// Errors on a wrong-sized image (so one malformed request can never
+    /// fail a whole batch), when the queue is at capacity (backpressure),
+    /// or when the worker is gone (shut down, or the scheduler hit a
+    /// fatal backend error) — a request enqueued after that would never
+    /// be answered.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>> {
+        anyhow::ensure!(
+            image.len() == self.image_dim,
+            "image has {} values, model wants {}",
+            image.len(),
+            self.image_dim
+        );
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.items.lock().unwrap();
+            anyhow::ensure!(
+                !self.queue.shutdown.load(Ordering::SeqCst),
+                "router worker is not running (shut down or failed)"
+            );
             anyhow::ensure!(
                 q.len() < self.cfg.queue_cap,
                 "queue full ({} requests)",
@@ -171,34 +331,53 @@ impl Router {
     /// Blocking convenience: submit and wait.
     pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
         let rx = self.submit(image)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("router dropped request"))
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
+            Err(_) => Err(anyhow::anyhow!("router dropped request")),
+        }
     }
 
     pub fn queue_depth(&self) -> usize {
         self.queue.items.lock().unwrap().len()
     }
 
-    /// Stop the batcher thread (drains nothing; pending requests error out).
+    /// Stop the worker thread.  Queued (and, in iteration-level mode,
+    /// in-flight) requests receive an explicit "server shutting down"
+    /// error reply rather than a dropped channel.
     pub fn shutdown(mut self) {
-        self.queue.shutdown.store(true, Ordering::SeqCst);
-        self.queue.signal.notify_all();
+        signal_shutdown(&self.queue);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
     }
+}
+
+/// Raise the shutdown flag *while holding the queue lock*, so the worker
+/// either sees the flag on its next check or is parked on the condvar
+/// when the notify lands — a store outside the lock can slip between the
+/// worker's check and its wait, losing the wakeup for a full timeout.
+fn signal_shutdown(queue: &Queue) {
+    {
+        let _guard = queue.items.lock().unwrap();
+        queue.shutdown.store(true, Ordering::SeqCst);
+    }
+    queue.signal.notify_all();
 }
 
 impl Drop for Router {
     fn drop(&mut self) {
-        self.queue.shutdown.store(true, Ordering::SeqCst);
-        self.queue.signal.notify_all();
+        signal_shutdown(&self.queue);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
     }
 }
 
-/// The inference work a batch performs — shared by the batcher thread.
+/// The inference work a batch performs — the batch-granular path.  Every
+/// rider is billed the batch's iteration count (`solver_iters` of the
+/// whole solve): that is what it had to wait for, and exactly the cost
+/// model the iteration-level scheduler exists to beat.
 pub(crate) fn run_batch(
     engine: &dyn Backend,
     params: &ParamSet,
@@ -219,19 +398,24 @@ pub(crate) fn run_batch(
             for (i, req) in batch.drain(..).enumerate() {
                 let latency = req.enqueued.elapsed();
                 metrics.record(latency, count, bucket);
-                let _ = req.respond.send(Response {
+                let _ = req.respond.send(Ok(Response {
                     id: req.id,
                     class: result.predictions[i],
                     logits: result.logits[i].clone(),
                     solver_iters: result.solver_iters,
+                    solver_fevals: result.solver_fevals,
+                    converged: result.sample_converged[i],
                     latency,
                     batch_size: count,
-                });
+                }));
             }
         }
         Err(e) => {
-            eprintln!("[server] batch failed: {e:#}");
-            // Drop senders → clients see RecvError.
+            let msg = format!("batch inference failed: {e:#}");
+            eprintln!("[server] {msg}");
+            for req in batch.drain(..) {
+                let _ = req.respond.send(Err(msg.clone()));
+            }
         }
     }
 }

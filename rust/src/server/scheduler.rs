@@ -1,0 +1,357 @@
+//! Iteration-level continuous batching: a persistent equilibrium solve
+//! loop over `max_bucket` lanes.
+//!
+//! The batch-granular batcher admits a batch, solves it to the *slowest*
+//! sample's convergence, and only then responds and takes new work.  This
+//! scheduler instead treats the compiled bucket as a set of **lanes**:
+//!
+//!  * every solve-loop iteration runs `cell_step` (and, for Anderson-family
+//!    solvers, `anderson_update`) over the whole bucket;
+//!  * a lane is **retired the iteration its sample's residual crosses
+//!    `tol`** — the sample takes f as its terminal iterate, is classified,
+//!    and the response (carrying its own `solver_iters`/`solver_fevals`)
+//!    is sent immediately;
+//!  * freed lanes are **refilled at iteration boundaries**: each
+//!    boundary's admissions are encoded together in one batched dispatch
+//!    and spliced into their lanes' slices of the persistent
+//!    `x_feat`/`z` batch tensors.
+//!
+//! Per-lane Anderson state lives in [`LaneHistory`]: each lane fills its
+//! own ring at its own pace, seeded by replication so a fresh lane's first
+//! mixed update degenerates to a damped forward step (see its docs).  The
+//! hybrid policy's stagnation fallback is likewise per-lane: a stagnating
+//! lane drops to plain forward steps without touching its neighbours.
+//!
+//! Cost model note: the kernels still run at the full bucket width, so
+//! the win is measured in *per-sample* fevals (what each request waits
+//! for) and loop iterations to drain the queue — `ServerMetrics`
+//! publishes lane occupancy, time-to-retire percentiles, and fevals saved
+//! vs a lockstep batch-granular solve of the same occupied samples.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::infer;
+use crate::model::ParamSet;
+use crate::runtime::{Backend, HostTensor, ModelMeta};
+use crate::server::batcher::{pick_bucket, QueueHandle};
+use crate::server::{
+    drain_with_error, Queue, Request, Response, RouterConfig, ServerMetrics,
+};
+use crate::solver::anderson::LaneHistory;
+use crate::solver::{per_sample_rel, policy, SolverKind};
+
+/// One occupied slot of the solve loop.
+struct Lane {
+    req: Request,
+    /// Iterations this sample has run (its true `solver_iters`).
+    iters: usize,
+    /// Cell evaluations charged to this sample.
+    fevals: usize,
+    /// When the lane was admitted (time-to-retire starts here).
+    admitted: Instant,
+    /// This lane's residual trajectory (hybrid stagnation detection).
+    residuals: Vec<f32>,
+    /// False once the hybrid policy dropped this lane to forward steps.
+    mixing: bool,
+}
+
+/// The scheduler thread body.  On a backend failure the error text goes
+/// to every waiter — queued *and* in-flight — instead of a dropped
+/// channel (the contract [`crate::server::Reply`] documents).
+pub(crate) fn run(
+    engine: Arc<dyn Backend>,
+    params: Arc<ParamSet>,
+    queue: QueueHandle,
+    metrics: Arc<ServerMetrics>,
+    cfg: RouterConfig,
+    buckets: Vec<usize>,
+) {
+    let bucket = *buckets.last().expect("router checked buckets non-empty");
+    let mut lanes: Vec<Option<Lane>> = (0..bucket).map(|_| None).collect();
+    if let Err(e) = serve_loop(
+        engine.as_ref(),
+        &params,
+        &queue,
+        &metrics,
+        &cfg,
+        &buckets,
+        &mut lanes,
+    ) {
+        let msg = format!("scheduler failed: {e:#}");
+        eprintln!("[server] {msg}");
+        retire_all_with_error(&mut lanes, &msg);
+        // Raise the shutdown flag under the queue lock before draining:
+        // `submit` checks it under the same lock, so no request can slip
+        // in after the drain and hang on a reply that will never come.
+        let mut items = queue.items.lock().unwrap();
+        queue.shutdown.store(true, Ordering::SeqCst);
+        drain_with_error(&mut items, &msg);
+    }
+}
+
+/// Admit one iteration boundary's worth of requests: validate images,
+/// encode them all in a single dispatch at the smallest bucket that
+/// fits, and splice each feature row + a zero initial iterate into its
+/// lane's slices of the persistent batch tensors.  Client-level problems
+/// (bad image size, encode failure) are replied inline and leave the
+/// lane free; only internal invariant violations propagate as `Err`.
+#[allow(clippy::too_many_arguments)] // flat splice over the loop's state
+fn admit_all(
+    engine: &dyn Backend,
+    params: &ParamSet,
+    meta: &ModelMeta,
+    z: &mut HostTensor,
+    x_feat: &mut HostTensor,
+    hist: &mut LaneHistory,
+    lanes: &mut [Option<Lane>],
+    admitted: Vec<(usize, Request)>,
+    mixing: bool,
+) -> Result<()> {
+    if admitted.is_empty() {
+        return Ok(());
+    }
+    let dim = meta.image_dim();
+    let mut good: Vec<(usize, Request)> = Vec::with_capacity(admitted.len());
+    for (lane_idx, req) in admitted {
+        if req.image.len() == dim {
+            good.push((lane_idx, req));
+        } else {
+            let _ = req.respond.send(Err(format!(
+                "image has {} values, model wants {dim}",
+                req.image.len()
+            )));
+        }
+    }
+    if good.is_empty() {
+        return Ok(());
+    }
+    let mut flat = Vec::with_capacity(good.len() * dim);
+    for (_, req) in &good {
+        flat.extend_from_slice(&req.image);
+    }
+    let feat = match infer::encode_padded(engine, params, &flat, good.len()) {
+        Ok((t, _bucket)) => t,
+        Err(e) => {
+            let msg = format!("admission encode failed: {e:#}");
+            eprintln!("[server] {msg}");
+            for (_, req) in good {
+                let _ = req.respond.send(Err(msg.clone()));
+            }
+            return Ok(());
+        }
+    };
+    let zero = vec![0.0f32; meta.latent_dim()];
+    for (row, (lane_idx, req)) in good.into_iter().enumerate() {
+        x_feat.set_row_f32(lane_idx, feat.row_f32(row)?)?;
+        z.set_row_f32(lane_idx, &zero)?;
+        hist.clear_lane(lane_idx);
+        lanes[lane_idx] = Some(Lane {
+            req,
+            iters: 0,
+            fevals: 0,
+            admitted: Instant::now(),
+            residuals: Vec::new(),
+            mixing,
+        });
+    }
+    Ok(())
+}
+
+/// Reply with an error to every in-flight lane (shutdown path).
+fn retire_all_with_error(lanes: &mut [Option<Lane>], why: &str) {
+    for slot in lanes.iter_mut() {
+        if let Some(lane) = slot.take() {
+            let _ = lane.req.respond.send(Err(why.to_string()));
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)] // lanes live in run() for error drain
+fn serve_loop(
+    engine: &dyn Backend,
+    params: &ParamSet,
+    queue: &Queue,
+    metrics: &ServerMetrics,
+    cfg: &RouterConfig,
+    buckets: &[usize],
+    lanes: &mut Vec<Option<Lane>>,
+) -> Result<()> {
+    let meta = engine.manifest().model.clone();
+    let bucket = *buckets.last().expect("router checked buckets non-empty");
+    let n = meta.latent_dim();
+    let nc = meta.num_classes;
+    let compiled_m = engine.manifest().solver.window;
+    let window = cfg.solver.window.min(compiled_m).max(1);
+    let kind = cfg.solver.kind;
+    let use_anderson =
+        matches!(kind, SolverKind::Anderson | SolverKind::Hybrid);
+
+    let mut z = HostTensor::zeros(meta.latent_shape(bucket));
+    let mut x_feat = HostTensor::zeros(meta.latent_shape(bucket));
+    let mut hist = LaneHistory::new(bucket, window, compiled_m, n);
+
+    let mut cell_inputs: Vec<HostTensor> = params.tensors.clone();
+    let z_slot = cell_inputs.len();
+    cell_inputs.push(z.clone());
+    cell_inputs.push(x_feat.clone());
+    // Classify inputs are preallocated like cell_inputs: only the latent
+    // slot is overwritten per retiring iteration, never the params.
+    let mut cls_inputs: Vec<HostTensor> = params.tensors.clone();
+    let cls_z_slot = cls_inputs.len();
+    cls_inputs.push(z.clone());
+
+    loop {
+        // --- admission at the iteration boundary ---
+        let free: Vec<usize> = lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| if l.is_none() { Some(i) } else { None })
+            .collect();
+        let any_busy = free.len() < bucket;
+        let admitted: Vec<(usize, Request)> = {
+            let mut items = queue.items.lock().unwrap();
+            loop {
+                if queue.shutdown.load(Ordering::SeqCst) {
+                    drain_with_error(&mut items, "server shutting down");
+                    drop(items);
+                    retire_all_with_error(lanes, "server shutting down");
+                    return Ok(());
+                }
+                if any_busy || !items.is_empty() {
+                    let take = items.len().min(free.len());
+                    let reqs: Vec<Request> = items.drain(..take).collect();
+                    break free.iter().copied().zip(reqs).collect();
+                }
+                // All lanes idle and nothing queued: sleep until work
+                // arrives (periodic wake to recheck shutdown).
+                let (guard, _timeout) = queue
+                    .signal
+                    .wait_timeout(items, Duration::from_millis(50))
+                    .unwrap();
+                items = guard;
+            }
+        };
+        let had_admissions = !admitted.is_empty();
+        admit_all(
+            engine,
+            params,
+            &meta,
+            &mut z,
+            &mut x_feat,
+            &mut hist,
+            lanes,
+            admitted,
+            use_anderson,
+        )?;
+        if lanes.iter().all(Option::is_none) {
+            continue;
+        }
+
+        // --- one solve iteration over the whole lane set ---
+        cell_inputs[z_slot] = z.clone();
+        // x_feat only changes at admission boundaries; skip the bucket-
+        // sized copy on pure solve iterations.
+        if had_admissions {
+            cell_inputs[z_slot + 1] = x_feat.clone();
+        }
+        let out = engine.execute("cell_step", bucket, &cell_inputs)?;
+        let f = &out[0];
+        let rel = per_sample_rel(&out[1], &out[2], cfg.solver.lam)?;
+        let occupied = lanes.iter().filter(|l| l.is_some()).count();
+        metrics.record_iteration(occupied, bucket, pick_bucket(buckets, occupied));
+
+        let mut retire_mask = vec![false; bucket];
+        for (i, slot) in lanes.iter_mut().enumerate() {
+            if let Some(lane) = slot.as_mut() {
+                lane.iters += 1;
+                lane.fevals += 1;
+                lane.residuals.push(rel[i]);
+                if rel[i] < cfg.solver.tol || lane.iters >= cfg.solver.max_iter
+                {
+                    retire_mask[i] = true;
+                }
+            }
+        }
+
+        // --- retire converged (or exhausted) lanes this very iteration ---
+        if retire_mask.iter().any(|&r| r) {
+            // Retiring lanes take f as their terminal iterate, like the
+            // batch drivers' terminal step; classify the whole bucket and
+            // slice out the retiring rows.
+            z.overwrite_rows_where(f, &retire_mask)?;
+            cls_inputs[cls_z_slot] = z.clone();
+            let logits_t =
+                engine.execute("classify", bucket, &cls_inputs)?.remove(0);
+            let flat = logits_t.f32s()?;
+            for (i, slot) in lanes.iter_mut().enumerate() {
+                if !retire_mask[i] {
+                    continue;
+                }
+                let lane = slot.take().expect("retiring lane is occupied");
+                let row = flat[i * nc..(i + 1) * nc].to_vec();
+                let latency = lane.req.enqueued.elapsed();
+                metrics.record(latency, occupied, bucket);
+                metrics.record_retire(lane.admitted.elapsed());
+                let _ = lane.req.respond.send(Ok(Response {
+                    id: lane.req.id,
+                    class: infer::argmax(&row),
+                    logits: row,
+                    solver_iters: lane.iters,
+                    solver_fevals: lane.fevals,
+                    // Distinguishes tol-crossing retirement from a lane
+                    // cut off at max_iter.
+                    converged: rel[i] < cfg.solver.tol,
+                    latency,
+                    batch_size: occupied,
+                }));
+                hist.clear_lane(i);
+            }
+        }
+
+        // --- advance the surviving lanes ---
+        if kind == SolverKind::Forward {
+            let active: Vec<bool> = lanes.iter().map(Option::is_some).collect();
+            z.overwrite_rows_where(f, &active)?;
+        } else {
+            let mut mix_mask = vec![false; bucket];
+            let mut fwd_mask = vec![false; bucket];
+            for (i, slot) in lanes.iter_mut().enumerate() {
+                if let Some(lane) = slot.as_mut() {
+                    if lane.mixing
+                        && kind == SolverKind::Hybrid
+                        && policy::stagnated(
+                            &lane.residuals,
+                            window,
+                            cfg.solver.stagnation_eps,
+                        )
+                    {
+                        // Per-lane crossover: this lane's mixing penalty
+                        // no longer pays; its neighbours keep mixing.
+                        lane.mixing = false;
+                    }
+                    if lane.mixing {
+                        hist.push_lane(i, z.row_f32(i)?, f.row_f32(i)?);
+                        mix_mask[i] = true;
+                    } else {
+                        fwd_mask[i] = true;
+                    }
+                }
+            }
+            if mix_mask.iter().any(|&b| b) {
+                let (xh, fh, mask_t) = hist.tensors()?;
+                let update =
+                    engine.execute("anderson_update", bucket, &[xh, fh, mask_t])?;
+                let mixed =
+                    update[0].clone().reshaped(meta.latent_shape(bucket))?;
+                z.overwrite_rows_where(&mixed, &mix_mask)?;
+            }
+            if fwd_mask.iter().any(|&b| b) {
+                z.overwrite_rows_where(f, &fwd_mask)?;
+            }
+        }
+    }
+}

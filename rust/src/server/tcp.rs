@@ -4,8 +4,11 @@
 //!   request:  {"id": <any>, "image": [f32; hw*hw*c]}
 //!             {"cmd": "stats"}    → server metrics
 //!             {"cmd": "ping"}     → {"ok": true}
-//!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n}
-//!             {"error": "..."}    on malformed input
+//!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n,
+//!              "solver_iters": k, "solver_fevals": k}
+//!             (iteration-level scheduling: solver_iters/fevals are this
+//!              sample's own counts, not the batch's)
+//!             {"error": "..."}    on malformed input or shutdown
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -95,6 +98,8 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                 ("latency_ms", json::num(resp.latency.as_secs_f64() * 1e3)),
                 ("batch", json::num(resp.batch_size as f64)),
                 ("solver_iters", json::num(resp.solver_iters as f64)),
+                ("solver_fevals", json::num(resp.solver_fevals as f64)),
+                ("converged", Json::Bool(resp.converged)),
             ];
             if let Some(id) = parsed.get("id") {
                 pairs.push(("id", id.clone()));

@@ -11,13 +11,18 @@
 //!   anderson_update:  2·m·n history streaming + m² Gram + m³ solve
 //! The history buffers are the "cacheable iterations": they live in
 //! preallocated host ring storage and are re-packed, not re-allocated.
+//!
+//! Convergence is per-sample: lanes freeze the step they cross `tol` —
+//! their history stops updating and their iterate stops moving — while
+//! the rest of the batch keeps mixing (the per-trajectory treatment of
+//! Lupo Pasini et al., *Stable Anderson Acceleration for Deep Learning*).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::{Backend, HostTensor};
-use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+use crate::solver::{ResidualTrack, SolveOptions, SolveReport, SolveStep, SolverKind};
 
 /// Ring-buffer history for batched Anderson over flattened latents.
 ///
@@ -60,10 +65,22 @@ impl History {
 
     /// Record (z, f(z)) — both flat (batch * n).
     pub fn push(&mut self, z: &[f32], fz: &[f32]) {
+        let all = vec![true; self.batch];
+        self.push_where(z, fz, &all);
+    }
+
+    /// Record (z, f(z)) rows only for lanes where `active` is true.
+    /// Frozen lanes keep their last window — their mixed output is
+    /// discarded by the caller, so stale slots are never observed.
+    pub fn push_where(&mut self, z: &[f32], fz: &[f32], active: &[bool]) {
         assert_eq!(z.len(), self.batch * self.n);
         assert_eq!(fz.len(), self.batch * self.n);
+        assert_eq!(active.len(), self.batch);
         let slot = self.count % self.m;
         for b in 0..self.batch {
+            if !active[b] {
+                continue;
+            }
             let dst = (b * self.slots + slot) * self.n;
             let src = b * self.n;
             self.xhist[dst..dst + self.n].copy_from_slice(&z[src..src + self.n]);
@@ -88,6 +105,94 @@ impl History {
             HostTensor::f32(shape.clone(), self.xhist.clone())?,
             HostTensor::f32(shape, self.fhist.clone())?,
             HostTensor::f32(vec![self.slots], self.mask())?,
+        ))
+    }
+}
+
+/// Per-lane windowed history for iteration-level continuous batching.
+///
+/// Unlike [`History`], whose lanes share one warm-up (a whole batch is
+/// admitted at once), every lane here fills its own ring at its own pace
+/// inside one `(lanes, slots, n)` tensor — the lane scheduler admits and
+/// retires lanes mid-flight, so fill levels diverge.  The shared kernel
+/// mask is the full effective window: a freshly admitted lane's ring is
+/// seeded by replicating its first (z, f) pair across all `m` slots,
+/// which makes the masked Anderson solve return equal weights over
+/// identical rows — exactly a damped forward step — until real history
+/// displaces the copies.  Empty lanes hold zeros and mix to zero, which
+/// the scheduler discards.
+pub struct LaneHistory {
+    lanes: usize,
+    m: usize,
+    slots: usize,
+    n: usize,
+    xhist: Vec<f32>,
+    fhist: Vec<f32>,
+    /// Per-lane push count (0 = empty ring).
+    count: Vec<usize>,
+}
+
+impl LaneHistory {
+    /// Effective window `m` inside `slots` ≥ m compiled slots.
+    pub fn new(lanes: usize, m: usize, slots: usize, n: usize) -> Self {
+        assert!(m >= 1 && m <= slots);
+        Self {
+            lanes,
+            m,
+            slots,
+            n,
+            xhist: vec![0.0; lanes * slots * n],
+            fhist: vec![0.0; lanes * slots * n],
+            count: vec![0; lanes],
+        }
+    }
+
+    /// Valid ring entries for one lane.
+    pub fn valid(&self, lane: usize) -> usize {
+        self.count[lane].min(self.m)
+    }
+
+    /// Forget a lane's window (on admit and on retire).
+    pub fn clear_lane(&mut self, lane: usize) {
+        self.count[lane] = 0;
+        let base = lane * self.slots * self.n;
+        let len = self.slots * self.n;
+        self.xhist[base..base + len].fill(0.0);
+        self.fhist[base..base + len].fill(0.0);
+    }
+
+    /// Record a lane's (z, f(z)) pair.  The first push seeds every slot
+    /// of the lane's window with the pair (see the type docs); later
+    /// pushes overwrite the lane's own ring position.
+    pub fn push_lane(&mut self, lane: usize, z: &[f32], fz: &[f32]) {
+        assert_eq!(z.len(), self.n);
+        assert_eq!(fz.len(), self.n);
+        if self.count[lane] == 0 {
+            for slot in 0..self.m {
+                let dst = (lane * self.slots + slot) * self.n;
+                self.xhist[dst..dst + self.n].copy_from_slice(z);
+                self.fhist[dst..dst + self.n].copy_from_slice(fz);
+            }
+        } else {
+            let slot = self.count[lane] % self.m;
+            let dst = (lane * self.slots + slot) * self.n;
+            self.xhist[dst..dst + self.n].copy_from_slice(z);
+            self.fhist[dst..dst + self.n].copy_from_slice(fz);
+        }
+        self.count[lane] += 1;
+    }
+
+    /// Materialize the (lanes, slots, n) history tensors + shared mask
+    /// (all `m` effective slots valid; padded slots masked out).
+    pub fn tensors(&self) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let shape = vec![self.lanes, self.slots, self.n];
+        let mask: Vec<f32> = (0..self.slots)
+            .map(|i| if i < self.m { 1.0 } else { 0.0 })
+            .collect();
+        Ok((
+            HostTensor::f32(shape.clone(), self.xhist.clone())?,
+            HostTensor::f32(shape, self.fhist.clone())?,
+            HostTensor::f32(vec![self.slots], mask)?,
         ))
     }
 }
@@ -117,7 +222,7 @@ pub fn solve(
     let mut z = HostTensor::zeros(x_feat.shape.clone());
     let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
     let mut steps: Vec<SolveStep> = Vec::new();
-    let mut converged = false;
+    let mut track = ResidualTrack::new(batch, opts.tol);
     let t0 = Instant::now();
 
     let mut cell_inputs: Vec<HostTensor> = params.to_vec();
@@ -130,35 +235,43 @@ pub fn solve(
         cell_inputs[z_slot] = z.clone();
         let out = engine.execute("cell_step", batch, &cell_inputs)?;
         let f = &out[0];
-        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        let (rel, freeze) =
+            track.observe_step(&out[1], &out[2], opts.lam, 1)?;
         // `mixed` is back-filled once mixing actually runs below, so the
         // flag describes the update applied to THIS step's iterate: the
         // terminal (converged) step takes f directly and stays unmixed,
         // while step 0 is mixed as soon as its pair enters the window.
         steps.push(SolveStep {
             iter: k,
-            rel_residual: rel,
+            rel_residual: track.max_rel(),
+            sample_residuals: rel,
+            active: track.active_count(),
             elapsed: t0.elapsed(),
             fevals: k + 1,
             mixed: false,
         });
-        if rel < opts.tol {
-            converged = true;
-            z = f.clone();
+        if track.all_converged() {
+            // Lanes that converged this step take f as their terminal
+            // iterate; lanes frozen earlier already hold theirs.
+            z.overwrite_rows_where(f, &freeze.newly_frozen)?;
             break;
         }
 
-        // Window update + Anderson mixing.
-        hist.push(z.f32s()?, f.f32s()?);
+        // Window update + Anderson mixing for still-active lanes only:
+        // frozen lanes' history stops updating and their rows of the
+        // mixed output are discarded below.
+        hist.push_where(z.f32s()?, f.f32s()?, &track.active_mask());
         let (xh, fh, mask) = hist.tensors()?;
         let update = engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-        z = update[0]
+        let mut next = update[0]
             .clone()
             .reshaped(meta.latent_shape(batch))?;
+        freeze.apply(&mut next, f, &z)?;
+        z = next;
         steps.last_mut().expect("step recorded above").mixed = true;
     }
 
-    Ok(SolveReport { kind: SolverKind::Anderson, steps, converged, z_star: z })
+    Ok(SolveReport::from_track(SolverKind::Anderson, steps, z, &track))
 }
 
 #[cfg(test)]
@@ -215,5 +328,61 @@ mod tests {
         assert_eq!(&x[0..3], &[2.0, 2.0, 2.0]);
         assert_eq!(&x[3..6], &[3.0, 3.0, 3.0]);
         assert_eq!(&x[6..15], &[0.0; 9]);
+    }
+
+    #[test]
+    fn masked_push_freezes_lane_window() {
+        let mut h = History::new(2, 2, 2);
+        h.push(&[1.0, 1.0, 9.0, 9.0], &[2.0, 2.0, 8.0, 8.0]);
+        // Lane 1 frozen: its slots keep the first pair, lane 0 advances.
+        h.push_where(&[3.0, 3.0, 7.0, 7.0], &[4.0, 4.0, 6.0, 6.0], &[true, false]);
+        let (xh, _, _) = h.tensors().unwrap();
+        let x = xh.f32s().unwrap();
+        // Lane 0: slot 0 = first push, slot 1 = second push.
+        assert_eq!(&x[0..4], &[1.0, 1.0, 3.0, 3.0]);
+        // Lane 1: slot 0 = first push, slot 1 untouched (zeros).
+        assert_eq!(&x[4..8], &[9.0, 9.0, 0.0, 0.0]);
+        // The global ring cursor still advanced for the batch.
+        assert_eq!(h.valid(), 2);
+    }
+
+    #[test]
+    fn lane_history_seeds_fresh_lane_by_replication() {
+        let mut h = LaneHistory::new(2, 3, 3, 2);
+        assert_eq!(h.valid(0), 0);
+        h.push_lane(0, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(h.valid(0), 1);
+        let (xh, fh, mask) = h.tensors().unwrap();
+        assert_eq!(mask.f32s().unwrap(), &[1.0, 1.0, 1.0]);
+        let x = xh.f32s().unwrap();
+        let f = fh.f32s().unwrap();
+        // Every slot of lane 0 holds the replicated first pair.
+        for slot in 0..3 {
+            assert_eq!(&x[slot * 2..slot * 2 + 2], &[1.0, 2.0]);
+            assert_eq!(&f[slot * 2..slot * 2 + 2], &[3.0, 4.0]);
+        }
+        // Lane 1 untouched (zeros).
+        assert!(x[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lane_history_rings_independently_and_clears() {
+        let mut h = LaneHistory::new(2, 2, 2, 1);
+        h.push_lane(0, &[1.0], &[1.0]);
+        h.push_lane(0, &[2.0], &[2.0]);
+        h.push_lane(0, &[3.0], &[3.0]); // wraps into slot 1 of lane 0
+        h.push_lane(1, &[9.0], &[9.0]); // lane 1 still replicating
+        let (xh, _, _) = h.tensors().unwrap();
+        let x = xh.f32s().unwrap();
+        // Lane 0 ring: the seed push filled both slots, push 2 landed in
+        // slot 1 (count=1), push 3 wrapped into slot 0 (count=2).
+        assert_eq!(&x[0..2], &[3.0, 2.0]);
+        // Lane 1: both slots replicated from its first push.
+        assert_eq!(&x[2..4], &[9.0, 9.0]);
+        h.clear_lane(0);
+        assert_eq!(h.valid(0), 0);
+        let (xh, _, _) = h.tensors().unwrap();
+        assert_eq!(&xh.f32s().unwrap()[0..2], &[0.0, 0.0]);
+        assert_eq!(h.valid(1), 1);
     }
 }

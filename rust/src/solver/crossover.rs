@@ -103,6 +103,8 @@ mod tests {
             .map(|k| SolveStep {
                 iter: k,
                 rel_residual: rate.powi(k as i32),
+                sample_residuals: vec![rate.powi(k as i32)],
+                active: 1,
                 elapsed: Duration::from_micros(per_iter_us * (k as u64 + 1)),
                 fevals: k + 1,
                 mixed: kind == SolverKind::Anderson,
@@ -113,6 +115,9 @@ mod tests {
             steps,
             converged: true,
             z_star: HostTensor::zeros(vec![1]),
+            sample_iters: vec![n],
+            sample_fevals: vec![n],
+            sample_converged: vec![true],
         }
     }
 

@@ -6,13 +6,17 @@
 //!  * fused: `forward_solve_k` runs K cell applications inside one HLO
 //!    while-loop, amortizing PJRT dispatch (the L2 perf-pass artifact);
 //!    residuals are then sampled every K evaluations.
+//!
+//! Convergence is per-sample: lanes freeze the step they cross `tol`
+//! (their iterate stops moving and their fevals stop counting) while the
+//! rest of the batch keeps iterating.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::{Backend, HostTensor};
-use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+use crate::solver::{ResidualTrack, SolveOptions, SolveReport, SolveStep, SolverKind};
 
 /// Solve to tolerance with plain forward iteration.
 pub fn solve(
@@ -29,7 +33,7 @@ pub fn solve(
 
     let mut z = HostTensor::zeros(x_feat.shape.clone());
     let mut steps: Vec<SolveStep> = Vec::new();
-    let mut converged = false;
+    let mut track = ResidualTrack::new(batch, opts.tol);
     let mut fevals = 0usize;
     let t0 = Instant::now();
 
@@ -38,30 +42,32 @@ pub fn solve(
     inputs.push(z.clone());
     inputs.push(x_feat.clone());
 
-    while fevals < opts.max_iter {
+    while fevals < opts.max_iter && !track.all_converged() {
         let (entry, evals_this_call) = if use_fused {
             ("forward_solve_k", fused_k)
         } else {
             ("cell_step", 1)
         };
-        inputs[z_slot] = z;
+        inputs[z_slot] = z.clone();
         let out = engine.execute(entry, batch, &inputs)?;
-        let f = out[0].clone();
-        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
+        let (rel, freeze) =
+            track.observe_step(&out[1], &out[2], opts.lam, evals_this_call)?;
         fevals += evals_this_call;
         steps.push(SolveStep {
             iter: steps.len(),
-            rel_residual: rel,
+            rel_residual: track.max_rel(),
+            sample_residuals: rel,
+            active: track.active_count(),
             elapsed: t0.elapsed(),
             fevals,
             mixed: false,
         });
-        z = f;
-        if rel < opts.tol {
-            converged = true;
-            break;
-        }
+        // Lanes active this step (newly frozen included) take f; lanes
+        // frozen earlier keep their converged iterate.
+        let mut next = out[0].clone();
+        freeze.apply(&mut next, &out[0], &z)?;
+        z = next;
     }
 
-    Ok(SolveReport { kind: SolverKind::Forward, steps, converged, z_star: z })
+    Ok(SolveReport::from_track(SolverKind::Forward, steps, z, &track))
 }

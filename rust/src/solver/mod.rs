@@ -87,15 +87,177 @@ impl SolveOptions {
     }
 }
 
+/// Per-sample convergence state threaded through every solve driver.
+///
+/// This replaces the old max-over-batch scalar residual: each lane keeps
+/// its own relative residual, feval count, iteration count and converged
+/// flag, so a solve can freeze lanes the iteration they cross `tol`
+/// (their fevals stop counting, their Anderson history stops updating)
+/// while the rest of the batch keeps iterating.  The same machinery backs
+/// iteration-level serving (see `server::scheduler`).
+#[derive(Debug, Clone)]
+pub struct ResidualTrack {
+    tol: f32,
+    rel: Vec<f32>,
+    fevals: Vec<usize>,
+    iters: Vec<usize>,
+    converged: Vec<bool>,
+}
+
+impl ResidualTrack {
+    pub fn new(batch: usize, tol: f32) -> Self {
+        Self {
+            tol,
+            rel: vec![f32::INFINITY; batch],
+            fevals: vec![0; batch],
+            iters: vec![0; batch],
+            converged: vec![false; batch],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.converged.len()
+    }
+
+    /// Record one backend step: per-sample residuals from the fused norm
+    /// outputs, charging `evals` cell evaluations to every still-active
+    /// lane and freezing lanes that cross `tol`.  Frozen lanes are left
+    /// untouched.  Returns the raw per-sample residual vector (all lanes,
+    /// frozen included — callers record it in the step trace).
+    pub fn observe(
+        &mut self,
+        res_num: &HostTensor,
+        f_norm: &HostTensor,
+        lam: f32,
+        evals: usize,
+    ) -> Result<Vec<f32>> {
+        let rel = per_sample_rel(res_num, f_norm, lam)?;
+        anyhow::ensure!(
+            rel.len() == self.batch(),
+            "residual batch {} != track batch {}",
+            rel.len(),
+            self.batch()
+        );
+        for (s, &r) in rel.iter().enumerate() {
+            if self.converged[s] {
+                continue;
+            }
+            self.rel[s] = r;
+            self.fevals[s] += evals;
+            self.iters[s] += 1;
+            if r < self.tol {
+                self.converged[s] = true;
+            }
+        }
+        Ok(rel)
+    }
+
+    /// [`Self::observe`] plus the freeze bookkeeping every driver needs:
+    /// snapshots which lanes were frozen before the step and which froze
+    /// on it, so the caller can merge the next iterate with one
+    /// [`FreezeTransition::apply`] instead of hand-rolled mask zips.
+    pub fn observe_step(
+        &mut self,
+        res_num: &HostTensor,
+        f_norm: &HostTensor,
+        lam: f32,
+        evals: usize,
+    ) -> Result<(Vec<f32>, FreezeTransition)> {
+        let frozen_before = self.converged.clone();
+        let rel = self.observe(res_num, f_norm, lam, evals)?;
+        let newly_frozen = frozen_before
+            .iter()
+            .zip(&self.converged)
+            .map(|(before, now)| !before && *now)
+            .collect();
+        Ok((rel, FreezeTransition { frozen_before, newly_frozen }))
+    }
+
+    /// Per-sample relative residual at each lane's last *active* step.
+    pub fn rel(&self) -> &[f32] {
+        &self.rel
+    }
+
+    /// Per-sample cell evaluations (frozen lanes stop accumulating).
+    pub fn fevals(&self) -> &[usize] {
+        &self.fevals
+    }
+
+    /// Per-sample iteration counts (frozen lanes stop accumulating).
+    pub fn iters(&self) -> &[usize] {
+        &self.iters
+    }
+
+    /// Per-sample converged (frozen) flags.
+    pub fn converged(&self) -> &[bool] {
+        &self.converged
+    }
+
+    pub fn all_converged(&self) -> bool {
+        self.converged.iter().all(|&c| c)
+    }
+
+    /// Lanes still iterating.
+    pub fn active_count(&self) -> usize {
+        self.converged.iter().filter(|&&c| !c).count()
+    }
+
+    /// Per-sample still-active mask — the lanes whose Anderson history
+    /// should keep updating (the complement of [`Self::converged`]).
+    pub fn active_mask(&self) -> Vec<bool> {
+        self.converged.iter().map(|c| !c).collect()
+    }
+
+    /// Max residual over the whole batch (frozen lanes hold their
+    /// freeze-time value, which is below `tol` by construction).
+    pub fn max_rel(&self) -> f32 {
+        self.rel.iter().cloned().fold(0.0f32, f32::max)
+    }
+
+    /// Total cell evaluations actually charged across the batch.
+    pub fn total_fevals(&self) -> usize {
+        self.fevals.iter().sum()
+    }
+}
+
+/// The lane-freeze bookkeeping of one observed step: which lanes were
+/// already frozen before it and which froze on it.
+#[derive(Debug, Clone)]
+pub struct FreezeTransition {
+    pub frozen_before: Vec<bool>,
+    pub newly_frozen: Vec<bool>,
+}
+
+impl FreezeTransition {
+    /// Merge freeze semantics into the next iterate: lanes that froze on
+    /// this step take their row of `f` (the terminal step takes f
+    /// directly), lanes frozen earlier keep their row of `prev`; all
+    /// other rows of `next` are left as the caller computed them.
+    pub fn apply(
+        &self,
+        next: &mut HostTensor,
+        f: &HostTensor,
+        prev: &HostTensor,
+    ) -> Result<()> {
+        next.overwrite_rows_where(f, &self.newly_frozen)?;
+        next.overwrite_rows_where(prev, &self.frozen_before)
+    }
+}
+
 /// One recorded solver iteration.
 #[derive(Debug, Clone)]
 pub struct SolveStep {
     pub iter: usize,
     /// Max-over-batch relative residual ‖f−z‖/(‖f‖+λ).
     pub rel_residual: f32,
+    /// Per-sample relative residuals at this iteration (lane order).
+    pub sample_residuals: Vec<f32>,
+    /// Lanes still iterating after this step (unfrozen count).
+    pub active: usize,
     /// Cumulative wallclock since solve start.
     pub elapsed: Duration,
-    /// Cumulative cell evaluations (per sample).
+    /// Cumulative cell evaluations for a lane active since the start
+    /// (frozen lanes stop earlier — see `SolveReport::sample_fevals`).
     pub fevals: usize,
     /// True if Anderson mixing produced this step's *next* iterate —
     /// false for plain forward steps and for the terminal step (which
@@ -107,12 +269,19 @@ pub struct SolveStep {
 impl SolveStep {
     /// JSON object form (keys sorted; `elapsed` as seconds).
     pub fn to_json(&self) -> Json {
+        let samples: Vec<Json> = self
+            .sample_residuals
+            .iter()
+            .map(|&r| json::num(r as f64))
+            .collect();
         json::obj(vec![
+            ("active", json::num(self.active as f64)),
             ("elapsed_s", json::num(self.elapsed.as_secs_f64())),
             ("fevals", json::num(self.fevals as f64)),
             ("iter", json::num(self.iter as f64)),
             ("mixed", Json::Bool(self.mixed)),
             ("rel_residual", json::num(self.rel_residual as f64)),
+            ("sample_residuals", Json::Arr(samples)),
         ])
     }
 
@@ -122,9 +291,30 @@ impl SolveStep {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("SolveStep missing '{key}'"))
         };
+        // Per-sample fields entered the format with the iteration-level
+        // scheduler; older traces without them parse as batch-scalar steps.
+        let sample_residuals = match v.get("sample_residuals") {
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("'sample_residuals' is not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow!("bad sample residual"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let active = v
+            .get("active")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
         Ok(Self {
             iter: f64field("iter")? as usize,
             rel_residual: f64field("rel_residual")? as f32,
+            sample_residuals,
+            active,
             elapsed: Duration::from_secs_f64(f64field("elapsed_s")?),
             fevals: f64field("fevals")? as usize,
             mixed: v
@@ -140,17 +330,53 @@ impl SolveStep {
 pub struct SolveReport {
     pub kind: SolverKind,
     pub steps: Vec<SolveStep>,
+    /// True only when *every* sample converged.
     pub converged: bool,
     pub z_star: HostTensor,
+    /// Per-sample iterations until the lane froze (or the solve ended).
+    pub sample_iters: Vec<usize>,
+    /// Per-sample cell evaluations actually charged.
+    pub sample_fevals: Vec<usize>,
+    /// Per-sample converged flags.
+    pub sample_converged: Vec<bool>,
 }
 
 impl SolveReport {
+    /// Assemble a report from a finished drive and its residual track.
+    pub fn from_track(
+        kind: SolverKind,
+        steps: Vec<SolveStep>,
+        z_star: HostTensor,
+        track: &ResidualTrack,
+    ) -> Self {
+        Self {
+            kind,
+            steps,
+            converged: track.all_converged(),
+            z_star,
+            sample_iters: track.iters().to_vec(),
+            sample_fevals: track.fevals().to_vec(),
+            sample_converged: track.converged().to_vec(),
+        }
+    }
+
     pub fn iters(&self) -> usize {
         self.steps.len()
     }
 
     pub fn fevals(&self) -> usize {
         self.steps.last().map(|s| s.fevals).unwrap_or(0)
+    }
+
+    /// Total cell evaluations actually charged across the batch (the
+    /// iteration-level accounting; falls back to the lockstep count when
+    /// no per-sample trace is present, e.g. on legacy JSON reports).
+    pub fn fevals_total(&self) -> usize {
+        if self.sample_fevals.is_empty() {
+            self.fevals() * self.z_star.shape.first().copied().unwrap_or(1)
+        } else {
+            self.sample_fevals.iter().sum()
+        }
     }
 
     pub fn final_residual(&self) -> f32 {
@@ -192,9 +418,18 @@ impl SolveReport {
             .iter()
             .map(|&d| json::num(d as f64))
             .collect();
+        let usizes = |v: &[usize]| {
+            Json::Arr(v.iter().map(|&u| json::num(u as f64)).collect())
+        };
+        let bools = |v: &[bool]| {
+            Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect())
+        };
         json::obj(vec![
             ("converged", Json::Bool(self.converged)),
             ("kind", json::s(self.kind.name())),
+            ("sample_converged", bools(&self.sample_converged)),
+            ("sample_fevals", usizes(&self.sample_fevals)),
+            ("sample_iters", usizes(&self.sample_iters)),
             ("steps", steps),
             (
                 "z_star",
@@ -238,6 +473,30 @@ impl SolveReport {
                     .ok_or_else(|| anyhow!("bad z_star value"))
             })
             .collect::<Result<Vec<_>>>()?;
+        // Per-sample traces are optional so pre-scheduler reports parse.
+        let sample_usizes = |key: &str| -> Result<Vec<usize>> {
+            match v.get(key) {
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad '{key}' value")))
+                    .collect(),
+                None => Ok(Vec::new()),
+            }
+        };
+        let sample_converged = match v.get("sample_converged") {
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("'sample_converged' is not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_bool()
+                        .ok_or_else(|| anyhow!("bad 'sample_converged' value"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(Self {
             kind,
             steps,
@@ -246,6 +505,9 @@ impl SolveReport {
                 .and_then(Json::as_bool)
                 .ok_or_else(|| anyhow!("SolveReport missing 'converged'"))?,
             z_star: HostTensor::f32(shape, data)?,
+            sample_iters: sample_usizes("sample_iters")?,
+            sample_fevals: sample_usizes("sample_fevals")?,
+            sample_converged,
         })
     }
 }
@@ -264,19 +526,22 @@ pub fn solve(
     }
 }
 
-/// Max-over-batch relative residual from the fused cell_step outputs.
-pub(crate) fn max_rel_residual(
+/// Per-sample relative residuals ‖f−z‖/(‖f‖+λ) from the fused cell_step
+/// norm outputs.  Lane order matches the batch axis.
+pub fn per_sample_rel(
     res_num: &HostTensor,
     f_norm: &HostTensor,
     lam: f32,
-) -> Result<f32> {
+) -> Result<Vec<f32>> {
     let num = res_num.f32s()?;
     let den = f_norm.f32s()?;
-    Ok(num
-        .iter()
-        .zip(den)
-        .map(|(n, d)| n / (d + lam))
-        .fold(0.0f32, f32::max))
+    anyhow::ensure!(
+        num.len() == den.len(),
+        "residual norm outputs disagree on batch ({} vs {})",
+        num.len(),
+        den.len()
+    );
+    Ok(num.iter().zip(den).map(|(n, d)| n / (d + lam)).collect())
 }
 
 #[cfg(test)]
@@ -292,11 +557,64 @@ mod tests {
     }
 
     #[test]
-    fn max_rel_residual_takes_max() {
+    fn per_sample_rel_lane_order() {
         let num = HostTensor::f32(vec![3], vec![1.0, 4.0, 2.0]).unwrap();
         let den = HostTensor::f32(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
-        let r = max_rel_residual(&num, &den, 0.0).unwrap();
-        assert!((r - 4.0).abs() < 1e-6);
+        let r = per_sample_rel(&num, &den, 0.0).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!((r[0] - 1.0).abs() < 1e-6);
+        assert!((r[1] - 4.0).abs() < 1e-6);
+        assert!((r[2] - 2.0).abs() < 1e-6);
+        let short = HostTensor::f32(vec![2], vec![1.0, 1.0]).unwrap();
+        assert!(per_sample_rel(&num, &short, 0.0).is_err());
+    }
+
+    #[test]
+    fn residual_track_freezes_converged_lanes() {
+        let mut tr = ResidualTrack::new(2, 0.5);
+        let den = HostTensor::f32(vec![2], vec![1.0, 1.0]).unwrap();
+        // Lane 0 converges immediately; lane 1 stays active.
+        let num = HostTensor::f32(vec![2], vec![0.1, 2.0]).unwrap();
+        tr.observe(&num, &den, 0.0, 1).unwrap();
+        assert_eq!(tr.converged(), &[true, false]);
+        assert_eq!(tr.active_count(), 1);
+        assert!(!tr.all_converged());
+        // A frozen lane takes no further fevals/iters even if the kernel
+        // keeps reporting residuals for it.
+        let num2 = HostTensor::f32(vec![2], vec![9.0, 0.2]).unwrap();
+        tr.observe(&num2, &den, 0.0, 1).unwrap();
+        assert_eq!(tr.fevals(), &[1, 2]);
+        assert_eq!(tr.iters(), &[1, 2]);
+        assert_eq!(tr.converged(), &[true, true]);
+        assert!(tr.all_converged());
+        assert_eq!(tr.total_fevals(), 3);
+        // Frozen lane 0 holds its freeze-time residual, not 9.0.
+        assert!((tr.rel()[0] - 0.1).abs() < 1e-6);
+        assert!((tr.max_rel() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn observe_step_reports_freeze_transition_and_applies_it() {
+        let mut tr = ResidualTrack::new(3, 0.5);
+        let den = HostTensor::f32(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
+        // Step 1: lane 0 freezes.
+        let num = HostTensor::f32(vec![3], vec![0.1, 2.0, 2.0]).unwrap();
+        let (_, fr1) = tr.observe_step(&num, &den, 0.0, 1).unwrap();
+        assert_eq!(fr1.frozen_before, vec![false, false, false]);
+        assert_eq!(fr1.newly_frozen, vec![true, false, false]);
+        // Step 2: lane 1 freezes; lane 0 already frozen.
+        let num2 = HostTensor::f32(vec![3], vec![9.0, 0.2, 2.0]).unwrap();
+        let (_, fr2) = tr.observe_step(&num2, &den, 0.0, 1).unwrap();
+        assert_eq!(fr2.frozen_before, vec![true, false, false]);
+        assert_eq!(fr2.newly_frozen, vec![false, true, false]);
+        // apply(): newly frozen lane takes f, frozen lane keeps prev,
+        // active lane keeps the caller's (e.g. mixed) row.
+        let mut next =
+            HostTensor::f32(vec![3, 1], vec![10.0, 11.0, 12.0]).unwrap();
+        let f = HostTensor::f32(vec![3, 1], vec![20.0, 21.0, 22.0]).unwrap();
+        let prev = HostTensor::f32(vec![3, 1], vec![30.0, 31.0, 32.0]).unwrap();
+        fr2.apply(&mut next, &f, &prev).unwrap();
+        assert_eq!(next.f32s().unwrap(), &[30.0, 21.0, 12.0]);
     }
 
     #[test]
@@ -306,11 +624,15 @@ mod tests {
             steps: vec![],
             converged: false,
             z_star: HostTensor::zeros(vec![1]),
+            sample_iters: vec![],
+            sample_fevals: vec![],
+            sample_converged: vec![],
         };
         assert_eq!(r.iters(), 0);
         assert!(r.final_residual().is_nan());
         assert_eq!(r.total_time(), Duration::ZERO);
         assert!(r.time_to(1.0).is_none());
+        assert_eq!(r.fevals_total(), 0);
     }
 
     #[test]
@@ -318,6 +640,8 @@ mod tests {
         let s = SolveStep {
             iter: 3,
             rel_residual: 0.25,
+            sample_residuals: vec![0.25, 0.125],
+            active: 1,
             elapsed: Duration::from_millis(1500),
             fevals: 4,
             mixed: true,
@@ -325,9 +649,24 @@ mod tests {
         let back = SolveStep::from_json(&s.to_json()).unwrap();
         assert_eq!(back.iter, 3);
         assert_eq!(back.rel_residual, 0.25);
+        assert_eq!(back.sample_residuals, vec![0.25, 0.125]);
+        assert_eq!(back.active, 1);
         assert_eq!(back.elapsed, Duration::from_millis(1500));
         assert_eq!(back.fevals, 4);
         assert!(back.mixed);
+    }
+
+    #[test]
+    fn legacy_step_json_still_parses() {
+        // Pre-scheduler traces have no per-sample fields.
+        let v = json::parse(
+            r#"{"elapsed_s":0.5,"fevals":2,"iter":1,"mixed":false,"rel_residual":0.125}"#,
+        )
+        .unwrap();
+        let s = SolveStep::from_json(&v).unwrap();
+        assert!(s.sample_residuals.is_empty());
+        assert_eq!(s.active, 0);
+        assert_eq!(s.fevals, 2);
     }
 
     #[test]

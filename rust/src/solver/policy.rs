@@ -6,6 +6,8 @@
 //! residual stops improving by at least `stagnation_eps` per window of m
 //! iterations, finish with plain forward steps (whose per-iteration cost is
 //! lower — past the crossover point the mixing penalty buys nothing).
+//! Like the other drivers, convergence is per-sample: lanes freeze the
+//! step they cross `tol` while the rest of the batch keeps iterating.
 
 use std::time::Instant;
 
@@ -13,7 +15,7 @@ use anyhow::Result;
 
 use crate::runtime::{Backend, HostTensor};
 use crate::solver::anderson::History;
-use crate::solver::{max_rel_residual, SolveOptions, SolveReport, SolveStep, SolverKind};
+use crate::solver::{ResidualTrack, SolveOptions, SolveReport, SolveStep, SolverKind};
 
 /// Detect stagnation over the trailing `window` residuals: returns true
 /// when the best value in the recent window improved on the window before
@@ -47,7 +49,7 @@ pub fn solve(
     let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
     let mut steps: Vec<SolveStep> = Vec::new();
     let mut residuals: Vec<f32> = Vec::new();
-    let mut converged = false;
+    let mut track = ResidualTrack::new(batch, opts.tol);
     let mut anderson_active = true;
     let t0 = Instant::now();
 
@@ -60,20 +62,22 @@ pub fn solve(
         cell_inputs[z_slot] = z.clone();
         let out = engine.execute("cell_step", batch, &cell_inputs)?;
         let f = &out[0];
-        let rel = max_rel_residual(&out[1], &out[2], opts.lam)?;
-        residuals.push(rel);
+        let (rel, freeze) =
+            track.observe_step(&out[1], &out[2], opts.lam, 1)?;
+        residuals.push(track.max_rel());
         // As in the anderson driver, `mixed` is back-filled below so it
         // describes the update that produced this step's next iterate.
         steps.push(SolveStep {
             iter: k,
-            rel_residual: rel,
+            rel_residual: track.max_rel(),
+            sample_residuals: rel,
+            active: track.active_count(),
             elapsed: t0.elapsed(),
             fevals: k + 1,
             mixed: false,
         });
-        if rel < opts.tol {
-            converged = true;
-            z = f.clone();
+        if track.all_converged() {
+            z.overwrite_rows_where(f, &freeze.newly_frozen)?;
             break;
         }
 
@@ -83,18 +87,23 @@ pub fn solve(
         }
 
         if anderson_active {
-            hist.push(z.f32s()?, f.f32s()?);
+            hist.push_where(z.f32s()?, f.f32s()?, &track.active_mask());
             let (xh, fh, mask) = hist.tensors()?;
             let update =
                 engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-            z = update[0].clone().reshaped(meta.latent_shape(batch))?;
+            let mut next =
+                update[0].clone().reshaped(meta.latent_shape(batch))?;
+            freeze.apply(&mut next, f, &z)?;
+            z = next;
             steps.last_mut().expect("step recorded above").mixed = true;
         } else {
-            z = f.clone();
+            let mut next = f.clone();
+            freeze.apply(&mut next, f, &z)?;
+            z = next;
         }
     }
 
-    Ok(SolveReport { kind: SolverKind::Hybrid, steps, converged, z_star: z })
+    Ok(SolveReport::from_track(SolverKind::Hybrid, steps, z, &track))
 }
 
 #[cfg(test)]

@@ -2,10 +2,13 @@
 //!
 //! Experiment outputs (residual traces, solve summaries) serialize through
 //! `SolveReport::to_json` / `util::json::to_string`.  These tests pin the
-//! exact byte-level format — key order (sorted), number rendering, nesting
-//! — so downstream tooling that parses result files can't silently break.
-//! Fixture values are dyadic (0.25, 0.5, 1.5 …) so f32→f64→text→f64→f32
-//! round-trips are exact.
+//! exact byte-level format — key order (sorted), number rendering, nesting,
+//! and the per-sample trace fields introduced by iteration-level
+//! scheduling (`sample_residuals`/`active` per step; `sample_iters`/
+//! `sample_fevals`/`sample_converged` per report) — so downstream tooling
+//! that parses result files can't silently break.  Fixture values are
+//! dyadic (0.25, 0.5, 1.5 …) so f32→f64→text→f64→f32 round-trips are
+//! exact.
 
 use std::time::Duration;
 
@@ -13,6 +16,7 @@ use deq_anderson::runtime::HostTensor;
 use deq_anderson::solver::{SolveReport, SolveStep, SolverKind};
 use deq_anderson::util::json;
 
+/// A two-lane solve where lane 0 froze at step 0 and lane 1 at step 1.
 fn fixture() -> SolveReport {
     SolveReport {
         kind: SolverKind::Anderson,
@@ -21,28 +25,39 @@ fn fixture() -> SolveReport {
             SolveStep {
                 iter: 0,
                 rel_residual: 1.0,
+                sample_residuals: vec![0.25, 1.0],
+                active: 1,
                 elapsed: Duration::from_secs_f64(0.25),
                 fevals: 1,
                 mixed: true,
             },
             SolveStep {
                 iter: 1,
-                rel_residual: 0.125,
+                rel_residual: 0.25,
+                sample_residuals: vec![0.25, 0.125],
+                active: 0,
                 elapsed: Duration::from_secs_f64(0.5),
                 fevals: 2,
                 mixed: false,
             },
         ],
         z_star: HostTensor::f32(vec![2], vec![1.5, -2.0]).unwrap(),
+        sample_iters: vec![1, 2],
+        sample_fevals: vec![1, 2],
+        sample_converged: vec![true, true],
     }
 }
 
 /// The pinned wire format.  If this test fails because of an intentional
 /// format change, bump the experiment docs and update the string — never
 /// regenerate it blindly.
-const GOLDEN: &str = "{\"converged\":true,\"kind\":\"anderson\",\"steps\":[\
-{\"elapsed_s\":0.25,\"fevals\":1,\"iter\":0,\"mixed\":true,\"rel_residual\":1},\
-{\"elapsed_s\":0.5,\"fevals\":2,\"iter\":1,\"mixed\":false,\"rel_residual\":0.125}\
+const GOLDEN: &str = "{\"converged\":true,\"kind\":\"anderson\",\
+\"sample_converged\":[true,true],\"sample_fevals\":[1,2],\"sample_iters\":[1,2],\
+\"steps\":[\
+{\"active\":1,\"elapsed_s\":0.25,\"fevals\":1,\"iter\":0,\"mixed\":true,\
+\"rel_residual\":1,\"sample_residuals\":[0.25,1]},\
+{\"active\":0,\"elapsed_s\":0.5,\"fevals\":2,\"iter\":1,\"mixed\":false,\
+\"rel_residual\":0.25,\"sample_residuals\":[0.25,0.125]}\
 ],\"z_star\":{\"data\":[1.5,-2],\"shape\":[2]}}";
 
 #[test]
@@ -60,10 +75,17 @@ fn golden_string_parses_back_to_report() {
     assert_eq!(rep.iters(), 2);
     assert_eq!(rep.steps[0].iter, 0);
     assert_eq!(rep.steps[0].rel_residual, 1.0);
+    assert_eq!(rep.steps[0].sample_residuals, vec![0.25, 1.0]);
+    assert_eq!(rep.steps[0].active, 1);
     assert_eq!(rep.steps[0].elapsed, Duration::from_secs_f64(0.25));
     assert_eq!(rep.steps[0].fevals, 1);
     assert!(rep.steps[0].mixed);
     assert!(!rep.steps[1].mixed);
+    assert_eq!(rep.steps[1].sample_residuals, vec![0.25, 0.125]);
+    assert_eq!(rep.sample_iters, vec![1, 2]);
+    assert_eq!(rep.sample_fevals, vec![1, 2]);
+    assert_eq!(rep.sample_converged, vec![true, true]);
+    assert_eq!(rep.fevals_total(), 3);
     assert_eq!(rep.z_star.shape, vec![2]);
     assert_eq!(rep.z_star.f32s().unwrap(), &[1.5, -2.0]);
 }
@@ -84,6 +106,9 @@ fn empty_report_roundtrips() {
         converged: false,
         steps: vec![],
         z_star: HostTensor::f32(vec![0], vec![]).unwrap(),
+        sample_iters: vec![],
+        sample_fevals: vec![],
+        sample_converged: vec![],
     };
     let text = json::to_string(&rep.to_json());
     let back = SolveReport::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -91,4 +116,21 @@ fn empty_report_roundtrips() {
     assert!(!back.converged);
     assert_eq!(back.iters(), 0);
     assert!(back.z_star.is_empty());
+    assert!(back.sample_iters.is_empty());
+}
+
+#[test]
+fn legacy_report_without_sample_fields_parses() {
+    // Reports written before iteration-level scheduling carry no
+    // per-sample arrays; they must keep parsing (as empty traces).
+    let legacy = "{\"converged\":true,\"kind\":\"anderson\",\"steps\":[\
+{\"elapsed_s\":0.25,\"fevals\":1,\"iter\":0,\"mixed\":true,\"rel_residual\":1}\
+],\"z_star\":{\"data\":[1.5,-2],\"shape\":[2]}}";
+    let rep = SolveReport::from_json(&json::parse(legacy).unwrap()).unwrap();
+    assert_eq!(rep.iters(), 1);
+    assert!(rep.sample_iters.is_empty());
+    assert!(rep.sample_converged.is_empty());
+    assert!(rep.steps[0].sample_residuals.is_empty());
+    // fevals_total falls back to the lockstep estimate: fevals × batch.
+    assert_eq!(rep.fevals_total(), 2);
 }

@@ -1,4 +1,5 @@
-//! Serving-stack integration tests: router, dynamic batcher, TCP protocol.
+//! Serving-stack integration tests: router, iteration-level scheduler,
+//! batch-granular baseline, TCP protocol.
 //! Hermetic: they run on whatever backend `backend_from_dir` selects (the
 //! pure-Rust `NativeEngine` when AOT artifacts are absent), so nothing
 //! here skips in CI.
@@ -10,38 +11,56 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use deq_anderson::data;
+use deq_anderson::infer;
 use deq_anderson::runtime::{backend_from_dir, Backend};
-use deq_anderson::server::{tcp, Router, RouterConfig};
+use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
 use deq_anderson::solver::{SolveOptions, SolverKind};
 use deq_anderson::util::json::{self, Json};
 
-fn make_router(max_wait_ms: u64) -> (Arc<Router>, usize) {
+fn engine() -> Arc<dyn Backend> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = backend_from_dir(dir).expect("backend");
+    backend_from_dir(dir).expect("backend")
+}
+
+fn make_router(max_wait_ms: u64, mode: SchedMode) -> (Arc<Router>, usize) {
+    let engine = engine();
     let image_dim = engine.manifest().model.image_dim();
     let params = Arc::new(engine.init_params().unwrap());
     let cfg = RouterConfig {
         solver: SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson),
+        mode,
         max_wait: Duration::from_millis(max_wait_ms),
         queue_cap: 256,
     };
     (Arc::new(Router::start(engine, params, cfg).unwrap()), image_dim)
 }
 
+/// Scale an image to modulate solve difficulty on the tanh cell: large
+/// amplitudes saturate it (fast convergence), small ones leave it near
+/// its linear regime (slow, rate ≈ the cell's spectral radius).
+fn scaled(image: &[f32], scale: f32) -> Vec<f32> {
+    image.iter().map(|&v| v * scale).collect()
+}
+
 #[test]
 fn single_request_roundtrip() {
-    let (router, dim) = make_router(5);
+    // Default mode: the iteration-level scheduler.
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
     let (data, _, _) = data::load_auto(8, 8, 1);
     let resp = router.infer_blocking(data.image(0).to_vec()).unwrap();
     assert!(resp.class < 10);
     assert_eq!(resp.batch_size, 1);
     assert!(resp.latency > Duration::ZERO);
+    assert!(resp.solver_iters > 0);
+    assert!(resp.solver_fevals >= resp.solver_iters);
+    assert!(resp.converged, "default-tol solve should converge");
     assert_eq!(dim, data.image_dim());
 }
 
 #[test]
 fn concurrent_requests_get_batched() {
-    let (router, _) = make_router(25);
+    // The batch-granular baseline still batches fire-and-wait style.
+    let (router, _) = make_router(25, SchedMode::BatchGranular);
     let (data, _, _) = data::load_auto(16, 8, 2);
     // Submit 8 requests quickly; with a 25ms window they should share
     // batches rather than each going out alone.
@@ -50,7 +69,7 @@ fn concurrent_requests_get_batched() {
         .collect();
     let responses: Vec<_> = receivers
         .into_iter()
-        .map(|rx| rx.recv().expect("response"))
+        .map(|rx| rx.recv().expect("reply").expect("response"))
         .collect();
     assert_eq!(responses.len(), 8);
     let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
@@ -66,8 +85,17 @@ fn concurrent_requests_get_batched() {
 }
 
 #[test]
+fn submit_rejects_wrong_image_size() {
+    // Validated at submission, so a malformed request can never fail a
+    // whole batch-granular batch (or waste a scheduler lane).
+    let (router, dim) = make_router(5, SchedMode::BatchGranular);
+    assert!(router.submit(vec![0.0; dim + 1]).is_err());
+    assert!(router.submit(Vec::new()).is_err());
+}
+
+#[test]
 fn queue_depth_visible_while_waiting() {
-    let (router, dim) = make_router(1_000);
+    let (router, dim) = make_router(1_000, SchedMode::BatchGranular);
     let img = vec![0.0f32; dim];
     let _r1 = router.submit(img.clone()).unwrap();
     let _r2 = router.submit(img).unwrap();
@@ -75,8 +103,117 @@ fn queue_depth_visible_while_waiting() {
 }
 
 #[test]
+fn stiff_sample_does_not_delay_easy_sample() {
+    // The point of iteration-level scheduling: an easy sample retires the
+    // iteration it converges, even while a stiff co-rider keeps going.
+    let (router, _) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 9);
+    let rx_stiff = router.submit(scaled(data.image(0), 0.03)).unwrap();
+    let rx_easy = router.submit(scaled(data.image(1), 3.0)).unwrap();
+    let stiff = rx_stiff.recv().expect("reply").expect("stiff response");
+    let easy = rx_easy.recv().expect("reply").expect("easy response");
+    assert!(
+        easy.solver_iters < stiff.solver_iters,
+        "easy took {} iters, stiff {} — per-sample retirement broken",
+        easy.solver_iters,
+        stiff.solver_iters
+    );
+    assert!(
+        easy.latency < stiff.latency,
+        "easy latency {:?} not below stiff {:?}",
+        easy.latency,
+        stiff.latency
+    );
+    // Per-sample counters, not the batch max, ride the response.
+    assert_eq!(easy.solver_fevals, easy.solver_iters);
+    let occ = router.metrics.lane_occupancy.lock().unwrap().count();
+    assert!(occ > 0, "scheduler recorded no iterations");
+}
+
+#[test]
+fn per_sample_early_exit_matches_batch_granular_solve() {
+    // Property-style sweep: a mixed-difficulty batch solved with
+    // per-sample freezing must return the same logits (within tol-level
+    // slack) as each sample solved alone to its own convergence — and
+    // must charge strictly fewer fevals than lockstep accounting.
+    let e = engine();
+    let params = e.init_params().unwrap();
+    let opts = SolveOptions {
+        tol: 1e-4,
+        max_iter: 80,
+        ..SolveOptions::from_manifest(e.as_ref(), SolverKind::Anderson)
+    };
+    for seed in 0..4u64 {
+        let (data, _, _) = data::load_auto(8, 8, seed + 20);
+        let images: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let s = if i % 2 == 0 { 3.0 } else { 0.03 };
+                scaled(data.image(i), s)
+            })
+            .collect();
+        let flat: Vec<f32> = images.concat();
+        let batched = infer::infer(e.as_ref(), &params, &flat, 8, &opts).unwrap();
+        assert_eq!(batched.sample_iters.len(), 8);
+        for (i, image) in images.iter().enumerate() {
+            let solo = infer::infer(e.as_ref(), &params, image, 1, &opts).unwrap();
+            for (a, b) in batched.logits[i].iter().zip(&solo.logits[0]) {
+                assert!(
+                    (a - b).abs() < 1e-2,
+                    "seed={seed} sample {i}: logits diverged ({a} vs {b})"
+                );
+            }
+            // Argmax parity wherever the solo margin is decisive.
+            let row = &solo.logits[0];
+            let mut sorted = row.clone();
+            sorted.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            if sorted[0] - sorted[1] > 0.05 {
+                assert_eq!(
+                    batched.predictions[i], solo.predictions[0],
+                    "seed={seed} sample {i}: prediction flipped"
+                );
+            }
+            // Early exit is per-sample: the lane's own count matches the
+            // solo solve (both freeze at the same tol crossing).
+            assert_eq!(
+                batched.sample_iters[i], solo.sample_iters[0],
+                "seed={seed} sample {i}: lane iters diverged from solo"
+            );
+        }
+        // Strictly fewer fevals than every lane paying the slowest lane.
+        let total: usize = batched.sample_fevals.iter().sum();
+        assert!(
+            total < batched.solver_fevals * 8,
+            "seed={seed}: {total} fevals, lockstep would be {}",
+            batched.solver_fevals * 8
+        );
+    }
+}
+
+#[test]
+fn shutdown_drains_queue_with_error_replies() {
+    // Long max_wait so the batch never fires: submissions are still
+    // queued when shutdown lands, and must get an explicit error reply
+    // instead of a silently dropped sender.
+    let (router, dim) = make_router(60_000, SchedMode::BatchGranular);
+    let rxs: Vec<_> = (0..4)
+        .map(|_| router.submit(vec![0.0; dim]).unwrap())
+        .collect();
+    let router = Arc::try_unwrap(router).ok().expect("sole owner");
+    router.shutdown();
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(_)) => {} // served before shutdown landed — also fine
+            Ok(Err(msg)) => {
+                assert!(msg.contains("shutting down"), "unexpected error: {msg}")
+            }
+            Err(e) => panic!("request dropped without a reply: {e}"),
+        }
+    }
+}
+
+#[test]
 fn tcp_protocol_end_to_end() {
-    let (router, dim) = make_router(5);
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
     let addr = "127.0.0.1:17973";
     {
         let router = router.clone();
@@ -107,7 +244,7 @@ fn tcp_protocol_end_to_end() {
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"));
 
-    // real request
+    // real request — the reply carries this sample's own solver counters.
     let (data, _, _) = data::load_auto(4, 4, 3);
     let img: Vec<String> =
         data.image(0).iter().map(|v| format!("{v:.4}")).collect();
@@ -119,6 +256,12 @@ fn tcp_protocol_end_to_end() {
     assert_eq!(v.get("id").and_then(Json::as_i64), Some(7));
     let class = v.get("class").and_then(Json::as_i64).expect("class");
     assert!((0..10).contains(&class));
+    let iters = v
+        .get("solver_iters")
+        .and_then(Json::as_i64)
+        .expect("solver_iters");
+    assert!(iters > 0);
+    assert!(v.get("solver_fevals").is_some());
 
     // stats
     line.clear();
@@ -129,7 +272,7 @@ fn tcp_protocol_end_to_end() {
 
 #[test]
 fn router_shutdown_is_clean() {
-    let (router, _) = make_router(5);
+    let (router, _) = make_router(5, SchedMode::IterationLevel);
     let router = Arc::try_unwrap(router).ok().expect("sole owner");
     router.shutdown();
 }

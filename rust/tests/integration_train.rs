@@ -131,3 +131,22 @@ fn evaluate_runs_on_test_set() {
     let acc_e = infer::evaluate_explicit(e, &params, &test, 32).unwrap();
     assert!((0.0..=1.0).contains(&acc_e));
 }
+
+#[test]
+fn evaluate_covers_tail_remainder() {
+    // 40 samples at batch 32 leaves a remainder of 8; it used to be
+    // silently dropped (`len / batch` truncation).  Both inference paths
+    // are per-sample deterministic, so accuracy over the same 40 samples
+    // must not depend on how they are chunked into batches.
+    let e = backend().as_ref();
+    let params = e.init_params().unwrap();
+    let (_, test, _) = data::load_auto(16, 40, 7);
+    assert_eq!(test.len(), 40);
+    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    let acc32 = infer::evaluate(e, &params, &test, 32, &opts).unwrap();
+    let acc8 = infer::evaluate(e, &params, &test, 8, &opts).unwrap();
+    assert_eq!(acc32, acc8, "DEQ accuracy depends on batch chunking");
+    let acc_e32 = infer::evaluate_explicit(e, &params, &test, 32).unwrap();
+    let acc_e8 = infer::evaluate_explicit(e, &params, &test, 8).unwrap();
+    assert_eq!(acc_e32, acc_e8, "explicit accuracy depends on chunking");
+}
