@@ -1,0 +1,249 @@
+//! Native kernels bench: the blocked/parallel GEMM vs the naive
+//! reference loop, and the pooled engine hot path (bucket-32 `cell_step`
+//! + `anderson_update`, the per-iteration cost of a serving solve) vs a
+//! faithful reimplementation of the old per-sample, allocation-churning
+//! path.  Writes a machine-readable `BENCH_native_kernels.json` summary
+//! for trend tracking (uploaded by the CI `bench-smoke` job).
+//!
+//!     cargo bench --bench native_kernels -- [--iters 40] \
+//!         [--out BENCH_native_kernels.json]
+
+use std::time::Duration;
+
+use deq_anderson::native::{kernels, linalg};
+use deq_anderson::runtime::{Backend, HostTensor, NativeConfig, NativeEngine};
+use deq_anderson::util::bench::{bench, header};
+use deq_anderson::util::cli::Args;
+use deq_anderson::util::json::{self, Json};
+use deq_anderson::util::rng::Rng;
+
+fn gflops(macs: usize, t: Duration) -> f64 {
+    2.0 * macs as f64 / t.as_secs_f64() / 1e9
+}
+
+/// The old engine cell_step, verbatim shape: per-sample affine loops and
+/// a fresh `Vec` for every output — the baseline the pooled+blocked path
+/// is measured against.
+fn naive_cell_step(
+    w: &[f32],
+    b: &[f32],
+    z: &[f32],
+    x: &[f32],
+    batch: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut f = vec![0.0f32; batch * n];
+    let mut res = vec![0.0f32; batch];
+    let mut fnorm = vec![0.0f32; batch];
+    for s in 0..batch {
+        let zs = &z[s * n..(s + 1) * n];
+        let xs = &x[s * n..(s + 1) * n];
+        let fs = &mut f[s * n..(s + 1) * n];
+        fs.copy_from_slice(b);
+        for i in 0..n {
+            let zi = zs[i];
+            if zi == 0.0 {
+                continue;
+            }
+            let row = &w[i * n..(i + 1) * n];
+            for j in 0..n {
+                fs[j] += zi * row[j];
+            }
+        }
+        let mut num = 0.0f32;
+        let mut den = 0.0f32;
+        for j in 0..n {
+            fs[j] = (fs[j] + xs[j]).tanh();
+            let d = fs[j] - zs[j];
+            num += d * d;
+            den += fs[j] * fs[j];
+        }
+        res[s] = num.sqrt();
+        fnorm[s] = den.sqrt();
+    }
+    (f, res, fnorm)
+}
+
+/// The old engine anderson_update, verbatim shape: fresh g/h/ones/alpha
+/// vectors per sample per call.
+fn naive_anderson_update(
+    xh: &[f32],
+    fh: &[f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    lam: f32,
+    beta: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut z = vec![0.0f32; batch * n];
+    let mut alpha_out = vec![0.0f32; batch * m];
+    for s in 0..batch {
+        let mut g = vec![0.0f32; m * n];
+        for i in 0..m {
+            let off = (s * m + i) * n;
+            for t in 0..n {
+                g[i * n + t] = fh[off + t] - xh[off + t];
+            }
+        }
+        let mut h = vec![0.0f32; m * m];
+        linalg::gram(&g, m, n, &mut h);
+        for i in 0..m {
+            h[i * m + i] += lam;
+        }
+        let ones = vec![1.0f32; m];
+        let a = linalg::solve_spd(&h, m, &ones).expect("SPD with lam > 0");
+        let sum: f32 = a.iter().sum();
+        let alpha: Vec<f32> = a.iter().map(|v| v / sum).collect();
+        let zrow = &mut z[s * n..(s + 1) * n];
+        for i in 0..m {
+            let off = (s * m + i) * n;
+            let (ax, af) = ((1.0 - beta) * alpha[i], beta * alpha[i]);
+            for t in 0..n {
+                zrow[t] += ax * xh[off + t] + af * fh[off + t];
+            }
+            alpha_out[s * m + i] = alpha[i];
+        }
+    }
+    (z, alpha_out)
+}
+
+fn main() {
+    let args = Args::from_env();
+    header("native_kernels — blocked+pooled vs naive");
+    let out_path = args.str_or("out", "BENCH_native_kernels.json");
+    let max_iters = args.usize_or("iters", 40);
+    let budget = Duration::from_millis(500);
+    let threads = kernels::max_threads();
+    println!("threads: {threads} (DEQ_NATIVE_THREADS to override)\n");
+    let mut rng = Rng::new(4);
+
+    // --- GEMM: blocked/parallel vs naive reference ---
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    for &(m, k, n) in &[(128usize, 256usize, 192usize), (256, 384, 320)] {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        let macs = m * k * n;
+        let naive = bench(
+            &format!("gemm naive   {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || kernels::gemm_reference(&a, &b, m, k, n, &mut c),
+        );
+        println!("{}  ({:.2} GFLOP/s)", naive.report(), gflops(macs, naive.mean));
+        let blocked = bench(
+            &format!("gemm blocked {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || kernels::gemm(&a, &b, m, k, n, &mut c),
+        );
+        println!(
+            "{}  ({:.2} GFLOP/s, {:.2}x)",
+            blocked.report(),
+            gflops(macs, blocked.mean),
+            naive.mean.as_secs_f64() / blocked.mean.as_secs_f64()
+        );
+        gemm_rows.push(json::obj(vec![
+            ("m", json::num(m as f64)),
+            ("k", json::num(k as f64)),
+            ("n", json::num(n as f64)),
+            ("gflops_naive", json::num(gflops(macs, naive.mean))),
+            ("gflops_blocked", json::num(gflops(macs, blocked.mean))),
+            (
+                "speedup",
+                json::num(naive.mean.as_secs_f64() / blocked.mean.as_secs_f64()),
+            ),
+        ]));
+    }
+
+    // --- the bucket-32 solve iteration: cell_step + anderson_update ---
+    // A serving-scale latent (n = 512) so the matmul, not dispatch
+    // bookkeeping, dominates — the workload the tentpole targets.
+    let cfg = NativeConfig {
+        latent_hw: 8,
+        channels: 8,
+        image_hw: 8,
+        buckets: vec![32],
+        ..NativeConfig::default()
+    };
+    let engine = NativeEngine::new(cfg);
+    let params = engine.init_params().expect("params");
+    let meta = engine.manifest().model.clone();
+    let solver = engine.manifest().solver.clone();
+    let (m, beta, lam) = (solver.window, solver.beta, solver.lam);
+    let (batch, n) = (32usize, meta.latent_dim());
+    println!("\nsolve workload: bucket={batch} latent={n} window={m}");
+
+    let z0 = rng.normal_vec(batch * n, 0.5);
+    let xf = rng.normal_vec(batch * n, 0.5);
+    let xh = rng.normal_vec(batch * m * n, 1.0);
+    let fh: Vec<f32> = xh.iter().map(|v| v * 0.9 + 0.01).collect();
+
+    let mut cell_inputs = params.tensors.clone();
+    cell_inputs.push(HostTensor::f32(meta.latent_shape(batch), z0.clone()).unwrap());
+    cell_inputs.push(HostTensor::f32(meta.latent_shape(batch), xf.clone()).unwrap());
+    let and_inputs = [
+        HostTensor::f32(vec![batch, m, n], xh.clone()).unwrap(),
+        HostTensor::f32(vec![batch, m, n], fh.clone()).unwrap(),
+        HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+    ];
+
+    // Warm the pool, then measure with the allocation counter bracketing
+    // the timed section: steady state must be allocation-free.
+    let pooled_iter = || {
+        let out = engine.execute("cell_step", batch, &cell_inputs).unwrap();
+        engine.recycle(out);
+        let out = engine.execute("anderson_update", batch, &and_inputs).unwrap();
+        engine.recycle(out);
+    };
+    for _ in 0..3 {
+        pooled_iter();
+    }
+    let warm = engine.workspace_stats();
+    let pooled = bench("solve iter pooled+blocked", 1, max_iters, budget, pooled_iter);
+    let steady_allocs = engine.workspace_stats().allocs - warm.allocs;
+    println!("{}  (steady-state allocs: {steady_allocs})", pooled.report());
+
+    let widx = |name: &str| {
+        engine
+            .manifest()
+            .params
+            .iter()
+            .position(|s| s.name == name)
+            .expect("param in manifest")
+    };
+    let w_cell = params.tensors[widx("w_cell")].f32s().unwrap();
+    let b_cell = params.tensors[widx("b_cell")].f32s().unwrap();
+    let naive = bench("solve iter naive", 1, max_iters, budget, || {
+        let _ = naive_cell_step(w_cell, b_cell, &z0, &xf, batch, n);
+        let _ = naive_anderson_update(&xh, &fh, batch, m, n, lam, beta);
+    });
+    let speedup = naive.mean.as_secs_f64() / pooled.mean.as_secs_f64();
+    println!("{}  ({speedup:.2}x vs pooled)", naive.report());
+
+    let summary = json::obj(vec![
+        ("bench", json::s("native_kernels")),
+        ("threads", json::num(threads as f64)),
+        ("gemm", Json::Arr(gemm_rows)),
+        (
+            "solve",
+            json::obj(vec![
+                ("bucket", json::num(batch as f64)),
+                ("latent", json::num(n as f64)),
+                ("window", json::num(m as f64)),
+                (
+                    "iter_us_pooled",
+                    json::num(pooled.mean.as_secs_f64() * 1e6),
+                ),
+                ("iter_us_naive", json::num(naive.mean.as_secs_f64() * 1e6)),
+                ("speedup", json::num(speedup)),
+                ("steady_state_allocs", json::num(steady_allocs as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, json::to_string(&summary) + "\n")
+        .expect("write bench summary");
+    println!("\nwrote {out_path}");
+}

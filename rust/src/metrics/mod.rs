@@ -6,31 +6,107 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-/// Online summary statistics (Welford) + reservoir of raw values for
-/// percentiles.
-#[derive(Debug, Clone, Default)]
+use crate::util::rng::Rng;
+
+/// Default reservoir capacity: enough raw samples for stable tail
+/// percentiles while bounding a long-running server's memory.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Online summary statistics (Welford) + a **bounded** reservoir of raw
+/// values for percentiles.
+///
+/// The reservoir is a real one now (Vitter's Algorithm R, deterministic
+/// via a fixed-seed [`Rng`]): under sustained serving traffic it holds at
+/// most [`RESERVOIR_CAP`] samples, each retained with equal probability,
+/// instead of growing without bound — the old `values.push` on every
+/// sample was a memory leak dressed up as a reservoir.  Moments
+/// (count/mean/std) and min/max stay exact over all samples;
+/// percentiles are exact until the reservoir fills and within sampling
+/// error after.
+///
+/// Non-finite samples (a NaN latency from a poisoned clock or a 0/0
+/// rate) are counted in [`Self::non_finite`] and excluded from moments
+/// and the reservoir: one bad sample must not poison the running mean —
+/// or, as the old `partial_cmp().unwrap()` sort did, panic the whole
+/// metrics snapshot.
+#[derive(Debug, Clone)]
 pub struct Stats {
     n: u64,
     mean: f64,
     m2: f64,
+    min: f64,
+    max: f64,
+    non_finite: u64,
+    cap: usize,
     values: Vec<f64>,
+    rng: Rng,
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self::with_capacity(RESERVOIR_CAP)
+    }
 }
 
 impl Stats {
+    /// A stats accumulator whose reservoir keeps at most `cap` samples.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            non_finite: 0,
+            cap: cap.max(1),
+            values: Vec::new(),
+            // Fixed seed: two Stats fed the same samples report the same
+            // percentiles (reproducible benches and goldens).
+            rng: Rng::new(0x5EED_57A7),
+        }
+    }
+
     pub fn push(&mut self, v: f64) {
+        if !v.is_finite() {
+            self.non_finite += 1;
+            return;
+        }
         self.n += 1;
         let d = v - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (v - self.mean);
-        self.values.push(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        // Algorithm R: keep the first `cap` samples, then replace a
+        // uniformly random slot with probability cap / n (n counts every
+        // finite sample, i.e. every sample offered to the reservoir).
+        if self.values.len() < self.cap {
+            self.values.push(v);
+        } else {
+            let j = self.rng.below(self.n.min(usize::MAX as u64) as usize);
+            if j < self.cap {
+                self.values[j] = v;
+            }
+        }
     }
 
     pub fn push_duration(&mut self, d: Duration) {
         self.push(d.as_secs_f64());
     }
 
+    /// Finite samples recorded (non-finite ones are counted separately).
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// Non-finite samples rejected at `push`.
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite
+    }
+
+    /// Samples currently held by the reservoir (≤ capacity).
+    pub fn reservoir_len(&self) -> usize {
+        self.values.len()
     }
 
     pub fn mean(&self) -> f64 {
@@ -50,17 +126,31 @@ impl Stats {
             return f64::NAN;
         }
         let mut v = self.values.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a defensive total order — even if a non-finite value
+        // ever reached the reservoir, sorting must not panic the
+        // metrics snapshot.
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
         v[idx.min(v.len() - 1)]
     }
 
+    /// Exact minimum over every finite sample (+∞ before any, matching
+    /// the old fold-over-empty behaviour).
     pub fn min(&self) -> f64 {
-        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            self.min
+        }
     }
 
+    /// Exact maximum over every finite sample.
     pub fn max(&self) -> f64 {
-        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        if self.n == 0 {
+            f64::NEG_INFINITY
+        } else {
+            self.max
+        }
     }
 }
 
@@ -157,6 +247,70 @@ mod tests {
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
         assert!((s.percentile(50.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_percentiles_hold() {
+        // Regression: `values` grew unbounded under sustained traffic.
+        let mut s = Stats::default();
+        let total = 100_000u64;
+        for i in 0..total {
+            // A deterministic uniform-ish ramp over [0, 1).
+            s.push((i % 1000) as f64 / 1000.0);
+        }
+        assert_eq!(s.count(), total);
+        assert!(s.reservoir_len() <= RESERVOIR_CAP, "reservoir leaked");
+        // Moments and extrema stay exact...
+        assert!((s.mean() - 0.4995).abs() < 1e-9, "mean {}", s.mean());
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.999);
+        // ...and percentiles are correct within sampling error.
+        assert!((s.percentile(50.0) - 0.5).abs() < 0.05, "{}", s.percentile(50.0));
+        assert!((s.percentile(95.0) - 0.95).abs() < 0.05, "{}", s.percentile(95.0));
+    }
+
+    #[test]
+    fn reservoir_sampling_is_deterministic() {
+        let mut a = Stats::default();
+        let mut b = Stats::default();
+        for i in 0..50_000 {
+            let v = ((i * 2654435761u64) % 10_000) as f64;
+            a.push(v);
+            b.push(v);
+        }
+        for p in [1.0, 25.0, 50.0, 90.0, 99.0] {
+            assert_eq!(a.percentile(p), b.percentile(p));
+        }
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_or_poison() {
+        // Regression: one NaN latency used to panic the metrics snapshot
+        // via `partial_cmp().unwrap()`, and would have stuck the Welford
+        // mean at NaN forever.
+        let mut s = Stats::default();
+        s.push(1.0);
+        s.push(f64::NAN);
+        s.push(f64::INFINITY);
+        s.push(3.0);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.non_finite(), 2);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        let p50 = s.percentile(50.0); // must not panic
+        assert!(p50.is_finite());
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+    }
+
+    #[test]
+    fn tiny_capacity_reservoir_still_answers() {
+        let mut s = Stats::with_capacity(4);
+        for i in 0..1000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.reservoir_len(), 4);
+        assert!(s.percentile(50.0).is_finite());
+        assert_eq!(s.count(), 1000);
     }
 
     #[test]

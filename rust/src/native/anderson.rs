@@ -88,6 +88,13 @@ pub struct AndersonState {
     xs: Vec<f32>, // (m, n) ring
     fs: Vec<f32>, // (m, n) ring
     count: usize, // total pushes
+    // Reusable mixing scratch, sized for the full window at construction
+    // so the per-iteration O(m·n + m³) work of Eqs. 4–5 runs
+    // allocation-free (see mix_into).
+    g: Vec<f32>,     // (m, n) residual rows
+    h: Vec<f32>,     // (m, m) Gram
+    rhs: Vec<f32>,   // (m) ones → solution
+    alpha: Vec<f32>, // (m) normalized weights
 }
 
 impl AndersonState {
@@ -101,6 +108,10 @@ impl AndersonState {
             xs: vec![0.0; m * n],
             fs: vec![0.0; m * n],
             count: 0,
+            g: vec![0.0; m * n],
+            h: vec![0.0; m * m],
+            rhs: vec![0.0; m],
+            alpha: vec![0.0; m],
         }
     }
 
@@ -137,56 +148,82 @@ impl AndersonState {
         self.count += 1;
     }
 
-    /// Compute the Anderson-mixed next iterate from the current window.
-    /// Returns (z_next, alpha) with Σα = 1 over the valid slots.
-    pub fn mix(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+    /// Anderson-mix the current window into `z_next` (length n), reusing
+    /// the state's internal scratch: steady-state mixing performs no heap
+    /// allocation.  Returns the α weights over the valid slots.
+    ///
+    /// A **rank-deficient window** (Cholesky breakdown on H = GGᵀ + λI —
+    /// duplicated iterates with λ = 0, or an exactly-converged pair)
+    /// falls back to a β-damped forward step from the newest pair instead
+    /// of erroring: aborting a whole solve because one window went
+    /// degenerate is exactly the instability *Stable Anderson
+    /// Acceleration* warns against.  The same fallback covers the
+    /// Σa ≈ 0 degeneracy.  The `newest_slot()` index states the ring
+    /// invariant directly (the previous `(count − 1) % min(m, nv)` form
+    /// only named the right slot through the side condition
+    /// nv == min(count, m)); the regression tests pin both paths.
+    pub fn mix_into(&mut self, z_next: &mut [f32]) -> Result<&[f32]> {
         let nv = self.valid();
         assert!(nv >= 1, "mix() before any push()");
+        assert_eq!(z_next.len(), self.n);
         let n = self.n;
 
         // G rows: residuals f_i - x_i over valid slots.
-        let mut g = vec![0.0f32; nv * n];
         for i in 0..nv {
             for t in 0..n {
-                g[i * n + t] = self.fs[i * n + t] - self.xs[i * n + t];
+                self.g[i * n + t] = self.fs[i * n + t] - self.xs[i * n + t];
             }
         }
 
         // H = G Gᵀ + λI, solve H a = 1, α = a / Σa  (the unconstrained
         // reduction of the paper's bordered system Eq. 4).
-        let mut h = vec![0.0f32; nv * nv];
-        linalg::gram(&g, nv, n, &mut h);
+        linalg::gram(&self.g[..nv * n], nv, n, &mut self.h[..nv * nv]);
         for i in 0..nv {
-            h[i * nv + i] += self.lam;
+            self.h[i * nv + i] += self.lam;
         }
-        let ones = vec![1.0f32; nv];
-        let a = linalg::solve_spd(&h, nv, &ones)?;
-        let sum: f32 = a.iter().sum();
-        let alpha: Vec<f32> = if sum.abs() < 1e-30 {
-            // Degenerate window — fall back to a plain forward step from
-            // the newest pair.  The previous `(count − 1) % min(m, nv)`
-            // index only named the right slot through the side condition
-            // nv == min(count, m); `newest_slot()` states the ring
-            // invariant directly (and the regression test pins it), so a
-            // future change to the fill rule can't silently turn this
-            // into a stale-slot read.
-            let mut e = vec![0.0; nv];
-            e[self.newest_slot()] = 1.0;
-            e
+        for v in self.rhs[..nv].iter_mut() {
+            *v = 1.0;
+        }
+        let solved =
+            linalg::solve_spd_in_place(&mut self.h[..nv * nv], nv, &mut self.rhs[..nv])
+                .is_ok();
+        let sum: f32 = self.rhs[..nv].iter().sum();
+        if solved && sum.is_finite() && sum.abs() >= 1e-30 {
+            for i in 0..nv {
+                self.alpha[i] = self.rhs[i] / sum;
+            }
         } else {
-            a.iter().map(|v| v / sum).collect()
-        };
+            // Rank-deficient or degenerate window: damped forward step
+            // from the newest pair (α = e_newest).
+            for v in self.alpha[..nv].iter_mut() {
+                *v = 0.0;
+            }
+            let newest = self.newest_slot();
+            self.alpha[newest] = 1.0;
+        }
 
         // z⁺ = (1-β)·Σ αᵢ xᵢ + β·Σ αᵢ fᵢ   (Eq. 5)
-        let mut z = vec![0.0f32; n];
+        z_next.fill(0.0);
         for i in 0..nv {
-            let (ax, af) = ((1.0 - self.beta) * alpha[i], self.beta * alpha[i]);
+            let (ax, af) = ((1.0 - self.beta) * self.alpha[i], self.beta * self.alpha[i]);
+            if ax == 0.0 && af == 0.0 {
+                continue;
+            }
             let xrow = &self.xs[i * n..(i + 1) * n];
             let frow = &self.fs[i * n..(i + 1) * n];
             for t in 0..n {
-                z[t] += ax * xrow[t] + af * frow[t];
+                z_next[t] += ax * xrow[t] + af * frow[t];
             }
         }
+        Ok(&self.alpha[..nv])
+    }
+
+    /// Compute the Anderson-mixed next iterate from the current window.
+    /// Returns (z_next, alpha) with Σα = 1 over the valid slots.
+    /// Allocating convenience wrapper over [`Self::mix_into`].
+    pub fn mix(&mut self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut z = vec![0.0f32; self.n];
+        let alpha = self.mix_into(&mut z)?.to_vec();
         Ok((z, alpha))
     }
 }
@@ -212,6 +249,7 @@ pub fn solve_anderson(
     let mut state = AndersonState::new(opts.window, n, opts.beta, opts.lam);
     let mut z = z0.to_vec();
     let mut fz = vec![0.0f32; n];
+    let mut z_next = vec![0.0f32; n];
     let mut records = Vec::new();
     let mut converged = false;
 
@@ -221,12 +259,16 @@ pub fn solve_anderson(
         records.push(IterRecord { iter: k, rel_residual: rel, fevals: k + 1 });
         if rel < opts.tol {
             converged = true;
-            z = fz.clone();
+            z.copy_from_slice(&fz);
             break;
         }
         state.push(&z, &fz);
-        let (znext, _alpha) = state.mix()?;
-        z = znext;
+        // mix_into reuses the state's scratch and the loop's z_next
+        // buffer: the steady-state iteration allocates nothing.  A
+        // rank-deficient window degrades to a damped forward step inside
+        // mix_into instead of aborting the solve.
+        state.mix_into(&mut z_next)?;
+        std::mem::swap(&mut z, &mut z_next);
     }
     Ok(SolveTrace { z, records, converged })
 }
@@ -354,6 +396,88 @@ mod tests {
             let s = st.newest_slot();
             assert_eq!(st.xs_raw()[s * 2], k as f32, "after push {k}");
             assert_eq!(st.fs_raw()[s * 2 + 1], k as f32, "after push {k}");
+        }
+    }
+
+    #[test]
+    fn rank_deficient_window_falls_back_to_forward_step() {
+        // λ = 0 and a zero-residual pair ⇒ H = GGᵀ = 0: Cholesky breaks
+        // down deterministically.  Regression: mix() used to propagate
+        // the error and abort the whole solve; it must now degrade to a
+        // β-damped forward step from the newest pair.
+        let mut st = AndersonState::new(2, 2, 1.0, 0.0);
+        st.push(&[1.0, 2.0], &[1.0, 2.0]);
+        let (z, alpha) = st.mix().unwrap();
+        assert_eq!(z, vec![1.0, 2.0]);
+        assert_eq!(alpha, vec![1.0]);
+    }
+
+    #[test]
+    fn duplicated_iterate_window_mixes_to_forward_step() {
+        // A duplicated-iterate window (the same (z, f) pair pushed twice,
+        // λ = 0) makes H rank-1.  Whether Cholesky breaks down exactly or
+        // squeaks through on a rounded pivot, the mix over identical
+        // slots must come out as the forward step f — finite, no error.
+        let mut st = AndersonState::new(3, 2, 1.0, 0.0);
+        st.push(&[1.0, 2.0], &[3.0, 4.0]);
+        st.push(&[1.0, 2.0], &[3.0, 4.0]);
+        let (z, alpha) = st.mix().unwrap();
+        assert_eq!(alpha.len(), 2);
+        for (got, want) in z.iter().zip(&[3.0f32, 4.0]) {
+            assert!(got.is_finite() && (got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn solve_survives_rank_deficient_window() {
+        // f(z) = −z oscillates with period 2: from the second iteration
+        // on, the window holds (±1, ∓1) pairs whose residual rows are
+        // collinear, so H is exactly singular with λ = 0.  The solve used
+        // to abort here; now every degenerate iteration degrades to a
+        // forward step and the trace runs to max_iter.
+        struct Flip;
+        impl FixedPointMap for Flip {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn apply(&self, z: &[f32], out: &mut [f32]) {
+                out[0] = -z[0];
+            }
+        }
+        let o = AndersonOpts {
+            window: 2,
+            beta: 1.0,
+            lam: 0.0,
+            tol: 1e-6,
+            max_iter: 8,
+        };
+        let tr = solve_anderson(&Flip, &[1.0], o).unwrap();
+        assert!(!tr.converged);
+        assert_eq!(tr.iters(), 8);
+        assert!(tr.z[0].is_finite());
+        assert_eq!(tr.z[0].abs(), 1.0, "forward-step fallback drifted");
+    }
+
+    #[test]
+    fn mix_into_reuses_caller_buffer() {
+        let map = AffineMap::random(12, 0.8, 4);
+        let mut st = AndersonState::new(3, 12, 1.0, 1e-6);
+        let mut z = vec![0.0f32; 12];
+        let mut fz = vec![0.0f32; 12];
+        let mut z_next = vec![0.0f32; 12];
+        for _ in 0..5 {
+            map.apply(&z, &mut fz);
+            st.push(&z, &fz);
+            let alpha_len = st.mix_into(&mut z_next).unwrap().len();
+            assert_eq!(alpha_len, st.valid());
+            std::mem::swap(&mut z, &mut z_next);
+        }
+        // Parity with the allocating wrapper on the same window.
+        let (z_ref, _) = st.mix().unwrap();
+        let mut z_buf = vec![0.0f32; 12];
+        st.mix_into(&mut z_buf).unwrap();
+        for (a, b) in z_buf.iter().zip(&z_ref) {
+            assert!((a - b).abs() < 1e-6);
         }
     }
 

@@ -1,0 +1,397 @@
+//! Blocked, cache-tiled, multi-threaded compute kernels for the native
+//! substrate — the "fast as the hardware allows" half of the hot path.
+//!
+//! The naive loops these replace (see [`gemm_reference`]) stream the
+//! whole B matrix through cache for every row of A and run on one core.
+//! Here the batch×latent matmuls that dominate `cell_step`, `encode` and
+//! `classify` are:
+//!
+//!   * **tiled**: the k/j loops are blocked so a `KC`×`NC` panel of B
+//!     stays cache-resident while a row panel of A streams through it;
+//!   * **parallel**: above [`PAR_MIN_MACS`] multiply-accumulates, rows of
+//!     C are partitioned into contiguous panels, one scoped thread per
+//!     panel (disjoint `&mut` chunks — no locks, no unsafe);
+//!   * **fused**: [`cell_batch`] runs the whole DEQ cell
+//!     `f = tanh(z·W + b + x)` plus the per-sample residual norms in one
+//!     pass over the output, so `cell_step` touches `f` exactly once.
+//!
+//! Thread count comes from the `DEQ_NATIVE_THREADS` env knob (unset or
+//! `0` → `available_parallelism`, capped at 8); small problems always
+//! run serial so the tiny CI model never pays thread-spawn latency.
+
+use std::sync::OnceLock;
+
+/// k-dimension tile: a KC-row slab of B is reused across a whole row
+/// panel of A before moving on.
+const KC: usize = 256;
+/// n-dimension tile: KC×NC f32 of B ≈ 512 KiB upper bound, typically
+/// L2-resident; the inner j loop stays contiguous over B and C.
+const NC: usize = 512;
+/// Below this many multiply-accumulates the scoped-thread fan-out costs
+/// more than it saves; run serial.  (The default test model's bucket-32
+/// cell_step is 32·64·64 = 131k MACs — deliberately under this bound.)
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Worker threads the parallel paths may use.  `DEQ_NATIVE_THREADS=N`
+/// pins it; unset or `0` means `available_parallelism` capped at 8.
+pub fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| match std::env::var("DEQ_NATIVE_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(0) | Err(_) => default_threads(),
+            Ok(t) => t.min(64),
+        },
+        Err(_) => default_threads(),
+    })
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+fn threads_for(m: usize, k: usize, n: usize) -> usize {
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    if macs < PAR_MIN_MACS {
+        1
+    } else {
+        max_threads().min(m).max(1)
+    }
+}
+
+/// C = A B, A (m, k), B (k, n), C (m, n), all row-major.  Blocked and,
+/// for large problems, parallel over row panels of C.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_with_threads(a, b, m, k, n, c, threads_for(m, k, n));
+}
+
+/// [`gemm`] with an explicit thread count — the parallel path is
+/// deterministic (each thread owns a disjoint row panel), so tests pin
+/// `threads` directly instead of racing on the env knob.
+pub fn gemm_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 {
+        gemm_block(a, b, m, k, n, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, c_panel) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = c_panel.len() / n;
+            let a_panel = &a[ti * rows_per * k..ti * rows_per * k + rows * k];
+            s.spawn(move || gemm_block(a_panel, b, rows, k, n, c_panel));
+        }
+    });
+}
+
+/// Serial cache-tiled macro-kernel: for each (k-tile, n-tile) of B, every
+/// row of the A panel streams through the resident tile; the inner j loop
+/// is contiguous over B and C, so it vectorizes.
+fn gemm_block(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    c.fill(0.0);
+    for p0 in (0..k).step_by(KC) {
+        let pe = (p0 + KC).min(k);
+        for j0 in (0..n).step_by(NC) {
+            let je = (j0 + NC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + je];
+                for p in p0..pe {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + j0..p * n + je];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aip * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The naive single-threaded ikj GEMM the blocked path replaced — kept
+/// as the parity oracle for tests and the baseline for
+/// `benches/native_kernels.rs`.
+pub fn gemm_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+/// y = A x, A (m, n) row-major; parallel over row panels for large A.
+pub fn gemv(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    gemv_with_threads(a, x, m, n, y, threads_for(m, n, 1));
+}
+
+/// [`gemv`] with an explicit thread count (see [`gemm_with_threads`]).
+pub fn gemv_with_threads(
+    a: &[f32],
+    x: &[f32],
+    m: usize,
+    n: usize,
+    y: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    if m == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 {
+        gemv_rows(a, x, n, y);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, y_panel) in y.chunks_mut(rows_per).enumerate() {
+            let a_panel =
+                &a[ti * rows_per * n..ti * rows_per * n + y_panel.len() * n];
+            s.spawn(move || gemv_rows(a_panel, x, n, y_panel));
+        }
+    });
+}
+
+fn gemv_rows(a: &[f32], x: &[f32], n: usize, y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (r, v) in row.iter().zip(x) {
+            acc += r * v;
+        }
+        *yi = acc;
+    }
+}
+
+/// out = X W + bias (row-broadcast): the batched encode/classify affine.
+/// X (batch, in_dim), W (in_dim, out_dim), bias (out_dim).
+pub fn matmul_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(bias.len(), out_dim);
+    assert_eq!(out.len(), batch * out_dim);
+    gemm(x, w, batch, in_dim, out_dim, out);
+    for s in 0..batch {
+        let row = &mut out[s * out_dim..(s + 1) * out_dim];
+        for (o, b) in row.iter_mut().zip(bias) {
+            *o += *b;
+        }
+    }
+}
+
+/// The whole DEQ cell at batch width, fused with the residual norms the
+/// `cell_step` entry returns:
+///
+///   f = tanh(Z W + b + X),  res[s] = ‖f_s − z_s‖₂,  fnorm[s] = ‖f_s‖₂.
+///
+/// Z, X, f are (batch, n); W is (n, n) in the `affine` (in, out) layout.
+#[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
+pub fn cell_batch(
+    w: &[f32],
+    bias: &[f32],
+    z: &[f32],
+    x: &[f32],
+    batch: usize,
+    n: usize,
+    f: &mut [f32],
+    res: &mut [f32],
+    fnorm: &mut [f32],
+) {
+    assert_eq!(w.len(), n * n);
+    assert_eq!(bias.len(), n);
+    assert_eq!(z.len(), batch * n);
+    assert_eq!(x.len(), batch * n);
+    assert_eq!(f.len(), batch * n);
+    assert_eq!(res.len(), batch);
+    assert_eq!(fnorm.len(), batch);
+    gemm(z, w, batch, n, n, f);
+    for s in 0..batch {
+        let zs = &z[s * n..(s + 1) * n];
+        let xs = &x[s * n..(s + 1) * n];
+        let fs = &mut f[s * n..(s + 1) * n];
+        let mut num = 0.0f32;
+        let mut den = 0.0f32;
+        for j in 0..n {
+            let v = (fs[j] + bias[j] + xs[j]).tanh();
+            fs[j] = v;
+            let d = v - zs[j];
+            num += d * d;
+            den += v * v;
+        }
+        res[s] = num.sqrt();
+        fnorm[s] = den.sqrt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_on_awkward_shapes() {
+        // Non-square, non-multiple-of-block shapes, including tiles that
+        // straddle the KC/NC boundaries and degenerate dims.
+        let mut rng = Rng::new(40);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (17, 31, 13),
+            (2, KC + 3, NC + 5),
+            (5, 2 * KC + 1, 9),
+            (64, 64, 64),
+        ] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_reference(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            gemm(&a, &b, m, k, n, &mut got);
+            // f32 sums reassociate across tiles: tolerance scales with k.
+            close(&got, &want, 1e-3 * (k as f32).sqrt(), "gemm");
+        }
+    }
+
+    #[test]
+    fn parallel_panels_match_reference() {
+        // Pin the thread count (instead of env) so panel splitting with a
+        // ragged final panel is exercised deterministically.
+        let mut rng = Rng::new(41);
+        for &(m, k, n, threads) in
+            &[(7usize, 11usize, 5usize, 3usize), (8, 16, 16, 8), (5, 9, 3, 16)]
+        {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_reference(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            gemm_with_threads(&a, &b, m, k, n, &mut got, threads);
+            close(&got, &want, 1e-3, "parallel gemm");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        // k = 0 must zero C; m = 0 and n = 0 are no-ops.
+        let mut c = vec![9.0f32; 6];
+        gemm(&[], &[], 2, 0, 3, &mut c);
+        assert_eq!(c, vec![0.0; 6]);
+        gemm(&[], &[1.0, 2.0], 0, 1, 2, &mut []);
+        gemv_with_threads(&[], &[], 0, 0, &mut [], 4);
+    }
+
+    #[test]
+    fn gemv_matches_rowwise_dot() {
+        let mut rng = Rng::new(42);
+        let (m, n) = (23usize, 17usize);
+        let a = rng.normal_vec(m * n, 1.0);
+        let x = rng.normal_vec(n, 1.0);
+        let mut serial = vec![0.0f32; m];
+        gemv(&a, &x, m, n, &mut serial);
+        let mut par = vec![0.0f32; m];
+        gemv_with_threads(&a, &x, m, n, &mut par, 4);
+        for i in 0..m {
+            let want: f32 =
+                a[i * n..(i + 1) * n].iter().zip(&x).map(|(p, q)| p * q).sum();
+            assert!((serial[i] - want).abs() < 1e-4);
+        }
+        close(&par, &serial, 1e-6, "gemv threads");
+    }
+
+    #[test]
+    fn matmul_bias_broadcasts_rows() {
+        let x = vec![1.0, 0.0, 0.0, 1.0]; // I₂ as a batch of 2
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let bias = vec![10.0, 20.0];
+        let mut out = vec![0.0f32; 4];
+        matmul_bias(&x, &w, &bias, 2, 2, 2, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn cell_batch_matches_per_sample_math() {
+        let mut rng = Rng::new(43);
+        let (batch, n) = (4usize, 9usize);
+        let w = rng.normal_vec(n * n, 0.3);
+        let bias = rng.normal_vec(n, 0.1);
+        let z = rng.normal_vec(batch * n, 1.0);
+        let x = rng.normal_vec(batch * n, 1.0);
+        let mut f = vec![0.0f32; batch * n];
+        let mut res = vec![0.0f32; batch];
+        let mut fnorm = vec![0.0f32; batch];
+        cell_batch(&w, &bias, &z, &x, batch, n, &mut f, &mut res, &mut fnorm);
+        for s in 0..batch {
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for j in 0..n {
+                let mut acc = bias[j];
+                for i in 0..n {
+                    acc += z[s * n + i] * w[i * n + j];
+                }
+                let want = (acc + x[s * n + j]).tanh();
+                let got = f[s * n + j];
+                assert!((got - want).abs() < 1e-5, "f[{s},{j}]: {got} vs {want}");
+                num += (want - z[s * n + j]).powi(2);
+                den += want * want;
+            }
+            assert!((res[s] - num.sqrt()).abs() < 1e-4);
+            assert!((fnorm[s] - den.sqrt()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn thread_knob_is_sane() {
+        let t = max_threads();
+        assert!((1..=64).contains(&t));
+    }
+}

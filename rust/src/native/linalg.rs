@@ -6,41 +6,19 @@
 
 use anyhow::{bail, Result};
 
-/// y = A x, A is (m, n) row-major.
+/// y = A x, A is (m, n) row-major.  Delegates to the kernels gemv (row
+/// panels go parallel above the size threshold; per-row dot order is
+/// unchanged, so results are identical at any thread count).
 pub fn gemv(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(x.len(), n);
-    assert_eq!(y.len(), m);
-    for i in 0..m {
-        let row = &a[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            acc += row[j] * x[j];
-        }
-        y[i] = acc;
-    }
+    crate::native::kernels::gemv(a, x, m, n, y);
 }
 
-/// C = A B, A (m, k), B (k, n), C (m, n), all row-major.
+/// C = A B, A (m, k), B (k, n), C (m, n), all row-major.  Delegates to
+/// the blocked (and, for large problems, multi-threaded) kernel in
+/// [`crate::native::kernels`]; the old naive loop survives there as
+/// `gemm_reference`, the parity oracle.
 pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    // ikj loop order: streams B rows, vectorizes the inner j loop.
-    for i in 0..m {
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aip * brow[j];
-            }
-        }
-    }
+    crate::native::kernels::gemm(a, b, m, k, n, c);
 }
 
 /// Gram matrix H = G Gᵀ for G (m, n) row-major → H (m, m).
@@ -107,12 +85,20 @@ pub fn cholesky_solve(a: &[f32], m: usize, b: &mut [f32]) {
     }
 }
 
+/// Solve SPD A x = b in place: `a` is destroyed (replaced by its
+/// Cholesky factor) and `b` is overwritten with the solution.  The
+/// allocation-free core of [`solve_spd`], used by the pooled hot paths.
+pub fn solve_spd_in_place(a: &mut [f32], m: usize, b: &mut [f32]) -> Result<()> {
+    cholesky(a, m)?;
+    cholesky_solve(a, m, b);
+    Ok(())
+}
+
 /// Solve SPD A x = b (copies A; convenience wrapper).
 pub fn solve_spd(a: &[f32], m: usize, b: &[f32]) -> Result<Vec<f32>> {
     let mut fac = a.to_vec();
-    cholesky(&mut fac, m)?;
     let mut x = b.to_vec();
-    cholesky_solve(&fac, m, &mut x);
+    solve_spd_in_place(&mut fac, m, &mut x)?;
     Ok(x)
 }
 

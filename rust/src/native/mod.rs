@@ -1,15 +1,21 @@
-//! Native (pure-Rust) solver substrate: small linear algebra, the Anderson
-//! twin of the AOT kernel, and synthetic fixed-point maps.  Powers the
-//! device-model simulations, property tests and hyperparameter sweeps
-//! without touching PJRT.
+//! Native (pure-Rust) solver substrate: small linear algebra, blocked
+//! multi-threaded compute kernels, a reusable scratch-buffer workspace,
+//! the Anderson twin of the AOT kernel, and synthetic fixed-point maps.
+//! Powers the device-model simulations, property tests and
+//! hyperparameter sweeps without touching PJRT — and, through
+//! [`kernels`] + [`workspace`], the allocation-free hot path of the
+//! `NativeEngine` backend.
 
 pub mod anderson;
+pub mod kernels;
 pub mod linalg;
 pub mod maps;
 pub mod stochastic;
+pub mod workspace;
 
 pub use stochastic::{solve_stochastic, StochasticOpts};
 pub use anderson::{
     rel_residual, solve_anderson, solve_forward, AndersonOpts, AndersonState,
     FixedPointMap, IterRecord, SolveTrace,
 };
+pub use workspace::{Workspace, WorkspaceStats};

@@ -50,6 +50,11 @@ impl Default for StochasticOpts {
 /// Sketched constrained Anderson solve over an explicit window.
 ///
 /// Returns (alpha, used_coords). Exact when `sketch == 0 || sketch >= n`.
+/// `newest` names the ring slot holding the most recent (z, f) pair
+/// (`AndersonState::newest_slot()`): a degenerate or rank-deficient
+/// sketched Gram falls back to a forward step from *that* slot — under
+/// ring wraparound, slot `nv − 1` can be up to m−1 iterations stale.
+#[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
 pub fn sketched_alpha(
     xs: &[f32],
     fs: &[f32],
@@ -57,8 +62,10 @@ pub fn sketched_alpha(
     n: usize,
     lam: f32,
     sketch: usize,
+    newest: usize,
     rng: &mut Rng,
 ) -> Result<(Vec<f32>, usize)> {
+    assert!(newest < nv, "newest slot {newest} outside valid window {nv}");
     let use_all = sketch == 0 || sketch >= n;
     let s = if use_all { n } else { sketch };
 
@@ -89,14 +96,24 @@ pub fn sketched_alpha(
         h[i * nv + i] += lam;
     }
     let ones = vec![1.0f32; nv];
-    let a = linalg::solve_spd(&h, nv, &ones)?;
-    let sum: f32 = a.iter().sum();
-    let alpha: Vec<f32> = if sum.abs() < 1e-30 {
+    // Like AndersonState::mix_into, a rank-deficient (sketched) Gram is a
+    // recoverable condition, not a solve-aborting error: fall back to a
+    // plain forward step from the newest pair.
+    let fallback = || {
         let mut e = vec![0.0; nv];
-        e[nv - 1] = 1.0;
+        e[newest] = 1.0;
         e
-    } else {
-        a.iter().map(|v| v / sum).collect()
+    };
+    let alpha: Vec<f32> = match linalg::solve_spd(&h, nv, &ones) {
+        Ok(a) => {
+            let sum: f32 = a.iter().sum();
+            if sum.is_finite() && sum.abs() >= 1e-30 {
+                a.iter().map(|v| v / sum).collect()
+            } else {
+                fallback()
+            }
+        }
+        Err(_) => fallback(),
     };
     Ok((alpha, s))
 }
@@ -136,6 +153,7 @@ pub fn solve_stochastic(
             n,
             o.lam,
             opts.sketch,
+            state.newest_slot(),
             &mut rng,
         )?;
         let beta = rng.range(opts.beta_lo, opts.beta_hi);
@@ -180,6 +198,7 @@ mod tests {
             n,
             1e-5,
             0, // exact
+            st.newest_slot(),
             &mut rng,
         )
         .unwrap();
@@ -225,12 +244,44 @@ mod tests {
                 n,
                 1e-5,
                 sketch,
+                st.newest_slot(),
                 &mut rng,
             )
             .unwrap();
             let s: f32 = alpha.iter().sum();
             assert!((s - 1.0).abs() < 1e-3, "sketch={sketch} sum={s}");
         }
+    }
+
+    #[test]
+    fn degenerate_sketch_falls_back_to_newest_slot_under_wraparound() {
+        // Four pushes into a window of 3 wrap the ring: the newest pair
+        // lives in slot 0, not slot nv−1.  Identical residual rows with
+        // λ = 0 break Cholesky deterministically (H is the all-ones
+        // matrix at n = 1), so the fallback fires — and it must name the
+        // newest slot, not the stale slot nv−1 (regression: the old
+        // fallback stepped up to m−1 iterations backward in time).
+        let m = 3;
+        let mut st = AndersonState::new(m, 1, 1.0, 0.0);
+        for k in 0..4 {
+            let x = [k as f32];
+            let f = [k as f32 + 1.0]; // residual 1 in every slot
+            st.push(&x, &f);
+        }
+        assert_eq!(st.newest_slot(), 0, "4 pushes into m=3 wrap to slot 0");
+        let mut rng = Rng::new(2);
+        let (alpha, _) = sketched_alpha(
+            st.xs_raw(),
+            st.fs_raw(),
+            st.valid(),
+            1,
+            0.0, // λ = 0 ⇒ rank-1 H ⇒ Cholesky breakdown
+            0,   // exact sketch
+            st.newest_slot(),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(alpha, vec![1.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Reusable scratch-buffer pool for the native hot path.
+//!
+//! The paper's thesis is "fewer, more compute-intensive but generally
+//! cacheable iterations" — yet a hot loop that allocates a fresh `Vec`
+//! for every `f`, residual and mixed iterate is the opposite of
+//! cacheable.  [`Workspace`] is the fix: a best-fit pool of `f32`
+//! buffers keyed by capacity.  `take(len)` hands out a zeroed buffer
+//! (reusing a pooled allocation when one is large enough), `give`
+//! returns it.  Once a steady-state loop has warmed the pool, every
+//! `take` is a hit and the loop performs **zero** heap allocation — the
+//! [`WorkspaceStats::allocs`] counter makes that an assertable invariant
+//! (see the workspace-reuse tests in `runtime::native_engine` and
+//! `tests/native_kernels.rs`).
+//!
+//! Ownership is by move (`take` → `Vec<f32>` → `give`), so the pool
+//! composes with APIs that want owned storage — in particular
+//! `HostTensor` outputs, which flow back via `Backend::recycle`.
+
+/// Upper bound on pooled buffers; beyond it `give` drops the buffer so a
+/// pathological caller can't grow the pool without bound.
+const MAX_POOLED: usize = 64;
+
+/// Counters describing how well the pool is serving its callers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// `take` calls served from the pool (no allocation).
+    pub hits: u64,
+    /// `take` calls that had to allocate a fresh buffer.
+    pub allocs: u64,
+    /// Buffers currently parked in the pool.
+    pub pooled: usize,
+}
+
+/// A best-fit pool of reusable `f32` scratch buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    hits: u64,
+    allocs: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements.  Served from the pool
+    /// (best fit: the smallest parked buffer whose capacity suffices)
+    /// when possible; allocates otherwise.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_dirty(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Like [`Self::take`] but with **arbitrary contents**: the prefix
+    /// reused from a pooled buffer is stale data.  For callers that fully
+    /// overwrite the buffer (GEMM outputs, residual norms) — skips the
+    /// zeroing pass on the hot path.
+    pub fn take_dirty(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            if cap >= len && best.map(|(_, c)| cap < c).unwrap_or(true) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.hits += 1;
+                let mut v = self.free.swap_remove(i);
+                v.truncate(len);
+                v.resize(len, 0.0); // within capacity: no allocation
+                v
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Park a spent buffer for reuse.  Zero-capacity buffers and
+    /// overflow beyond [`MAX_POOLED`] are dropped.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < MAX_POOLED {
+            self.free.push(v);
+        }
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            hits: self.hits,
+            allocs: self.allocs,
+            pooled: self.free.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_reuses() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        let b = ws.take(8); // same capacity class → pool hit, re-zeroed
+        assert_eq!(b, vec![0.0; 8]);
+        let s = ws.stats();
+        assert_eq!(s.allocs, 1);
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn take_dirty_reuses_without_zeroing_contract() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_dirty(4);
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        ws.give(a);
+        // Contents are arbitrary (here: stale), length is exact, and the
+        // pool still counts it as a hit.
+        let b = ws.take_dirty(3);
+        assert_eq!(b.len(), 3);
+        let s = ws.stats();
+        assert_eq!((s.hits, s.allocs), (1, 1));
+        // A fresh miss is still zero-initialized (vec! allocation).
+        let c = ws.take_dirty(2);
+        assert_eq!(c, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn best_fit_preserves_size_classes() {
+        let mut ws = Workspace::new();
+        let big = ws.take(1024);
+        let small = ws.take(4);
+        ws.give(big);
+        ws.give(small);
+        // A small request must take the small buffer, leaving the big
+        // one for the next big request — otherwise alternating sizes
+        // would churn allocations forever.
+        let s1 = ws.take(4);
+        assert!(s1.capacity() < 1024, "best fit picked the big buffer");
+        let b1 = ws.take(1024);
+        assert!(b1.capacity() >= 1024);
+        assert_eq!(ws.stats().allocs, 2, "steady state must not allocate");
+        assert_eq!(ws.stats().hits, 2);
+    }
+
+    #[test]
+    fn steady_state_loop_is_allocation_free() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            // Warm-up shapes of a solve iteration.
+            let bufs: Vec<_> = [256usize, 8, 8, 40, 25, 5].iter().map(|&l| ws.take(l)).collect();
+            for b in bufs {
+                ws.give(b);
+            }
+        }
+        let allocs_warm = ws.stats().allocs;
+        for _ in 0..100 {
+            let bufs: Vec<_> = [256usize, 8, 8, 40, 25, 5].iter().map(|&l| ws.take(l)).collect();
+            for b in bufs {
+                ws.give(b);
+            }
+        }
+        assert_eq!(ws.stats().allocs, allocs_warm, "steady state allocated");
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut ws = Workspace::new();
+        for _ in 0..(MAX_POOLED + 20) {
+            ws.give(vec![0.0; 4]);
+        }
+        assert!(ws.stats().pooled <= MAX_POOLED);
+        ws.give(Vec::new()); // zero-capacity: dropped, not pooled
+        assert!(ws.stats().pooled <= MAX_POOLED);
+    }
+}

@@ -69,6 +69,15 @@ pub trait Backend: Send + Sync {
     /// twin).
     fn init_params(&self) -> Result<ParamSet>;
 
+    /// Return spent output tensors to the backend's scratch pool so
+    /// steady-state solve loops stop allocating: the native engine
+    /// re-issues the returned buffers from its [`crate::native::Workspace`]
+    /// on the next `execute`.  Callers must hand back only tensors they
+    /// own exclusively (a `HostTensor` clone is a deep copy, so this is
+    /// the default).  Backends without a pool simply drop them — the
+    /// default — which makes `recycle` always safe to call.
+    fn recycle(&self, _tensors: Vec<HostTensor>) {}
+
     /// Prepare a set of entries so hot paths pay no first-call cost.
     /// Default: just validate the entries exist.
     fn warmup(&self, entries: &[(&str, usize)]) -> Result<()> {

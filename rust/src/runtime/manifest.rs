@@ -293,17 +293,28 @@ impl Manifest {
         v
     }
 
-    /// Smallest compiled bucket that can hold `n` samples (for serving);
-    /// falls back to the largest bucket when `n` exceeds all of them.
+    /// Smallest compiled bucket that can hold `n` samples (for serving).
+    ///
+    /// Errors explicitly when `n` exceeds every compiled bucket.  The old
+    /// behaviour silently clamped to the largest bucket, which could not
+    /// actually hold the batch — downstream padding then failed with a
+    /// confusing "batch exceeds bucket" shape error (or would have
+    /// truncated samples).  Callers with oversize batches must split them
+    /// (dataset evaluation already chunks by `batch`; the serving workers
+    /// drain at most one bucket per batch by construction).
     pub fn bucket_for(&self, name: &str, n: usize) -> Result<usize> {
         let batches = self.batches_for(name);
         if batches.is_empty() {
             bail!("no artifacts for entry '{name}'");
         }
-        Ok(*batches
-            .iter()
-            .find(|&&b| b >= n)
-            .unwrap_or(batches.last().unwrap()))
+        match batches.iter().find(|&&b| b >= n) {
+            Some(&b) => Ok(b),
+            None => bail!(
+                "batch of {n} exceeds the largest compiled bucket ({}) for \
+                 '{name}': split the batch or compile a larger bucket",
+                batches.last().expect("batches non-empty")
+            ),
+        }
     }
 
     pub fn artifact_path(&self, e: &EntrySpec) -> PathBuf {
@@ -360,7 +371,13 @@ mod tests {
         assert!(m.entry("a", 2).is_err());
         assert_eq!(m.batches_for("a"), vec![1]);
         assert_eq!(m.bucket_for("a", 1).unwrap(), 1);
-        assert_eq!(m.bucket_for("a", 99).unwrap(), 1);
+        // Oversize batches are rejected with an explicit error instead of
+        // silently clamping to a bucket that cannot hold them.
+        let err = m.bucket_for("a", 99).unwrap_err();
+        assert!(
+            format!("{err}").contains("exceeds the largest compiled bucket"),
+            "{err}"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

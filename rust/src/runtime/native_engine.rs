@@ -27,17 +27,18 @@
 //! [`Engine`]: crate::runtime::Engine
 
 use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::model::ParamSet;
-use crate::native::linalg;
+use crate::native::{kernels, linalg, Workspace, WorkspaceStats};
 use crate::runtime::backend::{check_inputs, Backend, EntryStats, StatsBook};
 use crate::runtime::manifest::{
     EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta,
 };
-use crate::runtime::tensor::{Dtype, HostTensor};
+use crate::runtime::tensor::{Dtype, HostTensor, TensorData};
 use crate::util::rng::Rng;
 
 /// Parameter slots, in canonical manifest order.
@@ -252,6 +253,12 @@ pub struct NativeEngine {
     cfg: NativeConfig,
     manifest: Manifest,
     stats: StatsBook,
+    /// Scratch-buffer pool behind every entry point: outputs and
+    /// intermediates draw from here, and spent tensors flow back via
+    /// [`Backend::recycle`], so a warmed steady-state solve loop performs
+    /// zero per-iteration heap allocation ([`Self::workspace_stats`]
+    /// makes that assertable).
+    ws: Mutex<Workspace>,
 }
 
 impl NativeEngine {
@@ -262,11 +269,36 @@ impl NativeEngine {
 
     pub fn new(cfg: NativeConfig) -> Self {
         let manifest = build_manifest(&cfg);
-        Self { cfg, manifest, stats: StatsBook::default() }
+        Self {
+            cfg,
+            manifest,
+            stats: StatsBook::default(),
+            ws: Mutex::new(Workspace::new()),
+        }
     }
 
     pub fn config(&self) -> &NativeConfig {
         &self.cfg
+    }
+
+    /// Pool counters (hits / fresh allocations / parked buffers) — the
+    /// assertion surface for the no-allocation steady-state invariant.
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.lock().unwrap().stats()
+    }
+
+    fn take(&self, len: usize) -> Vec<f32> {
+        self.ws.lock().unwrap().take(len)
+    }
+
+    /// Pool buffer with arbitrary contents — only for outputs the callee
+    /// fully overwrites (see [`Workspace::take_dirty`]).
+    fn take_dirty(&self, len: usize) -> Vec<f32> {
+        self.ws.lock().unwrap().take_dirty(len)
+    }
+
+    fn give(&self, v: Vec<f32>) {
+        self.ws.lock().unwrap().give(v);
     }
 
     fn dispatch(
@@ -291,51 +323,31 @@ impl NativeEngine {
         }
     }
 
-    /// x_feat = W_enc·vec(x_img) + b_enc, per sample.
+    /// x_feat = W_enc·vec(x_img) + b_enc: one blocked batch×image GEMM.
     fn encode(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let (idim, n) = (self.cfg.image_dim(), self.cfg.latent_dim());
         let w = inputs[P_W_ENC].f32s()?;
         let b = inputs[P_B_ENC].f32s()?;
         let x = inputs[NP].f32s()?;
-        let mut feat = vec![0.0f32; batch * n];
-        for s in 0..batch {
-            affine(
-                &x[s * idim..(s + 1) * idim],
-                w,
-                b,
-                idim,
-                n,
-                &mut feat[s * n..(s + 1) * n],
-            );
-        }
+        let mut feat = self.take_dirty(batch * n);
+        kernels::matmul_bias(x, w, b, batch, idim, n, &mut feat);
         Ok(vec![HostTensor::f32(self.manifest.model.latent_shape(batch), feat)?])
     }
 
-    /// f = tanh(W_cell·z + b_cell + x) with fused per-sample residual norms.
+    /// f = tanh(W_cell·z + b_cell + x) with fused per-sample residual
+    /// norms — one blocked batch×latent GEMM plus a single fused pass
+    /// over f (see [`kernels::cell_batch`]).  All three outputs draw
+    /// from the workspace pool.
     fn cell_step(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
         let w = inputs[P_W_CELL].f32s()?;
         let b = inputs[P_B_CELL].f32s()?;
         let z = inputs[NP].f32s()?;
         let x = inputs[NP + 1].f32s()?;
-        let mut f = vec![0.0f32; batch * n];
-        let mut res = vec![0.0f32; batch];
-        let mut fnorm = vec![0.0f32; batch];
-        for s in 0..batch {
-            let zs = &z[s * n..(s + 1) * n];
-            let xs = &x[s * n..(s + 1) * n];
-            let fs = &mut f[s * n..(s + 1) * n];
-            cell_apply(w, b, zs, xs, n, fs);
-            let mut num = 0.0f32;
-            let mut den = 0.0f32;
-            for j in 0..n {
-                let d = fs[j] - zs[j];
-                num += d * d;
-                den += fs[j] * fs[j];
-            }
-            res[s] = num.sqrt();
-            fnorm[s] = den.sqrt();
-        }
+        let mut f = self.take_dirty(batch * n);
+        let mut res = self.take_dirty(batch);
+        let mut fnorm = self.take_dirty(batch);
+        kernels::cell_batch(w, b, z, x, batch, n, &mut f, &mut res, &mut fnorm);
         Ok(vec![
             HostTensor::f32(self.manifest.model.latent_shape(batch), f)?,
             HostTensor::f32(vec![batch], res)?,
@@ -344,7 +356,9 @@ impl NativeEngine {
     }
 
     /// K fused forward steps; residual outputs describe the *last* step,
-    /// matching the AOT `forward_solve_k` artifact semantics.
+    /// matching the AOT `forward_solve_k` artifact semantics (the last
+    /// [`kernels::cell_batch`] call's norms are exactly ‖z_K − z_{K−1}‖
+    /// and ‖z_K‖).
     fn forward_solve_k(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
         let k = self.cfg.solver.fused_steps.max(1);
@@ -352,36 +366,16 @@ impl NativeEngine {
         let b = inputs[P_B_CELL].f32s()?;
         let z0 = inputs[NP].f32s()?;
         let x = inputs[NP + 1].f32s()?;
-        let mut z = z0.to_vec();
-        let mut f = vec![0.0f32; batch * n];
+        let mut z = self.take_dirty(batch * n);
+        z.copy_from_slice(z0);
+        let mut f = self.take_dirty(batch * n);
+        let mut res = self.take_dirty(batch);
+        let mut fnorm = self.take_dirty(batch);
         for _ in 0..k {
-            for s in 0..batch {
-                cell_apply(
-                    w,
-                    b,
-                    &z[s * n..(s + 1) * n],
-                    &x[s * n..(s + 1) * n],
-                    n,
-                    &mut f[s * n..(s + 1) * n],
-                );
-            }
+            kernels::cell_batch(w, b, &z, x, batch, n, &mut f, &mut res, &mut fnorm);
             std::mem::swap(&mut z, &mut f);
         }
-        // After the swap `z` holds z_K and `f` holds z_{K-1}.
-        let mut res = vec![0.0f32; batch];
-        let mut fnorm = vec![0.0f32; batch];
-        for s in 0..batch {
-            let mut num = 0.0f32;
-            let mut den = 0.0f32;
-            for j in 0..n {
-                let t = s * n + j;
-                let d = z[t] - f[t];
-                num += d * d;
-                den += z[t] * z[t];
-            }
-            res[s] = num.sqrt();
-            fnorm[s] = den.sqrt();
-        }
+        self.give(f);
         Ok(vec![
             HostTensor::f32(self.manifest.model.latent_shape(batch), z)?,
             HostTensor::f32(vec![batch], res)?,
@@ -405,12 +399,17 @@ impl NativeEngine {
         let mask = inputs[2].f32s()?;
         let valid: Vec<usize> = (0..m).filter(|&i| mask[i] > 0.5).collect();
         let nv = valid.len();
-        let mut z = vec![0.0f32; batch * n];
-        let mut alpha_out = vec![0.0f32; batch * m];
+        let mut z = self.take(batch * n);
+        let mut alpha_out = self.take(batch * m);
         if nv > 0 {
+            // Per-sample scratch, pooled and reused across the batch loop
+            // (each fully rewritten per sample, so dirty buffers are fine;
+            // z and alpha_out above stay zero-initialized accumulators).
+            let mut g = self.take_dirty(nv * n);
+            let mut h = self.take_dirty(nv * nv);
+            let mut a = self.take_dirty(nv);
             for s in 0..batch {
                 // Residual rows G_i = f_i − x_i over the valid slots.
-                let mut g = vec![0.0f32; nv * n];
                 for (r, &i) in valid.iter().enumerate() {
                     let off = (s * m + i) * n;
                     for t in 0..n {
@@ -418,40 +417,49 @@ impl NativeEngine {
                     }
                 }
                 // H = G Gᵀ + λI;  H a = 1;  α = a / Σa.
-                let mut h = vec![0.0f32; nv * nv];
                 linalg::gram(&g, nv, n, &mut h);
                 for i in 0..nv {
                     h[i * nv + i] += lam;
                 }
-                let ones = vec![1.0f32; nv];
-                // λ > 0 keeps H SPD on finite inputs, so like the
-                // reference AndersonState::mix we propagate a factorization
-                // failure instead of papering over it.
-                let a = linalg::solve_spd(&h, nv, &ones)?;
+                for v in a.iter_mut() {
+                    *v = 1.0;
+                }
+                // λ > 0 keeps H SPD on finite inputs, but λ = 0 configs
+                // and duplicated lanes (e.g. a freshly replicated
+                // LaneHistory window) make H rank-deficient.  That is a
+                // recoverable condition, not a batch-aborting error:
+                // degrade this sample to a plain forward step from the
+                // last valid slot (the kernel only sees the masked
+                // window, not push order, so "last valid" is the best
+                // newest-pair proxy it has), exactly like the reference
+                // AndersonState::mix_into fallback.
+                let solved =
+                    linalg::solve_spd_in_place(&mut h, nv, &mut a).is_ok();
                 let sum: f32 = a.iter().sum();
-                let alpha: Vec<f32> = if sum.abs() < 1e-30 {
-                    // Σa = 1ᵀH⁻¹1 > 0 for SPD H, so this branch is dead
-                    // except under catastrophic f32 rounding.  The kernel
-                    // only sees the masked window (not push order), so the
-                    // best degenerate choice it can make is the last valid
-                    // slot — an arbitrary plain forward step.
-                    let mut e = vec![0.0; nv];
-                    e[nv - 1] = 1.0;
-                    e
+                if solved && sum.is_finite() && sum.abs() >= 1e-30 {
+                    for v in a.iter_mut() {
+                        *v /= sum;
+                    }
                 } else {
-                    a.iter().map(|v| v / sum).collect()
-                };
+                    for v in a.iter_mut() {
+                        *v = 0.0;
+                    }
+                    a[nv - 1] = 1.0;
+                }
                 // z⁺ = Σ αᵢ ((1−β)·xᵢ + β·fᵢ)   (Eq. 5)
                 let zrow = &mut z[s * n..(s + 1) * n];
                 for (r, &i) in valid.iter().enumerate() {
                     let off = (s * m + i) * n;
-                    let (ax, af) = ((1.0 - beta) * alpha[r], beta * alpha[r]);
+                    let (ax, af) = ((1.0 - beta) * a[r], beta * a[r]);
                     for t in 0..n {
                         zrow[t] += ax * xh[off + t] + af * fh[off + t];
                     }
-                    alpha_out[s * m + i] = alpha[r];
+                    alpha_out[s * m + i] = a[r];
                 }
             }
+            self.give(g);
+            self.give(h);
+            self.give(a);
         }
         Ok(vec![
             HostTensor::f32(vec![batch, n], z)?,
@@ -459,23 +467,14 @@ impl NativeEngine {
         ])
     }
 
-    /// logits = W_cls·z + b_cls.
+    /// logits = W_cls·z + b_cls: one blocked batch×classes GEMM.
     fn classify(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let (n, nc) = (self.cfg.latent_dim(), self.cfg.num_classes);
         let w = inputs[P_W_CLS].f32s()?;
         let b = inputs[P_B_CLS].f32s()?;
         let z = inputs[NP].f32s()?;
-        let mut logits = vec![0.0f32; batch * nc];
-        for s in 0..batch {
-            affine(
-                &z[s * n..(s + 1) * n],
-                w,
-                b,
-                n,
-                nc,
-                &mut logits[s * nc..(s + 1) * nc],
-            );
-        }
+        let mut logits = self.take_dirty(batch * nc);
+        kernels::matmul_bias(z, w, b, batch, n, nc, &mut logits);
         Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
     }
 
@@ -483,37 +482,33 @@ impl NativeEngine {
     fn explicit_infer(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
         let feat_t = self.encode(batch, inputs)?.remove(0);
-        let feat = feat_t.f32s()?;
         let w_cell = inputs[P_W_CELL].f32s()?;
         let b_cell = inputs[P_B_CELL].f32s()?;
-        let mut z = vec![0.0f32; batch * n];
-        let mut f = vec![0.0f32; batch * n];
-        for _ in 0..self.cfg.train.explicit_depth.max(1) {
-            for s in 0..batch {
-                cell_apply(
-                    w_cell,
-                    b_cell,
-                    &z[s * n..(s + 1) * n],
-                    &feat[s * n..(s + 1) * n],
-                    n,
-                    &mut f[s * n..(s + 1) * n],
+        let mut z = self.take(batch * n); // zeroed: the initial iterate
+        let mut f = self.take_dirty(batch * n);
+        let mut res = self.take_dirty(batch);
+        let mut fnorm = self.take_dirty(batch);
+        {
+            let feat = feat_t.f32s()?;
+            for _ in 0..self.cfg.train.explicit_depth.max(1) {
+                kernels::cell_batch(
+                    w_cell, b_cell, &z, feat, batch, n, &mut f, &mut res,
+                    &mut fnorm,
                 );
+                std::mem::swap(&mut z, &mut f);
             }
-            std::mem::swap(&mut z, &mut f);
+        }
+        self.give(f);
+        self.give(res);
+        self.give(fnorm);
+        if let TensorData::F32(v) = feat_t.data {
+            self.give(v);
         }
         let (nc, w_cls, b_cls) =
             (self.cfg.num_classes, inputs[P_W_CLS].f32s()?, inputs[P_B_CLS].f32s()?);
-        let mut logits = vec![0.0f32; batch * nc];
-        for s in 0..batch {
-            affine(
-                &z[s * n..(s + 1) * n],
-                w_cls,
-                b_cls,
-                n,
-                nc,
-                &mut logits[s * nc..(s + 1) * nc],
-            );
-        }
+        let mut logits = self.take_dirty(batch * nc);
+        kernels::matmul_bias(&z, w_cls, b_cls, batch, n, nc, &mut logits);
+        self.give(z);
         Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
     }
 
@@ -723,6 +718,17 @@ impl Backend for NativeEngine {
 
     fn platform(&self) -> String {
         "native-cpu".to_string()
+    }
+
+    /// Spent f32 tensors rejoin the workspace pool; i32 tensors (labels,
+    /// counters) are dropped — the pool is f32-only.
+    fn recycle(&self, tensors: Vec<HostTensor>) {
+        let mut ws = self.ws.lock().unwrap();
+        for t in tensors {
+            if let TensorData::F32(v) = t.data {
+                ws.give(v);
+            }
+        }
     }
 
     fn execute(
@@ -996,8 +1002,11 @@ mod tests {
         let b = p.tensors[P_B_CELL].f32s().unwrap();
         let mut want = vec![0.0f32; n];
         cell_apply(w, b, &z, &x, n, &mut want);
+        // The blocked kernel adds the bias after the matmul reduction
+        // (cell_apply seeds the accumulator with it), so the f32 rounding
+        // differs at the last few ulps; parity is at 1e-4, not exactness.
         for (a, b2) in f.iter().zip(&want) {
-            assert!((a - b2).abs() < 1e-6);
+            assert!((a - b2).abs() < 1e-4);
         }
         // Residual outputs match host-recomputed norms.
         let num: f32 = f
@@ -1042,6 +1051,87 @@ mod tests {
         for (a, b) in out[1].f32s().unwrap().iter().zip(&a_ref) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn anderson_update_rank_deficient_window_falls_back() {
+        // λ = 0 plus a window whose residual rows are identical (exactly
+        // what LaneHistory's replication-seeding produces on a fresh
+        // lane) makes H = GGᵀ rank-1: Cholesky breaks down.  Regression:
+        // this used to error out the whole batched update — and with it
+        // the serving scheduler's solve loop; it must now degrade that
+        // sample to a plain forward step from the last valid slot.
+        let cfg = NativeConfig {
+            solver: SolverMeta { lam: 0.0, ..NativeConfig::default().solver },
+            ..NativeConfig::default()
+        };
+        let e = NativeEngine::new(cfg);
+        let m = e.config().solver.window;
+        let n = e.config().latent_dim();
+        let xh: Vec<f32> = vec![1.0; m * n];
+        let fh: Vec<f32> = vec![2.0; m * n];
+        let out = e
+            .execute(
+                "anderson_update",
+                1,
+                &[
+                    HostTensor::f32(vec![1, m, n], xh).unwrap(),
+                    HostTensor::f32(vec![1, m, n], fh.clone()).unwrap(),
+                    HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+                ],
+            )
+            .expect("rank-deficient window must not error the update");
+        // All slots hold the same pair, so any normalized α mixes to the
+        // forward step f = 2; the fallback picks the last valid slot.
+        for (got, want) in out[0].f32s().unwrap().iter().zip(&fh) {
+            assert!(
+                got.is_finite() && (got - want).abs() < 1e-4,
+                "{got} vs {want}"
+            );
+        }
+        let alpha = out[1].f32s().unwrap();
+        let s: f32 = alpha.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "alpha not normalized: {s}");
+    }
+
+    #[test]
+    fn steady_state_execute_loop_is_allocation_free() {
+        // The no-allocation invariant of the tentpole: once recycled
+        // outputs have warmed the workspace pool, repeated cell_step +
+        // anderson_update dispatches perform zero fresh allocations.
+        let e = NativeEngine::tiny();
+        let p = e.init_params().unwrap();
+        let m = e.config().solver.window;
+        let n = e.config().latent_dim();
+        let batch = 8;
+        let mut cell_in = p.tensors.clone();
+        cell_in.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        cell_in.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        let and_in = [
+            HostTensor::zeros(vec![batch, m, n]),
+            HostTensor::zeros(vec![batch, m, n]),
+            HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+        ];
+        let mut run = || {
+            let out = e.execute("cell_step", batch, &cell_in).unwrap();
+            e.recycle(out);
+            let out = e.execute("anderson_update", batch, &and_in).unwrap();
+            e.recycle(out);
+        };
+        for _ in 0..3 {
+            run(); // warm the pool
+        }
+        let warm = e.workspace_stats();
+        for _ in 0..20 {
+            run();
+        }
+        let after = e.workspace_stats();
+        assert_eq!(
+            after.allocs, warm.allocs,
+            "steady-state dispatch allocated ({} → {})",
+            warm.allocs, after.allocs
+        );
+        assert!(after.hits > warm.hits, "pool was not exercised");
     }
 
     #[test]

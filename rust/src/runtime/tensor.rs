@@ -171,6 +171,25 @@ impl HostTensor {
         Ok(())
     }
 
+    /// Copy `src`'s data into this tensor without reallocating — the
+    /// no-allocation twin of `clone_from` for the pooled hot paths.
+    /// Shapes and dtypes must match exactly.
+    pub fn copy_from(&mut self, src: &HostTensor) -> Result<()> {
+        if self.shape != src.shape {
+            bail!(
+                "copy_from shape mismatch: {:?} vs {:?}",
+                self.shape,
+                src.shape
+            );
+        }
+        match (&mut self.data, &src.data) {
+            (TensorData::F32(d), TensorData::F32(s)) => d.copy_from_slice(s),
+            (TensorData::I32(d), TensorData::I32(s)) => d.copy_from_slice(s),
+            _ => bail!("copy_from dtype mismatch"),
+        }
+        Ok(())
+    }
+
     /// Per-lane masking helper: replace this tensor's row `i` with `src`'s
     /// row `i` wherever `mask[i]` is true.  Shapes must match and the
     /// leading axis must equal `mask.len()`.  This is how solver drivers
@@ -284,6 +303,18 @@ mod tests {
         t.set_row_f32(0, &[7.0, 8.0, 9.0]).unwrap();
         assert_eq!(t.row_f32(0).unwrap(), &[7.0, 8.0, 9.0]);
         assert!(t.set_row_f32(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn copy_from_requires_matching_layout() {
+        let mut dst = HostTensor::zeros(vec![2, 2]);
+        let src = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        dst.copy_from(&src).unwrap();
+        assert_eq!(dst.f32s().unwrap(), src.f32s().unwrap());
+        let wrong_shape = HostTensor::zeros(vec![4]);
+        assert!(dst.copy_from(&wrong_shape).is_err());
+        let wrong_dtype = HostTensor::i32(vec![2, 2], vec![0; 4]).unwrap();
+        assert!(dst.copy_from(&wrong_dtype).is_err());
     }
 
     #[test]

@@ -19,13 +19,27 @@ use crate::server::{
 pub(crate) type QueueHandle = Arc<super::Queue>;
 
 /// Pick the compiled bucket for `n` queued requests: the smallest bucket
-/// ≥ n, else the largest (and we take only that many requests).
+/// ≥ n.
+///
+/// `n` must not exceed the largest bucket.  Both worker loops guarantee
+/// this by construction — the batcher drains at most `max_bucket`
+/// requests per batch and the scheduler's occupancy is bounded by its
+/// lane count — so an oversize `n` here is an internal invariant
+/// violation (asserted in debug builds), **not** a request to clamp.
+/// The old `unwrap_or(last)` silently rode a too-small bucket and blew
+/// up downstream with a confusing shape error; oversize *client* batches
+/// are now rejected with an explicit error where they enter, in
+/// [`crate::runtime::Manifest::bucket_for`].
 pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
     debug_assert!(!buckets.is_empty());
+    debug_assert!(
+        n <= *buckets.last().expect("buckets non-empty"),
+        "batch of {n} exceeds the largest compiled bucket — split it first"
+    );
     *buckets
         .iter()
         .find(|&&b| b >= n)
-        .unwrap_or(buckets.last().unwrap())
+        .unwrap_or_else(|| buckets.last().expect("buckets non-empty"))
 }
 
 /// Decide whether to fire now: full bucket, or oldest waiter exceeded
@@ -97,7 +111,16 @@ mod tests {
         assert_eq!(pick_bucket(&b, 2), 8);
         assert_eq!(pick_bucket(&b, 8), 8);
         assert_eq!(pick_bucket(&b, 9), 32);
-        assert_eq!(pick_bucket(&b, 100), 32);
+        assert_eq!(pick_bucket(&b, 32), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the largest compiled bucket")]
+    fn oversize_bucket_is_an_invariant_violation() {
+        // The silent clamp is gone: a batch the workers failed to split
+        // trips the debug assertion instead of riding a too-small bucket
+        // into a shape error.
+        pick_bucket(&[1, 8, 32], 100);
     }
 
     #[test]

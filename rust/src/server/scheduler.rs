@@ -158,6 +158,9 @@ fn admit_all(
             mixing,
         });
     }
+    // The padded feature tensor has been spliced into the lanes; hand its
+    // buffer back to the backend pool so admissions don't leak it.
+    engine.recycle(vec![feat]);
     Ok(())
 }
 
@@ -190,19 +193,32 @@ fn serve_loop(
     let use_anderson =
         matches!(kind, SolverKind::Anderson | SolverKind::Hybrid);
 
-    let mut z = HostTensor::zeros(meta.latent_shape(bucket));
-    let mut x_feat = HostTensor::zeros(meta.latent_shape(bucket));
     let mut hist = LaneHistory::new(bucket, window, compiled_m, n);
 
+    // The canonical iterate and feature tensors live directly in the
+    // cell-input slots; admissions splice rows into them in place.  The
+    // classify and anderson_update inputs are preallocated and refilled
+    // in place, masks are reused across iterations, and spent backend
+    // outputs are recycled — so a fully occupied steady-state lane loop
+    // performs no per-iteration bucket-sized allocation.
     let mut cell_inputs: Vec<HostTensor> = params.tensors.clone();
     let z_slot = cell_inputs.len();
-    cell_inputs.push(z.clone());
-    cell_inputs.push(x_feat.clone());
+    cell_inputs.push(HostTensor::zeros(meta.latent_shape(bucket)));
+    let x_slot = z_slot + 1;
+    cell_inputs.push(HostTensor::zeros(meta.latent_shape(bucket)));
     // Classify inputs are preallocated like cell_inputs: only the latent
     // slot is overwritten per retiring iteration, never the params.
     let mut cls_inputs: Vec<HostTensor> = params.tensors.clone();
     let cls_z_slot = cls_inputs.len();
-    cls_inputs.push(z.clone());
+    cls_inputs.push(HostTensor::zeros(meta.latent_shape(bucket)));
+    let mut and_inputs: [HostTensor; 3] = [
+        HostTensor::zeros(vec![bucket, compiled_m, n]),
+        HostTensor::zeros(vec![bucket, compiled_m, n]),
+        HostTensor::zeros(vec![compiled_m]),
+    ];
+    let mut retire_mask = vec![false; bucket];
+    let mut mix_mask = vec![false; bucket];
+    let mut fwd_mask = vec![false; bucket];
 
     loop {
         // --- admission at the iteration boundary ---
@@ -235,36 +251,35 @@ fn serve_loop(
                 items = guard;
             }
         };
-        let had_admissions = !admitted.is_empty();
-        admit_all(
-            engine,
-            params,
-            &meta,
-            &mut z,
-            &mut x_feat,
-            &mut hist,
-            lanes,
-            admitted,
-            use_anderson,
-        )?;
+        {
+            let (head, tail) = cell_inputs.split_at_mut(x_slot);
+            admit_all(
+                engine,
+                params,
+                &meta,
+                &mut head[z_slot],
+                &mut tail[0],
+                &mut hist,
+                lanes,
+                admitted,
+                use_anderson,
+            )?;
+        }
         if lanes.iter().all(Option::is_none) {
             continue;
         }
 
         // --- one solve iteration over the whole lane set ---
-        cell_inputs[z_slot] = z.clone();
-        // x_feat only changes at admission boundaries; skip the bucket-
-        // sized copy on pure solve iterations.
-        if had_admissions {
-            cell_inputs[z_slot + 1] = x_feat.clone();
-        }
-        let out = engine.execute("cell_step", bucket, &cell_inputs)?;
-        let f = &out[0];
-        let rel = per_sample_rel(&out[1], &out[2], cfg.solver.lam)?;
+        let mut out = engine.execute("cell_step", bucket, &cell_inputs)?;
+        let fnorm_t = out.pop().expect("cell_step returns 3 outputs");
+        let res_t = out.pop().expect("cell_step returns 3 outputs");
+        let f = out.pop().expect("cell_step returns 3 outputs");
+        let rel = per_sample_rel(&res_t, &fnorm_t, cfg.solver.lam)?;
+        engine.recycle(vec![res_t, fnorm_t]);
         let occupied = lanes.iter().filter(|l| l.is_some()).count();
         metrics.record_iteration(occupied, bucket, pick_bucket(buckets, occupied));
 
-        let mut retire_mask = vec![false; bucket];
+        retire_mask.fill(false);
         for (i, slot) in lanes.iter_mut().enumerate() {
             if let Some(lane) = slot.as_mut() {
                 lane.iters += 1;
@@ -282,8 +297,8 @@ fn serve_loop(
             // Retiring lanes take f as their terminal iterate, like the
             // batch drivers' terminal step; classify the whole bucket and
             // slice out the retiring rows.
-            z.overwrite_rows_where(f, &retire_mask)?;
-            cls_inputs[cls_z_slot] = z.clone();
+            cls_inputs[cls_z_slot].copy_from(&cell_inputs[z_slot])?;
+            cls_inputs[cls_z_slot].overwrite_rows_where(&f, &retire_mask)?;
             let logits_t =
                 engine.execute("classify", bucket, &cls_inputs)?.remove(0);
             let flat = logits_t.f32s()?;
@@ -310,15 +325,19 @@ fn serve_loop(
                 }));
                 hist.clear_lane(i);
             }
+            engine.recycle(vec![logits_t]);
         }
 
         // --- advance the surviving lanes ---
         if kind == SolverKind::Forward {
-            let active: Vec<bool> = lanes.iter().map(Option::is_some).collect();
-            z.overwrite_rows_where(f, &active)?;
+            fwd_mask.fill(false);
+            for (i, slot) in lanes.iter().enumerate() {
+                fwd_mask[i] = slot.is_some();
+            }
+            cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
         } else {
-            let mut mix_mask = vec![false; bucket];
-            let mut fwd_mask = vec![false; bucket];
+            mix_mask.fill(false);
+            fwd_mask.fill(false);
             for (i, slot) in lanes.iter_mut().enumerate() {
                 if let Some(lane) = slot.as_mut() {
                     if lane.mixing
@@ -334,7 +353,11 @@ fn serve_loop(
                         lane.mixing = false;
                     }
                     if lane.mixing {
-                        hist.push_lane(i, z.row_f32(i)?, f.row_f32(i)?);
+                        hist.push_lane(
+                            i,
+                            cell_inputs[z_slot].row_f32(i)?,
+                            f.row_f32(i)?,
+                        );
                         mix_mask[i] = true;
                     } else {
                         fwd_mask[i] = true;
@@ -342,16 +365,25 @@ fn serve_loop(
                 }
             }
             if mix_mask.iter().any(|&b| b) {
-                let (xh, fh, mask_t) = hist.tensors()?;
-                let update =
-                    engine.execute("anderson_update", bucket, &[xh, fh, mask_t])?;
-                let mixed =
-                    update[0].clone().reshaped(meta.latent_shape(bucket))?;
-                z.overwrite_rows_where(&mixed, &mix_mask)?;
+                {
+                    let [xh, fh, mask_t] = &mut and_inputs;
+                    hist.fill_tensors(xh, fh, mask_t)?;
+                }
+                let mut update =
+                    engine.execute("anderson_update", bucket, &and_inputs)?;
+                let alpha =
+                    update.pop().expect("anderson_update returns 2 outputs");
+                let mixed = update
+                    .pop()
+                    .expect("anderson_update returns 2 outputs")
+                    .reshaped(meta.latent_shape(bucket))?;
+                cell_inputs[z_slot].overwrite_rows_where(&mixed, &mix_mask)?;
+                engine.recycle(vec![alpha, mixed]);
             }
             if fwd_mask.iter().any(|&b| b) {
-                z.overwrite_rows_where(f, &fwd_mask)?;
+                cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
             }
         }
+        engine.recycle(vec![f]);
     }
 }

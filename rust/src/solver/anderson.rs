@@ -107,6 +107,58 @@ impl History {
             HostTensor::f32(vec![self.slots], self.mask())?,
         ))
     }
+
+    /// Pack the window into preallocated tensors — the allocation-free
+    /// twin of [`Self::tensors`] for steady-state solve loops.  Tensor
+    /// element counts must match `(batch, slots, n)` / `(slots,)`.
+    pub fn fill_tensors(
+        &self,
+        xh: &mut HostTensor,
+        fh: &mut HostTensor,
+        mask: &mut HostTensor,
+    ) -> Result<()> {
+        fill_window(&self.xhist, &self.fhist, self.valid(), self.slots, xh, fh, mask)
+    }
+}
+
+/// Shared copy core of `History::fill_tensors` / `LaneHistory::fill_tensors`:
+/// copy the flat windows into preallocated tensors and rewrite the mask
+/// with `nv` valid slots.
+fn fill_window(
+    xhist: &[f32],
+    fhist: &[f32],
+    nv: usize,
+    slots: usize,
+    xh: &mut HostTensor,
+    fh: &mut HostTensor,
+    mask: &mut HostTensor,
+) -> Result<()> {
+    let xd = xh.f32s_mut()?;
+    anyhow::ensure!(
+        xd.len() == xhist.len(),
+        "xhist tensor holds {} elements, window has {}",
+        xd.len(),
+        xhist.len()
+    );
+    xd.copy_from_slice(xhist);
+    let fd = fh.f32s_mut()?;
+    anyhow::ensure!(
+        fd.len() == fhist.len(),
+        "fhist tensor holds {} elements, window has {}",
+        fd.len(),
+        fhist.len()
+    );
+    fd.copy_from_slice(fhist);
+    let md = mask.f32s_mut()?;
+    anyhow::ensure!(
+        md.len() == slots,
+        "mask tensor holds {} slots, window has {slots}",
+        md.len()
+    );
+    for (i, v) in md.iter_mut().enumerate() {
+        *v = if i < nv { 1.0 } else { 0.0 };
+    }
+    Ok(())
 }
 
 /// Per-lane windowed history for iteration-level continuous batching.
@@ -195,6 +247,18 @@ impl LaneHistory {
             HostTensor::f32(vec![self.slots], mask)?,
         ))
     }
+
+    /// Pack the lane windows into preallocated tensors — the
+    /// allocation-free twin of [`Self::tensors`] for the scheduler's
+    /// steady-state lane loop.
+    pub fn fill_tensors(
+        &self,
+        xh: &mut HostTensor,
+        fh: &mut HostTensor,
+        mask: &mut HostTensor,
+    ) -> Result<()> {
+        fill_window(&self.xhist, &self.fhist, self.m, self.slots, xh, fh, mask)
+    }
 }
 
 /// Solve to tolerance with Anderson extrapolation.
@@ -219,24 +283,35 @@ pub fn solve(
          (rebuild artifacts with a larger SolverConfig.window)"
     );
 
-    let mut z = HostTensor::zeros(x_feat.shape.clone());
     let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
     let mut steps: Vec<SolveStep> = Vec::new();
     let mut track = ResidualTrack::new(batch, opts.tol);
     let t0 = Instant::now();
 
+    // The canonical iterate lives in the cell-input slot; the mixed next
+    // iterate is swapped in and the previous one recycled.  The
+    // anderson_update inputs are preallocated once and refilled in place
+    // each iteration, so the steady-state loop performs no bucket-sized
+    // allocation (the backend pool absorbs the rest — see the
+    // workspace-reuse test in tests/native_kernels.rs).
     let mut cell_inputs: Vec<HostTensor> = params.to_vec();
     let z_slot = cell_inputs.len();
-    cell_inputs.push(z.clone());
+    cell_inputs.push(HostTensor::zeros(x_feat.shape.clone()));
     cell_inputs.push(x_feat.clone());
+    let mut and_inputs: [HostTensor; 3] = [
+        HostTensor::zeros(vec![batch, compiled_m, n]),
+        HostTensor::zeros(vec![batch, compiled_m, n]),
+        HostTensor::zeros(vec![compiled_m]),
+    ];
 
     for k in 0..opts.max_iter {
         // f(z, x) + fused residual norms.
-        cell_inputs[z_slot] = z.clone();
-        let out = engine.execute("cell_step", batch, &cell_inputs)?;
-        let f = &out[0];
-        let (rel, freeze) =
-            track.observe_step(&out[1], &out[2], opts.lam, 1)?;
+        let mut out = engine.execute("cell_step", batch, &cell_inputs)?;
+        let fnorm = out.pop().expect("cell_step returns 3 outputs");
+        let res = out.pop().expect("cell_step returns 3 outputs");
+        let f = out.pop().expect("cell_step returns 3 outputs");
+        let (rel, freeze) = track.observe_step(&res, &fnorm, opts.lam, 1)?;
+        engine.recycle(vec![res, fnorm]);
         // `mixed` is back-filled once mixing actually runs below, so the
         // flag describes the update applied to THIS step's iterate: the
         // terminal (converged) step takes f directly and stays unmixed,
@@ -253,24 +328,35 @@ pub fn solve(
         if track.all_converged() {
             // Lanes that converged this step take f as their terminal
             // iterate; lanes frozen earlier already hold theirs.
-            z.overwrite_rows_where(f, &freeze.newly_frozen)?;
+            cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
+            engine.recycle(vec![f]);
             break;
         }
 
         // Window update + Anderson mixing for still-active lanes only:
         // frozen lanes' history stops updating and their rows of the
         // mixed output are discarded below.
-        hist.push_where(z.f32s()?, f.f32s()?, &track.active_mask());
-        let (xh, fh, mask) = hist.tensors()?;
-        let update = engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-        let mut next = update[0]
-            .clone()
-            .reshaped(meta.latent_shape(batch))?;
-        freeze.apply(&mut next, f, &z)?;
-        z = next;
+        hist.push_where(
+            cell_inputs[z_slot].f32s()?,
+            f.f32s()?,
+            &track.active_mask(),
+        );
+        {
+            let [xh, fh, mask] = &mut and_inputs;
+            hist.fill_tensors(xh, fh, mask)?;
+        }
+        let mut update = engine.execute("anderson_update", batch, &and_inputs)?;
+        let alpha = update.pop().expect("anderson_update returns 2 outputs");
+        let zmix = update.pop().expect("anderson_update returns 2 outputs");
+        engine.recycle(vec![alpha]);
+        let mut next = zmix.reshaped(meta.latent_shape(batch))?;
+        freeze.apply(&mut next, &f, &cell_inputs[z_slot])?;
+        let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
+        engine.recycle(vec![prev, f]);
         steps.last_mut().expect("step recorded above").mixed = true;
     }
 
+    let z = cell_inputs.swap_remove(z_slot);
     Ok(SolveReport::from_track(SolverKind::Anderson, steps, z, &track))
 }
 
@@ -328,6 +414,40 @@ mod tests {
         assert_eq!(&x[0..3], &[2.0, 2.0, 2.0]);
         assert_eq!(&x[3..6], &[3.0, 3.0, 3.0]);
         assert_eq!(&x[6..15], &[0.0; 9]);
+    }
+
+    #[test]
+    fn fill_tensors_matches_tensors() {
+        // The in-place pack must agree exactly with the allocating one,
+        // including the mask as the window fills.
+        let mut h = History::with_padded_slots(2, 2, 4, 3);
+        let mut xh = HostTensor::zeros(vec![2, 4, 3]);
+        let mut fh = HostTensor::zeros(vec![2, 4, 3]);
+        let mut mask = HostTensor::zeros(vec![4]);
+        for step in 0..3 {
+            let z = vec![step as f32; 6];
+            let f = vec![10.0 + step as f32; 6];
+            h.push(&z, &f);
+            let (xw, fw, mw) = h.tensors().unwrap();
+            h.fill_tensors(&mut xh, &mut fh, &mut mask).unwrap();
+            assert_eq!(xh.f32s().unwrap(), xw.f32s().unwrap());
+            assert_eq!(fh.f32s().unwrap(), fw.f32s().unwrap());
+            assert_eq!(mask.f32s().unwrap(), mw.f32s().unwrap());
+        }
+        // Wrong-sized targets are rejected, not silently truncated.
+        let mut small = HostTensor::zeros(vec![2, 2, 3]);
+        assert!(h.fill_tensors(&mut small, &mut fh, &mut mask).is_err());
+
+        let mut lh = LaneHistory::new(2, 2, 3, 2);
+        lh.push_lane(1, &[5.0, 6.0], &[7.0, 8.0]);
+        let (xw, fw, mw) = lh.tensors().unwrap();
+        let mut lxh = HostTensor::zeros(vec![2, 3, 2]);
+        let mut lfh = HostTensor::zeros(vec![2, 3, 2]);
+        let mut lmask = HostTensor::zeros(vec![3]);
+        lh.fill_tensors(&mut lxh, &mut lfh, &mut lmask).unwrap();
+        assert_eq!(lxh.f32s().unwrap(), xw.f32s().unwrap());
+        assert_eq!(lfh.f32s().unwrap(), fw.f32s().unwrap());
+        assert_eq!(lmask.f32s().unwrap(), mw.f32s().unwrap());
     }
 
     #[test]

@@ -31,15 +31,17 @@ pub fn solve(
         && fused_k > 1
         && engine.manifest().entry("forward_solve_k", batch).is_ok();
 
-    let mut z = HostTensor::zeros(x_feat.shape.clone());
     let mut steps: Vec<SolveStep> = Vec::new();
     let mut track = ResidualTrack::new(batch, opts.tol);
     let mut fevals = 0usize;
     let t0 = Instant::now();
 
+    // The canonical iterate lives in the input slot; each step moves the
+    // backend's f tensor in and recycles the previous iterate, so the
+    // steady-state loop allocates nothing once the backend pool is warm.
     let mut inputs: Vec<HostTensor> = params.to_vec();
     let z_slot = inputs.len();
-    inputs.push(z.clone());
+    inputs.push(HostTensor::zeros(x_feat.shape.clone()));
     inputs.push(x_feat.clone());
 
     while fevals < opts.max_iter && !track.all_converged() {
@@ -48,10 +50,13 @@ pub fn solve(
         } else {
             ("cell_step", 1)
         };
-        inputs[z_slot] = z.clone();
-        let out = engine.execute(entry, batch, &inputs)?;
+        let mut out = engine.execute(entry, batch, &inputs)?;
+        let fnorm = out.pop().expect("cell entries return 3 outputs");
+        let res = out.pop().expect("cell entries return 3 outputs");
+        let f = out.pop().expect("cell entries return 3 outputs");
         let (rel, freeze) =
-            track.observe_step(&out[1], &out[2], opts.lam, evals_this_call)?;
+            track.observe_step(&res, &fnorm, opts.lam, evals_this_call)?;
+        engine.recycle(vec![res, fnorm]);
         fevals += evals_this_call;
         steps.push(SolveStep {
             iter: steps.len(),
@@ -64,10 +69,12 @@ pub fn solve(
         });
         // Lanes active this step (newly frozen included) take f; lanes
         // frozen earlier keep their converged iterate.
-        let mut next = out[0].clone();
-        freeze.apply(&mut next, &out[0], &z)?;
-        z = next;
+        let mut next = f;
+        next.overwrite_rows_where(&inputs[z_slot], &freeze.frozen_before)?;
+        let prev = std::mem::replace(&mut inputs[z_slot], next);
+        engine.recycle(vec![prev]);
     }
 
+    let z = inputs.swap_remove(z_slot);
     Ok(SolveReport::from_track(SolverKind::Forward, steps, z, &track))
 }

@@ -45,7 +45,6 @@ pub fn solve(
     let compiled_m = engine.manifest().solver.window;
     anyhow::ensure!(m <= compiled_m, "window {m} > compiled {compiled_m}");
 
-    let mut z = HostTensor::zeros(x_feat.shape.clone());
     let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
     let mut steps: Vec<SolveStep> = Vec::new();
     let mut residuals: Vec<f32> = Vec::new();
@@ -53,17 +52,27 @@ pub fn solve(
     let mut anderson_active = true;
     let t0 = Instant::now();
 
+    // Same allocation discipline as the anderson driver: the canonical
+    // iterate lives in the cell-input slot, the anderson_update inputs
+    // are preallocated and refilled in place, and spent tensors flow
+    // back to the backend pool.
     let mut cell_inputs: Vec<HostTensor> = params.to_vec();
     let z_slot = cell_inputs.len();
-    cell_inputs.push(z.clone());
+    cell_inputs.push(HostTensor::zeros(x_feat.shape.clone()));
     cell_inputs.push(x_feat.clone());
+    let mut and_inputs: [HostTensor; 3] = [
+        HostTensor::zeros(vec![batch, compiled_m, n]),
+        HostTensor::zeros(vec![batch, compiled_m, n]),
+        HostTensor::zeros(vec![compiled_m]),
+    ];
 
     for k in 0..opts.max_iter {
-        cell_inputs[z_slot] = z.clone();
-        let out = engine.execute("cell_step", batch, &cell_inputs)?;
-        let f = &out[0];
-        let (rel, freeze) =
-            track.observe_step(&out[1], &out[2], opts.lam, 1)?;
+        let mut out = engine.execute("cell_step", batch, &cell_inputs)?;
+        let fnorm = out.pop().expect("cell_step returns 3 outputs");
+        let res = out.pop().expect("cell_step returns 3 outputs");
+        let f = out.pop().expect("cell_step returns 3 outputs");
+        let (rel, freeze) = track.observe_step(&res, &fnorm, opts.lam, 1)?;
+        engine.recycle(vec![res, fnorm]);
         residuals.push(track.max_rel());
         // As in the anderson driver, `mixed` is back-filled below so it
         // describes the update that produced this step's next iterate.
@@ -77,7 +86,8 @@ pub fn solve(
             mixed: false,
         });
         if track.all_converged() {
-            z.overwrite_rows_where(f, &freeze.newly_frozen)?;
+            cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
+            engine.recycle(vec![f]);
             break;
         }
 
@@ -87,22 +97,34 @@ pub fn solve(
         }
 
         if anderson_active {
-            hist.push_where(z.f32s()?, f.f32s()?, &track.active_mask());
-            let (xh, fh, mask) = hist.tensors()?;
-            let update =
-                engine.execute("anderson_update", batch, &[xh, fh, mask])?;
-            let mut next =
-                update[0].clone().reshaped(meta.latent_shape(batch))?;
-            freeze.apply(&mut next, f, &z)?;
-            z = next;
+            hist.push_where(
+                cell_inputs[z_slot].f32s()?,
+                f.f32s()?,
+                &track.active_mask(),
+            );
+            {
+                let [xh, fh, mask] = &mut and_inputs;
+                hist.fill_tensors(xh, fh, mask)?;
+            }
+            let mut update =
+                engine.execute("anderson_update", batch, &and_inputs)?;
+            let alpha = update.pop().expect("anderson_update returns 2 outputs");
+            let zmix = update.pop().expect("anderson_update returns 2 outputs");
+            engine.recycle(vec![alpha]);
+            let mut next = zmix.reshaped(meta.latent_shape(batch))?;
+            freeze.apply(&mut next, &f, &cell_inputs[z_slot])?;
+            let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
+            engine.recycle(vec![prev, f]);
             steps.last_mut().expect("step recorded above").mixed = true;
         } else {
-            let mut next = f.clone();
-            freeze.apply(&mut next, f, &z)?;
-            z = next;
+            let mut next = f;
+            next.overwrite_rows_where(&cell_inputs[z_slot], &freeze.frozen_before)?;
+            let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
+            engine.recycle(vec![prev]);
         }
     }
 
+    let z = cell_inputs.swap_remove(z_slot);
     Ok(SolveReport::from_track(SolverKind::Hybrid, steps, z, &track))
 }
 

@@ -190,6 +190,35 @@ fn per_sample_early_exit_matches_batch_granular_solve() {
 }
 
 #[test]
+fn burst_larger_than_biggest_bucket_is_split_not_clamped() {
+    // Satellite audit of the old `pick_bucket` clamp: a queue deeper than
+    // the largest compiled bucket must be served as multiple batches
+    // (each within a real bucket), never truncated or clamped into a
+    // bucket that cannot hold it.  40 requests over max bucket 32 → at
+    // least two batch-granular batches, every single one answered.
+    let (router, _) = make_router(10, SchedMode::BatchGranular);
+    let (data, _, _) = data::load_auto(8, 8, 5);
+    let total = 40usize;
+    let receivers: Vec<_> = (0..total)
+        .map(|i| router.submit(data.image(i % 8).to_vec()).unwrap())
+        .collect();
+    let responses: Vec<_> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply").expect("response"))
+        .collect();
+    assert_eq!(responses.len(), total, "some requests were dropped");
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch <= 32, "a batch exceeded the biggest bucket");
+    assert_eq!(
+        router
+            .metrics
+            .served
+            .load(std::sync::atomic::Ordering::Relaxed),
+        total as u64
+    );
+}
+
+#[test]
 fn shutdown_drains_queue_with_error_replies() {
     // Long max_wait so the batch never fires: submissions are still
     // queued when shutdown lands, and must get an explicit error reply

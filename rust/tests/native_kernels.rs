@@ -1,0 +1,186 @@
+//! Integration tier for the native kernels + workspace subsystem:
+//! blocked-GEMM parity through the public linalg path, the steady-state
+//! no-allocation invariant across whole solver drives, the serving-level
+//! rank-deficient-window regression, and the oversize-batch contract.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deq_anderson::infer;
+use deq_anderson::native::kernels;
+use deq_anderson::native::linalg;
+use deq_anderson::runtime::{
+    Backend, HostTensor, NativeConfig, NativeEngine, SolverMeta,
+};
+use deq_anderson::server::{Router, RouterConfig, SchedMode};
+use deq_anderson::solver::{self, SolveOptions, SolverKind};
+use deq_anderson::util::rng::Rng;
+
+/// Blocked/parallel GEMM must agree with the naive oracle on shapes that
+/// are non-square, not multiples of any block size, and larger than one
+/// cache tile — through the public `linalg::gemm` everything in `native/`
+/// actually calls.
+#[test]
+fn linalg_gemm_parity_on_non_block_shapes() {
+    let mut rng = Rng::new(77);
+    for &(m, k, n) in &[(13usize, 29usize, 7usize), (3, 300, 520), (65, 17, 9)] {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut want = vec![0.0f32; m * n];
+        kernels::gemm_reference(&a, &b, m, k, n, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        linalg::gemm(&a, &b, m, k, n, &mut got);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-2,
+                "({m},{k},{n})[{i}]: {x} vs {y}"
+            );
+        }
+    }
+}
+
+fn solve_opts(e: &NativeEngine, kind: SolverKind) -> SolveOptions {
+    SolveOptions {
+        tol: 1e-4,
+        max_iter: 40,
+        ..SolveOptions::from_manifest(e, kind)
+    }
+}
+
+/// The acceptance invariant of the pooled hot path: after one warm-up
+/// solve has stocked the workspace, a repeat solve of the same shape
+/// performs **zero** fresh buffer allocations — every per-iteration
+/// tensor (f, norms, mixed iterate, Gram scratch, α) is a pool hit.
+#[test]
+fn steady_state_solves_allocate_nothing() {
+    for kind in [SolverKind::Anderson, SolverKind::Hybrid, SolverKind::Forward] {
+        let e = NativeEngine::tiny();
+        let p = e.init_params().unwrap();
+        let batch = 8;
+        let n = e.manifest().model.latent_dim();
+        let mut rng = Rng::new(9);
+        let x_feat = HostTensor::f32(
+            e.manifest().model.latent_shape(batch),
+            rng.normal_vec(batch * n, 0.5),
+        )
+        .unwrap();
+        let opts = solve_opts(&e, kind);
+        let warm_report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
+        assert!(warm_report.iters() > 0);
+        let warm = e.workspace_stats();
+        let report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
+        let after = e.workspace_stats();
+        assert_eq!(
+            after.allocs, warm.allocs,
+            "{:?}: steady-state solve allocated ({} -> {})",
+            kind, warm.allocs, after.allocs
+        );
+        assert!(after.hits > warm.hits, "{kind:?}: pool was not exercised");
+        // And the repeat solve is bit-identical to the warm one.
+        assert_eq!(report.iters(), warm_report.iters());
+        assert_eq!(
+            report.z_star.f32s().unwrap(),
+            warm_report.z_star.f32s().unwrap(),
+            "{kind:?}: pooled buffers leaked state between solves"
+        );
+    }
+}
+
+/// End-to-end regression for the rank-deficient Anderson window: with
+/// λ = 0 the scheduler's replication-seeded lane windows make H = GGᵀ
+/// exactly singular on a lane's first mixed iteration.  The solve used
+/// to abort (error reply to every waiter); it must now degrade that
+/// iteration to a forward step and serve the request normally.
+#[test]
+fn serving_survives_rank_deficient_window() {
+    let cfg = NativeConfig {
+        solver: SolverMeta { lam: 0.0, ..NativeConfig::default().solver },
+        ..NativeConfig::default()
+    };
+    let engine = Arc::new(NativeEngine::new(cfg));
+    let dim = engine.manifest().model.image_dim();
+    let params = Arc::new(engine.init_params().unwrap());
+    let solver_opts =
+        SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson);
+    let router = Router::start(
+        engine,
+        params,
+        RouterConfig {
+            solver: solver_opts,
+            mode: SchedMode::IterationLevel,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(21);
+    let resp = router
+        .infer_blocking(rng.normal_vec(dim, 1.0))
+        .expect("rank-deficient first window must not abort the solve");
+    assert!(resp.class < 10);
+    assert!(resp.solver_iters > 0);
+    router.shutdown();
+}
+
+/// Oversize batches are rejected where they enter, with an explicit
+/// error naming the largest bucket — not silently clamped into a bucket
+/// that cannot hold them.
+#[test]
+fn oversize_batch_is_rejected_explicitly() {
+    let e = NativeEngine::tiny();
+    let p = e.init_params().unwrap();
+    let max_bucket = *e.config().buckets.last().unwrap();
+    let count = max_bucket + 8;
+    let dim = e.manifest().model.image_dim();
+    let images = vec![0.1f32; count * dim];
+    let opts = SolveOptions::from_manifest(&e, SolverKind::Forward);
+    let err = infer::infer(&e, &p, &images, count, &opts).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("exceeds the largest compiled bucket"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// The serving schedulers keep their own per-solve/per-lane pools warm:
+/// after a first burst, a second identical burst through the
+/// iteration-level scheduler adds no engine allocations.
+#[test]
+fn scheduler_steady_state_allocates_nothing() {
+    let engine = Arc::new(NativeEngine::tiny());
+    let stats_handle = engine.clone();
+    let dim = engine.manifest().model.image_dim();
+    let params = Arc::new(engine.init_params().unwrap());
+    let solver_opts =
+        SolveOptions::from_manifest(engine.as_ref() as &dyn Backend, SolverKind::Anderson);
+    let router = Router::start(
+        engine,
+        params,
+        RouterConfig {
+            solver: solver_opts,
+            mode: SchedMode::IterationLevel,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(33);
+    let burst = |router: &Router, rng: &mut Rng| {
+        let rxs: Vec<_> = (0..4)
+            .map(|_| router.submit(rng.normal_vec(dim, 1.0)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("reply").expect("response");
+        }
+    };
+    burst(&router, &mut rng);
+    burst(&router, &mut rng);
+    let warm = stats_handle.workspace_stats();
+    burst(&router, &mut rng);
+    let after = stats_handle.workspace_stats();
+    assert_eq!(
+        after.allocs, warm.allocs,
+        "steady-state scheduler allocated ({} -> {})",
+        warm.allocs, after.allocs
+    );
+    router.shutdown();
+}
