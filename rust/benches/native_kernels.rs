@@ -1,16 +1,25 @@
-//! Native kernels bench: the blocked/parallel GEMM vs the naive
-//! reference loop, and the pooled engine hot path (bucket-32 `cell_step`
-//! + `anderson_update`, the per-iteration cost of a serving solve) vs a
-//! faithful reimplementation of the old per-sample, allocation-churning
-//! path.  Writes a machine-readable `BENCH_native_kernels.json` summary
-//! for trend tracking (uploaded by the CI `bench-smoke` job).
+//! Native kernels bench: naive reference vs PR 3 blocked GEMM vs the
+//! packed microkernel (cold pack-per-call and warm cached-pack), the
+//! pooled engine hot path (bucket-32 `cell_step` + `anderson_update`,
+//! the per-iteration cost of a serving solve) vs the old per-sample
+//! allocation-churning path, cold-pack vs warm-pack engine iterations,
+//! and worker-pool dispatch vs scoped thread-spawn latency at small
+//! sizes.  Writes a machine-readable `BENCH_native_kernels.json`
+//! summary for trend tracking (uploaded by the CI `bench-smoke` job).
+//!
+//! **Regression guard** (not a perf gate): the run exits nonzero if the
+//! warm packed microkernel fails to at least match the blocked kernel
+//! (mean blocked→micro-warm speedup < 1.0), so CI catches a microkernel
+//! regression without demanding any particular margin.
 //!
 //!     cargo bench --bench native_kernels -- [--iters 40] \
 //!         [--out BENCH_native_kernels.json]
 
 use std::time::Duration;
 
-use deq_anderson::native::{kernels, linalg};
+use deq_anderson::model::params::next_param_version;
+use deq_anderson::native::pack::{self, PackedB};
+use deq_anderson::native::{kernels, linalg, WorkerPool};
 use deq_anderson::runtime::{Backend, HostTensor, NativeConfig, NativeEngine};
 use deq_anderson::util::bench::{bench, header};
 use deq_anderson::util::cli::Args;
@@ -117,15 +126,20 @@ fn main() {
     println!("threads: {threads} (DEQ_NATIVE_THREADS to override)\n");
     let mut rng = Rng::new(4);
 
-    // --- GEMM: blocked/parallel vs naive reference ---
+    // --- GEMM: naive reference vs blocked vs packed microkernel ---
+    // Blocked and micro run with the same chunk count through pools of
+    // the same size, so the comparison isolates the kernel, not the
+    // parallel split.
+    let pool = WorkerPool::new(threads);
     let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut micro_speedups: Vec<f64> = Vec::new();
     for &(m, k, n) in &[(128usize, 256usize, 192usize), (256, 384, 320)] {
         let a = rng.normal_vec(m * k, 1.0);
         let b = rng.normal_vec(k * n, 1.0);
         let mut c = vec![0.0f32; m * n];
         let macs = m * k * n;
         let naive = bench(
-            &format!("gemm naive   {m}x{k}x{n}"),
+            &format!("gemm naive      {m}x{k}x{n}"),
             1,
             max_iters,
             budget,
@@ -133,7 +147,7 @@ fn main() {
         );
         println!("{}  ({:.2} GFLOP/s)", naive.report(), gflops(macs, naive.mean));
         let blocked = bench(
-            &format!("gemm blocked {m}x{k}x{n}"),
+            &format!("gemm blocked    {m}x{k}x{n}"),
             1,
             max_iters,
             budget,
@@ -145,18 +159,88 @@ fn main() {
             gflops(macs, blocked.mean),
             naive.mean.as_secs_f64() / blocked.mean.as_secs_f64()
         );
+        // Cold: pack B inside every call (what a cache miss pays).
+        let chunks = kernels::parallel_chunks(m, k, n, threads);
+        let micro_cold = bench(
+            &format!("gemm micro cold {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || pack::gemm_micro_with(&a, &b, m, k, n, &mut c, chunks, Some(&pool)),
+        );
+        println!(
+            "{}  ({:.2} GFLOP/s)",
+            micro_cold.report(),
+            gflops(macs, micro_cold.mean)
+        );
+        // Warm: B pre-packed once (the steady-state cache hit), A-pack
+        // scratch reused across calls.
+        let bp = PackedB::pack(&b, k, n);
+        let rows_per = m.div_ceil(chunks);
+        let mut apacks: Vec<Vec<f32>> = (0..m.div_ceil(rows_per))
+            .map(|_| vec![0.0f32; pack::apack_len(rows_per, k)])
+            .collect();
+        let micro_warm = bench(
+            &format!("gemm micro warm {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || pack::gemm_packed_chunked(&a, &bp, m, &mut c, chunks, &pool, &mut apacks),
+        );
+        let vs_blocked =
+            blocked.mean.as_secs_f64() / micro_warm.mean.as_secs_f64();
+        // The regression guard compares *minimum* times: on shared CI
+        // runners the mean absorbs scheduler noise, while best-observed
+        // time is the standard noise-robust microbench statistic.
+        micro_speedups
+            .push(blocked.min.as_secs_f64() / micro_warm.min.as_secs_f64());
+        println!(
+            "{}  ({:.2} GFLOP/s, {vs_blocked:.2}x vs blocked)",
+            micro_warm.report(),
+            gflops(macs, micro_warm.mean)
+        );
         gemm_rows.push(json::obj(vec![
             ("m", json::num(m as f64)),
             ("k", json::num(k as f64)),
             ("n", json::num(n as f64)),
             ("gflops_naive", json::num(gflops(macs, naive.mean))),
             ("gflops_blocked", json::num(gflops(macs, blocked.mean))),
+            ("gflops_micro_cold", json::num(gflops(macs, micro_cold.mean))),
+            ("gflops_micro_warm", json::num(gflops(macs, micro_warm.mean))),
             (
                 "speedup",
                 json::num(naive.mean.as_secs_f64() / blocked.mean.as_secs_f64()),
             ),
+            ("micro_warm_vs_blocked", json::num(vs_blocked)),
         ]));
     }
+
+    // --- pool dispatch vs scoped thread spawn at small job sizes ---
+    // The latency the persistent pool removes from every parallel-sized
+    // call: fanning `threads` trivial jobs out and joining them.
+    let tiny_work = || {
+        let mut acc = 0.0f32;
+        for i in 0..256 {
+            acc += (i as f32) * 1.0001;
+        }
+        std::hint::black_box(acc);
+    };
+    let pool_disp = bench("pool dispatch", 1, max_iters.max(100), budget, || {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..threads)
+            .map(|_| Box::new(tiny_work) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run(tasks);
+    });
+    println!("{}", pool_disp.report());
+    let scoped = bench("scoped spawn  ", 1, max_iters.max(100), budget, || {
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(tiny_work);
+            }
+        });
+    });
+    let spawn_vs_pool = scoped.mean.as_secs_f64() / pool_disp.mean.as_secs_f64();
+    println!("{}  ({spawn_vs_pool:.2}x slower than pool)", scoped.report());
 
     // --- the bucket-32 solve iteration: cell_step + anderson_update ---
     // A serving-scale latent (n = 512) so the matmul, not dispatch
@@ -190,8 +274,9 @@ fn main() {
         HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
     ];
 
-    // Warm the pool, then measure with the allocation counter bracketing
-    // the timed section: steady state must be allocation-free.
+    // Warm the pool + pack cache, then measure with the allocation and
+    // pack counters bracketing the timed section: steady state must be
+    // allocation-free and repack-free.
     let pooled_iter = || {
         let out = engine.execute("cell_step", batch, &cell_inputs).unwrap();
         engine.recycle(out);
@@ -202,9 +287,39 @@ fn main() {
         pooled_iter();
     }
     let warm = engine.workspace_stats();
-    let pooled = bench("solve iter pooled+blocked", 1, max_iters, budget, pooled_iter);
-    let steady_allocs = engine.workspace_stats().allocs - warm.allocs;
-    println!("{}  (steady-state allocs: {steady_allocs})", pooled.report());
+    let pooled = bench("solve iter warm pack", 1, max_iters, budget, pooled_iter);
+    let after = engine.workspace_stats();
+    let steady_allocs = after.allocs - warm.allocs;
+    let steady_packs = (after.pack_misses + after.pack_invalidations
+        + after.pack_uncached)
+        - (warm.pack_misses + warm.pack_invalidations + warm.pack_uncached);
+    println!(
+        "{}  (steady-state allocs: {steady_allocs}, repacks: {steady_packs})",
+        pooled.report()
+    );
+
+    // Cold pack: bump the cell weight's version before every iteration,
+    // so each cell_step re-packs — the cost a parameter hot-swap pays
+    // once, measured against the warm path above.
+    let mut cold_inputs = cell_inputs.clone();
+    let wcell_idx = engine
+        .manifest()
+        .params
+        .iter()
+        .position(|s| s.name == "w_cell")
+        .expect("w_cell in manifest");
+    let cold = bench("solve iter cold pack", 1, max_iters, budget, || {
+        cold_inputs[wcell_idx].version = next_param_version();
+        let out = engine.execute("cell_step", batch, &cold_inputs).unwrap();
+        engine.recycle(out);
+        let out = engine.execute("anderson_update", batch, &and_inputs).unwrap();
+        engine.recycle(out);
+    });
+    println!(
+        "{}  ({:.2}x slower than warm)",
+        cold.report(),
+        cold.mean.as_secs_f64() / pooled.mean.as_secs_f64()
+    );
 
     let widx = |name: &str| {
         engine
@@ -223,10 +338,28 @@ fn main() {
     let speedup = naive.mean.as_secs_f64() / pooled.mean.as_secs_f64();
     println!("{}  ({speedup:.2}x vs pooled)", naive.report());
 
+    // Mean across shapes of the min-time speedups (see above).
+    let mean_micro_speedup =
+        micro_speedups.iter().sum::<f64>() / micro_speedups.len() as f64;
     let summary = json::obj(vec![
         ("bench", json::s("native_kernels")),
         ("threads", json::num(threads as f64)),
         ("gemm", Json::Arr(gemm_rows)),
+        (
+            "pool",
+            json::obj(vec![
+                ("workers", json::num(pool.size() as f64)),
+                (
+                    "dispatch_us_pool",
+                    json::num(pool_disp.mean.as_secs_f64() * 1e6),
+                ),
+                (
+                    "dispatch_us_scoped_spawn",
+                    json::num(scoped.mean.as_secs_f64() * 1e6),
+                ),
+                ("spawn_vs_pool", json::num(spawn_vs_pool)),
+            ]),
+        ),
         (
             "solve",
             json::obj(vec![
@@ -234,16 +367,35 @@ fn main() {
                 ("latent", json::num(n as f64)),
                 ("window", json::num(m as f64)),
                 (
-                    "iter_us_pooled",
+                    "iter_us_warm_pack",
                     json::num(pooled.mean.as_secs_f64() * 1e6),
+                ),
+                (
+                    "iter_us_cold_pack",
+                    json::num(cold.mean.as_secs_f64() * 1e6),
                 ),
                 ("iter_us_naive", json::num(naive.mean.as_secs_f64() * 1e6)),
                 ("speedup", json::num(speedup)),
                 ("steady_state_allocs", json::num(steady_allocs as f64)),
+                ("steady_state_repacks", json::num(steady_packs as f64)),
             ]),
         ),
+        ("micro_warm_vs_blocked_mean", json::num(mean_micro_speedup)),
     ]);
     std::fs::write(&out_path, json::to_string(&summary) + "\n")
         .expect("write bench summary");
     println!("\nwrote {out_path}");
+
+    // Regression guard (not a perf gate): the warm microkernel must at
+    // least match the PR 3 blocked kernel it replaced on the hot path.
+    if mean_micro_speedup < 1.0 {
+        eprintln!(
+            "REGRESSION: warm packed microkernel is slower than the blocked \
+             kernel (mean speedup {mean_micro_speedup:.3} < 1.0)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "microkernel regression guard: warm vs blocked {mean_micro_speedup:.2}x >= 1.0 ok"
+    );
 }

@@ -13,6 +13,7 @@
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
@@ -22,6 +23,20 @@ use crate::runtime::tensor::HostTensor;
 const MAGIC: &[u8; 4] = b"DEQA";
 const VERSION: u32 = 1;
 
+/// Process-wide parameter version counter.  Every tensor that enters a
+/// `ParamSet` gets a fresh, unique, nonzero revision id from here; the
+/// native engine keys its packed-weight cache on it, so a training step
+/// (which builds a *new* `ParamSet` from the update outputs) invalidates
+/// exactly the stale packs while inference iterations — which replay the
+/// same versions — hit the cache every time.  Never reset, so two
+/// distinct parameter revisions can never collide on a version.
+static NEXT_PARAM_VERSION: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh, process-unique, nonzero parameter revision id.
+pub fn next_param_version() -> u64 {
+    NEXT_PARAM_VERSION.fetch_add(1, Ordering::Relaxed)
+}
+
 /// The model parameters (and, during training, momentum buffers).
 #[derive(Debug, Clone)]
 pub struct ParamSet {
@@ -29,6 +44,16 @@ pub struct ParamSet {
 }
 
 impl ParamSet {
+    /// Wrap already-built tensors, stamping each with a fresh revision id
+    /// (see [`next_param_version`]) — the constructor every parameter
+    /// update must go through so downstream weight caches invalidate.
+    pub fn from_tensors(mut tensors: Vec<HostTensor>) -> Self {
+        for t in tensors.iter_mut() {
+            t.version = next_param_version();
+        }
+        Self { tensors }
+    }
+
     /// Split a flat f32 buffer into tensors per the manifest layout.
     pub fn from_flat(manifest: &Manifest, flat: &[f32]) -> Result<Self> {
         let want: usize = manifest.model.param_count;
@@ -45,18 +70,18 @@ impl ParamSet {
             )?);
             off += n;
         }
-        Ok(Self { tensors })
+        Ok(Self::from_tensors(tensors))
     }
 
     /// All-zero tensors with the parameter layout (momentum buffers).
     pub fn zeros_like(manifest: &Manifest) -> Self {
-        Self {
-            tensors: manifest
+        Self::from_tensors(
+            manifest
                 .params
                 .iter()
                 .map(|s| HostTensor::zeros(s.shape.clone()))
                 .collect(),
-        }
+        )
     }
 
     /// Load the deterministic initial checkpoint written by `aot.py`.
@@ -139,5 +164,29 @@ impl ParamSet {
         self.tensors
             .iter()
             .all(|t| t.f32s().unwrap().iter().all(|v| v.is_finite()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_tensors_stamps_unique_nonzero_versions() {
+        let a = ParamSet::from_tensors(vec![
+            HostTensor::zeros(vec![2]),
+            HostTensor::zeros(vec![3]),
+        ]);
+        let b = ParamSet::from_tensors(vec![HostTensor::zeros(vec![2])]);
+        let mut seen: Vec<u64> = a
+            .tensors
+            .iter()
+            .chain(&b.tensors)
+            .map(|t| t.version)
+            .collect();
+        assert!(seen.iter().all(|&v| v != 0), "versions must be nonzero");
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 3, "versions must be unique across sets");
     }
 }

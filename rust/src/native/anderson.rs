@@ -15,7 +15,88 @@
 
 use anyhow::Result;
 
+use crate::native::kernels::PAR_MIN_MACS;
 use crate::native::linalg;
+use crate::native::pool::shared_pool;
+
+/// One sample's masked-window Anderson mix (paper Eqs. 4–5): residual
+/// rows over the `valid` slots, Gram system H = GGᵀ + λI, Ha = 1,
+/// α = a/Σa, and z⁺ = Σ αᵢ((1−β)xᵢ + βfᵢ), with the rank-deficient
+/// fallback to a forward step from the last valid slot.
+///
+/// This is the shared per-sample core of the engine's *batched*
+/// `anderson_update` entry — extracted so the batch loop can fan samples
+/// out across a worker pool (each job with its own `g`/`h`/`a` scratch
+/// and disjoint `z_row`/`alpha_row` output slices) while the serial path
+/// runs the identical arithmetic.  `z_row` and `alpha_row` are fully
+/// overwritten.
+#[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
+pub fn mix_masked_window(
+    xh: &[f32],
+    fh: &[f32],
+    valid: &[usize],
+    m: usize,
+    n: usize,
+    beta: f32,
+    lam: f32,
+    g: &mut [f32],
+    h: &mut [f32],
+    a: &mut [f32],
+    z_row: &mut [f32],
+    alpha_row: &mut [f32],
+) {
+    let nv = valid.len();
+    debug_assert!(nv >= 1);
+    debug_assert_eq!(xh.len(), m * n);
+    debug_assert_eq!(fh.len(), m * n);
+    debug_assert_eq!(z_row.len(), n);
+    debug_assert_eq!(alpha_row.len(), m);
+    // Residual rows G_i = f_i − x_i over the valid slots.
+    for (r, &i) in valid.iter().enumerate() {
+        let off = i * n;
+        for t in 0..n {
+            g[r * n + t] = fh[off + t] - xh[off + t];
+        }
+    }
+    // H = G Gᵀ + λI;  H a = 1;  α = a / Σa.
+    linalg::gram(&g[..nv * n], nv, n, &mut h[..nv * nv]);
+    for i in 0..nv {
+        h[i * nv + i] += lam;
+    }
+    for v in a[..nv].iter_mut() {
+        *v = 1.0;
+    }
+    // λ > 0 keeps H SPD on finite inputs, but λ = 0 configs and
+    // duplicated lanes (e.g. a freshly replicated LaneHistory window)
+    // make H rank-deficient.  That is a recoverable condition, not a
+    // batch-aborting error: degrade this sample to a plain forward step
+    // from the last valid slot (the kernel only sees the masked window,
+    // not push order, so "last valid" is the best newest-pair proxy it
+    // has), exactly like the reference AndersonState::mix_into fallback.
+    let solved = linalg::solve_spd_in_place(&mut h[..nv * nv], nv, &mut a[..nv]).is_ok();
+    let sum: f32 = a[..nv].iter().sum();
+    if solved && sum.is_finite() && sum.abs() >= 1e-30 {
+        for v in a[..nv].iter_mut() {
+            *v /= sum;
+        }
+    } else {
+        for v in a[..nv].iter_mut() {
+            *v = 0.0;
+        }
+        a[nv - 1] = 1.0;
+    }
+    // z⁺ = Σ αᵢ ((1−β)·xᵢ + β·fᵢ)   (Eq. 5)
+    z_row.fill(0.0);
+    alpha_row.fill(0.0);
+    for (r, &i) in valid.iter().enumerate() {
+        let off = i * n;
+        let (ax, af) = ((1.0 - beta) * a[r], beta * a[r]);
+        for t in 0..n {
+            z_row[t] += ax * xh[off + t] + af * fh[off + t];
+        }
+        alpha_row[i] = a[r];
+    }
+}
 
 /// A vector-valued fixed-point problem z = f(z).
 pub trait FixedPointMap {
@@ -168,16 +249,47 @@ impl AndersonState {
         assert_eq!(z_next.len(), self.n);
         let n = self.n;
 
-        // G rows: residuals f_i - x_i over valid slots.
+        // The Gram build is the O(m·n + m²·n) half of the mixing penalty
+        // (Fig. 1); above the kernel parallel threshold it fans out over
+        // the persistent shared pool — residual rows, then Gram rows, are
+        // disjoint `&mut` chunks, so the arithmetic (and the result) is
+        // identical to the serial path.
+        // G rows: residuals f_i - x_i over valid slots.  Always serial —
+        // O(m·n) is far below the Gram cost the parallel gate measures,
+        // so fanning tiny row jobs out would cost more than the work.
         for i in 0..nv {
             for t in 0..n {
                 self.g[i * n + t] = self.fs[i * n + t] - self.xs[i * n + t];
             }
         }
-
-        // H = G Gᵀ + λI, solve H a = 1, α = a / Σa  (the unconstrained
-        // reduction of the paper's bordered system Eq. 4).
-        linalg::gram(&self.g[..nv * n], nv, n, &mut self.h[..nv * nv]);
+        let parallel = nv * nv * n >= PAR_MIN_MACS;
+        if parallel {
+            // H = G Gᵀ fanned over the persistent shared pool: one job
+            // per row runs the *same* upper-triangle kernel
+            // ([`linalg::gram_row_upper`]) the serial [`linalg::gram`]
+            // uses, then a serial O(m²) pass mirrors the lower triangle
+            // — serial and parallel results are bit-identical by
+            // construction.
+            let pool = shared_pool();
+            let g = &self.g[..nv * n];
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nv);
+            for (i, hrow) in self.h[..nv * nv].chunks_mut(nv).enumerate() {
+                tasks.push(Box::new(move || {
+                    linalg::gram_row_upper(g, nv, n, i, hrow);
+                }));
+            }
+            pool.run(tasks);
+            for i in 1..nv {
+                for j in 0..i {
+                    self.h[i * nv + j] = self.h[j * nv + i];
+                }
+            }
+        } else {
+            // H = G Gᵀ + λI, solve H a = 1, α = a / Σa  (the unconstrained
+            // reduction of the paper's bordered system Eq. 4).
+            linalg::gram(&self.g[..nv * n], nv, n, &mut self.h[..nv * nv]);
+        }
         for i in 0..nv {
             self.h[i * nv + i] += self.lam;
         }
@@ -478,6 +590,50 @@ mod tests {
         st.mix_into(&mut z_buf).unwrap();
         for (a, b) in z_buf.iter().zip(&z_ref) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parallel_gram_build_matches_reference_math() {
+        // m·m·n = 8·8·4096 sits exactly at the parallel threshold, so
+        // this window takes the pool-fanned G/Gram build; the reference
+        // below recomputes Eqs. 4–5 serially on host-built rows.
+        let (m, n) = (8usize, 4096usize);
+        let lam = 1e-3f32;
+        let mut st = AndersonState::new(m, n, 1.0, lam);
+        let mut r = Rng::new(5);
+        let mut pairs: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _ in 0..m {
+            let z = r.normal_vec(n, 1.0);
+            let f = r.normal_vec(n, 1.0);
+            st.push(&z, &f);
+            pairs.push((z, f));
+        }
+        let (zmix, alpha) = st.mix().unwrap();
+        let mut g = vec![0.0f32; m * n];
+        for (i, (z, f)) in pairs.iter().enumerate() {
+            for t in 0..n {
+                g[i * n + t] = f[t] - z[t];
+            }
+        }
+        let mut h = vec![0.0f32; m * m];
+        linalg::gram(&g, m, n, &mut h);
+        for i in 0..m {
+            h[i * m + i] += lam;
+        }
+        let ones = vec![1.0f32; m];
+        let a = linalg::solve_spd(&h, m, &ones).unwrap();
+        let sum: f32 = a.iter().sum();
+        let alpha_ref: Vec<f32> = a.iter().map(|v| v / sum).collect();
+        assert_eq!(alpha.len(), m);
+        for (x, y) in alpha.iter().zip(&alpha_ref) {
+            assert!((x - y).abs() < 1e-3, "alpha {x} vs {y}");
+        }
+        // β = 1 ⇒ z⁺ = Σ αᵢ fᵢ; spot-check a few coordinates.
+        for t in [0usize, 1, n - 1] {
+            let want: f32 =
+                (0..m).map(|i| alpha_ref[i] * pairs[i].1[t]).sum();
+            assert!((zmix[t] - want).abs() < 1e-3, "z[{t}]");
         }
     }
 

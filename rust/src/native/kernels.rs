@@ -9,17 +9,26 @@
 //!   * **tiled**: the k/j loops are blocked so a `KC`×`NC` panel of B
 //!     stays cache-resident while a row panel of A streams through it;
 //!   * **parallel**: above [`PAR_MIN_MACS`] multiply-accumulates, rows of
-//!     C are partitioned into contiguous panels, one scoped thread per
-//!     panel (disjoint `&mut` chunks — no locks, no unsafe);
+//!     C are partitioned into contiguous panels, one *pool job* per
+//!     panel (disjoint `&mut` chunks — no locks; the persistent
+//!     [`crate::native::pool::WorkerPool`] replaced the scoped-thread
+//!     fan-out, so no thread is ever spawned per call);
 //!   * **fused**: [`cell_batch`] runs the whole DEQ cell
 //!     `f = tanh(z·W + b + x)` plus the per-sample residual norms in one
 //!     pass over the output, so `cell_step` touches `f` exactly once.
 //!
+//! The blocked kernel here is the *uncached* path (and the bench
+//! baseline); the engine's steady-state GEMMs run the packed microkernel
+//! in [`crate::native::pack`] over cached weight packs instead.
+//!
 //! Thread count comes from the `DEQ_NATIVE_THREADS` env knob (unset or
-//! `0` → `available_parallelism`, capped at 8); small problems always
-//! run serial so the tiny CI model never pays thread-spawn latency.
+//! `0` → `available_parallelism`, capped at 8), read **at pool
+//! construction** — the engine's pool at engine construction, the
+//! process-wide [`crate::native::pool::shared_pool`] on its first
+//! parallel call.  Small problems always run serial so the tiny CI
+//! model never pays even a pool wakeup.
 
-use std::sync::OnceLock;
+use crate::native::pool::shared_pool;
 
 /// k-dimension tile: a KC-row slab of B is reused across a whole row
 /// panel of A before moving on.
@@ -27,22 +36,44 @@ const KC: usize = 256;
 /// n-dimension tile: KC×NC f32 of B ≈ 512 KiB upper bound, typically
 /// L2-resident; the inner j loop stays contiguous over B and C.
 const NC: usize = 512;
-/// Below this many multiply-accumulates the scoped-thread fan-out costs
-/// more than it saves; run serial.  (The default test model's bucket-32
+/// Below this many multiply-accumulates a parallel fan-out costs more
+/// than it saves; run serial.  (The default test model's bucket-32
 /// cell_step is 32·64·64 = 131k MACs — deliberately under this bound.)
-const PAR_MIN_MACS: usize = 1 << 18;
+pub(crate) const PAR_MIN_MACS: usize = 1 << 18;
 
-/// Worker threads the parallel paths may use.  `DEQ_NATIVE_THREADS=N`
+/// Worker threads a freshly built pool should use.  `DEQ_NATIVE_THREADS=N`
 /// pins it; unset or `0` means `available_parallelism` capped at 8.
+///
+/// Read from the environment on **every call** (the former process-wide
+/// `OnceLock` memoization is gone): thread count is now injectable — the
+/// engine reads this once when it constructs its own pool, and tests
+/// build [`crate::native::pool::WorkerPool`]s of explicit sizes instead
+/// of racing on the env knob.  The one remaining process-wide latch is
+/// [`crate::native::pool::shared_pool`], whose *size* is fixed by the
+/// env value at its first parallel use — engine pools and explicit
+/// pools are unaffected.
 pub fn max_threads() -> usize {
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| match std::env::var("DEQ_NATIVE_THREADS") {
+    match std::env::var("DEQ_NATIVE_THREADS") {
         Ok(s) => match s.trim().parse::<usize>() {
             Ok(0) | Err(_) => default_threads(),
             Ok(t) => t.min(64),
         },
         Err(_) => default_threads(),
-    })
+    }
+}
+
+/// The number of parallel row chunks worth using for an (m, k, n) GEMM
+/// given at most `max` workers: 1 below [`PAR_MIN_MACS`]
+/// multiply-accumulates, else `max` clamped to the row count.  Pure
+/// shape arithmetic — callers pass their pool's size, so the split (and
+/// therefore the result's reduction tree) never depends on ambient env.
+pub fn parallel_chunks(m: usize, k: usize, n: usize, max: usize) -> usize {
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    if macs < PAR_MIN_MACS {
+        1
+    } else {
+        max.min(m).max(1)
+    }
 }
 
 fn default_threads() -> usize {
@@ -53,11 +84,10 @@ fn default_threads() -> usize {
 }
 
 fn threads_for(m: usize, k: usize, n: usize) -> usize {
-    let macs = m.saturating_mul(k).saturating_mul(n);
-    if macs < PAR_MIN_MACS {
+    if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_MACS {
         1
     } else {
-        max_threads().min(m).max(1)
+        parallel_chunks(m, k, n, shared_pool().size())
     }
 }
 
@@ -67,9 +97,12 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     gemm_with_threads(a, b, m, k, n, c, threads_for(m, k, n));
 }
 
-/// [`gemm`] with an explicit thread count — the parallel path is
-/// deterministic (each thread owns a disjoint row panel), so tests pin
-/// `threads` directly instead of racing on the env knob.
+/// [`gemm`] with an explicit chunk count — the parallel path is
+/// deterministic (each job owns a disjoint row panel, and the panel
+/// split depends only on `threads`, not on how many pool workers happen
+/// to exist), so tests pin `threads` directly instead of racing on the
+/// env knob.  Parallel chunks run as jobs on the persistent
+/// [`shared_pool`] — no per-call thread spawns.
 pub fn gemm_with_threads(
     a: &[f32],
     b: &[f32],
@@ -95,13 +128,13 @@ pub fn gemm_with_threads(
         return;
     }
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, c_panel) in c.chunks_mut(rows_per * n).enumerate() {
-            let rows = c_panel.len() / n;
-            let a_panel = &a[ti * rows_per * k..ti * rows_per * k + rows * k];
-            s.spawn(move || gemm_block(a_panel, b, rows, k, n, c_panel));
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ti, c_panel) in c.chunks_mut(rows_per * n).enumerate() {
+        let rows = c_panel.len() / n;
+        let a_panel = &a[ti * rows_per * k..ti * rows_per * k + rows * k];
+        tasks.push(Box::new(move || gemm_block(a_panel, b, rows, k, n, c_panel)));
+    }
+    shared_pool().run(tasks);
 }
 
 /// Serial cache-tiled macro-kernel: for each (k-tile, n-tile) of B, every
@@ -180,13 +213,12 @@ pub fn gemv_with_threads(
         return;
     }
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, y_panel) in y.chunks_mut(rows_per).enumerate() {
-            let a_panel =
-                &a[ti * rows_per * n..ti * rows_per * n + y_panel.len() * n];
-            s.spawn(move || gemv_rows(a_panel, x, n, y_panel));
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ti, y_panel) in y.chunks_mut(rows_per).enumerate() {
+        let a_panel = &a[ti * rows_per * n..ti * rows_per * n + y_panel.len() * n];
+        tasks.push(Box::new(move || gemv_rows(a_panel, x, n, y_panel)));
+    }
+    shared_pool().run(tasks);
 }
 
 fn gemv_rows(a: &[f32], x: &[f32], n: usize, y: &mut [f32]) {
@@ -197,28 +229,6 @@ fn gemv_rows(a: &[f32], x: &[f32], n: usize, y: &mut [f32]) {
             acc += r * v;
         }
         *yi = acc;
-    }
-}
-
-/// out = X W + bias (row-broadcast): the batched encode/classify affine.
-/// X (batch, in_dim), W (in_dim, out_dim), bias (out_dim).
-pub fn matmul_bias(
-    x: &[f32],
-    w: &[f32],
-    bias: &[f32],
-    batch: usize,
-    in_dim: usize,
-    out_dim: usize,
-    out: &mut [f32],
-) {
-    assert_eq!(bias.len(), out_dim);
-    assert_eq!(out.len(), batch * out_dim);
-    gemm(x, w, batch, in_dim, out_dim, out);
-    for s in 0..batch {
-        let row = &mut out[s * out_dim..(s + 1) * out_dim];
-        for (o, b) in row.iter_mut().zip(bias) {
-            *o += *b;
-        }
     }
 }
 
@@ -349,16 +359,6 @@ mod tests {
     }
 
     #[test]
-    fn matmul_bias_broadcasts_rows() {
-        let x = vec![1.0, 0.0, 0.0, 1.0]; // I₂ as a batch of 2
-        let w = vec![1.0, 2.0, 3.0, 4.0];
-        let bias = vec![10.0, 20.0];
-        let mut out = vec![0.0f32; 4];
-        matmul_bias(&x, &w, &bias, 2, 2, 2, &mut out);
-        assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
-    }
-
-    #[test]
     fn cell_batch_matches_per_sample_math() {
         let mut rng = Rng::new(43);
         let (batch, n) = (4usize, 9usize);
@@ -393,5 +393,16 @@ mod tests {
     fn thread_knob_is_sane() {
         let t = max_threads();
         assert!((1..=64).contains(&t));
+    }
+
+    #[test]
+    fn parallel_chunks_is_pure_shape_arithmetic() {
+        // Tiny problems stay serial whatever the worker budget; big ones
+        // take the budget, clamped to the row count — no env involved,
+        // so the split is injectable and deterministic in one process.
+        assert_eq!(parallel_chunks(4, 4, 4, 8), 1);
+        assert_eq!(parallel_chunks(1024, 512, 512, 4), 4);
+        assert_eq!(parallel_chunks(2, 1024, 1024, 8), 2);
+        assert_eq!(parallel_chunks(0, 1024, 1024, 8), 1);
     }
 }

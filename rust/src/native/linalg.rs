@@ -21,19 +21,37 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     crate::native::kernels::gemm(a, b, m, k, n, c);
 }
 
-/// Gram matrix H = G Gᵀ for G (m, n) row-major → H (m, m).
+/// One upper-triangle row of the Gram matrix: `hrow[j] = ⟨g_i, g_j⟩`
+/// for `j in i..m`; entries below the diagonal are left untouched.
+///
+/// This is the single dot-product kernel behind both [`gram`] and the
+/// pool-parallel Anderson Gram build (`AndersonState::mix_into`), so
+/// the serial and parallel paths stay bit-identical by construction.
+pub fn gram_row_upper(g: &[f32], m: usize, n: usize, i: usize, hrow: &mut [f32]) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(hrow.len(), m);
+    let ri = &g[i * n..(i + 1) * n];
+    for j in i..m {
+        let rj = &g[j * n..(j + 1) * n];
+        let mut acc = 0.0f32;
+        for (p, q) in ri.iter().zip(rj) {
+            acc += p * q;
+        }
+        hrow[j] = acc;
+    }
+}
+
+/// Gram matrix H = G Gᵀ for G (m, n) row-major → H (m, m): upper
+/// triangle via [`gram_row_upper`], then mirrored.
 pub fn gram(g: &[f32], m: usize, n: usize, h: &mut [f32]) {
     assert_eq!(g.len(), m * n);
     assert_eq!(h.len(), m * m);
-    for i in 0..m {
-        for j in i..m {
-            let (ri, rj) = (&g[i * n..(i + 1) * n], &g[j * n..(j + 1) * n]);
-            let mut acc = 0.0f32;
-            for t in 0..n {
-                acc += ri[t] * rj[t];
-            }
-            h[i * m + j] = acc;
-            h[j * m + i] = acc;
+    for (i, hrow) in h.chunks_mut(m).enumerate() {
+        gram_row_upper(g, m, n, i, hrow);
+    }
+    for i in 1..m {
+        for j in 0..i {
+            h[i * m + j] = h[j * m + i];
         }
     }
 }

@@ -1,15 +1,19 @@
 //! Native (pure-Rust) solver substrate: small linear algebra, blocked
-//! multi-threaded compute kernels, a reusable scratch-buffer workspace,
-//! the Anderson twin of the AOT kernel, and synthetic fixed-point maps.
-//! Powers the device-model simulations, property tests and
-//! hyperparameter sweeps without touching PJRT — and, through
-//! [`kernels`] + [`workspace`], the allocation-free hot path of the
+//! multi-threaded compute kernels, a packed-panel microkernel GEMM with
+//! weight packing ([`pack`]), a persistent worker pool ([`pool`]), a
+//! reusable scratch-buffer workspace, the Anderson twin of the AOT
+//! kernel, and synthetic fixed-point maps.  Powers the device-model
+//! simulations, property tests and hyperparameter sweeps without
+//! touching PJRT — and, through [`pack`] + [`pool`] + [`workspace`], the
+//! allocation-free, spawn-free, repack-free hot path of the
 //! `NativeEngine` backend.
 
 pub mod anderson;
 pub mod kernels;
 pub mod linalg;
 pub mod maps;
+pub mod pack;
+pub mod pool;
 pub mod stochastic;
 pub mod workspace;
 
@@ -18,4 +22,6 @@ pub use anderson::{
     rel_residual, solve_anderson, solve_forward, AndersonOpts, AndersonState,
     FixedPointMap, IterRecord, SolveTrace,
 };
+pub use pack::PackedB;
+pub use pool::{PoolStats, WorkerPool};
 pub use workspace::{Workspace, WorkspaceStats};

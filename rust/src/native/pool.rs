@@ -1,0 +1,365 @@
+//! Persistent worker pool for the native compute substrate.
+//!
+//! PR 3's parallel kernels spawned a fresh `thread::scope` fan-out on
+//! every large GEMM — thread creation (~10–50 µs each) on the hot path
+//! of *every* solve iteration.  [`WorkerPool`] replaces that with
+//! long-lived workers parked on a condvar: a steady-state solve
+//! iteration performs **zero** thread spawns, which the
+//! [`PoolStats::spawned`] counter makes assertable (it only ever moves
+//! at construction).
+//!
+//! Work distribution is batch-at-a-time: [`WorkerPool::run`] enqueues a
+//! set of jobs, wakes the workers, and blocks until every job in *that
+//! batch* has finished (concurrent batches from different caller threads
+//! are tracked independently).  Because `run` never returns before its
+//! batch completes, jobs may safely borrow from the caller's stack — the
+//! same guarantee `thread::scope` gives, provided here by erasing the
+//! closure lifetime internally and joining on a per-batch latch.
+//!
+//! Sizing: the engine builds its pool once at construction
+//! (`NativeConfig::threads`, falling back to the `DEQ_NATIVE_THREADS`
+//! env knob read at that moment — see [`crate::native::kernels::max_threads`]);
+//! free functions like `kernels::gemm` share a lazily-built
+//! process-wide pool ([`shared_pool`]).  Tests build pools of explicit
+//! sizes to exercise serial vs parallel paths deterministically in one
+//! process.
+//!
+//! Shutdown: dropping a `WorkerPool` drains queued jobs, parks no new
+//! work, and **joins** every worker — no detached threads outlive the
+//! owner (the engine-drop test in `tests/native_kernels.rs` pins this
+//! via [`WorkerPool::exit_probe`]).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A queued unit of work (lifetime-erased; see [`WorkerPool::run`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Counters describing pool activity.  `spawned` moves only inside
+/// `WorkerPool::new`, so "steady state spawns no threads" is the
+/// assertion `spawned_before == spawned_after`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads owned by the pool.
+    pub workers: usize,
+    /// Threads ever created (== `workers` for the pool's whole life).
+    pub spawned: u64,
+    /// `run` calls that dispatched at least one job.
+    pub batches: u64,
+    /// Jobs executed through the queue.
+    pub jobs: u64,
+}
+
+/// Per-`run` completion latch: `run` blocks until `remaining == 0`.
+struct Batch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from a job in this batch, re-thrown in the
+    /// caller so a worker panic is never silently swallowed.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct QueueState {
+    jobs: VecDeque<(Job, Arc<Batch>)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    work: Condvar,
+}
+
+thread_local! {
+    /// Set while a pool worker is executing a job: a nested `run` from
+    /// inside a job executes inline instead of re-entering the queue
+    /// (queueing behind yourself on a size-1 pool is a deadlock).
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A fixed-size pool of long-lived worker threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    exited: Arc<AtomicUsize>,
+    spawned: u64,
+    batches: AtomicU64,
+    jobs: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (clamped to ≥ 1).  This is the only place
+    /// threads are ever created.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let exited = Arc::new(AtomicUsize::new(0));
+        let handles = (0..size)
+            .map(|i| {
+                let shared = shared.clone();
+                let exited = exited.clone();
+                std::thread::Builder::new()
+                    .name(format!("deq-pool-{i}"))
+                    .spawn(move || worker_loop(shared, exited))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            handles,
+            exited,
+            spawned: size as u64,
+            batches: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    /// Build from the `DEQ_NATIVE_THREADS` env knob, read **once, here**
+    /// (see [`crate::native::kernels::max_threads`]).
+    pub fn from_env() -> Self {
+        Self::new(crate::native::kernels::max_threads())
+    }
+
+    pub fn size(&self) -> usize {
+        self.spawned as usize
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.spawned as usize,
+            spawned: self.spawned,
+            batches: self.batches.load(Ordering::Relaxed),
+            jobs: self.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counter of workers that have fully exited their loop — cloned out
+    /// before dropping the pool, it asserts "drop joined every thread".
+    pub fn exit_probe(&self) -> Arc<AtomicUsize> {
+        self.exited.clone()
+    }
+
+    /// Execute every task, blocking until all of them have finished.
+    ///
+    /// Tasks may borrow from the caller's stack (`'env`): the lifetime is
+    /// erased internally, which is sound because this function does not
+    /// return — by completion or by panic — until every task has run to
+    /// completion on a worker.  A panicking task is caught on the worker,
+    /// the batch still completes, and the first panic payload is
+    /// re-thrown here in the caller.
+    ///
+    /// Called from *inside* a pool job, the tasks run inline on the
+    /// current thread (re-entering the queue could deadlock a small
+    /// pool); top-level callers always go through the workers.
+    pub fn run<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if IN_WORKER.with(|f| f.get()) {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+        let batch = Arc::new(Batch {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // Lifetime erasure: 'env → 'static.  Sound because the
+                // wait below keeps every borrow alive until the job is
+                // done (see the method docs).
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'env>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(t)
+                };
+                q.jobs.push_back((job, batch.clone()));
+            }
+        }
+        self.shared.work.notify_all();
+        let mut remaining = batch.remaining.lock().unwrap();
+        while *remaining != 0 {
+            remaining = batch.done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Drain, signal shutdown, and **join** every worker: no thread
+    /// outlives the pool.
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, exited: Arc<AtomicUsize>) {
+    loop {
+        let item = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(it) = q.jobs.pop_front() {
+                    break Some(it);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        let Some((job, batch)) = item else { break };
+        IN_WORKER.with(|f| f.set(true));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        IN_WORKER.with(|f| f.set(false));
+        if let Err(payload) = result {
+            let mut p = batch.panic.lock().unwrap();
+            if p.is_none() {
+                *p = Some(payload);
+            }
+        }
+        let mut remaining = batch.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            batch.done.notify_all();
+        }
+    }
+    exited.fetch_add(1, Ordering::SeqCst);
+}
+
+/// The process-wide pool behind the *free* parallel kernels
+/// (`kernels::gemm`, `kernels::gemv`, the Anderson Gram build): built
+/// lazily on the first parallel-sized call, sized from
+/// `DEQ_NATIVE_THREADS` at that moment, and alive for the process — one
+/// bounded set of parked workers instead of a scoped fan-out per call.
+/// Engines own their *own* pool (shut down on engine drop); this one
+/// only serves callers with no pool to pass.
+pub fn shared_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::from_env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0u32; 8];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(2)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 2 + j) as u32;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(out, (0..8).collect::<Vec<u32>>());
+        let s = pool.stats();
+        assert_eq!((s.workers, s.spawned, s.batches, s.jobs), (3, 3, 1, 4));
+    }
+
+    #[test]
+    fn concurrent_batches_from_many_threads() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let hits = Arc::new(AtomicU32::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let hits = hits.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                            .map(|_| {
+                                let hits = hits.clone();
+                                Box::new(move || {
+                                    hits.fetch_add(1, Ordering::Relaxed);
+                                })
+                                    as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run(tasks);
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 10 * 3);
+        // Steady state: the worker count never moved.
+        assert_eq!(pool.stats().spawned, 2);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(vec![
+                Box::new(|| panic!("job exploded")) as Box<dyn FnOnce() + Send>,
+                Box::new(|| {}),
+            ]);
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // The pool survives a panicking job and keeps serving.
+        let ok = AtomicU32::new(0);
+        pool.run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_run_from_a_job_executes_inline() {
+        // A size-1 pool would deadlock if the inner run re-entered the
+        // queue; the IN_WORKER guard makes it execute inline instead.
+        let pool = WorkerPool::new(1);
+        let inner_ran = AtomicU32::new(0);
+        pool.run(vec![Box::new(|| {
+            pool.run(vec![Box::new(|| {
+                inner_ran.fetch_add(1, Ordering::Relaxed);
+            }) as Box<dyn FnOnce() + Send + '_>]);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(inner_ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = WorkerPool::new(4);
+        let probe = pool.exit_probe();
+        pool.run(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send>]);
+        assert_eq!(probe.load(Ordering::SeqCst), 0, "workers exited early");
+        drop(pool);
+        assert_eq!(probe.load(Ordering::SeqCst), 4, "drop leaked workers");
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let pool = WorkerPool::new(1);
+        pool.run(Vec::<Box<dyn FnOnce() + Send>>::new());
+        assert_eq!(pool.stats().batches, 0);
+    }
+}

@@ -20,7 +20,12 @@
 /// pathological caller can't grow the pool without bound.
 const MAX_POOLED: usize = 64;
 
-/// Counters describing how well the pool is serving its callers.
+/// Counters describing how well the pool is serving its callers — plus,
+/// when read through `NativeEngine::workspace_stats`, the engine's
+/// weight-pack cache counters (the `Workspace` itself leaves them zero).
+/// Together they make the two steady-state invariants assertable: zero
+/// fresh buffer allocation (`allocs` flat) and zero weight packing
+/// (`pack_misses` + `pack_invalidations` flat while `pack_hits` grows).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct WorkspaceStats {
     /// `take` calls served from the pool (no allocation).
@@ -29,6 +34,16 @@ pub struct WorkspaceStats {
     pub allocs: u64,
     /// Buffers currently parked in the pool.
     pub pooled: usize,
+    /// Pack-cache lookups served from a cached weight pack.
+    pub pack_hits: u64,
+    /// Pack-cache lookups that packed a weight seen for the first time.
+    pub pack_misses: u64,
+    /// Pack-cache entries re-packed because the parameter version moved
+    /// (one per weight per `train_update`, never during inference).
+    pub pack_invalidations: u64,
+    /// Packs performed for unversioned tensors (never cached — raw
+    /// `HostTensor`s that did not come from a `ParamSet`).
+    pub pack_uncached: u64,
 }
 
 /// A best-fit pool of reusable `f32` scratch buffers.
@@ -93,6 +108,7 @@ impl Workspace {
             hits: self.hits,
             allocs: self.allocs,
             pooled: self.free.len(),
+            ..WorkspaceStats::default()
         }
     }
 }

@@ -90,6 +90,15 @@ pub trait Backend: Send + Sync {
     /// Snapshot of per-entry stats, sorted by total time descending.
     fn stats(&self) -> Vec<((String, usize), EntryStats)>;
 
+    /// Hot-path health counters (workspace pool + packed-weight cache)
+    /// for backends that have them — the native engine reports its
+    /// [`crate::native::WorkspaceStats`]; substrates without a pooled
+    /// hot path return `None` (the default).  Serving stats surface
+    /// these so pack-cache behaviour is observable in production.
+    fn hot_stats(&self) -> Option<crate::native::WorkspaceStats> {
+        None
+    }
+
     /// Human-readable stats table (for `--stats` / experiment footers).
     fn stats_report(&self) -> String {
         render_stats(&self.stats())

@@ -27,13 +27,15 @@
 //! [`Engine`]: crate::runtime::Engine
 
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::model::ParamSet;
-use crate::native::{kernels, linalg, Workspace, WorkspaceStats};
+use crate::native::anderson::mix_masked_window;
+use crate::native::pack::{self, PackedB};
+use crate::native::{kernels, PoolStats, WorkerPool, Workspace, WorkspaceStats};
 use crate::runtime::backend::{check_inputs, Backend, EntryStats, StatsBook};
 use crate::runtime::manifest::{
     EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta,
@@ -71,6 +73,11 @@ pub struct NativeConfig {
     pub cell_gain: f32,
     /// Seed of the deterministic parameter init.
     pub init_seed: u64,
+    /// Worker threads for the engine's persistent pool; `0` (the
+    /// default) reads `DEQ_NATIVE_THREADS` once at engine construction
+    /// (see [`kernels::max_threads`]).  Tests pin explicit sizes to
+    /// exercise serial vs parallel paths deterministically.
+    pub threads: usize,
 }
 
 impl Default for NativeConfig {
@@ -99,6 +106,7 @@ impl Default for NativeConfig {
             },
             cell_gain: 0.8,
             init_seed: 17,
+            threads: 0,
         }
     }
 }
@@ -131,7 +139,10 @@ impl NativeConfig {
     }
 }
 
-/// out[j] = b[j] + Σ_i x[i]·w[i·out_dim + j]   (w row-major (in_dim, out_dim))
+/// out[j] = b[j] + Σ_i x[i]·w[i·out_dim + j]   (w row-major (in_dim, out_dim)).
+/// The per-sample reference the packed batch paths replaced — kept as
+/// the parity oracle for the engine unit tests.
+#[cfg(test)]
 fn affine(x: &[f32], w: &[f32], b: &[f32], in_dim: usize, out_dim: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), in_dim);
     debug_assert_eq!(w.len(), in_dim * out_dim);
@@ -150,7 +161,9 @@ fn affine(x: &[f32], w: &[f32], b: &[f32], in_dim: usize, out_dim: usize, out: &
     }
 }
 
-/// One cell application f = tanh(W_cell·z + b_cell + x) for one sample.
+/// One cell application f = tanh(W_cell·z + b_cell + x) for one sample
+/// (test-only parity oracle, like [`affine`]).
+#[cfg(test)]
 fn cell_apply(w_cell: &[f32], b_cell: &[f32], z: &[f32], x: &[f32], n: usize, out: &mut [f32]) {
     affine(z, w_cell, b_cell, n, n, out);
     for j in 0..n {
@@ -248,6 +261,22 @@ fn add_param_grads(
     }
 }
 
+/// The engine's packed-weight cache: one [`PackedB`] per parameter
+/// slot, keyed by the tensor's [`crate::model::params`] version.
+/// Steady-state solve iterations replay the same versions and hit every
+/// time; a training step stamps fresh versions and the next forward
+/// re-packs exactly the changed weights (`invalidations` counts those
+/// re-packs).  Unversioned tensors (version 0 — not from a `ParamSet`)
+/// are packed per call and never cached, so stale data can't be served.
+#[derive(Debug, Default)]
+struct PackCache {
+    entries: Vec<Option<(u64, Arc<PackedB>)>>,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+    uncached: u64,
+}
+
 /// The hermetic pure-Rust backend.
 pub struct NativeEngine {
     cfg: NativeConfig,
@@ -259,6 +288,12 @@ pub struct NativeEngine {
     /// zero per-iteration heap allocation ([`Self::workspace_stats`]
     /// makes that assertable).
     ws: Mutex<Workspace>,
+    /// Persistent worker pool behind every parallel-sized entry: built
+    /// once at engine construction, joined on engine drop — steady-state
+    /// iterations spawn zero threads ([`Self::pool_stats`] asserts it).
+    pool: WorkerPool,
+    /// Packed-weight cache (see [`PackCache`]).
+    packs: Mutex<PackCache>,
 }
 
 impl NativeEngine {
@@ -269,11 +304,17 @@ impl NativeEngine {
 
     pub fn new(cfg: NativeConfig) -> Self {
         let manifest = build_manifest(&cfg);
+        let threads = if cfg.threads > 0 { cfg.threads } else { kernels::max_threads() };
         Self {
             cfg,
             manifest,
             stats: StatsBook::default(),
             ws: Mutex::new(Workspace::new()),
+            pool: WorkerPool::new(threads),
+            packs: Mutex::new(PackCache {
+                entries: (0..NP).map(|_| None).collect(),
+                ..PackCache::default()
+            }),
         }
     }
 
@@ -281,10 +322,29 @@ impl NativeEngine {
         &self.cfg
     }
 
-    /// Pool counters (hits / fresh allocations / parked buffers) — the
-    /// assertion surface for the no-allocation steady-state invariant.
+    /// Pool counters (hits / fresh allocations / parked buffers) plus
+    /// the pack-cache counters — the assertion surface for the
+    /// no-allocation / no-repack steady-state invariants.
     pub fn workspace_stats(&self) -> WorkspaceStats {
-        self.ws.lock().unwrap().stats()
+        let mut s = self.ws.lock().unwrap().stats();
+        let pc = self.packs.lock().unwrap();
+        s.pack_hits = pc.hits;
+        s.pack_misses = pc.misses;
+        s.pack_invalidations = pc.invalidations;
+        s.pack_uncached = pc.uncached;
+        s
+    }
+
+    /// Worker-pool counters — `spawned` only moves at construction, so
+    /// "steady state spawns zero threads" is assertable.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// The engine's persistent pool (test surface: its
+    /// [`WorkerPool::exit_probe`] asserts drop-time shutdown).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     fn take(&self, len: usize) -> Vec<f32> {
@@ -299,6 +359,132 @@ impl NativeEngine {
 
     fn give(&self, v: Vec<f32>) {
         self.ws.lock().unwrap().give(v);
+    }
+
+    /// The microkernel-ready pack of a (k, n) weight tensor, served from
+    /// the version-keyed cache when possible.  Versioned tensors (from a
+    /// `ParamSet`) hit the cache on every steady-state iteration and are
+    /// re-packed exactly once per parameter revision; unversioned
+    /// tensors are packed fresh each call and never cached.
+    fn packed_weight(
+        &self,
+        slot: usize,
+        t: &HostTensor,
+        k: usize,
+        n: usize,
+    ) -> Result<Arc<PackedB>> {
+        // Fast path under the lock: pure bookkeeping.  The O(k·n) pack
+        // itself always runs *outside* the mutex so a concurrent cache
+        // hit on another thread never blocks behind a repack.
+        {
+            let mut pc = self.packs.lock().unwrap();
+            if t.version == 0 {
+                pc.uncached += 1;
+            } else if pc.entries[slot].as_ref().map(|(v, _)| *v) == Some(t.version) {
+                pc.hits += 1;
+                let p = pc.entries[slot].as_ref().unwrap().1.clone();
+                return Ok(p);
+            }
+        }
+        let p = Arc::new(PackedB::pack(t.f32s()?, k, n));
+        if t.version == 0 {
+            return Ok(p); // never cached (counted above)
+        }
+        let mut pc = self.packs.lock().unwrap();
+        match pc.entries[slot].as_ref().map(|(v, _)| *v) {
+            // Another thread raced us to the same revision: serve the
+            // cached pack (identical contents) and drop ours.
+            Some(v) if v == t.version => {
+                pc.hits += 1;
+                let cached = pc.entries[slot].as_ref().unwrap().1.clone();
+                return Ok(cached);
+            }
+            Some(_) => pc.invalidations += 1,
+            None => pc.misses += 1,
+        }
+        pc.entries[slot] = Some((t.version, p.clone()));
+        Ok(p)
+    }
+
+    /// C = A · Wᵖ through the packed microkernel, chunked across the
+    /// engine pool for parallel-sized problems; A-pack scratch draws
+    /// from the workspace, so the warmed path allocates nothing.
+    fn gemm_cached(&self, a: &[f32], wp: &PackedB, m: usize, c: &mut [f32]) {
+        let chunks = kernels::parallel_chunks(m, wp.k, wp.n, self.pool.size());
+        if chunks <= 1 {
+            let mut apack = self.take_dirty(pack::apack_len(m, wp.k));
+            pack::gemm_packed(a, wp, m, c, &mut apack);
+            self.give(apack);
+            return;
+        }
+        let rows_per = m.div_ceil(chunks);
+        let len = pack::apack_len(rows_per, wp.k);
+        let nchunks = m.div_ceil(rows_per);
+        let mut apacks: Vec<Vec<f32>> =
+            (0..nchunks).map(|_| self.take_dirty(len)).collect();
+        pack::gemm_packed_chunked(a, wp, m, c, chunks, &self.pool, &mut apacks);
+        for b in apacks {
+            self.give(b);
+        }
+    }
+
+    /// out = X · Wᵖ + bias (row-broadcast): the batched encode/classify
+    /// affine over a cached weight pack.
+    fn affine_cached(
+        &self,
+        x: &[f32],
+        wp: &PackedB,
+        bias: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        self.gemm_cached(x, wp, batch, out);
+        let n = wp.n;
+        for row in out.chunks_mut(n) {
+            for (o, b) in row.iter_mut().zip(bias) {
+                *o += *b;
+            }
+        }
+    }
+
+    /// The fused DEQ cell over a cached weight pack, chunked across the
+    /// engine pool (see [`pack::cell_batch_packed`]).
+    #[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
+    fn cell_cached(
+        &self,
+        wp: &PackedB,
+        bias: &[f32],
+        z: &[f32],
+        x: &[f32],
+        batch: usize,
+        n: usize,
+        f: &mut [f32],
+        res: &mut [f32],
+        fnorm: &mut [f32],
+    ) {
+        let chunks = kernels::parallel_chunks(batch, n, n, self.pool.size());
+        if chunks <= 1 {
+            // Serial fast path: one pooled scratch buffer, no dispatch
+            // bookkeeping — the common case stays truly allocation-free.
+            let mut apack = self.take_dirty(pack::apack_len(batch, n));
+            pack::cell_rows_packed(
+                wp, bias, z, x, batch, n, f, res, fnorm, &mut apack,
+            );
+            self.give(apack);
+            return;
+        }
+        let rows_per = batch.div_ceil(chunks);
+        let nbufs = batch.div_ceil(rows_per);
+        let len = pack::apack_len(rows_per, n);
+        let mut apacks: Vec<Vec<f32>> =
+            (0..nbufs).map(|_| self.take_dirty(len)).collect();
+        pack::cell_batch_packed(
+            wp, bias, z, x, batch, n, f, res, fnorm, chunks, Some(&self.pool),
+            &mut apacks,
+        );
+        for b in apacks {
+            self.give(b);
+        }
     }
 
     fn dispatch(
@@ -323,31 +509,34 @@ impl NativeEngine {
         }
     }
 
-    /// x_feat = W_enc·vec(x_img) + b_enc: one blocked batch×image GEMM.
+    /// x_feat = W_enc·vec(x_img) + b_enc: one packed-microkernel
+    /// batch×image GEMM over the cached encoder pack.
     fn encode(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let (idim, n) = (self.cfg.image_dim(), self.cfg.latent_dim());
-        let w = inputs[P_W_ENC].f32s()?;
+        let wp = self.packed_weight(P_W_ENC, &inputs[P_W_ENC], idim, n)?;
         let b = inputs[P_B_ENC].f32s()?;
         let x = inputs[NP].f32s()?;
         let mut feat = self.take_dirty(batch * n);
-        kernels::matmul_bias(x, w, b, batch, idim, n, &mut feat);
+        self.affine_cached(x, &wp, b, batch, &mut feat);
         Ok(vec![HostTensor::f32(self.manifest.model.latent_shape(batch), feat)?])
     }
 
     /// f = tanh(W_cell·z + b_cell + x) with fused per-sample residual
-    /// norms — one blocked batch×latent GEMM plus a single fused pass
-    /// over f (see [`kernels::cell_batch`]).  All three outputs draw
-    /// from the workspace pool.
+    /// norms — one packed-microkernel batch×latent GEMM over the cached
+    /// cell pack plus a single fused pass over f (see
+    /// [`pack::cell_batch_packed`]).  All three outputs draw from the
+    /// workspace pool; the steady-state iteration packs no weights and
+    /// spawns no threads.
     fn cell_step(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
-        let w = inputs[P_W_CELL].f32s()?;
+        let wp = self.packed_weight(P_W_CELL, &inputs[P_W_CELL], n, n)?;
         let b = inputs[P_B_CELL].f32s()?;
         let z = inputs[NP].f32s()?;
         let x = inputs[NP + 1].f32s()?;
         let mut f = self.take_dirty(batch * n);
         let mut res = self.take_dirty(batch);
         let mut fnorm = self.take_dirty(batch);
-        kernels::cell_batch(w, b, z, x, batch, n, &mut f, &mut res, &mut fnorm);
+        self.cell_cached(&wp, b, z, x, batch, n, &mut f, &mut res, &mut fnorm);
         Ok(vec![
             HostTensor::f32(self.manifest.model.latent_shape(batch), f)?,
             HostTensor::f32(vec![batch], res)?,
@@ -357,12 +546,12 @@ impl NativeEngine {
 
     /// K fused forward steps; residual outputs describe the *last* step,
     /// matching the AOT `forward_solve_k` artifact semantics (the last
-    /// [`kernels::cell_batch`] call's norms are exactly ‖z_K − z_{K−1}‖
-    /// and ‖z_K‖).
+    /// cell application's norms are exactly ‖z_K − z_{K−1}‖ and ‖z_K‖).
+    /// The cell pack is fetched once and reused across all K steps.
     fn forward_solve_k(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
         let k = self.cfg.solver.fused_steps.max(1);
-        let w = inputs[P_W_CELL].f32s()?;
+        let wp = self.packed_weight(P_W_CELL, &inputs[P_W_CELL], n, n)?;
         let b = inputs[P_B_CELL].f32s()?;
         let z0 = inputs[NP].f32s()?;
         let x = inputs[NP + 1].f32s()?;
@@ -372,7 +561,7 @@ impl NativeEngine {
         let mut res = self.take_dirty(batch);
         let mut fnorm = self.take_dirty(batch);
         for _ in 0..k {
-            kernels::cell_batch(w, b, &z, x, batch, n, &mut f, &mut res, &mut fnorm);
+            self.cell_cached(&wp, b, &z, x, batch, n, &mut f, &mut res, &mut fnorm);
             std::mem::swap(&mut z, &mut f);
         }
         self.give(f);
@@ -399,67 +588,109 @@ impl NativeEngine {
         let mask = inputs[2].f32s()?;
         let valid: Vec<usize> = (0..m).filter(|&i| mask[i] > 0.5).collect();
         let nv = valid.len();
-        let mut z = self.take(batch * n);
-        let mut alpha_out = self.take(batch * m);
+        // mix_masked_window fully overwrites both outputs per sample, so
+        // dirty buffers suffice when any slot is valid; the all-masked
+        // degenerate case zero-fills below.
+        let mut z = self.take_dirty(batch * n);
+        let mut alpha_out = self.take_dirty(batch * m);
+        if nv == 0 {
+            z.fill(0.0);
+            alpha_out.fill(0.0);
+        }
         if nv > 0 {
-            // Per-sample scratch, pooled and reused across the batch loop
-            // (each fully rewritten per sample, so dirty buffers are fine;
-            // z and alpha_out above stay zero-initialized accumulators).
-            let mut g = self.take_dirty(nv * n);
-            let mut h = self.take_dirty(nv * nv);
-            let mut a = self.take_dirty(nv);
-            for s in 0..batch {
-                // Residual rows G_i = f_i − x_i over the valid slots.
-                for (r, &i) in valid.iter().enumerate() {
-                    let off = (s * m + i) * n;
-                    for t in 0..n {
-                        g[r * n + t] = fh[off + t] - xh[off + t];
-                    }
+            // Per-sample work (residual rows, Gram system, mix — see
+            // [`mix_masked_window`]) fans out over the engine pool in
+            // contiguous sample chunks, each chunk with its own pooled
+            // g/h/a scratch and disjoint slices of z / α; below the
+            // parallel threshold one chunk runs inline.  Either way the
+            // per-sample arithmetic is identical (and identical to the
+            // rank-deficient-window fallback semantics the serial loop
+            // had), so results do not depend on the chunking.
+            let chunks = kernels::parallel_chunks(
+                batch,
+                nv * n,
+                nv.max(1),
+                self.pool.size(),
+            );
+            if chunks <= 1 {
+                // Serial fast path: one pooled g/h/a scratch set walked
+                // over the batch inline — no dispatch bookkeeping, so the
+                // common case stays truly allocation-free.
+                let mut g = self.take_dirty(nv * n);
+                let mut h = self.take_dirty(nv * nv);
+                let mut a = self.take_dirty(nv);
+                for s in 0..batch {
+                    mix_masked_window(
+                        &xh[s * m * n..(s + 1) * m * n],
+                        &fh[s * m * n..(s + 1) * m * n],
+                        &valid,
+                        m,
+                        n,
+                        beta,
+                        lam,
+                        &mut g,
+                        &mut h,
+                        &mut a,
+                        &mut z[s * n..(s + 1) * n],
+                        &mut alpha_out[s * m..(s + 1) * m],
+                    );
                 }
-                // H = G Gᵀ + λI;  H a = 1;  α = a / Σa.
-                linalg::gram(&g, nv, n, &mut h);
-                for i in 0..nv {
-                    h[i * nv + i] += lam;
-                }
-                for v in a.iter_mut() {
-                    *v = 1.0;
-                }
-                // λ > 0 keeps H SPD on finite inputs, but λ = 0 configs
-                // and duplicated lanes (e.g. a freshly replicated
-                // LaneHistory window) make H rank-deficient.  That is a
-                // recoverable condition, not a batch-aborting error:
-                // degrade this sample to a plain forward step from the
-                // last valid slot (the kernel only sees the masked
-                // window, not push order, so "last valid" is the best
-                // newest-pair proxy it has), exactly like the reference
-                // AndersonState::mix_into fallback.
-                let solved =
-                    linalg::solve_spd_in_place(&mut h, nv, &mut a).is_ok();
-                let sum: f32 = a.iter().sum();
-                if solved && sum.is_finite() && sum.abs() >= 1e-30 {
-                    for v in a.iter_mut() {
-                        *v /= sum;
+                self.give(g);
+                self.give(h);
+                self.give(a);
+            } else {
+                let rows_per = batch.div_ceil(chunks);
+                let nchunks = batch.div_ceil(rows_per);
+                let mut scratch: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..nchunks)
+                    .map(|_| {
+                        (
+                            self.take_dirty(nv * n),
+                            self.take_dirty(nv * nv),
+                            self.take_dirty(nv),
+                        )
+                    })
+                    .collect();
+                {
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(nchunks);
+                    let iter = z
+                        .chunks_mut(rows_per * n)
+                        .zip(alpha_out.chunks_mut(rows_per * m))
+                        .zip(scratch.iter_mut())
+                        .enumerate();
+                    for (ti, ((z_c, al_c), (g, h, a))) in iter {
+                        let samples = al_c.len() / m;
+                        let base = ti * rows_per * m * n;
+                        let xh_c = &xh[base..base + samples * m * n];
+                        let fh_c = &fh[base..base + samples * m * n];
+                        let valid = &valid;
+                        tasks.push(Box::new(move || {
+                            for s in 0..samples {
+                                mix_masked_window(
+                                    &xh_c[s * m * n..(s + 1) * m * n],
+                                    &fh_c[s * m * n..(s + 1) * m * n],
+                                    valid,
+                                    m,
+                                    n,
+                                    beta,
+                                    lam,
+                                    g,
+                                    h,
+                                    a,
+                                    &mut z_c[s * n..(s + 1) * n],
+                                    &mut al_c[s * m..(s + 1) * m],
+                                );
+                            }
+                        }));
                     }
-                } else {
-                    for v in a.iter_mut() {
-                        *v = 0.0;
-                    }
-                    a[nv - 1] = 1.0;
+                    self.pool.run(tasks);
                 }
-                // z⁺ = Σ αᵢ ((1−β)·xᵢ + β·fᵢ)   (Eq. 5)
-                let zrow = &mut z[s * n..(s + 1) * n];
-                for (r, &i) in valid.iter().enumerate() {
-                    let off = (s * m + i) * n;
-                    let (ax, af) = ((1.0 - beta) * a[r], beta * a[r]);
-                    for t in 0..n {
-                        zrow[t] += ax * xh[off + t] + af * fh[off + t];
-                    }
-                    alpha_out[s * m + i] = a[r];
+                for (g, h, a) in scratch {
+                    self.give(g);
+                    self.give(h);
+                    self.give(a);
                 }
             }
-            self.give(g);
-            self.give(h);
-            self.give(a);
         }
         Ok(vec![
             HostTensor::f32(vec![batch, n], z)?,
@@ -467,22 +698,24 @@ impl NativeEngine {
         ])
     }
 
-    /// logits = W_cls·z + b_cls: one blocked batch×classes GEMM.
+    /// logits = W_cls·z + b_cls: one packed batch×classes GEMM over the
+    /// cached classifier pack.
     fn classify(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let (n, nc) = (self.cfg.latent_dim(), self.cfg.num_classes);
-        let w = inputs[P_W_CLS].f32s()?;
+        let wp = self.packed_weight(P_W_CLS, &inputs[P_W_CLS], n, nc)?;
         let b = inputs[P_B_CLS].f32s()?;
         let z = inputs[NP].f32s()?;
         let mut logits = self.take_dirty(batch * nc);
-        kernels::matmul_bias(z, w, b, batch, n, nc, &mut logits);
+        self.affine_cached(z, &wp, b, batch, &mut logits);
         Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
     }
 
-    /// Explicit weight-tied baseline: encode → D cell steps → classify.
+    /// Explicit weight-tied baseline: encode → D cell steps → classify,
+    /// all three stages over cached weight packs.
     fn explicit_infer(&self, batch: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let n = self.cfg.latent_dim();
         let feat_t = self.encode(batch, inputs)?.remove(0);
-        let w_cell = inputs[P_W_CELL].f32s()?;
+        let wcell = self.packed_weight(P_W_CELL, &inputs[P_W_CELL], n, n)?;
         let b_cell = inputs[P_B_CELL].f32s()?;
         let mut z = self.take(batch * n); // zeroed: the initial iterate
         let mut f = self.take_dirty(batch * n);
@@ -491,8 +724,8 @@ impl NativeEngine {
         {
             let feat = feat_t.f32s()?;
             for _ in 0..self.cfg.train.explicit_depth.max(1) {
-                kernels::cell_batch(
-                    w_cell, b_cell, &z, feat, batch, n, &mut f, &mut res,
+                self.cell_cached(
+                    &wcell, b_cell, &z, feat, batch, n, &mut f, &mut res,
                     &mut fnorm,
                 );
                 std::mem::swap(&mut z, &mut f);
@@ -504,10 +737,11 @@ impl NativeEngine {
         if let TensorData::F32(v) = feat_t.data {
             self.give(v);
         }
-        let (nc, w_cls, b_cls) =
-            (self.cfg.num_classes, inputs[P_W_CLS].f32s()?, inputs[P_B_CLS].f32s()?);
+        let nc = self.cfg.num_classes;
+        let wcls = self.packed_weight(P_W_CLS, &inputs[P_W_CLS], n, nc)?;
+        let b_cls = inputs[P_B_CLS].f32s()?;
         let mut logits = self.take_dirty(batch * nc);
-        kernels::matmul_bias(&z, w_cls, b_cls, batch, n, nc, &mut logits);
+        self.affine_cached(&z, &wcls, b_cls, batch, &mut logits);
         self.give(z);
         Ok(vec![HostTensor::f32(vec![batch, nc], logits)?])
     }
@@ -530,7 +764,6 @@ impl NativeEngine {
             self.cfg.latent_dim(),
             self.cfg.num_classes,
         );
-        let w_enc = inputs[P_W_ENC].f32s()?;
         let b_enc = inputs[P_B_ENC].f32s()?;
         let w_cell = inputs[P_W_CELL].f32s()?;
         let b_cell = inputs[P_B_CELL].f32s()?;
@@ -550,16 +783,30 @@ impl NativeEngine {
         let mut correct = 0i32;
         let inv_b = 1.0 / batch as f32;
 
-        let mut xf = vec![0.0f32; n];
-        let mut f = vec![0.0f32; n];
-        let mut logits = vec![0.0f32; nc];
+        // Batched forward through the cached weight packs: encode, the
+        // phantom cell step at the equilibrium (the JFB trick), and the
+        // classifier logits, each one packed GEMM instead of per-sample
+        // affine loops.
+        let wenc_p = self.packed_weight(P_W_ENC, &inputs[P_W_ENC], idim, n)?;
+        let wcell_p = self.packed_weight(P_W_CELL, &inputs[P_W_CELL], n, n)?;
+        let wcls_p = self.packed_weight(P_W_CLS, &inputs[P_W_CLS], n, nc)?;
+        let mut xf_all = self.take_dirty(batch * n);
+        self.affine_cached(x_img, &wenc_p, b_enc, batch, &mut xf_all);
+        let mut f_all = self.take_dirty(batch * n);
+        let mut res_s = self.take_dirty(batch);
+        let mut fn_s = self.take_dirty(batch);
+        self.cell_cached(
+            &wcell_p, b_cell, z_star, &xf_all, batch, n, &mut f_all, &mut res_s,
+            &mut fn_s,
+        );
+        let mut logits_all = self.take_dirty(batch * nc);
+        self.affine_cached(z_star, &wcls_p, b_cls, batch, &mut logits_all);
+
         for s in 0..batch {
             let zb = &z_star[s * n..(s + 1) * n];
             let xb = &x_img[s * idim..(s + 1) * idim];
-            affine(xb, w_enc, b_enc, idim, n, &mut xf);
-            // Phantom cell step at the equilibrium — the JFB trick.
-            cell_apply(w_cell, b_cell, zb, &xf, n, &mut f);
-            affine(zb, w_cls, b_cls, n, nc, &mut logits);
+            let f = &f_all[s * n..(s + 1) * n];
+            let logits = &logits_all[s * nc..(s + 1) * nc];
 
             let yb = y[s];
             ensure!(
@@ -567,7 +814,7 @@ impl NativeEngine {
                 "label {yb} out of range (num_classes {nc})"
             );
             // Loss + classifier cotangent (logits read z* directly).
-            let (loss, hit, dl) = softmax_xent(&logits, yb as usize, inv_b);
+            let (loss, hit, dl) = softmax_xent(logits, yb as usize, inv_b);
             loss_sum += loss;
             correct += hit as i32;
 
@@ -605,6 +852,11 @@ impl NativeEngine {
             add_param_grads(&mut grads, zb, zb, xb, &dl, &u, idim, n, nc);
         }
 
+        self.give(xf_all);
+        self.give(f_all);
+        self.give(res_s);
+        self.give(fn_s);
+        self.give(logits_all);
         self.apply_sgd(inputs, &grads, loss_sum * inv_b, correct)
     }
 
@@ -618,9 +870,7 @@ impl NativeEngine {
             self.cfg.latent_dim(),
             self.cfg.num_classes,
         );
-        let w_enc = inputs[P_W_ENC].f32s()?;
         let b_enc = inputs[P_B_ENC].f32s()?;
-        let w_cell = inputs[P_W_CELL].f32s()?;
         let b_cell = inputs[P_B_CELL].f32s()?;
         let w_cls = inputs[P_W_CLS].f32s()?;
         let b_cls = inputs[P_B_CLS].f32s()?;
@@ -638,28 +888,43 @@ impl NativeEngine {
         let mut correct = 0i32;
         let inv_b = 1.0 / batch as f32;
 
-        let mut xf = vec![0.0f32; n];
-        let mut z_prev = vec![0.0f32; n];
-        let mut z = vec![0.0f32; n];
-        let mut logits = vec![0.0f32; nc];
+        // Batched unrolled forward through the cached weight packs:
+        // encode once, D cell steps at batch width (keeping the
+        // second-to-last iterate, which the truncated backward reads),
+        // classify once.
+        let wenc_p = self.packed_weight(P_W_ENC, &inputs[P_W_ENC], idim, n)?;
+        let wcell_p = self.packed_weight(P_W_CELL, &inputs[P_W_CELL], n, n)?;
+        let wcls_p = self.packed_weight(P_W_CLS, &inputs[P_W_CLS], n, nc)?;
+        let mut xf_all = self.take_dirty(batch * n);
+        self.affine_cached(x_img, &wenc_p, b_enc, batch, &mut xf_all);
+        let mut z_all = self.take(batch * n); // zeroed initial iterate
+        let mut zprev_all = self.take_dirty(batch * n);
+        let mut f_all = self.take_dirty(batch * n);
+        let mut res_s = self.take_dirty(batch);
+        let mut fn_s = self.take_dirty(batch);
+        for _ in 0..depth {
+            zprev_all.copy_from_slice(&z_all);
+            self.cell_cached(
+                &wcell_p, b_cell, &zprev_all, &xf_all, batch, n, &mut f_all,
+                &mut res_s, &mut fn_s,
+            );
+            std::mem::swap(&mut z_all, &mut f_all);
+        }
+        let mut logits_all = self.take_dirty(batch * nc);
+        self.affine_cached(&z_all, &wcls_p, b_cls, batch, &mut logits_all);
+
         for s in 0..batch {
             let xb = &x_img[s * idim..(s + 1) * idim];
-            affine(xb, w_enc, b_enc, idim, n, &mut xf);
-            z.fill(0.0);
-            for _ in 0..depth {
-                z_prev.copy_from_slice(&z);
-                let mut f = vec![0.0f32; n];
-                cell_apply(w_cell, b_cell, &z_prev, &xf, n, &mut f);
-                z.copy_from_slice(&f);
-            }
-            affine(&z, w_cls, b_cls, n, nc, &mut logits);
+            let z = &z_all[s * n..(s + 1) * n];
+            let z_prev = &zprev_all[s * n..(s + 1) * n];
+            let logits = &logits_all[s * nc..(s + 1) * nc];
 
             let yb = y[s];
             ensure!(
                 (0..nc as i32).contains(&yb),
                 "label {yb} out of range (num_classes {nc})"
             );
-            let (loss, hit, dl) = softmax_xent(&logits, yb as usize, inv_b);
+            let (loss, hit, dl) = softmax_xent(logits, yb as usize, inv_b);
             loss_sum += loss;
             correct += hit as i32;
 
@@ -671,9 +936,16 @@ impl NativeEngine {
                 .zip(z.iter())
                 .map(|(v, zj)| v * (1.0 - zj * zj))
                 .collect();
-            add_param_grads(&mut grads, &z, &z_prev, xb, &dl, &u, idim, n, nc);
+            add_param_grads(&mut grads, z, z_prev, xb, &dl, &u, idim, n, nc);
         }
 
+        self.give(xf_all);
+        self.give(z_all);
+        self.give(zprev_all);
+        self.give(f_all);
+        self.give(res_s);
+        self.give(fn_s);
+        self.give(logits_all);
         self.apply_sgd(inputs, &grads, loss_sum * inv_b, correct)
     }
 
@@ -769,6 +1041,12 @@ impl Backend for NativeEngine {
 
     fn stats(&self) -> Vec<((String, usize), EntryStats)> {
         self.stats.snapshot()
+    }
+
+    /// Workspace + pack-cache counters, surfaced so server stats can
+    /// report hot-path health without knowing the concrete engine type.
+    fn hot_stats(&self) -> Option<WorkspaceStats> {
+        Some(self.workspace_stats())
     }
 }
 
@@ -1002,7 +1280,7 @@ mod tests {
         let b = p.tensors[P_B_CELL].f32s().unwrap();
         let mut want = vec![0.0f32; n];
         cell_apply(w, b, &z, &x, n, &mut want);
-        // The blocked kernel adds the bias after the matmul reduction
+        // The packed kernel adds the bias after the matmul reduction
         // (cell_apply seeds the accumulator with it), so the f32 rounding
         // differs at the last few ulps; parity is at 1e-4, not exactness.
         for (a, b2) in f.iter().zip(&want) {
@@ -1132,6 +1410,96 @@ mod tests {
             warm.allocs, after.allocs
         );
         assert!(after.hits > warm.hits, "pool was not exercised");
+    }
+
+    #[test]
+    fn pack_cache_hits_on_repeat_and_invalidates_on_new_versions() {
+        let e = NativeEngine::tiny();
+        let p = e.init_params().unwrap();
+        let batch = 8;
+        let mut inputs = p.tensors.clone();
+        inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        e.execute("cell_step", batch, &inputs).unwrap();
+        let s1 = e.workspace_stats();
+        assert_eq!(
+            (s1.pack_misses, s1.pack_hits, s1.pack_invalidations),
+            (1, 0, 0),
+            "first cell_step must pack W_cell exactly once"
+        );
+        e.execute("cell_step", batch, &inputs).unwrap();
+        e.execute("cell_step", batch, &inputs).unwrap();
+        let s2 = e.workspace_stats();
+        assert_eq!(s2.pack_misses, 1, "repeat dispatch must not re-pack");
+        assert_eq!(s2.pack_hits, 2);
+
+        // A re-stamped ParamSet (fresh versions, same data) must
+        // invalidate the cached pack exactly once.
+        let p2 = crate::model::ParamSet::from_tensors(p.tensors.clone());
+        let mut inputs2 = p2.tensors.clone();
+        inputs2.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        inputs2.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        e.execute("cell_step", batch, &inputs2).unwrap();
+        e.execute("cell_step", batch, &inputs2).unwrap();
+        let s3 = e.workspace_stats();
+        assert_eq!(s3.pack_invalidations, 1, "one re-pack per new version");
+        assert_eq!(s3.pack_misses, 1, "invalidation is not a miss");
+        assert_eq!(s3.pack_hits, 3);
+    }
+
+    #[test]
+    fn unversioned_weights_pack_fresh_and_never_cache() {
+        let e = NativeEngine::tiny();
+        let batch = 1;
+        // Raw tensors (version 0): correct shapes, no ParamSet stamping.
+        let mut inputs: Vec<HostTensor> = e
+            .manifest()
+            .params
+            .iter()
+            .map(|s| HostTensor::zeros(s.shape.clone()))
+            .collect();
+        inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(batch)));
+        e.execute("cell_step", batch, &inputs).unwrap();
+        e.execute("cell_step", batch, &inputs).unwrap();
+        let s = e.workspace_stats();
+        assert_eq!(s.pack_uncached, 2, "unversioned weights pack per call");
+        assert_eq!((s.pack_misses, s.pack_hits), (0, 0));
+    }
+
+    #[test]
+    fn anderson_update_parallel_chunking_matches_serial() {
+        // Two engines, same inputs, pool sizes 1 and 4, at a latent wide
+        // enough (512) that batch·nv²·n clears the parallel threshold:
+        // the batched anderson_update fans samples across the pool, but
+        // chunk boundaries must never change the per-sample arithmetic —
+        // outputs are bit-identical.
+        let mk = |threads: usize| {
+            NativeEngine::new(NativeConfig {
+                threads,
+                latent_hw: 8,
+                channels: 8,
+                image_hw: 8,
+                ..NativeConfig::default()
+            })
+        };
+        let e1 = mk(1);
+        let e4 = mk(4);
+        let m = e1.config().solver.window;
+        let n = e1.config().latent_dim();
+        let batch = 32;
+        let mut rng = Rng::new(23);
+        let xh = rng.normal_vec(batch * m * n, 1.0);
+        let fh: Vec<f32> = xh.iter().map(|v| v * 0.9 + 0.05).collect();
+        let inputs = [
+            HostTensor::f32(vec![batch, m, n], xh).unwrap(),
+            HostTensor::f32(vec![batch, m, n], fh).unwrap(),
+            HostTensor::f32(vec![m], vec![1.0; m]).unwrap(),
+        ];
+        let a = e1.execute("anderson_update", batch, &inputs).unwrap();
+        let b = e4.execute("anderson_update", batch, &inputs).unwrap();
+        assert_eq!(a[0].f32s().unwrap(), b[0].f32s().unwrap());
+        assert_eq!(a[1].f32s().unwrap(), b[1].f32s().unwrap());
     }
 
     #[test]

@@ -31,11 +31,33 @@ pub enum TensorData {
     I32(Vec<i32>),
 }
 
-/// A host tensor: row-major data + shape.
-#[derive(Debug, Clone, PartialEq)]
+/// A host tensor: row-major data + shape, plus an optional content
+/// *version* tag.
+///
+/// `version == 0` (the default for every constructor) means
+/// "unversioned".  A nonzero version is a process-unique revision id
+/// stamped by [`crate::model::ParamSet`] on parameter tensors: backends
+/// key derived artifacts (the native engine's packed-weight cache) on
+/// it, so a fresh version after a training step invalidates exactly the
+/// stale packs.  Versions ride along with `clone()` and are ignored by
+/// equality — two tensors with the same shape and data compare equal
+/// whatever their revision tags say.
+#[derive(Debug, Clone)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
     pub data: TensorData,
+    /// Content revision tag (0 = unversioned); see the type docs.
+    /// Managed by `ParamSet` — mutate the data through `f32s_mut` and
+    /// the tag goes stale, so parameter updates must re-stamp.
+    pub version: u64,
+}
+
+/// Equality is shape + data only: the version tag is an identity hint
+/// for caches, not part of the value.
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
 }
 
 impl HostTensor {
@@ -49,7 +71,7 @@ impl HostTensor {
                 data.len()
             );
         }
-        Ok(Self { shape, data: TensorData::F32(data) })
+        Ok(Self { shape, data: TensorData::F32(data), version: 0 })
     }
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
@@ -62,16 +84,16 @@ impl HostTensor {
                 data.len()
             );
         }
-        Ok(Self { shape, data: TensorData::I32(data) })
+        Ok(Self { shape, data: TensorData::I32(data), version: 0 })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
-        Self { shape, data: TensorData::F32(vec![0.0; n]) }
+        Self { shape, data: TensorData::F32(vec![0.0; n]), version: 0 }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
-        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+        Self { shape: vec![], data: TensorData::F32(vec![v]), version: 0 }
     }
 
     pub fn dtype(&self) -> Dtype {
@@ -187,6 +209,8 @@ impl HostTensor {
             (TensorData::I32(d), TensorData::I32(s)) => d.copy_from_slice(s),
             _ => bail!("copy_from dtype mismatch"),
         }
+        // Content identity travels with the content.
+        self.version = src.version;
         Ok(())
     }
 
@@ -328,6 +352,18 @@ mod tests {
         assert!(dst.overwrite_rows_where(&src, &[true]).is_err());
         let wrong = HostTensor::zeros(vec![2, 3]);
         assert!(dst.overwrite_rows_where(&wrong, &[true, false, true]).is_err());
+    }
+
+    #[test]
+    fn version_tag_rides_clones_not_equality() {
+        let mut a = HostTensor::zeros(vec![2]);
+        let b = HostTensor::zeros(vec![2]);
+        a.version = 7;
+        assert_eq!(a, b, "version must not affect equality");
+        assert_eq!(a.clone().version, 7, "version must survive clone");
+        let mut c = HostTensor::zeros(vec![2]);
+        c.copy_from(&a).unwrap();
+        assert_eq!(c.version, 7, "copy_from must carry content identity");
     }
 
     // Literal round-trips are covered by rust/tests/integration_runtime.rs

@@ -241,6 +241,9 @@ pub struct Router {
     /// Flat image length the model expects; checked at submission so one
     /// malformed request can never fail a whole batch downstream.
     image_dim: usize,
+    /// The serving backend, kept so stats endpoints can surface its
+    /// hot-path counters (workspace pool, packed-weight cache).
+    backend: Arc<dyn Backend>,
 }
 
 impl Router {
@@ -260,6 +263,7 @@ impl Router {
         let buckets = engine.manifest().batches_for("encode");
         anyhow::ensure!(!buckets.is_empty(), "no encode artifacts");
         let image_dim = engine.manifest().model.image_dim();
+        let backend = engine.clone();
 
         let worker = {
             let queue = queue.clone();
@@ -289,7 +293,15 @@ impl Router {
             worker: Some(worker),
             cfg,
             image_dim,
+            backend,
         })
+    }
+
+    /// Hot-path counters of the serving backend (workspace pool +
+    /// packed-weight cache), when it has them — surfaced by the TCP
+    /// `stats` command so cache behaviour is observable in production.
+    pub fn backend_hot_stats(&self) -> Option<crate::native::WorkspaceStats> {
+        self.backend.hot_stats()
     }
 
     /// Submit one image; returns a receiver for the reply.

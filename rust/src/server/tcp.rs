@@ -60,10 +60,34 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
     if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "ping" => json::obj(vec![("ok", Json::Bool(true))]),
-            "stats" => json::obj(vec![(
-                "stats",
-                json::s(&router.metrics.summary()),
-            )]),
+            "stats" => {
+                let mut pairs =
+                    vec![("stats", json::s(&router.metrics.summary()))];
+                // Pack-cache + workspace health of the serving backend:
+                // in steady state `pack_hits` grows while misses and
+                // invalidations stay flat (invalidations move only when
+                // parameters are hot-swapped by a training step).
+                if let Some(h) = router.backend_hot_stats() {
+                    pairs.push((
+                        "hot_path",
+                        json::obj(vec![
+                            ("ws_hits", json::num(h.hits as f64)),
+                            ("ws_allocs", json::num(h.allocs as f64)),
+                            ("pack_hits", json::num(h.pack_hits as f64)),
+                            ("pack_misses", json::num(h.pack_misses as f64)),
+                            (
+                                "pack_invalidations",
+                                json::num(h.pack_invalidations as f64),
+                            ),
+                            (
+                                "pack_uncached",
+                                json::num(h.pack_uncached as f64),
+                            ),
+                        ]),
+                    ));
+                }
+                json::obj(pairs)
+            }
             other => json::obj(vec![(
                 "error",
                 json::s(&format!("unknown cmd '{other}'")),

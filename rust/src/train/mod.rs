@@ -181,8 +181,10 @@ impl<'e> Trainer<'e> {
                 let correct_t = out.pop().context("missing correct output")?;
                 let loss_t = out.pop().context("missing loss output")?;
                 let mom_new: Vec<HostTensor> = out.split_off(np);
-                params = ParamSet { tensors: out };
-                momentum = ParamSet { tensors: mom_new };
+                // from_tensors stamps fresh revision ids so the engine's
+                // packed-weight cache invalidates on the next forward.
+                params = ParamSet::from_tensors(out);
+                momentum = ParamSet::from_tensors(mom_new);
 
                 loss_sum += loss_t.item_f32()?;
                 correct += correct_t.item_i32()? as i64;
@@ -293,8 +295,10 @@ impl<'e> Trainer<'e> {
                 let correct_t = out.pop().context("missing correct")?;
                 let loss_t = out.pop().context("missing loss")?;
                 let mom_new = out.split_off(np);
-                params = ParamSet { tensors: out };
-                momentum = ParamSet { tensors: mom_new };
+                // from_tensors stamps fresh revision ids so the engine's
+                // packed-weight cache invalidates on the next forward.
+                params = ParamSet::from_tensors(out);
+                momentum = ParamSet::from_tensors(mom_new);
                 loss_sum += loss_t.item_f32()?;
                 correct += correct_t.item_i32()? as i64;
                 seen += cfg.batch;

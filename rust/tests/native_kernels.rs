@@ -1,14 +1,19 @@
-//! Integration tier for the native kernels + workspace subsystem:
-//! blocked-GEMM parity through the public linalg path, the steady-state
-//! no-allocation invariant across whole solver drives, the serving-level
+//! Integration tier for the native kernels + pack + pool + workspace
+//! subsystem: microkernel/blocked GEMM parity through the public paths,
+//! the steady-state no-allocation / no-repack / no-spawn invariants
+//! across whole solver drives, pack-cache invalidation across a training
+//! step, pool shutdown on engine drop, the serving-level
 //! rank-deficient-window regression, and the oversize-batch contract.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use deq_anderson::infer;
+use deq_anderson::model::ParamSet;
 use deq_anderson::native::kernels;
 use deq_anderson::native::linalg;
+use deq_anderson::native::pack;
+use deq_anderson::native::WorkerPool;
 use deq_anderson::runtime::{
     Backend, HostTensor, NativeConfig, NativeEngine, SolverMeta,
 };
@@ -39,6 +44,77 @@ fn linalg_gemm_parity_on_non_block_shapes() {
     }
 }
 
+/// Property sweep: the packed microkernel GEMM must agree with the naive
+/// oracle on every odd shape — tails in all three dimensions, shapes
+/// straddling the MR/NR/KC tile boundaries — and must be *bit-identical*
+/// across chunk counts 1/2/4 on pools of 1/2/4 workers (each C row's
+/// k-summation order is fixed by construction, so the partition cannot
+/// change the arithmetic).
+#[test]
+fn packed_microkernel_gemm_parity_odd_shapes_and_threads() {
+    let dims = [1usize, 3, 7, 17, 64, 129];
+    let pools: Vec<(usize, WorkerPool)> =
+        [1usize, 2, 4].into_iter().map(|t| (t, WorkerPool::new(t))).collect();
+    let mut rng = Rng::new(99);
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let a = rng.normal_vec(m * k, 1.0);
+                let b = rng.normal_vec(k * n, 1.0);
+                let mut want = vec![0.0f32; m * n];
+                kernels::gemm_reference(&a, &b, m, k, n, &mut want);
+                let mut serial = vec![0.0f32; m * n];
+                pack::gemm_micro(&a, &b, m, k, n, &mut serial);
+                let tol = 1e-5 * (k as f32).sqrt();
+                for (i, (x, y)) in serial.iter().zip(&want).enumerate() {
+                    assert!(
+                        (x - y).abs() <= tol,
+                        "({m},{k},{n})[{i}]: micro {x} vs reference {y}"
+                    );
+                }
+                for (threads, pool) in &pools {
+                    let mut par = vec![0.0f32; m * n];
+                    pack::gemm_micro_with(
+                        &a, &b, m, k, n, &mut par, *threads, Some(pool),
+                    );
+                    assert_eq!(
+                        par, serial,
+                        "({m},{k},{n}) chunks={threads}: parallel diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The pool-driven GEMV path: parity with a host dot product and
+/// bit-stability across explicit chunk counts (the injectable-threads
+/// fix — no global OnceLock latching the first env read).
+#[test]
+fn pooled_gemv_parity_across_thread_counts() {
+    let mut rng = Rng::new(98);
+    for &(m, n) in &[(1usize, 7usize), (17, 129), (129, 64), (64, 1)] {
+        let a = rng.normal_vec(m * n, 1.0);
+        let x = rng.normal_vec(n, 1.0);
+        let mut serial = vec![0.0f32; m];
+        kernels::gemv_with_threads(&a, &x, m, n, &mut serial, 1);
+        for i in 0..m {
+            let want: f32 =
+                a[i * n..(i + 1) * n].iter().zip(&x).map(|(p, q)| p * q).sum();
+            assert!(
+                (serial[i] - want).abs() < 1e-3,
+                "gemv ({m},{n})[{i}]: {} vs {want}",
+                serial[i]
+            );
+        }
+        for threads in [2usize, 4] {
+            let mut par = vec![0.0f32; m];
+            kernels::gemv_with_threads(&a, &x, m, n, &mut par, threads);
+            assert_eq!(par, serial, "gemv ({m},{n}) threads={threads}");
+        }
+    }
+}
+
 fn solve_opts(e: &NativeEngine, kind: SolverKind) -> SolveOptions {
     SolveOptions {
         tol: 1e-4,
@@ -47,12 +123,14 @@ fn solve_opts(e: &NativeEngine, kind: SolverKind) -> SolveOptions {
     }
 }
 
-/// The acceptance invariant of the pooled hot path: after one warm-up
-/// solve has stocked the workspace, a repeat solve of the same shape
-/// performs **zero** fresh buffer allocations — every per-iteration
-/// tensor (f, norms, mixed iterate, Gram scratch, α) is a pool hit.
+/// The acceptance invariant of the pooled + packed hot path: after one
+/// warm-up solve has stocked the workspace and the pack cache, a repeat
+/// solve of the same shape performs **zero** fresh buffer allocations,
+/// **zero** weight packing (pack hits only — no misses, invalidations,
+/// or uncached packs), and **zero** thread spawns (the engine pool's
+/// `spawned` counter never moves after construction).
 #[test]
-fn steady_state_solves_allocate_nothing() {
+fn steady_state_solves_allocate_pack_and_spawn_nothing() {
     for kind in [SolverKind::Anderson, SolverKind::Hybrid, SolverKind::Forward] {
         let e = NativeEngine::tiny();
         let p = e.init_params().unwrap();
@@ -68,14 +146,32 @@ fn steady_state_solves_allocate_nothing() {
         let warm_report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
         assert!(warm_report.iters() > 0);
         let warm = e.workspace_stats();
+        let warm_pool = e.pool_stats();
         let report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
         let after = e.workspace_stats();
+        let after_pool = e.pool_stats();
         assert_eq!(
             after.allocs, warm.allocs,
             "{:?}: steady-state solve allocated ({} -> {})",
             kind, warm.allocs, after.allocs
         );
         assert!(after.hits > warm.hits, "{kind:?}: pool was not exercised");
+        // Zero weight packing: the cached packs serve every iteration.
+        assert_eq!(
+            (after.pack_misses, after.pack_invalidations, after.pack_uncached),
+            (warm.pack_misses, warm.pack_invalidations, warm.pack_uncached),
+            "{kind:?}: steady-state solve re-packed weights"
+        );
+        assert!(
+            after.pack_hits > warm.pack_hits,
+            "{kind:?}: pack cache was not exercised"
+        );
+        // Zero thread spawns: workers exist from construction, only.
+        assert_eq!(
+            after_pool.spawned, warm_pool.spawned,
+            "{kind:?}: steady-state solve spawned threads"
+        );
+        assert_eq!(after_pool.workers, warm_pool.workers);
         // And the repeat solve is bit-identical to the warm one.
         assert_eq!(report.iters(), warm_report.iters());
         assert_eq!(
@@ -84,6 +180,111 @@ fn steady_state_solves_allocate_nothing() {
             "{kind:?}: pooled buffers leaked state between solves"
         );
     }
+}
+
+/// Pack-cache invalidation across a training step: `train_update`
+/// produces new parameter tensors; once they are re-stamped into a
+/// `ParamSet` (as the training loop does), the next `cell_step`
+/// re-packs the cell weight **exactly once** and then serves every
+/// subsequent call from cache — with results identical to a fresh
+/// engine that never saw the old parameters.
+#[test]
+fn pack_cache_invalidation_after_train_update_repacks_once() {
+    let e = NativeEngine::tiny();
+    let p = e.init_params().unwrap();
+    let mom = ParamSet::zeros_like(e.manifest());
+    let np = p.tensors.len();
+    let batch = 8;
+    let meta = e.manifest().model.clone();
+    let n = meta.latent_dim();
+    let mut rng = Rng::new(31);
+    let z = HostTensor::f32(meta.latent_shape(batch), rng.normal_vec(batch * n, 0.5))
+        .unwrap();
+    let x = HostTensor::f32(meta.latent_shape(batch), rng.normal_vec(batch * n, 0.5))
+        .unwrap();
+
+    // Warm the cache with the current parameters.
+    let mut cell_in = p.tensors.clone();
+    cell_in.push(z.clone());
+    cell_in.push(x.clone());
+    e.execute("cell_step", batch, &cell_in).unwrap();
+    let warm = e.workspace_stats();
+    assert!(warm.pack_misses >= 1);
+
+    // One training step → new parameter tensors, stamped exactly as the
+    // training loop stamps them.
+    let mut tr_in: Vec<HostTensor> = p.tensors.clone();
+    tr_in.extend(mom.tensors.iter().cloned());
+    tr_in.push(HostTensor::f32(
+        meta.latent_shape(batch),
+        rng.normal_vec(batch * n, 0.5),
+    )
+    .unwrap());
+    tr_in.push(HostTensor::f32(
+        meta.image_shape(batch),
+        rng.normal_vec(batch * meta.image_dim(), 0.5),
+    )
+    .unwrap());
+    tr_in.push(
+        HostTensor::i32(vec![batch], vec![0; batch]).unwrap(),
+    );
+    let mut out = e.execute("train_update", batch, &tr_in).unwrap();
+    out.truncate(np); // params'; drop momentum/loss/correct
+    let p2 = ParamSet::from_tensors(out);
+
+    let before = e.workspace_stats();
+    let mut cell_in2 = p2.tensors.clone();
+    cell_in2.push(z.clone());
+    cell_in2.push(x.clone());
+    let first = e.execute("cell_step", batch, &cell_in2).unwrap();
+    let after_first = e.workspace_stats();
+    assert_eq!(
+        after_first.pack_invalidations,
+        before.pack_invalidations + 1,
+        "exactly one re-pack for the new cell weight"
+    );
+    assert_eq!(after_first.pack_misses, before.pack_misses);
+
+    let second = e.execute("cell_step", batch, &cell_in2).unwrap();
+    let after_second = e.workspace_stats();
+    assert_eq!(
+        after_second.pack_invalidations, after_first.pack_invalidations,
+        "second call must be served from cache"
+    );
+    assert!(after_second.pack_hits > after_first.pack_hits);
+    assert_eq!(first[0].f32s().unwrap(), second[0].f32s().unwrap());
+
+    // Identical to a fresh engine that only ever saw the new params.
+    let fresh = NativeEngine::tiny();
+    let fresh_out = fresh.execute("cell_step", batch, &cell_in2).unwrap();
+    assert_eq!(
+        first[0].f32s().unwrap(),
+        fresh_out[0].f32s().unwrap(),
+        "stale pack served after invalidation"
+    );
+}
+
+/// Engine drop must join the worker pool: no detached threads leak past
+/// the engine's lifetime (the probe counts workers that exited their
+/// loop, which only happens through the pool's Drop).
+#[test]
+fn engine_drop_joins_pool_workers() {
+    let e = NativeEngine::new(NativeConfig { threads: 3, ..NativeConfig::default() });
+    let probe = e.pool().exit_probe();
+    // Exercise the engine once so the pool has seen real work.
+    let p = e.init_params().unwrap();
+    let mut inputs = p.tensors.clone();
+    inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(1)));
+    inputs.push(HostTensor::zeros(e.manifest().model.latent_shape(1)));
+    e.execute("cell_step", 1, &inputs).unwrap();
+    assert_eq!(e.pool_stats().workers, 3);
+    assert_eq!(probe.load(std::sync::atomic::Ordering::SeqCst), 0);
+    drop(e);
+    assert_eq!(
+        probe.load(std::sync::atomic::Ordering::SeqCst),
+        3,
+        "engine drop left pool workers running"
+    );
 }
 
 /// End-to-end regression for the rank-deficient Anderson window: with
