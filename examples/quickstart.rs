@@ -10,7 +10,7 @@ use anyhow::Result;
 use deq_anderson::data;
 use deq_anderson::infer;
 use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
-use deq_anderson::solver::{self, SolveOptions, SolverKind};
+use deq_anderson::solver::{self, SolveSpec, SolverKind};
 
 fn main() -> Result<()> {
     // 1. Backend selection: PJRT over `artifacts/manifest.json` when
@@ -47,8 +47,9 @@ fn main() -> Result<()> {
     let x_feat = engine.execute("encode", batch, &enc_in)?.remove(0);
 
     for kind in [SolverKind::Forward, SolverKind::Anderson] {
-        let opts = SolveOptions::from_manifest(engine.as_ref(), kind);
-        let rep = solver::solve(engine.as_ref(), &params.tensors, &x_feat, &opts)?;
+        let spec = SolveSpec::from_manifest(engine.as_ref(), kind);
+        let rep =
+            solver::solve_spec(engine.as_ref(), &params.tensors, &x_feat, &spec)?;
         println!(
             "{:<9} iters={:<3} fevals={:<3} residual={:.2e} time={:?} converged={}",
             kind.name(),
@@ -61,8 +62,14 @@ fn main() -> Result<()> {
     }
 
     // 5. One-call inference (encode → solve → classify, bucket-padded).
-    let opts = SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson);
-    let result = infer::infer(engine.as_ref(), &params, &imgs, batch, &opts)?;
+    //    Specs also come from the validating builder:
+    let spec = SolveSpec::builder(SolverKind::Anderson)
+        .window(m.solver.window)
+        .tol(m.solver.tol)
+        .max_iter(m.solver.max_iter)
+        .lam(m.solver.lam)
+        .build()?;
+    let result = infer::infer(engine.as_ref(), &params, &imgs, batch, &spec)?;
     println!("predictions: {:?}", result.predictions);
     println!("labels:      {labels:?}");
     println!("(untrained params — accuracy is chance; see examples/train_cifar.rs)");

@@ -16,7 +16,7 @@ use deq_anderson::data;
 use deq_anderson::metrics::Stats;
 use deq_anderson::runtime::{backend_from_dir, Backend};
 use deq_anderson::server::{Router, RouterConfig, SchedMode};
-use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::solver::{SolveClamps, SolveSpec, SolverKind};
 use deq_anderson::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -31,7 +31,8 @@ fn main() -> Result<()> {
     let engine = backend_from_dir(args.str_or("artifacts", "artifacts"))?;
     let params = Arc::new(engine.init_params()?);
     let cfg = RouterConfig {
-        solver: SolveOptions::from_manifest(engine.as_ref(), kind),
+        solver: SolveSpec::from_manifest(engine.as_ref(), kind),
+        clamps: SolveClamps::default(),
         mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: 4096,

@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use deq_anderson::native::AndersonState;
 use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
-use deq_anderson::solver::{self, anderson::History, SolveOptions, SolverKind};
+use deq_anderson::solver::{self, anderson::History, SolveSpec, SolverKind};
 use deq_anderson::util::bench::{bench, header};
 use deq_anderson::util::rng::Rng;
 
@@ -143,14 +143,16 @@ fn main() {
         ("solve forward (per-step)", SolverKind::Forward, false),
         ("solve forward (fused K)", SolverKind::Forward, true),
     ] {
-        let opts = SolveOptions {
+        let opts = SolveSpec {
             fused_forward: fused,
             tol: 1e-2,
             max_iter: 60,
-            ..SolveOptions::from_manifest(engine.as_ref(), kind)
+            ..SolveSpec::from_manifest(engine.as_ref(), kind)
         };
         let r = bench(name, 1, 20, Duration::from_secs(3), || {
-            let _ = solver::solve(engine.as_ref(), &params.tensors, &xf, &opts).unwrap();
+            let _ =
+                solver::solve_spec(engine.as_ref(), &params.tensors, &xf, &opts)
+                    .unwrap();
         });
         println!("{}", r.report());
     }

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use deq_anderson::experiments::serving::{drive, mixed_traffic, ModeOutcome};
 use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::server::SchedMode;
-use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::solver::{SolveSpec, SolverKind};
 use deq_anderson::util::bench;
 use deq_anderson::util::cli::Args;
 use deq_anderson::util::json::{self, Json};
@@ -37,10 +37,10 @@ fn main() {
     // PJRT over real artifacts when available, hermetic native otherwise.
     let engine = backend_from_dir("artifacts").expect("backend");
     let params = Arc::new(engine.init_params().expect("params"));
-    let solver = SolveOptions {
+    let solver = SolveSpec {
         tol: 1e-4,
         max_iter: 80,
-        ..SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson)
+        ..SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson)
     };
     let images = mixed_traffic(requests, stiff_frac, 1);
 

@@ -18,7 +18,7 @@ use crate::native::{
     self, maps::AffineMap, AndersonOpts, StochasticOpts,
 };
 use crate::runtime::{Backend, HostTensor};
-use crate::solver::{self, SolveOptions, SolverKind};
+use crate::solver::{self, SolveSpec, SolverKind};
 use crate::train::{default_config, Backward, Trainer};
 
 pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
@@ -47,14 +47,15 @@ pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
         "window", "iters", "fevals", "final_res"
     );
     for m in [1usize, 2, 3, compiled_m] {
-        let so = SolveOptions {
-            window: m,
-            tol: 2e-3,
-            max_iter: 80,
-            kind: SolverKind::Anderson,
-            ..SolveOptions::from_manifest(engine, SolverKind::Anderson)
-        };
-        let rep = solver::solve(engine, &params.tensors, &x_feat, &so)?;
+        // Window ablation through the validating builder: each runtime
+        // window rides the same compiled artifact via the mask.
+        let so = SolveSpec::from_manifest(engine, SolverKind::Anderson)
+            .to_builder()
+            .window(m)
+            .tol(2e-3)
+            .max_iter(80)
+            .build()?;
+        let rep = solver::solve_spec(engine, &params.tensors, &x_feat, &so)?;
         println!(
             "{:>8} {:>8} {:>8} {:>14.3e}",
             m,

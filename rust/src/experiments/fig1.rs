@@ -14,7 +14,7 @@ use crate::experiments::ExpOptions;
 use crate::metrics::Csv;
 use crate::runtime::{Backend, HostTensor};
 use crate::simulate::{simulate_timestamps, Workload, V100, XEON};
-use crate::solver::{self, crossover, SolveOptions, SolverKind};
+use crate::solver::{self, crossover, SolveSpec, SolverKind};
 
 pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let manifest = engine.manifest();
@@ -33,23 +33,23 @@ pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
 
     // Deep solves with both methods (per-step dispatch so the trace has
     // full resolution).
-    let mk_opts = |kind| SolveOptions {
+    let mk_spec = |kind| SolveSpec {
         tol: 1e-4,
         max_iter: 60,
         fused_forward: false,
-        ..SolveOptions::from_manifest(engine, kind)
+        ..SolveSpec::from_manifest(engine, kind)
     };
-    let rep_a = solver::solve(
+    let rep_a = solver::solve_spec(
         engine,
         &params.tensors,
         &x_feat,
-        &mk_opts(SolverKind::Anderson),
+        &mk_spec(SolverKind::Anderson),
     )?;
-    let rep_f = solver::solve(
+    let rep_f = solver::solve_spec(
         engine,
         &params.tensors,
         &x_feat,
-        &mk_opts(SolverKind::Forward),
+        &mk_spec(SolverKind::Forward),
     )?;
 
     let cx = crossover::analyze(&rep_a, &rep_f);

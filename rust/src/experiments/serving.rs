@@ -21,7 +21,7 @@ use crate::metrics::{Csv, Stats};
 use crate::model::ParamSet;
 use crate::runtime::Backend;
 use crate::server::{Router, RouterConfig, SchedMode};
-use crate::solver::{SolveOptions, SolverKind};
+use crate::solver::{SolveClamps, SolveSpec, SolverKind};
 
 /// Deterministic mixed-difficulty workload: synthetic images scaled so a
 /// `stiff_frac` share of them drive the cell near its slow linear regime
@@ -71,10 +71,11 @@ pub fn drive(
     params: &Arc<ParamSet>,
     images: &[Vec<f32>],
     mode: SchedMode,
-    solver: &SolveOptions,
+    solver: &SolveSpec,
 ) -> Result<ModeOutcome> {
     let cfg = RouterConfig {
-        solver: *solver,
+        solver: solver.clone(),
+        clamps: SolveClamps::default(),
         mode,
         max_wait: Duration::from_millis(2),
         queue_cap: images.len() + 16,
@@ -129,10 +130,10 @@ pub fn run(engine: &Arc<dyn Backend>, opts: &ExpOptions) -> Result<()> {
     let total = opts.test_size.clamp(32, 96);
     // Tight tolerance so both schedules land within argmax-stable reach
     // of the same equilibria (the prediction-parity check below).
-    let solver = SolveOptions {
+    let solver = SolveSpec {
         tol: 1e-4,
         max_iter: 80,
-        ..SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson)
+        ..SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson)
     };
     println!(
         "[serving] backend={} requests={total} solver={} tol={:.0e}",

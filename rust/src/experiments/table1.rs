@@ -20,7 +20,7 @@ use crate::infer;
 use crate::metrics::{fmt_duration, fmt_pct, Csv};
 use crate::runtime::Backend;
 use crate::simulate::{Workload, V100, XEON};
-use crate::solver::{SolveOptions, SolverKind};
+use crate::solver::{SolveSpec, SolverKind};
 use crate::train::{default_config, Trainer};
 
 pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
@@ -56,8 +56,8 @@ pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
     let rep_e = trainer_a.train_explicit(&init, &train_data, &test_data)?;
 
     // --- Inference timing (batch of 1, like the paper's "inference time") ---
-    let so_f = SolveOptions::from_manifest(engine, SolverKind::Forward);
-    let so_a = SolveOptions::from_manifest(engine, SolverKind::Anderson);
+    let so_f = SolveSpec::from_manifest(engine, SolverKind::Forward);
+    let so_a = SolveSpec::from_manifest(engine, SolverKind::Anderson);
     let one = train_data.gather(&[0]).0;
     let inf_f = infer::infer(engine, &rep_f.params, &one, 1, &so_f)?;
     let inf_a = infer::infer(engine, &rep_a.params, &one, 1, &so_a)?;

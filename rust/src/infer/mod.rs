@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::data::Dataset;
 use crate::model::ParamSet;
 use crate::runtime::{Backend, HostTensor};
-use crate::solver::{self, SolveOptions};
+use crate::solver::{self, SolveSpec};
 
 /// Result of one inference call.
 #[derive(Debug, Clone)]
@@ -87,13 +87,13 @@ pub fn infer(
     params: &ParamSet,
     images: &[f32],
     count: usize,
-    opts: &SolveOptions,
+    spec: &SolveSpec,
 ) -> Result<InferResult> {
     let meta = engine.manifest().model.clone();
     let t0 = Instant::now();
     let (x_feat, bucket) = encode_padded(engine, params, images, count)?;
 
-    let report = solver::solve(engine, &params.tensors, &x_feat, opts)?;
+    let report = solver::solve_spec(engine, &params.tensors, &x_feat, spec)?;
 
     let mut cls_in: Vec<HostTensor> = params.tensors.clone();
     cls_in.push(report.z_star.clone());
@@ -136,7 +136,7 @@ pub fn evaluate(
     params: &ParamSet,
     data: &Dataset,
     batch: usize,
-    opts: &SolveOptions,
+    spec: &SolveSpec,
 ) -> Result<f32> {
     let mut correct = 0usize;
     let mut seen = 0usize;
@@ -145,7 +145,7 @@ pub fn evaluate(
         let take = batch.min(data.len() - start);
         let idx: Vec<usize> = (start..start + take).collect();
         let (imgs, labels) = data.gather(&idx);
-        let r = infer(engine, params, &imgs, take, opts)?;
+        let r = infer(engine, params, &imgs, take, spec)?;
         for (p, l) in r.predictions.iter().zip(&labels) {
             if *p == *l as usize {
                 correct += 1;

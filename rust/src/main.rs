@@ -28,7 +28,9 @@ use deq_anderson::model::ParamSet;
 use deq_anderson::native::{self, maps::DeqLikeMap, AndersonOpts};
 use deq_anderson::runtime::{select_backend, Backend};
 use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
-use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::solver::{
+    Damping, SolveClamps, SolveSpec, SolverKind, StagnationRule,
+};
 use deq_anderson::train::{default_config, Backward, Trainer};
 use deq_anderson::util::cli::Args;
 
@@ -39,14 +41,20 @@ commands:
   train             --solver anderson|forward|hybrid --epochs N --train-size N
                     --test-size N --batch N --backward jfb|neumann
                     --checkpoint PATH --explicit
-  infer             --n N --solver KIND [--checkpoint PATH]
-  serve             --addr 127.0.0.1:7070 --solver KIND --max-wait-ms N
+  infer             --n N [--checkpoint PATH]
+  serve             --addr 127.0.0.1:7070 --max-wait-ms N
                     --sched iteration|batch (default iteration: lanes
                     retire the moment their sample converges)
+                    --min-tol F --max-iter-cap N (server-side clamps on
+                    per-request solver overrides)
   experiment ID     table1|fig1|fig2|fig5|fig6|fig7|ablation|serving|all
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
   artifacts-check
+solver flags (train/infer/serve, built into a SolveSpec):
+  --solver KIND  --window N  --tol F  --max-iter N  --max-fevals N
+  --stagnation-eps F  --no-fused-forward  --damping-beta F
+  --restart-on-breakdown
 common flags: --artifacts DIR  --backend auto|native|pjrt  --out DIR
               --seed N  --quiet
 ";
@@ -59,6 +67,40 @@ fn backend_from(args: &Args) -> Result<Arc<dyn Backend>> {
     let choice = args.str_or("backend", "auto");
     select_backend(&choice, std::path::Path::new(&dir))
         .with_context(|| format!("creating '{choice}' backend over '{dir}'"))
+}
+
+/// Apply the shared solver flags (see USAGE) on top of a base spec,
+/// through the validating builder — a degenerate combination (window 0,
+/// tol ≤ 0, …) errors here with a descriptive message instead of
+/// panicking mid-solve.  `train` applies them over its capped training
+/// defaults, `infer`/`serve` over the manifest defaults.
+fn apply_solver_flags(args: &Args, base: SolveSpec) -> Result<SolveSpec> {
+    let mut b = base
+        .to_builder()
+        .window(args.usize_or("window", base.window))
+        .tol(args.f32_or("tol", base.tol))
+        .max_iter(args.usize_or("max-iter", base.max_iter))
+        .max_fevals(args.usize_or("max-fevals", base.max_fevals))
+        .stagnation(StagnationRule {
+            window: base.stagnation.window,
+            eps: args.f32_or("stagnation-eps", base.stagnation.eps),
+        })
+        .fused_forward(base.fused_forward && !args.has("no-fused-forward"))
+        .restart_on_breakdown(
+            args.has("restart-on-breakdown") || base.restart_on_breakdown,
+        );
+    if args.has("damping-beta") {
+        b = b.damping(Damping::Constant(args.f32_or("damping-beta", 1.0)));
+    }
+    b.build().context("bad solver flags")
+}
+
+/// Solve spec for `infer`/`serve`: manifest defaults for the `--solver`
+/// kind, plus the shared solver flags.
+fn spec_from(args: &Args, engine: &dyn Backend) -> Result<SolveSpec> {
+    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
+        .context("bad --solver (expected forward|anderson|hybrid)")?;
+    apply_solver_flags(args, SolveSpec::from_manifest(engine, kind))
 }
 
 fn main() -> Result<()> {
@@ -88,8 +130,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.batch = args.usize_or("batch", 32);
     cfg.seed = args.u64_or("seed", 0);
     cfg.verbose = !args.has("quiet");
-    cfg.solver.max_iter = args.usize_or("max-iter", cfg.solver.max_iter);
-    cfg.solver.tol = args.f32_or("tol", cfg.solver.tol);
+    // The full shared solver-flag surface applies to training too, on
+    // top of the training defaults (which cap max_iter at 30).
+    cfg.solver = apply_solver_flags(args, cfg.solver.clone())?;
     if args.str_or("backward", "jfb") == "neumann" {
         cfg.backward = Backward::Neumann;
     }
@@ -137,8 +180,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_infer(args: &Args) -> Result<()> {
     let engine = backend_from(args)?;
-    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
-        .context("bad --solver")?;
+    let spec = spec_from(args, engine.as_ref())?;
     let n = args.usize_or("n", 8);
     let params = match args.get("checkpoint") {
         Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
@@ -147,11 +189,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let (data, _, ds) = data::load_auto(n.max(32), 8, args.u64_or("seed", 0));
     let idx: Vec<usize> = (0..n).collect();
     let (imgs, labels) = data.gather(&idx);
-    let opts = SolveOptions::from_manifest(engine.as_ref(), kind);
-    let r = infer::infer(engine.as_ref(), &params, &imgs, n, &opts)?;
+    let r = infer::infer(engine.as_ref(), &params, &imgs, n, &spec)?;
     println!(
         "inference: dataset={ds} n={n} solver={} iters={} residual={:.2e} latency={}",
-        kind.name(),
+        spec.kind.name(),
         r.solver_iters,
         r.solver_residual,
         fmt_duration(r.latency)
@@ -170,16 +211,20 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = backend_from(args)?;
-    let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
-        .context("bad --solver")?;
+    let spec = spec_from(args, engine.as_ref())?;
     let params = Arc::new(match args.get("checkpoint") {
         Some(p) => ParamSet::load(engine.manifest(), &PathBuf::from(p))?,
         None => engine.init_params()?,
     });
     let mode = SchedMode::parse(&args.str_or("sched", "iteration"))
         .context("bad --sched (expected iteration|batch)")?;
+    let default_clamps = SolveClamps::default();
     let cfg = RouterConfig {
-        solver: SolveOptions::from_manifest(engine.as_ref(), kind),
+        solver: spec,
+        clamps: SolveClamps {
+            min_tol: args.f32_or("min-tol", default_clamps.min_tol),
+            max_iter: args.usize_or("max-iter-cap", default_clamps.max_iter),
+        },
         mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: args.usize_or("queue-cap", 1024),

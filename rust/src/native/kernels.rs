@@ -39,7 +39,7 @@ const NC: usize = 512;
 /// Below this many multiply-accumulates a parallel fan-out costs more
 /// than it saves; run serial.  (The default test model's bucket-32
 /// cell_step is 32·64·64 = 131k MACs — deliberately under this bound.)
-pub(crate) const PAR_MIN_MACS: usize = 1 << 18;
+pub const PAR_MIN_MACS: usize = 1 << 18;
 
 /// Worker threads a freshly built pool should use.  `DEQ_NATIVE_THREADS=N`
 /// pins it; unset or `0` means `available_parallelism` capped at 8.

@@ -13,7 +13,7 @@
 //!     (see `NativeEngine`'s pack cache), keyed by the parameter version
 //!     counter from [`crate::model::params`] — steady-state iterations do
 //!     **zero** weight packing.
-//!   * **A (activations)**: fresh every iteration.  [`pack_a`] repacks
+//!   * **A (activations)**: fresh every iteration.  `pack_a` repacks
 //!     the current panel into [`MR`]-tall column-major strips in caller
 //!     scratch (workspace-pooled on the engine path), an O(m·k) copy that
 //!     buys the O(m·k·n) loop perfect access patterns.

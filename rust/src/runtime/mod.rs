@@ -7,8 +7,9 @@
 //!
 //!   * [`NativeEngine`] — hermetic pure-Rust twin (always available, the
 //!     default; what CI and the integration test tier run against);
-//!   * [`Engine`] — PJRT execution of the AOT HLO artifacts from
-//!     `artifacts/manifest.json` (behind the `pjrt` cargo feature).
+//!   * `Engine` — PJRT execution of the AOT HLO artifacts from
+//!     `artifacts/manifest.json` (behind the `pjrt` cargo feature, so
+//!     intentionally not linked here: default rustdoc builds omit it).
 //!
 //! [`backend::backend_from_dir`] picks between them automatically.
 

@@ -1,4 +1,4 @@
-//! `NativeEngine`: the pure-Rust twin of the PJRT [`Engine`], serving every
+//! `NativeEngine`: the pure-Rust twin of the PJRT `Engine`, serving every
 //! manifest entry point from the `native/` substrate with no XLA, no AOT
 //! artifacts, and no files on disk.
 //!
@@ -22,9 +22,8 @@
 //! converges linearly and Anderson accelerates exactly as on the compiled
 //! artifacts.  Masking semantics, residual outputs (`‖f−z‖`, `‖f‖` per
 //! sample), batch bucketing and the training-update output layout
-//! (params, momentum, loss, correct) are identical to the PJRT entries.
-//!
-//! [`Engine`]: crate::runtime::Engine
+//! (params, momentum, loss, correct) are identical to the PJRT entries
+//! (`crate::runtime::Engine`, behind the `pjrt` feature).
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};

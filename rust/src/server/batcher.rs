@@ -15,6 +15,7 @@ use crate::runtime::Backend;
 use crate::server::{
     drain_with_error, run_batch, Request, RouterConfig, ServerMetrics,
 };
+use crate::solver::SolveSpec;
 
 pub(crate) type QueueHandle = Arc<super::Queue>;
 
@@ -95,9 +96,33 @@ pub(crate) fn run(
             }
         };
 
-        let bucket = pick_bucket(&buckets, batch.len());
-        run_batch(engine.as_ref(), &params, &cfg.solver, batch, bucket, &metrics);
+        // A lockstep solve runs one spec for every rider, so requests
+        // with distinct effective specs (per-request overrides) are
+        // solved as separate sub-batches.  The common case — no
+        // overrides — stays a single group.
+        for (spec, group) in split_by_spec(batch) {
+            let bucket = pick_bucket(&buckets, group.len());
+            run_batch(engine.as_ref(), &params, &spec, group, bucket, &metrics);
+        }
     }
+}
+
+/// Partition a drained batch into per-effective-spec groups, preserving
+/// arrival order within each group.
+pub(crate) fn split_by_spec(
+    batch: Vec<Request>,
+) -> Vec<(SolveSpec, Vec<Request>)> {
+    let mut groups: Vec<(SolveSpec, Vec<Request>)> = Vec::new();
+    for req in batch {
+        match groups.iter_mut().find(|(s, _)| *s == req.spec) {
+            Some((_, reqs)) => reqs.push(req),
+            None => {
+                let spec = req.spec.clone();
+                groups.push((spec, vec![req]));
+            }
+        }
+    }
+    groups
 }
 
 #[cfg(test)]
@@ -121,6 +146,41 @@ mod tests {
         // trips the debug assertion instead of riding a too-small bucket
         // into a shape error.
         pick_bucket(&[1, 8, 32], 100);
+    }
+
+    #[test]
+    fn split_by_spec_groups_and_preserves_order() {
+        use crate::solver::{SolveSpec, SolverKind};
+        use std::sync::mpsc;
+        use std::time::Instant;
+        let spec_a = SolveSpec::new(SolverKind::Anderson);
+        let spec_b = SolveSpec { tol: 0.5, ..spec_a.clone() };
+        let mk = |id: u64, spec: &SolveSpec| {
+            let (tx, _rx) = mpsc::channel();
+            Request {
+                id,
+                image: Vec::new(),
+                spec: spec.clone(),
+                enqueued: Instant::now(),
+                respond: tx,
+            }
+        };
+        let batch = vec![
+            mk(1, &spec_a),
+            mk(2, &spec_b),
+            mk(3, &spec_a),
+            mk(4, &spec_b),
+        ];
+        let groups = split_by_spec(batch);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, spec_a);
+        let ids: Vec<u64> = groups[0].1.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        let ids: Vec<u64> = groups[1].1.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 4]);
+        // No overrides → one group (the common fast path).
+        let uniform = vec![mk(5, &spec_a), mk(6, &spec_a)];
+        assert_eq!(split_by_spec(uniform).len(), 1);
     }
 
     #[test]

@@ -1,30 +1,45 @@
 //! Inference serving stack: an iteration-level continuous-batching router
-//! in the vLLM mold, applied to DEQ equilibrium solves.
+//! in the vLLM mold, applied to DEQ equilibrium solves — with
+//! **per-request solver control** end to end.
 //!
 //! Architecture (std-only; the offline crate set has no tokio — threads +
 //! condvar stand in for the async runtime, see DESIGN.md §Substitutions):
 //!
-//!   clients → [`Router::submit`] → shared queue → worker thread
+//!   clients → [`Router::submit`] / [`Router::submit_with`]
+//!           → shared queue → worker thread
 //!           → per-lane equilibrium solve → per-request responses
+//!
+//! Every [`Request`] carries its own **effective [`SolveSpec`]**: the
+//! router's default spec, with the client's [`SolveOverrides`] (solver
+//! kind, tol, max_iter) applied under the operator's [`SolveClamps`]
+//! (min tol, max iteration cap) — resolved and validated at submission,
+//! so a malformed override errors at the door and a greedy one cannot
+//! pin a lane.  The [`Response`] echoes the spec the solve actually ran.
 //!
 //! Two scheduling modes ([`SchedMode`]):
 //!
 //!  * **Iteration-level** (default, [`scheduler`]): a persistent solve
-//!    loop over `max_bucket` lanes.  A lane is *retired the iteration its
-//!    sample converges* — the response carries that sample's own
-//!    `solver_iters` — and queued requests are admitted into freed lanes
-//!    at iteration boundaries by re-encoding into the lane's slice.  A
-//!    stiff sample therefore never delays an easy one, and nobody pays
-//!    for the slowest sample in the batch.
+//!    loop over `max_bucket` lanes.  Lanes are fully **heterogeneous**:
+//!    each owns its request's spec and a [`crate::solver::SolvePolicy`]
+//!    instance built from it, so one batch can mix tolerances, iteration
+//!    caps and even solver kinds — a lane is *retired the iteration its
+//!    sample converges at its own tol* (the response carries that
+//!    sample's own `solver_iters`), and queued requests are admitted
+//!    into freed lanes at iteration boundaries by re-encoding into the
+//!    lane's slice.  A stiff sample therefore never delays an easy one,
+//!    and nobody pays for the slowest sample in the batch.
 //!  * **Batch-granular** ([`batcher`]): the classic fire-and-wait policy
 //!    (wait for a full bucket or `max_wait`, solve, respond all at once).
-//!    Kept as the measured baseline for the serving experiment and bench.
+//!    Kept as the measured baseline for the serving experiment and
+//!    bench.  Requests with distinct effective specs are solved as
+//!    separate sub-batches (a lockstep solve has one tol for everyone).
 //!
 //! Replies are `Result`-shaped: on shutdown the queue is drained with an
 //! explicit "server shutting down" error instead of silently dropping
 //! senders, and solve failures report the error text to every waiter.
 //! A TCP front-end (`serve_tcp`) speaks newline-delimited JSON for the
-//! `deq-anderson serve` subcommand and the serving example.
+//! `deq-anderson serve` subcommand and the serving example; it parses
+//! the per-request override fields and echoes the effective spec.
 
 pub mod batcher;
 pub mod scheduler;
@@ -41,12 +56,15 @@ use crate::infer;
 use crate::metrics::Stats;
 use crate::model::ParamSet;
 use crate::runtime::Backend;
-use crate::solver::SolveOptions;
+use crate::solver::{SolveClamps, SolveOverrides, SolveSpec};
 
-/// One inference request: a flat NHWC image.
+/// One inference request: a flat NHWC image plus the effective solve
+/// spec it should run under (router default + client overrides, already
+/// clamped and validated at submission).
 pub struct Request {
     pub id: u64,
     pub image: Vec<f32>,
+    pub spec: SolveSpec,
     pub enqueued: Instant,
     pub respond: Sender<Reply>,
 }
@@ -75,6 +93,10 @@ pub struct Response {
     /// Lanes occupied at retirement (iteration-level) or the batch size
     /// this request rode in (batch-granular).
     pub batch_size: usize,
+    /// The effective solve spec this request actually ran under (router
+    /// default + clamped client overrides) — echoed so clients can see
+    /// what their overrides resolved to.
+    pub spec: SolveSpec,
 }
 
 /// How the worker schedules queued requests onto the solve loop.
@@ -108,7 +130,12 @@ impl SchedMode {
 /// Router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
-    pub solver: SolveOptions,
+    /// Default solve spec for requests without overrides (validated at
+    /// [`Router::start`]).
+    pub solver: SolveSpec,
+    /// Server-side bounds on per-request overrides (min tol, max
+    /// iteration cap) so a client cannot pin a lane.
+    pub clamps: SolveClamps,
     /// Scheduling mode (see [`SchedMode`]).
     pub mode: SchedMode,
     /// Batch-granular only: max time the oldest request may wait before a
@@ -252,8 +279,17 @@ impl Router {
     pub fn start(
         engine: Arc<dyn Backend>,
         params: Arc<ParamSet>,
-        cfg: RouterConfig,
+        mut cfg: RouterConfig,
     ) -> Result<Self> {
+        // Reject degenerate default specs and clamps here, not N
+        // requests later.
+        cfg.solver.validate()?;
+        cfg.clamps.validate()?;
+        // Clamps can never make an override *stricter than the default*:
+        // a client restating the server's own tol/max_iter must get
+        // exactly the default spec back, so the clamps widen to admit it.
+        cfg.clamps.min_tol = cfg.clamps.min_tol.min(cfg.solver.tol);
+        cfg.clamps.max_iter = cfg.clamps.max_iter.max(cfg.solver.max_iter);
         let queue = Arc::new(Queue {
             items: Mutex::new(Vec::new()),
             signal: Condvar::new(),
@@ -304,19 +340,32 @@ impl Router {
         self.backend.hot_stats()
     }
 
-    /// Submit one image; returns a receiver for the reply.
-    /// Errors on a wrong-sized image (so one malformed request can never
-    /// fail a whole batch), when the queue is at capacity (backpressure),
-    /// or when the worker is gone (shut down, or the scheduler hit a
-    /// fatal backend error) — a request enqueued after that would never
-    /// be answered.
+    /// Submit one image under the router's default solve spec; returns a
+    /// receiver for the reply.  See [`Self::submit_with`].
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>> {
+        self.submit_with(image, &SolveOverrides::default())
+    }
+
+    /// Submit one image with per-request solver overrides.  The
+    /// overrides resolve against the router's default spec under its
+    /// [`SolveClamps`] **here**, so a malformed override (tol ≤ 0,
+    /// max_iter 0) errors at submission instead of poisoning a batch.
+    /// Also errors on a wrong-sized image, when the queue is at capacity
+    /// (backpressure), or when the worker is gone (shut down, or the
+    /// scheduler hit a fatal backend error) — a request enqueued after
+    /// that would never be answered.
+    pub fn submit_with(
+        &self,
+        image: Vec<f32>,
+        overrides: &SolveOverrides,
+    ) -> Result<Receiver<Reply>> {
         anyhow::ensure!(
             image.len() == self.image_dim,
             "image has {} values, model wants {}",
             image.len(),
             self.image_dim
         );
+        let spec = overrides.apply(&self.cfg.solver, &self.cfg.clamps)?;
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.items.lock().unwrap();
@@ -332,6 +381,7 @@ impl Router {
             q.push(Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 image,
+                spec,
                 enqueued: Instant::now(),
                 respond: tx,
             });
@@ -342,7 +392,16 @@ impl Router {
 
     /// Blocking convenience: submit and wait.
     pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
-        let rx = self.submit(image)?;
+        self.infer_blocking_with(image, &SolveOverrides::default())
+    }
+
+    /// Blocking convenience with per-request solver overrides.
+    pub fn infer_blocking_with(
+        &self,
+        image: Vec<f32>,
+        overrides: &SolveOverrides,
+    ) -> Result<Response> {
+        let rx = self.submit_with(image, overrides)?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
             Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
@@ -386,14 +445,16 @@ impl Drop for Router {
     }
 }
 
-/// The inference work a batch performs — the batch-granular path.  Every
-/// rider is billed the batch's iteration count (`solver_iters` of the
-/// whole solve): that is what it had to wait for, and exactly the cost
-/// model the iteration-level scheduler exists to beat.
+/// The inference work a batch performs — the batch-granular path.  All
+/// requests in `batch` share one effective spec (`solver` — the batcher
+/// groups by spec before calling); every rider is billed the batch's
+/// iteration count (`solver_iters` of the whole solve): that is what it
+/// had to wait for, and exactly the cost model the iteration-level
+/// scheduler exists to beat.
 pub(crate) fn run_batch(
     engine: &dyn Backend,
     params: &ParamSet,
-    solver: &SolveOptions,
+    solver: &SolveSpec,
     mut batch: Vec<Request>,
     bucket: usize,
     metrics: &ServerMetrics,
@@ -419,6 +480,7 @@ pub(crate) fn run_batch(
                     converged: result.sample_converged[i],
                     latency,
                     batch_size: count,
+                    spec: req.spec,
                 }));
             }
         }

@@ -1,16 +1,22 @@
 //! Iteration-level continuous batching: a persistent equilibrium solve
-//! loop over `max_bucket` lanes.
+//! loop over `max_bucket` lanes, with **heterogeneous per-lane solver
+//! control**.
 //!
 //! The batch-granular batcher admits a batch, solves it to the *slowest*
 //! sample's convergence, and only then responds and takes new work.  This
 //! scheduler instead treats the compiled bucket as a set of **lanes**:
 //!
-//!  * every solve-loop iteration runs `cell_step` (and, for Anderson-family
-//!    solvers, `anderson_update`) over the whole bucket;
+//!  * every solve-loop iteration runs `cell_step` (and, for lanes whose
+//!    policy mixes, `anderson_update`) over the whole bucket;
+//!  * each lane owns the **effective [`SolveSpec`](crate::solver::SolveSpec)**
+//!    its request resolved to (router default + clamped overrides) and a
+//!    [`SolvePolicy`] instance built from it — so one batch can mix
+//!    tolerances, iteration caps and solver kinds;
 //!  * a lane is **retired the iteration its sample's residual crosses
-//!    `tol`** — the sample takes f as its terminal iterate, is classified,
-//!    and the response (carrying its own `solver_iters`/`solver_fevals`)
-//!    is sent immediately;
+//!    *its own* `tol`** (or its own `max_iter`/feval budget runs out) —
+//!    the sample takes f as its terminal iterate, is classified, and the
+//!    response (carrying its own `solver_iters`/`solver_fevals` and the
+//!    spec it ran under) is sent immediately;
 //!  * freed lanes are **refilled at iteration boundaries**: each
 //!    boundary's admissions are encoded together in one batched dispatch
 //!    and spliced into their lanes' slices of the persistent
@@ -19,8 +25,14 @@
 //! Per-lane Anderson state lives in [`LaneHistory`]: each lane fills its
 //! own ring at its own pace, seeded by replication so a fresh lane's first
 //! mixed update degenerates to a damped forward step (see its docs).  The
-//! hybrid policy's stagnation fallback is likewise per-lane: a stagnating
-//! lane drops to plain forward steps without touching its neighbours.
+//! per-lane hybrid stagnation fallback — once hand-rolled here — now
+//! falls out of per-lane policy state: a stagnating lane's
+//! [`AndersonPolicy`](crate::solver::AndersonPolicy) flips itself to
+//! forward steps without touching its neighbours, and a lane with
+//! `restart_on_breakdown` restarts its own window.
+//!
+//! One knob stays router-wide: the residual regularizer `lam` (residual
+//! norms for the whole bucket come out of one fused `cell_step` call).
 //!
 //! Cost model note: the kernels still run at the full bucket width, so
 //! the win is measured in *per-sample* fevals (what each request waits
@@ -42,21 +54,21 @@ use crate::server::{
     drain_with_error, Queue, Request, Response, RouterConfig, ServerMetrics,
 };
 use crate::solver::anderson::LaneHistory;
-use crate::solver::{per_sample_rel, policy, SolverKind};
+use crate::solver::driver::damp_in_place;
+use crate::solver::{per_sample_rel, policy_for, LaneStep, SolvePolicy};
 
 /// One occupied slot of the solve loop.
 struct Lane {
     req: Request,
+    /// This lane's solve policy, built from `req.spec` at admission —
+    /// per-lane mixing/fallback/restart state lives in here.
+    policy: Box<dyn SolvePolicy + Send>,
     /// Iterations this sample has run (its true `solver_iters`).
     iters: usize,
     /// Cell evaluations charged to this sample.
     fevals: usize,
     /// When the lane was admitted (time-to-retire starts here).
     admitted: Instant,
-    /// This lane's residual trajectory (hybrid stagnation detection).
-    residuals: Vec<f32>,
-    /// False once the hybrid policy dropped this lane to forward steps.
-    mixing: bool,
 }
 
 /// The scheduler thread body.  On a backend failure the error text goes
@@ -96,9 +108,12 @@ pub(crate) fn run(
 /// Admit one iteration boundary's worth of requests: validate images,
 /// encode them all in a single dispatch at the smallest bucket that
 /// fits, and splice each feature row + a zero initial iterate into its
-/// lane's slices of the persistent batch tensors.  Client-level problems
-/// (bad image size, encode failure) are replied inline and leave the
-/// lane free; only internal invariant violations propagate as `Err`.
+/// lane's slices of the persistent batch tensors.  Each admitted lane
+/// gets a fresh policy instance built from its request's effective spec
+/// (window clamped to the scheduler's shared history window).  Client-
+/// level problems (bad image size, encode failure) are replied inline
+/// and leave the lane free; only internal invariant violations propagate
+/// as `Err`.
 #[allow(clippy::too_many_arguments)] // flat splice over the loop's state
 fn admit_all(
     engine: &dyn Backend,
@@ -109,7 +124,7 @@ fn admit_all(
     hist: &mut LaneHistory,
     lanes: &mut [Option<Lane>],
     admitted: Vec<(usize, Request)>,
-    mixing: bool,
+    window: usize,
 ) -> Result<()> {
     if admitted.is_empty() {
         return Ok(());
@@ -145,17 +160,21 @@ fn admit_all(
         }
     };
     let zero = vec![0.0f32; meta.latent_dim()];
-    for (row, (lane_idx, req)) in good.into_iter().enumerate() {
+    for (row, (lane_idx, mut req)) in good.into_iter().enumerate() {
         x_feat.set_row_f32(lane_idx, feat.row_f32(row)?)?;
         z.set_row_f32(lane_idx, &zero)?;
         hist.clear_lane(lane_idx);
+        // The lane rides the scheduler's shared history window; the
+        // echoed spec reflects that (an override can't widen a ring that
+        // is allocated once for all lanes).
+        req.spec.window = window;
+        let policy = policy_for(&req.spec);
         lanes[lane_idx] = Some(Lane {
             req,
+            policy,
             iters: 0,
             fevals: 0,
             admitted: Instant::now(),
-            residuals: Vec::new(),
-            mixing,
         });
     }
     // The padded feature tensor has been spliced into the lanes; hand its
@@ -189,9 +208,6 @@ fn serve_loop(
     let nc = meta.num_classes;
     let compiled_m = engine.manifest().solver.window;
     let window = cfg.solver.window.min(compiled_m).max(1);
-    let kind = cfg.solver.kind;
-    let use_anderson =
-        matches!(kind, SolverKind::Anderson | SolverKind::Hybrid);
 
     let mut hist = LaneHistory::new(bucket, window, compiled_m, n);
 
@@ -219,6 +235,8 @@ fn serve_loop(
     let mut retire_mask = vec![false; bucket];
     let mut mix_mask = vec![false; bucket];
     let mut fwd_mask = vec![false; bucket];
+    // Scratch row for per-lane damped forward blends (β < 1 lanes).
+    let mut blend_row = vec![0.0f32; n];
 
     loop {
         // --- admission at the iteration boundary ---
@@ -262,7 +280,7 @@ fn serve_loop(
                 &mut hist,
                 lanes,
                 admitted,
-                use_anderson,
+                window,
             )?;
         }
         if lanes.iter().all(Option::is_none) {
@@ -284,8 +302,12 @@ fn serve_loop(
             if let Some(lane) = slot.as_mut() {
                 lane.iters += 1;
                 lane.fevals += 1;
-                lane.residuals.push(rel[i]);
-                if rel[i] < cfg.solver.tol || lane.iters >= cfg.solver.max_iter
+                // Retirement is per-lane policy: this lane's own tol,
+                // iteration cap and (optional) feval budget.
+                let spec = &lane.req.spec;
+                if rel[i] < spec.tol
+                    || lane.iters >= spec.max_iter
+                    || (spec.max_fevals > 0 && lane.fevals >= spec.max_fevals)
                 {
                     retire_mask[i] = true;
                 }
@@ -311,78 +333,85 @@ fn serve_loop(
                 let latency = lane.req.enqueued.elapsed();
                 metrics.record(latency, occupied, bucket);
                 metrics.record_retire(lane.admitted.elapsed());
+                // Distinguishes tol-crossing retirement from a lane cut
+                // off at its iteration/feval budget.
+                let converged = rel[i] < lane.req.spec.tol;
                 let _ = lane.req.respond.send(Ok(Response {
                     id: lane.req.id,
                     class: infer::argmax(&row),
                     logits: row,
                     solver_iters: lane.iters,
                     solver_fevals: lane.fevals,
-                    // Distinguishes tol-crossing retirement from a lane
-                    // cut off at max_iter.
-                    converged: rel[i] < cfg.solver.tol,
+                    converged,
                     latency,
                     batch_size: occupied,
+                    spec: lane.req.spec,
                 }));
                 hist.clear_lane(i);
             }
             engine.recycle(vec![logits_t]);
         }
 
-        // --- advance the surviving lanes ---
-        if kind == SolverKind::Forward {
-            fwd_mask.fill(false);
-            for (i, slot) in lanes.iter().enumerate() {
-                fwd_mask[i] = slot.is_some();
-            }
-            cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
-        } else {
-            mix_mask.fill(false);
-            fwd_mask.fill(false);
-            for (i, slot) in lanes.iter_mut().enumerate() {
-                if let Some(lane) = slot.as_mut() {
-                    if lane.mixing
-                        && kind == SolverKind::Hybrid
-                        && policy::stagnated(
-                            &lane.residuals,
-                            window,
-                            cfg.solver.stagnation_eps,
-                        )
-                    {
-                        // Per-lane crossover: this lane's mixing penalty
-                        // no longer pays; its neighbours keep mixing.
-                        lane.mixing = false;
-                    }
-                    if lane.mixing {
-                        hist.push_lane(
-                            i,
+        // --- advance the surviving lanes, each by its own policy ---
+        mix_mask.fill(false);
+        fwd_mask.fill(false);
+        for (i, slot) in lanes.iter_mut().enumerate() {
+            let Some(lane) = slot.as_mut() else { continue };
+            match lane.policy.observe(rel[i]) {
+                LaneStep::Forward { beta } => {
+                    if beta < 1.0 {
+                        // Damped blend for this lane only: z ← z + β(f−z).
+                        blend_row.copy_from_slice(f.row_f32(i)?);
+                        damp_in_place(
+                            &mut blend_row,
                             cell_inputs[z_slot].row_f32(i)?,
-                            f.row_f32(i)?,
+                            beta,
                         );
-                        mix_mask[i] = true;
+                        cell_inputs[z_slot].set_row_f32(i, &blend_row)?;
                     } else {
                         fwd_mask[i] = true;
                     }
                 }
-            }
-            if mix_mask.iter().any(|&b| b) {
-                {
-                    let [xh, fh, mask_t] = &mut and_inputs;
-                    hist.fill_tensors(xh, fh, mask_t)?;
+                LaneStep::Mix => {
+                    hist.push_lane(
+                        i,
+                        cell_inputs[z_slot].row_f32(i)?,
+                        f.row_f32(i)?,
+                    );
+                    mix_mask[i] = true;
                 }
-                let mut update =
-                    engine.execute("anderson_update", bucket, &and_inputs)?;
-                let alpha =
-                    update.pop().expect("anderson_update returns 2 outputs");
-                let mixed = update
-                    .pop()
-                    .expect("anderson_update returns 2 outputs")
-                    .reshaped(meta.latent_shape(bucket))?;
-                cell_inputs[z_slot].overwrite_rows_where(&mixed, &mix_mask)?;
-                engine.recycle(vec![alpha, mixed]);
+                LaneStep::Restart => {
+                    // Per-lane restart-on-breakdown: forget this lane's
+                    // window; the re-seeded push degenerates the next
+                    // mixed step to a damped forward step.
+                    hist.clear_lane(i);
+                    hist.push_lane(
+                        i,
+                        cell_inputs[z_slot].row_f32(i)?,
+                        f.row_f32(i)?,
+                    );
+                    mix_mask[i] = true;
+                }
             }
-            if fwd_mask.iter().any(|&b| b) {
-                cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
+        }
+        if mix_mask.iter().any(|&b| b) {
+            {
+                let [xh, fh, mask_t] = &mut and_inputs;
+                hist.fill_tensors(xh, fh, mask_t)?;
             }
+            let mut update =
+                engine.execute("anderson_update", bucket, &and_inputs)?;
+            let alpha =
+                update.pop().expect("anderson_update returns 2 outputs");
+            let mixed = update
+                .pop()
+                .expect("anderson_update returns 2 outputs")
+                .reshaped(meta.latent_shape(bucket))?;
+            cell_inputs[z_slot].overwrite_rows_where(&mixed, &mix_mask)?;
+            engine.recycle(vec![alpha, mixed]);
+        }
+        if fwd_mask.iter().any(|&b| b) {
+            cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
         }
         engine.recycle(vec![f]);
     }

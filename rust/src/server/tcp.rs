@@ -2,13 +2,26 @@
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": <any>, "image": [f32; hw*hw*c]}
+//!             with optional per-request solver overrides:
+//!               "solver":   "forward" | "anderson" | "hybrid"
+//!               "tol":      <positive number>
+//!               "max_iter": <positive integer>
+//!             (overrides resolve against the server's default spec under
+//!              its clamps — min tol, max iteration cap — so a request
+//!              can loosen a solve freely but only tighten it within the
+//!              operator's bounds)
 //!             {"cmd": "stats"}    → server metrics
 //!             {"cmd": "ping"}     → {"ok": true}
 //!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n,
-//!              "solver_iters": k, "solver_fevals": k}
+//!              "solver_iters": k, "solver_fevals": k, "converged": b,
+//!              "solver": "...", "tol": t, "max_iter": m}
 //!             (iteration-level scheduling: solver_iters/fevals are this
-//!              sample's own counts, not the batch's)
+//!              sample's own counts, not the batch's; solver/tol/max_iter
+//!              echo the *effective* spec the solve ran under)
 //!             {"error": "..."}    on malformed input or shutdown
+//!
+//! Error replies are part of the wire format: their exact JSON is pinned
+//! by golden tests in `tests/integration_server.rs`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,6 +30,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::server::Router;
+use crate::solver::{spec::f32_json, SolveOverrides, SolverKind};
 use crate::util::json::{self, Json};
 
 /// Handle one client connection (blocking, one request at a time per
@@ -50,11 +64,49 @@ fn handle_client(router: &Router, image_dim: usize, stream: TcpStream) {
     let _ = peer;
 }
 
+fn error_reply(msg: &str) -> Json {
+    json::obj(vec![("error", json::s(msg))])
+}
+
+/// Parse the optional per-request solver override fields.  Shape errors
+/// (wrong JSON type, unknown solver name, non-integer iteration cap) are
+/// caught here with stable messages; *value* errors (tol ≤ 0 etc.) are
+/// caught by `SolveOverrides::apply` at submission.
+fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
+    let mut ov = SolveOverrides::default();
+    if let Some(v) = parsed.get("solver") {
+        let name = v
+            .as_str()
+            .ok_or_else(|| "override 'solver' must be a string".to_string())?;
+        ov.kind = Some(SolverKind::parse(name).ok_or_else(|| {
+            format!("unknown solver '{name}' (expected forward|anderson|hybrid)")
+        })?);
+    }
+    if let Some(v) = parsed.get("tol") {
+        let tol = v
+            .as_f64()
+            .ok_or_else(|| "override 'tol' must be a number".to_string())?;
+        ov.tol = Some(tol as f32);
+    }
+    if let Some(v) = parsed.get("max_iter") {
+        let x = v.as_f64().ok_or_else(|| {
+            "override 'max_iter' must be a positive integer".to_string()
+        })?;
+        if x.fract() != 0.0 || x < 1.0 {
+            return Err(
+                "override 'max_iter' must be a positive integer".to_string()
+            );
+        }
+        ov.max_iter = Some(x as usize);
+    }
+    Ok(ov)
+}
+
 /// Parse and execute one protocol line. Pure function → unit-testable.
 pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
     let parsed = match json::parse(line) {
         Ok(v) => v,
-        Err(e) => return json::obj(vec![("error", json::s(&format!("{e}")))]),
+        Err(e) => return error_reply(&format!("malformed json: {e}")),
     };
 
     if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
@@ -88,10 +140,7 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                 }
                 json::obj(pairs)
             }
-            other => json::obj(vec![(
-                "error",
-                json::s(&format!("unknown cmd '{other}'")),
-            )]),
+            other => error_reply(&format!("unknown cmd '{other}'")),
         };
     }
 
@@ -101,21 +150,20 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
             .filter_map(Json::as_f64)
             .map(|v| v as f32)
             .collect(),
-        None => {
-            return json::obj(vec![("error", json::s("missing 'image' array"))])
-        }
+        None => return error_reply("missing 'image' array"),
     };
     if image.len() != image_dim {
-        return json::obj(vec![(
-            "error",
-            json::s(&format!(
-                "image has {} values, model wants {image_dim}",
-                image.len()
-            )),
-        )]);
+        return error_reply(&format!(
+            "image has {} values, model wants {image_dim}",
+            image.len()
+        ));
     }
+    let overrides = match parse_overrides(&parsed) {
+        Ok(ov) => ov,
+        Err(msg) => return error_reply(&msg),
+    };
 
-    match router.infer_blocking(image) {
+    match router.infer_blocking_with(image, &overrides) {
         Ok(resp) => {
             let mut pairs = vec![
                 ("class", json::num(resp.class as f64)),
@@ -124,13 +172,19 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                 ("solver_iters", json::num(resp.solver_iters as f64)),
                 ("solver_fevals", json::num(resp.solver_fevals as f64)),
                 ("converged", Json::Bool(resp.converged)),
+                // Echo the *effective* spec the solve ran under, so a
+                // client can see what its overrides resolved to after
+                // server-side clamping.
+                ("solver", json::s(resp.spec.kind.name())),
+                ("tol", f32_json(resp.spec.tol)),
+                ("max_iter", json::num(resp.spec.max_iter as f64)),
             ];
             if let Some(id) = parsed.get("id") {
                 pairs.push(("id", id.clone()));
             }
             json::obj(pairs)
         }
-        Err(e) => json::obj(vec![("error", json::s(&format!("{e}")))]),
+        Err(e) => error_reply(&format!("{e}")),
     }
 }
 

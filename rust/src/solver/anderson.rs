@@ -1,28 +1,24 @@
-//! Anderson-extrapolated solver (paper Alg. 1) over the AOT artifacts.
+//! Anderson history windows (paper Alg. 1): the ring buffers behind the
+//! mixing policies.
 //!
 //! The coordinator owns the history window: a ring buffer of the last m
 //! (iterate, image) pairs, flattened to `(batch, m, n)` tensors that feed
 //! the fused L1 `anderson_update` kernel (Gram → masked solve → Eq. 5
 //! mixing).  The warm-up window (k < m) is expressed through the mask
-//! vector, so a single compiled artifact serves every iteration.
+//! vector, so a single compiled artifact serves every iteration.  The
+//! solve loops live elsewhere — [`crate::solver::driver`] for batch
+//! solves (one [`History`] per cohort), `server::scheduler` for
+//! iteration-level serving (one [`LaneHistory`] across all lanes).
 //!
 //! Cost anatomy per iteration (the paper's "mixing penalty", Fig. 1):
 //!   cell_step:        the function evaluation f(z, x)
 //!   anderson_update:  2·m·n history streaming + m² Gram + m³ solve
 //! The history buffers are the "cacheable iterations": they live in
 //! preallocated host ring storage and are re-packed, not re-allocated.
-//!
-//! Convergence is per-sample: lanes freeze the step they cross `tol` —
-//! their history stops updating and their iterate stops moving — while
-//! the rest of the batch keeps mixing (the per-trajectory treatment of
-//! Lupo Pasini et al., *Stable Anderson Acceleration for Deep Learning*).
-
-use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{Backend, HostTensor};
-use crate::solver::{ResidualTrack, SolveOptions, SolveReport, SolveStep, SolverKind};
+use crate::runtime::HostTensor;
 
 /// Ring-buffer history for batched Anderson over flattened latents.
 ///
@@ -61,6 +57,15 @@ impl History {
 
     pub fn valid(&self) -> usize {
         self.count.min(self.m)
+    }
+
+    /// Forget the whole window (restart-on-breakdown): zero the rings
+    /// and reset the cursor, reusing the existing allocations — restarts
+    /// happen mid-solve, inside the loop that must not allocate.
+    pub fn reset(&mut self) {
+        self.xhist.fill(0.0);
+        self.fhist.fill(0.0);
+        self.count = 0;
     }
 
     /// Record (z, f(z)) — both flat (batch * n).
@@ -261,105 +266,6 @@ impl LaneHistory {
     }
 }
 
-/// Solve to tolerance with Anderson extrapolation.
-pub fn solve(
-    engine: &dyn Backend,
-    params: &[HostTensor],
-    x_feat: &HostTensor,
-    opts: &SolveOptions,
-) -> Result<SolveReport> {
-    let batch = x_feat.shape[0];
-    let meta = engine.manifest().model.clone();
-    let n = meta.latent_dim();
-    let m = opts.window;
-    // The anderson_update artifact is compiled for the manifest window;
-    // smaller runtime windows ride the same artifact through the mask
-    // (the kernel zeroes masked slots exactly), enabling window ablations
-    // without recompiling.
-    let compiled_m = engine.manifest().solver.window;
-    anyhow::ensure!(
-        m <= compiled_m,
-        "anderson window {m} > compiled window {compiled_m} \
-         (rebuild artifacts with a larger SolverConfig.window)"
-    );
-
-    let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
-    let mut steps: Vec<SolveStep> = Vec::new();
-    let mut track = ResidualTrack::new(batch, opts.tol);
-    let t0 = Instant::now();
-
-    // The canonical iterate lives in the cell-input slot; the mixed next
-    // iterate is swapped in and the previous one recycled.  The
-    // anderson_update inputs are preallocated once and refilled in place
-    // each iteration, so the steady-state loop performs no bucket-sized
-    // allocation (the backend pool absorbs the rest — see the
-    // workspace-reuse test in tests/native_kernels.rs).
-    let mut cell_inputs: Vec<HostTensor> = params.to_vec();
-    let z_slot = cell_inputs.len();
-    cell_inputs.push(HostTensor::zeros(x_feat.shape.clone()));
-    cell_inputs.push(x_feat.clone());
-    let mut and_inputs: [HostTensor; 3] = [
-        HostTensor::zeros(vec![batch, compiled_m, n]),
-        HostTensor::zeros(vec![batch, compiled_m, n]),
-        HostTensor::zeros(vec![compiled_m]),
-    ];
-
-    for k in 0..opts.max_iter {
-        // f(z, x) + fused residual norms.
-        let mut out = engine.execute("cell_step", batch, &cell_inputs)?;
-        let fnorm = out.pop().expect("cell_step returns 3 outputs");
-        let res = out.pop().expect("cell_step returns 3 outputs");
-        let f = out.pop().expect("cell_step returns 3 outputs");
-        let (rel, freeze) = track.observe_step(&res, &fnorm, opts.lam, 1)?;
-        engine.recycle(vec![res, fnorm]);
-        // `mixed` is back-filled once mixing actually runs below, so the
-        // flag describes the update applied to THIS step's iterate: the
-        // terminal (converged) step takes f directly and stays unmixed,
-        // while step 0 is mixed as soon as its pair enters the window.
-        steps.push(SolveStep {
-            iter: k,
-            rel_residual: track.max_rel(),
-            sample_residuals: rel,
-            active: track.active_count(),
-            elapsed: t0.elapsed(),
-            fevals: k + 1,
-            mixed: false,
-        });
-        if track.all_converged() {
-            // Lanes that converged this step take f as their terminal
-            // iterate; lanes frozen earlier already hold theirs.
-            cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
-            engine.recycle(vec![f]);
-            break;
-        }
-
-        // Window update + Anderson mixing for still-active lanes only:
-        // frozen lanes' history stops updating and their rows of the
-        // mixed output are discarded below.
-        hist.push_where(
-            cell_inputs[z_slot].f32s()?,
-            f.f32s()?,
-            &track.active_mask(),
-        );
-        {
-            let [xh, fh, mask] = &mut and_inputs;
-            hist.fill_tensors(xh, fh, mask)?;
-        }
-        let mut update = engine.execute("anderson_update", batch, &and_inputs)?;
-        let alpha = update.pop().expect("anderson_update returns 2 outputs");
-        let zmix = update.pop().expect("anderson_update returns 2 outputs");
-        engine.recycle(vec![alpha]);
-        let mut next = zmix.reshaped(meta.latent_shape(batch))?;
-        freeze.apply(&mut next, &f, &cell_inputs[z_slot])?;
-        let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
-        engine.recycle(vec![prev, f]);
-        steps.last_mut().expect("step recorded above").mixed = true;
-    }
-
-    let z = cell_inputs.swap_remove(z_slot);
-    Ok(SolveReport::from_track(SolverKind::Anderson, steps, z, &track))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,6 +284,23 @@ mod tests {
         h.push(&z, &f); // wraps
         assert_eq!(h.valid(), 3);
         assert_eq!(h.mask(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn history_reset_clears_in_place() {
+        let mut h = History::with_padded_slots(2, 2, 3, 2);
+        h.push(&[1.0; 4], &[2.0; 4]);
+        h.push(&[3.0; 4], &[4.0; 4]);
+        assert_eq!(h.valid(), 2);
+        h.reset();
+        assert_eq!(h.valid(), 0);
+        let (xh, fh, mask) = h.tensors().unwrap();
+        assert!(xh.f32s().unwrap().iter().all(|&v| v == 0.0));
+        assert!(fh.f32s().unwrap().iter().all(|&v| v == 0.0));
+        assert_eq!(mask.f32s().unwrap(), &[0.0, 0.0, 0.0]);
+        // The ring is usable again after reset.
+        h.push(&[5.0; 4], &[6.0; 4]);
+        assert_eq!(h.valid(), 1);
     }
 
     #[test]

@@ -159,4 +159,75 @@ mod tests {
         assert!(t1 <= t2);
         assert!(time_to_target(&tr, 0.0).is_none());
     }
+
+    #[test]
+    fn crossover_when_only_anderson_reaches_deep_targets() {
+        // Forward stalls shallow (few iterations, slow rate); Anderson
+        // alone reaches the deep targets.  The (Some, None) arm of the
+        // detector must still report a crossover.
+        let a = fake_report(SolverKind::Anderson, 300, 0.3, 40);
+        let f = fake_report(SolverKind::Forward, 100, 0.95, 5);
+        let rep = analyze(&a, &f);
+        let x = rep.crossover_residual.expect("anderson-only depth");
+        // The crossover is at or below the deepest residual forward saw.
+        assert!(x <= f.best_residual() * 1.001);
+        // Every swept target at/below the crossover keeps anderson ahead.
+        let mut past = false;
+        for (t, (ta, tf)) in rep.targets.iter().zip(&rep.times) {
+            if *t <= x {
+                past = true;
+                match (ta, tf) {
+                    (Some(ta), Some(tf)) => assert!(ta <= tf),
+                    (Some(_), None) => {}
+                    other => panic!("target {t}: anderson lost it ({other:?})"),
+                }
+            }
+        }
+        assert!(past, "no swept target at/below the crossover");
+    }
+
+    #[test]
+    fn targets_sweep_is_monotone_decreasing_and_spans_traces() {
+        let a = fake_report(SolverKind::Anderson, 300, 0.5, 30);
+        let f = fake_report(SolverKind::Forward, 100, 0.9, 200);
+        let rep = analyze(&a, &f);
+        assert_eq!(rep.targets.len(), rep.times.len());
+        assert!(rep.targets.len() >= 2);
+        for w in rep.targets.windows(2) {
+            assert!(w[0] >= w[1], "targets not decreasing: {} < {}", w[0], w[1]);
+        }
+        // The sweep starts at the worst starting residual and ends at the
+        // best residual either solver achieved.
+        assert!((rep.targets[0] - 1.0).abs() < 1e-3);
+        // (floored at 1e-9, as the sweep is).
+        let deepest = a.best_residual().min(f.best_residual()).max(1e-9);
+        let last = *rep.targets.last().unwrap();
+        assert!((last / deepest).ln().abs() < 1e-2);
+    }
+
+    #[test]
+    fn empty_traces_degrade_without_panicking() {
+        let empty = |kind| SolveReport {
+            kind,
+            steps: vec![],
+            converged: false,
+            z_star: HostTensor::zeros(vec![1]),
+            sample_iters: vec![],
+            sample_fevals: vec![],
+            sample_converged: vec![],
+        };
+        let rep = analyze(&empty(SolverKind::Anderson), &empty(SolverKind::Forward));
+        assert!(rep.crossover_residual.is_none());
+        assert!(rep.mixing_penalty.is_nan());
+        assert!(rep.times.iter().all(|(a, f)| a.is_none() && f.is_none()));
+    }
+
+    #[test]
+    fn mixing_penalty_matches_per_iteration_cost_ratio() {
+        // 300µs vs 100µs per iteration → penalty 3 exactly (equal counts).
+        let a = fake_report(SolverKind::Anderson, 300, 0.5, 20);
+        let f = fake_report(SolverKind::Forward, 100, 0.5, 20);
+        let rep = analyze(&a, &f);
+        assert!((rep.mixing_penalty - 3.0).abs() < 1e-3);
+    }
 }

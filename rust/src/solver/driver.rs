@@ -1,0 +1,254 @@
+//! The one generic equilibrium-solve loop, parameterized by
+//! [`SolvePolicy`] — the collapse of the old `forward.rs` / `anderson.rs`
+//! / `policy.rs` driver triplet.
+//!
+//! The loop owns everything the three drivers shared: the cell-input
+//! slots (canonical iterate + features), the per-sample residual track
+//! with lane freezing, the step trace, the feval budget, and the
+//! recycle discipline that keeps steady-state iterations allocation-free.
+//! The policy owns only the *decision*: after each evaluation it returns
+//! a [`LaneStep`] — mix through the history window, take a (possibly
+//! damped) forward step, or restart the window.
+//!
+//! Trace compatibility: with the default spec knobs (no damping, no
+//! restart) the loop performs exactly the pre-redesign drivers' backend
+//! calls in the same order, so forward/anderson/hybrid reports are
+//! bit-identical to the old per-kind drivers.  For hybrid batch solves
+//! the policy observes the *cohort max* residual — the whole batch
+//! crosses over together, as before; per-lane crossover lives in the
+//! iteration-level scheduler, where each lane owns a policy instance.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Backend, HostTensor};
+use crate::solver::anderson::History;
+use crate::solver::policy::{policy_for, LaneStep, SolvePolicy};
+use crate::solver::spec::SolveSpec;
+use crate::solver::{ResidualTrack, SolveReport, SolveStep};
+
+/// Solve the equilibrium described by `spec`: validates, builds the
+/// spec's policy, and runs the generic driver loop.
+pub fn solve_spec(
+    engine: &dyn Backend,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    spec: &SolveSpec,
+) -> Result<SolveReport> {
+    spec.validate()?;
+    let mut policy = policy_for(spec);
+    drive(engine, params, x_feat, spec, &mut *policy)
+}
+
+/// The damped forward update z ← z + β·(f − z), in place over one flat
+/// row: `f_row` holds f(z) on entry and the damped iterate on exit.
+/// The single numeric definition shared by the batch driver (masked
+/// whole-tensor blends) and the scheduler (per-lane row blends).
+pub fn damp_in_place(f_row: &mut [f32], z_row: &[f32], beta: f32) {
+    debug_assert_eq!(f_row.len(), z_row.len());
+    for (fv, &zv) in f_row.iter_mut().zip(z_row) {
+        *fv = zv + beta * (*fv - zv);
+    }
+}
+
+/// [`damp_in_place`] over selected rows: `next` holds f(z) on entry and
+/// z + β·(f − z) for each selected row on exit.
+fn damped_rows(
+    next: &mut HostTensor,
+    z: &HostTensor,
+    beta: f32,
+    rows: &[bool],
+) -> Result<()> {
+    let rw = next.row_len();
+    let zs = z.f32s()?;
+    let nf = next.f32s_mut()?;
+    anyhow::ensure!(
+        zs.len() == nf.len(),
+        "damped blend over mismatched tensors ({} vs {})",
+        zs.len(),
+        nf.len()
+    );
+    for (i, &sel) in rows.iter().enumerate() {
+        if !sel {
+            continue;
+        }
+        damp_in_place(&mut nf[i * rw..(i + 1) * rw], &zs[i * rw..(i + 1) * rw], beta);
+    }
+    Ok(())
+}
+
+/// The generic driver loop over an explicit policy instance.  Most
+/// callers want [`solve_spec`]; this entry exists so custom
+/// [`SolvePolicy`] implementations can ride the same loop.
+pub fn drive<P: SolvePolicy + ?Sized>(
+    engine: &dyn Backend,
+    params: &[HostTensor],
+    x_feat: &HostTensor,
+    spec: &SolveSpec,
+    policy: &mut P,
+) -> Result<SolveReport> {
+    let batch = x_feat.shape[0];
+    let meta = engine.manifest().model.clone();
+    let n = meta.latent_dim();
+    let m = spec.window;
+    let compiled_m = engine.manifest().solver.window;
+    let uses_history = policy.uses_history();
+    if uses_history {
+        // The anderson_update artifact is compiled for the manifest
+        // window; smaller runtime windows ride the same artifact through
+        // the mask (the kernel zeroes masked slots exactly), enabling
+        // window ablations without recompiling.
+        anyhow::ensure!(
+            m <= compiled_m,
+            "anderson window {m} > compiled window {compiled_m} \
+             (rebuild artifacts with a larger SolverConfig.window)"
+        );
+    }
+
+    // The canonical iterate lives in the cell-input slot; each step moves
+    // the next iterate in and recycles the previous one, and the
+    // anderson_update inputs are preallocated and refilled in place, so
+    // the steady-state loop performs no bucket-sized allocation (the
+    // backend pool absorbs the rest — see tests/native_kernels.rs).
+    let mut cell_inputs: Vec<HostTensor> = params.to_vec();
+    let z_slot = cell_inputs.len();
+    cell_inputs.push(HostTensor::zeros(x_feat.shape.clone()));
+    cell_inputs.push(x_feat.clone());
+    let mut hist = uses_history
+        .then(|| History::with_padded_slots(batch, m, compiled_m, n));
+    let mut and_inputs: Option<[HostTensor; 3]> = uses_history.then(|| {
+        [
+            HostTensor::zeros(vec![batch, compiled_m, n]),
+            HostTensor::zeros(vec![batch, compiled_m, n]),
+            HostTensor::zeros(vec![compiled_m]),
+        ]
+    });
+
+    let mut steps: Vec<SolveStep> = Vec::new();
+    let mut track = ResidualTrack::new(batch, spec.tol);
+    let mut fevals = 0usize;
+    // The dispatch entry is fixed for the whole solve (engine, batch and
+    // spec don't change mid-drive), so resolve it once, not per
+    // iteration of the hot loop.
+    let (step_entry, step_evals) = policy.step_entry(engine, batch);
+    let t0 = Instant::now();
+
+    while fevals < spec.max_iter
+        && (spec.max_fevals == 0 || fevals < spec.max_fevals)
+        && !track.all_converged()
+    {
+        // --- one cell evaluation (possibly fused) + fused norms ---
+        // `max_fevals` is a *hard* budget: a fused dispatch that would
+        // overshoot it downgrades to single steps.  (`max_iter` keeps
+        // the historical checked-between-dispatches semantics, which
+        // fused forward solves may overshoot by up to K−1.)
+        let (entry, evals) =
+            if spec.max_fevals > 0 && fevals + step_evals > spec.max_fevals {
+                ("cell_step", 1)
+            } else {
+                (step_entry, step_evals)
+            };
+        let mut out = engine.execute(entry, batch, &cell_inputs)?;
+        let fnorm = out.pop().expect("cell entries return 3 outputs");
+        let res = out.pop().expect("cell entries return 3 outputs");
+        let f = out.pop().expect("cell entries return 3 outputs");
+        let (rel, freeze) = track.observe_step(&res, &fnorm, spec.lam, evals)?;
+        engine.recycle(vec![res, fnorm]);
+        fevals += evals;
+        // `mixed` is back-filled below once mixing actually runs, so the
+        // flag describes the update that produced THIS step's next
+        // iterate: the terminal (converged) step takes f directly and
+        // stays unmixed, while step 0 is mixed as soon as its (z, f)
+        // pair enters the window.
+        steps.push(SolveStep {
+            iter: steps.len(),
+            rel_residual: track.max_rel(),
+            sample_residuals: rel,
+            active: track.active_count(),
+            elapsed: t0.elapsed(),
+            fevals,
+            mixed: false,
+        });
+        if track.all_converged() {
+            // Lanes that converged this step take f as their terminal
+            // iterate; lanes frozen earlier already hold theirs.
+            cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
+            engine.recycle(vec![f]);
+            break;
+        }
+
+        // --- policy decision on the cohort's max residual ---
+        let action = policy.observe(track.max_rel());
+        match action {
+            LaneStep::Forward { beta } => {
+                // Lanes active this step (newly frozen included) take f —
+                // damped toward z for still-active lanes when β < 1 —
+                // and lanes frozen earlier keep their converged iterate.
+                let mut next = f;
+                if beta < 1.0 {
+                    let still_active: Vec<bool> = freeze
+                        .frozen_before
+                        .iter()
+                        .zip(&freeze.newly_frozen)
+                        .map(|(a, b)| !a && !b)
+                        .collect();
+                    damped_rows(
+                        &mut next,
+                        &cell_inputs[z_slot],
+                        beta,
+                        &still_active,
+                    )?;
+                }
+                next.overwrite_rows_where(
+                    &cell_inputs[z_slot],
+                    &freeze.frozen_before,
+                )?;
+                let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
+                engine.recycle(vec![prev]);
+            }
+            LaneStep::Mix | LaneStep::Restart => {
+                let hist = hist.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "policy requested mixing but declared uses_history() == false"
+                    )
+                })?;
+                let and_inputs = and_inputs
+                    .as_mut()
+                    .expect("history and mix inputs are allocated together");
+                if action == LaneStep::Restart {
+                    hist.reset();
+                }
+                // Window update + Anderson mixing for still-active lanes
+                // only: frozen lanes' history stops updating and their
+                // rows of the mixed output are discarded below.
+                hist.push_where(
+                    cell_inputs[z_slot].f32s()?,
+                    f.f32s()?,
+                    &track.active_mask(),
+                );
+                {
+                    let [xh, fh, mask] = &mut *and_inputs;
+                    hist.fill_tensors(xh, fh, mask)?;
+                }
+                let mut update =
+                    engine.execute("anderson_update", batch, &and_inputs[..])?;
+                let alpha =
+                    update.pop().expect("anderson_update returns 2 outputs");
+                let zmix =
+                    update.pop().expect("anderson_update returns 2 outputs");
+                engine.recycle(vec![alpha]);
+                let mut next = zmix.reshaped(meta.latent_shape(batch))?;
+                freeze.apply(&mut next, &f, &cell_inputs[z_slot])?;
+                let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
+                engine.recycle(vec![prev, f]);
+            }
+        }
+        if action.mixes() {
+            steps.last_mut().expect("step recorded above").mixed = true;
+        }
+    }
+
+    let z = cell_inputs.swap_remove(z_slot);
+    Ok(SolveReport::from_track(policy.kind(), steps, z, &track))
+}

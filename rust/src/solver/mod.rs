@@ -1,26 +1,40 @@
-//! Fixed-point solver drivers over any [`Backend`] — the coordinator
+//! Fixed-point equilibrium solves over any [`Backend`] — the coordinator
 //! half of the paper's contribution.
 //!
 //! The execution backend owns the *math* of one step (`cell_step`,
 //! `anderson_update`); this module owns the *policy*: when to evaluate,
-//! when to mix, when to stop, what to record.  Three drivers:
+//! when to mix, when to stop, what to record.  The API is composable:
 //!
-//! * [`forward`] — the paper's baseline, z ← f(z,x), optionally through
-//!   the fused `forward_solve_k` entry (K steps per dispatch).
-//! * [`anderson`] — windowed Anderson extrapolation (Alg. 1): ring-buffer
-//!   history management on the host, mixing via the fused kernel entry.
-//! * [`policy`] — the paper's §4 suggestion: run Anderson, watch for
-//!   stagnation, fall back to damped forward steps.
+//! * [`SolveSpec`] ([`spec`]) — a declarative, validated, JSON-round-
+//!   trippable description of one solve: kind, window, tol, iteration
+//!   and feval budgets, damping schedule, stagnation rule, restart-on-
+//!   breakdown.  Build one with [`SolveSpec::from_manifest`] or
+//!   [`SolveSpec::builder`].
+//! * [`SolvePolicy`] ([`policy`]) — the per-lane decision state machine a
+//!   spec describes.  [`ForwardPolicy`] is the paper's baseline;
+//!   [`AndersonPolicy`] is windowed Anderson (Alg. 1), and with its
+//!   stagnation rule armed it is the paper-§4 hybrid.
+//! * [`driver`] — the one generic driver loop ([`solve_spec`]) that
+//!   executes any policy: ring-buffer history management on the host,
+//!   mixing via the fused kernel entry, per-sample lane freezing.
+//!
+//! Specs also ride serving requests: [`SolveOverrides`] carries a
+//! client's per-request solver/tol/max_iter, resolved against the
+//! server's default spec under operator [`SolveClamps`].
 //!
 //! Each solve returns a [`SolveReport`] with the per-iteration residual /
 //! wallclock trace — the raw series behind Figs. 1, 6 and 7.  Reports
 //! round-trip through JSON (see [`SolveReport::to_json`]) so experiment
 //! output formats are pinned by golden tests.
+//!
+//! The old flat [`SolveOptions`] + [`solve`] entry points remain as
+//! deprecated shims over `SolveSpec`/[`solve_spec`].
 
 pub mod anderson;
 pub mod crossover;
-pub mod forward;
+pub mod driver;
 pub mod policy;
+pub mod spec;
 
 use std::time::Duration;
 
@@ -28,6 +42,15 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::{Backend, HostTensor};
 use crate::util::json::{self, Json};
+
+pub use driver::{drive, solve_spec};
+pub use policy::{
+    policy_for, AndersonPolicy, ForwardPolicy, LaneStep, SolvePolicy,
+};
+pub use spec::{
+    Damping, SolveClamps, SolveOverrides, SolveSpec, SolveSpecBuilder,
+    StagnationRule,
+};
 
 /// Which solver to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,7 +80,12 @@ impl SolverKind {
     }
 }
 
-/// Runtime solver options (seeded from the manifest's SolverMeta).
+/// Flat pre-[`SolveSpec`] solver options — kept as a compatibility shim
+/// so external callers of the old API keep compiling; everything in-tree
+/// builds a `SolveSpec` instead.
+#[deprecated(
+    note = "use SolveSpec (builder + validation + JSON round-trip) instead"
+)]
 #[derive(Debug, Clone, Copy)]
 pub struct SolveOptions {
     pub kind: SolverKind,
@@ -72,6 +100,7 @@ pub struct SolveOptions {
     pub stagnation_eps: f32,
 }
 
+#[allow(deprecated)]
 impl SolveOptions {
     pub fn from_manifest(engine: &dyn Backend, kind: SolverKind) -> Self {
         let s = &engine.manifest().solver;
@@ -83,6 +112,24 @@ impl SolveOptions {
             lam: s.lam,
             fused_forward: true,
             stagnation_eps: 0.03,
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl From<SolveOptions> for SolveSpec {
+    fn from(o: SolveOptions) -> Self {
+        SolveSpec {
+            kind: o.kind,
+            window: o.window,
+            tol: o.tol,
+            max_iter: o.max_iter,
+            max_fevals: 0,
+            lam: o.lam,
+            fused_forward: o.fused_forward,
+            damping: Damping::Full,
+            stagnation: StagnationRule { window: 0, eps: o.stagnation_eps },
+            restart_on_breakdown: false,
         }
     }
 }
@@ -512,18 +559,20 @@ impl SolveReport {
     }
 }
 
-/// Dispatch a solve by kind.
+/// Dispatch a solve from the flat pre-[`SolveSpec`] options — a thin
+/// deprecated shim over [`solve_spec`].  The converted spec carries the
+/// exact pre-redesign defaults (no damping, no restart, cohort
+/// stagnation on the spec window), so reports are bit-identical to the
+/// old per-kind drivers.
+#[deprecated(note = "use solve_spec with a SolveSpec")]
+#[allow(deprecated)]
 pub fn solve(
     engine: &dyn Backend,
     params: &[HostTensor],
     x_feat: &HostTensor,
     opts: &SolveOptions,
 ) -> Result<SolveReport> {
-    match opts.kind {
-        SolverKind::Forward => forward::solve(engine, params, x_feat, opts),
-        SolverKind::Anderson => anderson::solve(engine, params, x_feat, opts),
-        SolverKind::Hybrid => policy::solve(engine, params, x_feat, opts),
-    }
+    solve_spec(engine, params, x_feat, &SolveSpec::from(*opts))
 }
 
 /// Per-sample relative residuals ‖f−z‖/(‖f‖+λ) from the fused cell_step
@@ -547,6 +596,32 @@ pub fn per_sample_rel(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    #[allow(deprecated)]
+    fn solve_options_shim_converts_faithfully() {
+        let o = SolveOptions {
+            kind: SolverKind::Hybrid,
+            window: 4,
+            tol: 1e-3,
+            max_iter: 50,
+            lam: 1e-5,
+            fused_forward: false,
+            stagnation_eps: 0.07,
+        };
+        let spec = SolveSpec::from(o);
+        assert_eq!(spec.kind, SolverKind::Hybrid);
+        assert_eq!(spec.window, 4);
+        assert_eq!(spec.tol, 1e-3);
+        assert_eq!(spec.max_iter, 50);
+        assert_eq!(spec.max_fevals, 0);
+        assert_eq!(spec.lam, 1e-5);
+        assert!(!spec.fused_forward);
+        assert_eq!(spec.damping, Damping::Full);
+        assert_eq!(spec.stagnation, StagnationRule { window: 0, eps: 0.07 });
+        assert!(!spec.restart_on_breakdown);
+        spec.validate().unwrap();
+    }
 
     #[test]
     fn kind_parse_roundtrip() {

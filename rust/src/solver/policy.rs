@@ -1,27 +1,104 @@
-//! Hybrid solver policy (paper §4): "Monitoring the slowing of Anderson
-//! acceleration and switching to approximate forms of Newton's method can
-//! be beneficial."
+//! The per-lane solve policy: what to do with one lane's iterate after
+//! each cell evaluation.
 //!
-//! We implement the practical version: run Anderson; if the relative
-//! residual stops improving by at least `stagnation_eps` per window of m
-//! iterations, finish with plain forward steps (whose per-iteration cost is
-//! lower — past the crossover point the mixing penalty buys nothing).
-//! Like the other drivers, convergence is per-sample: lanes freeze the
-//! step they cross `tol` while the rest of the batch keeps iterating.
+//! Pre-redesign, forward / Anderson / hybrid were three monolithic driver
+//! files and the iteration-level scheduler hand-rolled a fourth copy of
+//! the hybrid fallback.  Now there is exactly one driver loop
+//! ([`crate::solver::driver`]) and one decision surface:
+//!
+//!  * [`SolvePolicy`] — a small state machine owning *one lane's* (or, in
+//!    batch solves, one cohort's) policy state: residual trajectory,
+//!    mixing/fallback flag, damping position.  Each observation returns a
+//!    [`LaneStep`] — mix, take a (possibly damped) forward step, or
+//!    restart the Anderson window.
+//!  * [`ForwardPolicy`] — the paper's baseline: always a forward step,
+//!    optionally through the fused `forward_solve_k` entry.
+//!  * [`AndersonPolicy`] — windowed Anderson mixing; with a
+//!    [`StagnationRule`](crate::solver::StagnationRule) enabled it *is*
+//!    the paper-§4 hybrid (mix until
+//!    the residual stagnates, then damped forward steps), and with
+//!    `restart_on_breakdown` it restarts the window when a mixed step
+//!    increases the residual.
+//!
+//! The iteration-level scheduler gives every lane its own policy instance
+//! built from that request's effective [`SolveSpec`], which is how
+//! heterogeneous per-request solver control works: the per-lane hybrid
+//! fallback that used to be hand-rolled in `server/scheduler.rs` is now
+//! just per-lane policy state.
 
-use std::time::Instant;
+use crate::runtime::Backend;
+use crate::solver::spec::{Damping, SolveSpec};
+use crate::solver::SolverKind;
 
-use anyhow::Result;
+/// What a policy wants for a lane after observing its latest residual.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LaneStep {
+    /// Take the damped forward step z ← (1−β)·z + β·f(z).  β = 1 takes
+    /// f directly (the classic update, and the bit-exact fast path).
+    Forward { beta: f32 },
+    /// Push (z, f) into the lane's history window and take the
+    /// Anderson-mixed iterate.
+    Mix,
+    /// Clear the lane's history window first, then push and mix — the
+    /// restart-on-breakdown safeguard.  A freshly restarted window mixes
+    /// over a single pair, which degenerates to a damped forward step.
+    Restart,
+}
 
-use crate::runtime::{Backend, HostTensor};
-use crate::solver::anderson::History;
-use crate::solver::{ResidualTrack, SolveOptions, SolveReport, SolveStep, SolverKind};
+impl LaneStep {
+    /// True when Anderson mixing produces the lane's next iterate.
+    pub fn mixes(&self) -> bool {
+        matches!(self, LaneStep::Mix | LaneStep::Restart)
+    }
+}
+
+/// One lane's (or one batch cohort's) solve policy.
+///
+/// The driver owns the loop — evaluate, observe residuals, freeze
+/// converged lanes, record the trace — and asks the policy only for the
+/// next update.  Policies are cheap state machines: no tensors, no
+/// backend handles; the history window itself stays with the caller
+/// (`History` in batch solves, `LaneHistory` in the scheduler) because
+/// its layout is a property of the dispatch shape, not of the policy.
+pub trait SolvePolicy {
+    /// The solver kind this policy implements (stamped on reports and
+    /// echoed on serving responses).
+    fn kind(&self) -> SolverKind;
+
+    /// Cell-evaluation entry + evaluations per dispatch for *batch*
+    /// solves.  The default is one `cell_step` per iteration; the
+    /// forward policy upgrades to the fused K-step entry when compiled.
+    /// The driver resolves this **once per solve** — it must not vary
+    /// across iterations.  (The iteration-level scheduler always steps
+    /// `cell_step` — it needs per-iteration residuals to retire lanes.)
+    fn step_entry(
+        &self,
+        _engine: &dyn Backend,
+        _batch: usize,
+    ) -> (&'static str, usize) {
+        ("cell_step", 1)
+    }
+
+    /// True when the policy can ever return [`LaneStep::Mix`] /
+    /// [`LaneStep::Restart`] — the caller then maintains a history
+    /// window for the lane.
+    fn uses_history(&self) -> bool;
+
+    /// Forget all lane state (scheduler lane admission reuses policy
+    /// slots; batch drivers never call this).
+    fn reset(&mut self);
+
+    /// Observe the lane's relative residual for this iteration and
+    /// decide the lane's next update.  Called once per iteration per
+    /// active lane, *not* for frozen (converged) lanes.
+    fn observe(&mut self, rel: f32) -> LaneStep;
+}
 
 /// Detect stagnation over the trailing `window` residuals: returns true
 /// when the best value in the recent window improved on the window before
 /// it by less than `eps` (relative).
 pub fn stagnated(residuals: &[f32], window: usize, eps: f32) -> bool {
-    if residuals.len() < 2 * window {
+    if window == 0 || residuals.len() < 2 * window {
         return false;
     }
     let recent = &residuals[residuals.len() - window..];
@@ -31,106 +108,185 @@ pub fn stagnated(residuals: &[f32], window: usize, eps: f32) -> bool {
     best_recent > best_prior * (1.0 - eps)
 }
 
-/// Anderson-with-fallback solve.
-pub fn solve(
-    engine: &dyn Backend,
-    params: &[HostTensor],
-    x_feat: &HostTensor,
-    opts: &SolveOptions,
-) -> Result<SolveReport> {
-    let batch = x_feat.shape[0];
-    let meta = engine.manifest().model.clone();
-    let n = meta.latent_dim();
-    let m = opts.window;
-    let compiled_m = engine.manifest().solver.window;
-    anyhow::ensure!(m <= compiled_m, "window {m} > compiled {compiled_m}");
+/// The paper's baseline: every step is a forward step.
+#[derive(Debug, Clone)]
+pub struct ForwardPolicy {
+    fused: bool,
+    damping: Damping,
+    /// Forward steps taken (drives the damping schedule).
+    steps: usize,
+}
 
-    let mut hist = History::with_padded_slots(batch, m, compiled_m, n);
-    let mut steps: Vec<SolveStep> = Vec::new();
-    let mut residuals: Vec<f32> = Vec::new();
-    let mut track = ResidualTrack::new(batch, opts.tol);
-    let mut anderson_active = true;
-    let t0 = Instant::now();
+impl ForwardPolicy {
+    pub fn new(spec: &SolveSpec) -> Self {
+        Self { fused: spec.fused_forward, damping: spec.damping, steps: 0 }
+    }
+}
 
-    // Same allocation discipline as the anderson driver: the canonical
-    // iterate lives in the cell-input slot, the anderson_update inputs
-    // are preallocated and refilled in place, and spent tensors flow
-    // back to the backend pool.
-    let mut cell_inputs: Vec<HostTensor> = params.to_vec();
-    let z_slot = cell_inputs.len();
-    cell_inputs.push(HostTensor::zeros(x_feat.shape.clone()));
-    cell_inputs.push(x_feat.clone());
-    let mut and_inputs: [HostTensor; 3] = [
-        HostTensor::zeros(vec![batch, compiled_m, n]),
-        HostTensor::zeros(vec![batch, compiled_m, n]),
-        HostTensor::zeros(vec![compiled_m]),
-    ];
+impl SolvePolicy for ForwardPolicy {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Forward
+    }
 
-    for k in 0..opts.max_iter {
-        let mut out = engine.execute("cell_step", batch, &cell_inputs)?;
-        let fnorm = out.pop().expect("cell_step returns 3 outputs");
-        let res = out.pop().expect("cell_step returns 3 outputs");
-        let f = out.pop().expect("cell_step returns 3 outputs");
-        let (rel, freeze) = track.observe_step(&res, &fnorm, opts.lam, 1)?;
-        engine.recycle(vec![res, fnorm]);
-        residuals.push(track.max_rel());
-        // As in the anderson driver, `mixed` is back-filled below so it
-        // describes the update that produced this step's next iterate.
-        steps.push(SolveStep {
-            iter: k,
-            rel_residual: track.max_rel(),
-            sample_residuals: rel,
-            active: track.active_count(),
-            elapsed: t0.elapsed(),
-            fevals: k + 1,
-            mixed: false,
-        });
-        if track.all_converged() {
-            cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
-            engine.recycle(vec![f]);
-            break;
-        }
-
-        if anderson_active && stagnated(&residuals, m, opts.stagnation_eps) {
-            // Crossover reached: the mixing penalty no longer pays.
-            anderson_active = false;
-        }
-
-        if anderson_active {
-            hist.push_where(
-                cell_inputs[z_slot].f32s()?,
-                f.f32s()?,
-                &track.active_mask(),
-            );
-            {
-                let [xh, fh, mask] = &mut and_inputs;
-                hist.fill_tensors(xh, fh, mask)?;
-            }
-            let mut update =
-                engine.execute("anderson_update", batch, &and_inputs)?;
-            let alpha = update.pop().expect("anderson_update returns 2 outputs");
-            let zmix = update.pop().expect("anderson_update returns 2 outputs");
-            engine.recycle(vec![alpha]);
-            let mut next = zmix.reshaped(meta.latent_shape(batch))?;
-            freeze.apply(&mut next, &f, &cell_inputs[z_slot])?;
-            let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
-            engine.recycle(vec![prev, f]);
-            steps.last_mut().expect("step recorded above").mixed = true;
+    fn step_entry(
+        &self,
+        engine: &dyn Backend,
+        batch: usize,
+    ) -> (&'static str, usize) {
+        let fused_k = engine.manifest().solver.fused_steps.max(1);
+        // A damping schedule means every forward step must be the
+        // safeguarded blend z ← z + β(f−z); the fused kernel runs K
+        // *undamped* steps internally, so damped solves stay per-step.
+        if self.fused
+            && matches!(self.damping, Damping::Full)
+            && fused_k > 1
+            && engine.manifest().entry("forward_solve_k", batch).is_ok()
+        {
+            ("forward_solve_k", fused_k)
         } else {
-            let mut next = f;
-            next.overwrite_rows_where(&cell_inputs[z_slot], &freeze.frozen_before)?;
-            let prev = std::mem::replace(&mut cell_inputs[z_slot], next);
-            engine.recycle(vec![prev]);
+            ("cell_step", 1)
         }
     }
 
-    let z = cell_inputs.swap_remove(z_slot);
-    Ok(SolveReport::from_track(SolverKind::Hybrid, steps, z, &track))
+    fn uses_history(&self) -> bool {
+        false
+    }
+
+    fn reset(&mut self) {
+        self.steps = 0;
+    }
+
+    fn observe(&mut self, _rel: f32) -> LaneStep {
+        let beta = self.damping.beta(self.steps);
+        self.steps += 1;
+        LaneStep::Forward { beta }
+    }
+}
+
+/// Windowed Anderson mixing, with optional stagnation fallback (the
+/// hybrid policy) and optional restart-on-breakdown.
+#[derive(Debug, Clone)]
+pub struct AndersonPolicy {
+    /// `(window, eps)` when the stagnation fallback is armed (hybrid).
+    stagnation: Option<(usize, f32)>,
+    restart_on_breakdown: bool,
+    damping: Damping,
+    /// Residual trajectory for stagnation detection — maintained only
+    /// while the stagnation rule is armed and the lane still mixes
+    /// (plain Anderson lanes carry no per-iteration state at all).
+    residuals: Vec<f32>,
+    /// Last observed residual (restart-on-breakdown detection).
+    prev: Option<f32>,
+    /// False once this lane fell back to forward steps.
+    mixing: bool,
+    /// Forward (fallback) steps taken, for the damping schedule.
+    fwd_steps: usize,
+}
+
+impl AndersonPolicy {
+    /// Plain Anderson (no fallback) from a spec.
+    pub fn new(spec: &SolveSpec) -> Self {
+        Self {
+            stagnation: None,
+            restart_on_breakdown: spec.restart_on_breakdown,
+            damping: spec.damping,
+            residuals: Vec::new(),
+            prev: None,
+            mixing: true,
+            fwd_steps: 0,
+        }
+    }
+
+    /// The hybrid policy: Anderson until the spec's stagnation rule
+    /// trips, then damped forward steps.
+    pub fn hybrid(spec: &SolveSpec) -> Self {
+        Self {
+            stagnation: Some((
+                spec.stagnation.effective_window(spec.window),
+                spec.stagnation.eps,
+            )),
+            ..Self::new(spec)
+        }
+    }
+
+    /// True while the lane is still Anderson-mixing (it drops to false
+    /// permanently once the stagnation rule trips).
+    pub fn is_mixing(&self) -> bool {
+        self.mixing
+    }
+}
+
+impl SolvePolicy for AndersonPolicy {
+    fn kind(&self) -> SolverKind {
+        if self.stagnation.is_some() {
+            SolverKind::Hybrid
+        } else {
+            SolverKind::Anderson
+        }
+    }
+
+    fn uses_history(&self) -> bool {
+        true
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+        self.prev = None;
+        self.mixing = true;
+        self.fwd_steps = 0;
+    }
+
+    fn observe(&mut self, rel: f32) -> LaneStep {
+        let prev = self.prev.replace(rel);
+        if self.mixing
+            && self.restart_on_breakdown
+            && prev.map(|p| rel > p).unwrap_or(false)
+        {
+            // Breakdown: a mixed step made this lane worse.  Restart the
+            // window (and the trajectory — the stagnation rule should
+            // judge the restarted run, not the pre-breakdown one).
+            self.residuals.clear();
+            self.residuals.push(rel);
+            return LaneStep::Restart;
+        }
+        if self.mixing {
+            if let Some((window, eps)) = self.stagnation {
+                self.residuals.push(rel);
+                if stagnated(&self.residuals, window, eps) {
+                    // Crossover reached: the mixing penalty no longer
+                    // pays for this lane (paper §4) — and the trajectory
+                    // has served its purpose.
+                    self.mixing = false;
+                    self.residuals = Vec::new();
+                }
+            }
+        }
+        if self.mixing {
+            LaneStep::Mix
+        } else {
+            let beta = self.damping.beta(self.fwd_steps);
+            self.fwd_steps += 1;
+            LaneStep::Forward { beta }
+        }
+    }
+}
+
+/// Build the policy a spec describes.  One instance covers one lane (the
+/// scheduler) or one whole-batch cohort (the batch driver, which feeds
+/// the cohort's max residual so the batch crosses over together — the
+/// pre-redesign hybrid semantics).
+pub fn policy_for(spec: &SolveSpec) -> Box<dyn SolvePolicy + Send> {
+    match spec.kind {
+        SolverKind::Forward => Box::new(ForwardPolicy::new(spec)),
+        SolverKind::Anderson => Box::new(AndersonPolicy::new(spec)),
+        SolverKind::Hybrid => Box::new(AndersonPolicy::hybrid(spec)),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solver::spec::StagnationRule;
 
     #[test]
     fn stagnation_needs_history() {
@@ -154,5 +310,113 @@ mod tests {
         let r: Vec<f32> =
             (0..16).map(|k| 0.03 + 0.005 * ((k % 3) as f32)).collect();
         assert!(stagnated(&r, 5, 0.05));
+    }
+
+    #[test]
+    fn forward_policy_never_mixes() {
+        let spec = SolveSpec::new(SolverKind::Forward);
+        let mut p = ForwardPolicy::new(&spec);
+        assert!(!p.uses_history());
+        for _ in 0..5 {
+            assert_eq!(p.observe(0.5), LaneStep::Forward { beta: 1.0 });
+        }
+    }
+
+    #[test]
+    fn forward_policy_walks_damping_schedule() {
+        let spec = SolveSpec {
+            damping: Damping::Anneal { from: 0.5, to: 1.0, decay: 0.5 },
+            ..SolveSpec::new(SolverKind::Forward)
+        };
+        let mut p = ForwardPolicy::new(&spec);
+        let betas: Vec<f32> = (0..3)
+            .map(|_| match p.observe(1.0) {
+                LaneStep::Forward { beta } => beta,
+                other => panic!("forward policy returned {other:?}"),
+            })
+            .collect();
+        assert!((betas[0] - 0.5).abs() < 1e-6);
+        assert!((betas[1] - 0.75).abs() < 1e-6);
+        assert!(betas[2] > betas[1]);
+        p.reset();
+        assert_eq!(p.observe(1.0), LaneStep::Forward { beta: 0.5 });
+    }
+
+    #[test]
+    fn anderson_policy_always_mixes_without_stagnation() {
+        let spec = SolveSpec::new(SolverKind::Anderson);
+        let mut p = AndersonPolicy::new(&spec);
+        assert!(p.uses_history());
+        assert_eq!(p.kind(), SolverKind::Anderson);
+        // A flat trajectory never trips a disarmed stagnation rule.
+        for _ in 0..20 {
+            assert_eq!(p.observe(0.5), LaneStep::Mix);
+        }
+    }
+
+    #[test]
+    fn hybrid_policy_falls_back_on_stagnation_and_stays_there() {
+        let spec = SolveSpec {
+            window: 3,
+            stagnation: StagnationRule { window: 0, eps: 0.05 },
+            ..SolveSpec::new(SolverKind::Hybrid)
+        };
+        let mut p = AndersonPolicy::hybrid(&spec);
+        assert_eq!(p.kind(), SolverKind::Hybrid);
+        // Improving: keeps mixing.
+        for k in 0..4 {
+            assert_eq!(p.observe(0.5f32.powi(k)), LaneStep::Mix, "iter {k}");
+        }
+        // Plateau: must trip within 2 windows and never mix again.
+        let mut fell_back = false;
+        for _ in 0..8 {
+            match p.observe(0.06) {
+                LaneStep::Forward { beta } => {
+                    fell_back = true;
+                    assert_eq!(beta, 1.0);
+                }
+                LaneStep::Mix => {
+                    assert!(!fell_back, "policy resumed mixing after fallback")
+                }
+                LaneStep::Restart => panic!("restart without breakdown arm"),
+            }
+        }
+        assert!(fell_back, "flat trajectory never stagnated");
+        assert!(!p.is_mixing());
+        // reset() re-arms mixing (lane reuse in the scheduler).
+        p.reset();
+        assert!(p.is_mixing());
+        assert_eq!(p.observe(1.0), LaneStep::Mix);
+    }
+
+    #[test]
+    fn restart_on_breakdown_fires_on_residual_rise() {
+        let spec = SolveSpec {
+            restart_on_breakdown: true,
+            ..SolveSpec::new(SolverKind::Anderson)
+        };
+        let mut p = AndersonPolicy::new(&spec);
+        assert_eq!(p.observe(1.0), LaneStep::Mix);
+        assert_eq!(p.observe(0.5), LaneStep::Mix);
+        // Residual rises → restart, then mixing resumes on the fresh
+        // trajectory (0.8 is the restarted window's first point, so the
+        // next lower observation is a plain Mix).
+        assert_eq!(p.observe(0.8), LaneStep::Restart);
+        assert_eq!(p.observe(0.4), LaneStep::Mix);
+    }
+
+    #[test]
+    fn policy_for_matches_kind() {
+        for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+            let spec = SolveSpec::new(kind);
+            assert_eq!(policy_for(&spec).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn lane_step_mixes() {
+        assert!(LaneStep::Mix.mixes());
+        assert!(LaneStep::Restart.mixes());
+        assert!(!LaneStep::Forward { beta: 1.0 }.mixes());
     }
 }

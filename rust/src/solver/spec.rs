@@ -1,0 +1,719 @@
+//! Declarative solve configuration: [`SolveSpec`] + the pieces that
+//! compose it.
+//!
+//! The paper's crossover argument (Fig. 1) is about *choosing a policy
+//! per workload* — when to mix, how hard to damp, when to fall back.
+//! `SolveSpec` makes that whole policy space plain data: a validated,
+//! JSON-round-trippable description of one equilibrium solve that the
+//! generic driver ([`crate::solver::driver`]) executes through a
+//! [`crate::solver::SolvePolicy`].  Because it is data, it can ride a
+//! serving request: the TCP protocol carries per-request overrides
+//! ([`SolveOverrides`]) which the router resolves against its default
+//! spec under operator-set bounds ([`SolveClamps`]).
+//!
+//! Construction paths:
+//!  * [`SolveSpec::from_manifest`] — backend defaults for a kind;
+//!  * [`SolveSpec::builder`] / [`SolveSpecBuilder`] — explicit builder
+//!    with validation at `build()`;
+//!  * [`SolveSpec::from_json`] — the wire/config form.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::Backend;
+use crate::solver::SolverKind;
+use crate::util::json::{self, Json};
+
+/// Damping schedule for *forward* (non-mixed) updates: the plain-forward
+/// solver, the hybrid policy's post-stagnation steps, and restart steps.
+/// β = 1 takes f(z) directly; β < 1 takes z ← (1−β)·z + β·f(z), the
+/// safeguarded step of Lupo Pasini et al. (*Stable Anderson Acceleration
+/// for Deep Learning*).  Anderson-mixed updates are *not* damped here —
+/// their β is compiled into the `anderson_update` kernel (see
+/// `SolverMeta::beta`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Damping {
+    /// Undamped (β = 1): forward steps take f(z) directly.  The default,
+    /// and the only schedule the pre-`SolveSpec` drivers had.
+    Full,
+    /// Constant β ∈ (0, 1].
+    Constant(f32),
+    /// Geometric anneal β_k = to + (from − to)·decay^k over the lane's
+    /// forward-step count k (heavier damping early, relaxing toward
+    /// `to`; or the reverse when from < to).
+    Anneal { from: f32, to: f32, decay: f32 },
+}
+
+impl Damping {
+    /// β for a lane's k-th forward step.
+    pub fn beta(&self, k: usize) -> f32 {
+        match *self {
+            Damping::Full => 1.0,
+            Damping::Constant(b) => b,
+            Damping::Anneal { from, to, decay } => {
+                to + (from - to) * decay.powi(k as i32)
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let check = |name: &str, b: f32| -> Result<()> {
+            if b.is_nan() || b <= 0.0 || b > 1.0 {
+                bail!("damping {name} must be in (0, 1], got {b}");
+            }
+            Ok(())
+        };
+        match *self {
+            Damping::Full => Ok(()),
+            Damping::Constant(b) => check("beta", b),
+            Damping::Anneal { from, to, decay } => {
+                check("from", from)?;
+                check("to", to)?;
+                check("decay", decay)
+            }
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            Damping::Full => json::obj(vec![("mode", json::s("full"))]),
+            Damping::Constant(b) => json::obj(vec![
+                ("beta", f32_json(b)),
+                ("mode", json::s("constant")),
+            ]),
+            Damping::Anneal { from, to, decay } => json::obj(vec![
+                ("decay", f32_json(decay)),
+                ("from", f32_json(from)),
+                ("mode", json::s("anneal")),
+                ("to", f32_json(to)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let mode = v
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("damping missing 'mode'"))?;
+        let f = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("damping missing '{key}'"))
+        };
+        match mode {
+            "full" => Ok(Damping::Full),
+            "constant" => Ok(Damping::Constant(f("beta")?)),
+            "anneal" => Ok(Damping::Anneal {
+                from: f("from")?,
+                to: f("to")?,
+                decay: f("decay")?,
+            }),
+            other => bail!("unknown damping mode '{other}'"),
+        }
+    }
+}
+
+/// When the hybrid policy drops a lane from Anderson mixing to plain
+/// forward steps: the best residual in the trailing `window` iterations
+/// improved on the window before it by less than `eps` (relative).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagnationRule {
+    /// Trailing-window length in iterations; 0 means "use the spec's
+    /// Anderson window" (the pre-redesign behaviour).
+    pub window: usize,
+    /// Minimum relative improvement per window before fallback.
+    pub eps: f32,
+}
+
+impl Default for StagnationRule {
+    fn default() -> Self {
+        Self { window: 0, eps: 0.03 }
+    }
+}
+
+impl StagnationRule {
+    /// The concrete window to watch, given the spec's Anderson window.
+    pub fn effective_window(&self, spec_window: usize) -> usize {
+        if self.window == 0 {
+            spec_window
+        } else {
+            self.window
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.eps.is_nan() || self.eps <= 0.0 || self.eps >= 1.0 {
+            bail!("stagnation eps must be in (0, 1), got {}", self.eps);
+        }
+        Ok(())
+    }
+}
+
+/// Declarative description of one equilibrium solve.
+///
+/// Field-for-field superset of the old flat `SolveOptions`, so struct
+/// update syntax migrates call sites directly:
+///
+/// ```ignore
+/// let spec = SolveSpec {
+///     tol: 1e-4,
+///     max_iter: 80,
+///     ..SolveSpec::from_manifest(engine, SolverKind::Anderson)
+/// };
+/// ```
+///
+/// Prefer the builder when constructing from scratch — it validates:
+///
+/// ```ignore
+/// let spec = SolveSpec::builder(SolverKind::Hybrid)
+///     .window(5)
+///     .tol(1e-3)
+///     .max_iter(60)
+///     .stagnation(StagnationRule { window: 0, eps: 0.05 })
+///     .build()?;
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveSpec {
+    /// Which policy drives the solve (forward / anderson / hybrid).
+    pub kind: SolverKind,
+    /// Anderson window m (ring-buffer length).  Must be ≥ 1 and, at
+    /// solve time, ≤ the backend's compiled window.
+    pub window: usize,
+    /// Relative-residual convergence tolerance (per sample).
+    pub tol: f32,
+    /// Iteration/evaluation budget: forward solves count cell
+    /// evaluations against it (a fused K-step dispatch costs K), the
+    /// Anderson-family policies one per iteration.
+    pub max_iter: usize,
+    /// Hard cell-evaluation budget on top of `max_iter`; 0 = no extra
+    /// budget.  Lets a serving operator bound worst-case lane cost
+    /// independently of the iteration cap.
+    pub max_fevals: usize,
+    /// Residual regularizer λ in ‖f−z‖/(‖f‖+λ).
+    pub lam: f32,
+    /// Use the fused K-step entry for forward solves when compiled.
+    /// Ignored when a damping schedule is armed — the fused kernel runs
+    /// its K internal steps undamped, so damped solves dispatch per
+    /// step.
+    pub fused_forward: bool,
+    /// Damping schedule for forward (non-mixed) updates.
+    pub damping: Damping,
+    /// Stagnation rule consulted by the hybrid policy.
+    pub stagnation: StagnationRule,
+    /// Restart a lane's Anderson window when its residual *rises* on a
+    /// mixed step (windowed-restart safeguarding; Saad, *Acceleration
+    /// methods for fixed point iterations*, catalogs the family).
+    pub restart_on_breakdown: bool,
+}
+
+impl SolveSpec {
+    /// Backend defaults for a solver kind (the manifest's SolverMeta).
+    pub fn from_manifest(engine: &dyn Backend, kind: SolverKind) -> Self {
+        let s = &engine.manifest().solver;
+        Self {
+            kind,
+            window: s.window,
+            tol: s.tol,
+            max_iter: s.max_iter,
+            max_fevals: 0,
+            lam: s.lam,
+            fused_forward: true,
+            damping: Damping::Full,
+            stagnation: StagnationRule::default(),
+            restart_on_breakdown: false,
+        }
+    }
+
+    /// Library defaults for a kind, for use without a backend at hand.
+    pub fn new(kind: SolverKind) -> Self {
+        Self {
+            kind,
+            window: 5,
+            tol: 1e-3,
+            max_iter: 100,
+            max_fevals: 0,
+            lam: 1e-5,
+            fused_forward: true,
+            damping: Damping::Full,
+            stagnation: StagnationRule::default(),
+            restart_on_breakdown: false,
+        }
+    }
+
+    /// Start a builder from the library defaults for `kind`.
+    pub fn builder(kind: SolverKind) -> SolveSpecBuilder {
+        SolveSpecBuilder { spec: Self::new(kind) }
+    }
+
+    /// Turn this spec back into a builder (tweak-and-revalidate).
+    pub fn to_builder(&self) -> SolveSpecBuilder {
+        SolveSpecBuilder { spec: self.clone() }
+    }
+
+    /// Reject degenerate configurations with a descriptive error instead
+    /// of letting them panic downstream (window 0 used to index past a
+    /// ring of size 0; tol ≤ 0 made every solve run to `max_iter`;
+    /// max_iter 0 returned an empty report with a NaN residual).
+    pub fn validate(&self) -> Result<()> {
+        if self.window == 0 {
+            bail!("solver window must be >= 1 (a 0-length Anderson ring cannot hold history)");
+        }
+        if !self.tol.is_finite() || self.tol <= 0.0 {
+            bail!("solver tol must be a positive finite number, got {}", self.tol);
+        }
+        if self.max_iter == 0 {
+            bail!("solver max_iter must be >= 1 (a 0-iteration solve reports a NaN residual)");
+        }
+        if !self.lam.is_finite() || self.lam < 0.0 {
+            bail!("solver lam must be finite and >= 0, got {}", self.lam);
+        }
+        self.damping.validate()?;
+        self.stagnation.validate()?;
+        Ok(())
+    }
+
+    /// JSON object form (keys sorted by the serializer).  Floats render
+    /// in the shortest decimal form that round-trips the f32 exactly.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("damping", self.damping.to_json()),
+            ("fused_forward", Json::Bool(self.fused_forward)),
+            ("kind", json::s(self.kind.name())),
+            ("lam", f32_json(self.lam)),
+            ("max_fevals", json::num(self.max_fevals as f64)),
+            ("max_iter", json::num(self.max_iter as f64)),
+            (
+                "restart_on_breakdown",
+                Json::Bool(self.restart_on_breakdown),
+            ),
+            (
+                "stagnation",
+                json::obj(vec![
+                    ("eps", f32_json(self.stagnation.eps)),
+                    ("window", json::num(self.stagnation.window as f64)),
+                ]),
+            ),
+            ("tol", f32_json(self.tol)),
+            ("window", json::num(self.window as f64)),
+        ])
+    }
+
+    /// Parse and validate the JSON form.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind_name = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("SolveSpec missing 'kind'"))?;
+        let kind = SolverKind::parse(kind_name)
+            .ok_or_else(|| anyhow!("unknown solver kind '{kind_name}'"))?;
+        let num_f32 = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("SolveSpec missing '{key}'"))
+        };
+        let num_usize = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("SolveSpec missing '{key}'"))
+        };
+        let flag = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("SolveSpec missing '{key}'"))
+        };
+        let stag = v
+            .get("stagnation")
+            .ok_or_else(|| anyhow!("SolveSpec missing 'stagnation'"))?;
+        let spec = Self {
+            kind,
+            window: num_usize("window")?,
+            tol: num_f32("tol")?,
+            max_iter: num_usize("max_iter")?,
+            max_fevals: num_usize("max_fevals")?,
+            lam: num_f32("lam")?,
+            fused_forward: flag("fused_forward")?,
+            damping: Damping::from_json(
+                v.get("damping")
+                    .ok_or_else(|| anyhow!("SolveSpec missing 'damping'"))?,
+            )?,
+            stagnation: StagnationRule {
+                window: stag
+                    .get("window")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("stagnation missing 'window'"))?,
+                eps: stag
+                    .get("eps")
+                    .and_then(Json::as_f64)
+                    .map(|x| x as f32)
+                    .ok_or_else(|| anyhow!("stagnation missing 'eps'"))?,
+            },
+            restart_on_breakdown: flag("restart_on_breakdown")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Builder for [`SolveSpec`]: chainable setters, validation at `build()`.
+#[derive(Debug, Clone)]
+pub struct SolveSpecBuilder {
+    spec: SolveSpec,
+}
+
+impl SolveSpecBuilder {
+    pub fn kind(mut self, kind: SolverKind) -> Self {
+        self.spec.kind = kind;
+        self
+    }
+
+    pub fn window(mut self, m: usize) -> Self {
+        self.spec.window = m;
+        self
+    }
+
+    pub fn tol(mut self, tol: f32) -> Self {
+        self.spec.tol = tol;
+        self
+    }
+
+    pub fn max_iter(mut self, n: usize) -> Self {
+        self.spec.max_iter = n;
+        self
+    }
+
+    pub fn max_fevals(mut self, n: usize) -> Self {
+        self.spec.max_fevals = n;
+        self
+    }
+
+    pub fn lam(mut self, lam: f32) -> Self {
+        self.spec.lam = lam;
+        self
+    }
+
+    pub fn fused_forward(mut self, on: bool) -> Self {
+        self.spec.fused_forward = on;
+        self
+    }
+
+    pub fn damping(mut self, d: Damping) -> Self {
+        self.spec.damping = d;
+        self
+    }
+
+    pub fn stagnation(mut self, rule: StagnationRule) -> Self {
+        self.spec.stagnation = rule;
+        self
+    }
+
+    pub fn restart_on_breakdown(mut self, on: bool) -> Self {
+        self.spec.restart_on_breakdown = on;
+        self
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> Result<SolveSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+/// Per-request solver overrides, resolved against a server's default
+/// spec under [`SolveClamps`].  `None` fields inherit the default.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SolveOverrides {
+    pub kind: Option<SolverKind>,
+    pub tol: Option<f32>,
+    pub max_iter: Option<usize>,
+}
+
+impl SolveOverrides {
+    pub fn is_empty(&self) -> bool {
+        self.kind.is_none() && self.tol.is_none() && self.max_iter.is_none()
+    }
+
+    /// Resolve against `base` under `clamps`: overrides are validated
+    /// (so a malformed request errors at the door, not mid-batch), then
+    /// clamped into the operator's bounds — a client may *loosen* a
+    /// solve freely but can only tighten it down to `clamps.min_tol` /
+    /// up to `clamps.max_iter`, so one request cannot pin a lane.
+    pub fn apply(
+        &self,
+        base: &SolveSpec,
+        clamps: &SolveClamps,
+    ) -> Result<SolveSpec> {
+        let mut spec = base.clone();
+        if let Some(kind) = self.kind {
+            spec.kind = kind;
+        }
+        if let Some(tol) = self.tol {
+            if !tol.is_finite() || tol < 0.0 {
+                bail!("override tol must be a positive finite number, got {tol}");
+            }
+            // tol == 0 (including the f32 underflow of a tiny positive
+            // request) reads as "as tight as you allow": it clamps to
+            // the operator floor like any other too-tight request,
+            // rather than bouncing as malformed.
+            spec.tol = tol.max(clamps.min_tol);
+        }
+        if let Some(max_iter) = self.max_iter {
+            if max_iter == 0 {
+                bail!("override max_iter must be >= 1");
+            }
+            spec.max_iter = max_iter.min(clamps.max_iter);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Server-side bounds on per-request overrides: the operator's guardrail
+/// against a client requesting an unbounded solve (tol → 0 or a huge
+/// iteration cap would pin a scheduler lane for everyone else).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveClamps {
+    /// Tightest tolerance a request may ask for (override tols below
+    /// this are raised to it).
+    pub min_tol: f32,
+    /// Largest per-request iteration cap (override caps above this are
+    /// lowered to it).
+    pub max_iter: usize,
+}
+
+impl Default for SolveClamps {
+    fn default() -> Self {
+        Self { min_tol: 1e-6, max_iter: 500 }
+    }
+}
+
+impl SolveClamps {
+    /// Reject degenerate clamp settings with a descriptive error: a
+    /// non-positive or non-finite floor would silently disable the tol
+    /// clamp (NaN never wins an `f32::max`), and a zero iteration cap
+    /// would clamp every override into an invalid spec.
+    pub fn validate(&self) -> Result<()> {
+        if !self.min_tol.is_finite() || self.min_tol <= 0.0 {
+            bail!(
+                "clamps min_tol must be a positive finite number, got {}",
+                self.min_tol
+            );
+        }
+        if self.max_iter == 0 {
+            bail!("clamps max_iter must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// JSON number carrying an f32 exactly: the shortest decimal that
+/// round-trips the f32 (Rust's `{}` for f32) re-parsed as f64, so
+/// serialized specs read `0.01`, not `0.009999999776482582`.
+pub(crate) fn f32_json(v: f32) -> Json {
+    let text = format!("{v}");
+    Json::Num(text.parse::<f64>().unwrap_or(v as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SolveSpec {
+        SolveSpec::new(SolverKind::Anderson)
+    }
+
+    #[test]
+    fn defaults_validate() {
+        for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+            SolveSpec::new(kind).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_window() {
+        let spec = SolveSpec { window: 0, ..base() };
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("window must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_tol() {
+        for tol in [0.0f32, -1e-3, f32::NAN, f32::INFINITY] {
+            let spec = SolveSpec { tol, ..base() };
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains("tol must be"), "tol={tol}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_max_iter() {
+        let spec = SolveSpec { max_iter: 0, ..base() };
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("max_iter must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_negative_lam() {
+        for lam in [-1e-6f32, f32::NAN] {
+            let spec = SolveSpec { lam, ..base() };
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains("lam must be"), "lam={lam}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_damping_and_stagnation() {
+        for d in [
+            Damping::Constant(0.0),
+            Damping::Constant(1.5),
+            Damping::Anneal { from: 0.0, to: 0.5, decay: 0.9 },
+            Damping::Anneal { from: 1.0, to: 0.5, decay: 0.0 },
+        ] {
+            assert!(
+                SolveSpec { damping: d, ..base() }.validate().is_err(),
+                "{d:?} accepted"
+            );
+        }
+        let bad_stag = SolveSpec {
+            stagnation: StagnationRule { window: 0, eps: 0.0 },
+            ..base()
+        };
+        assert!(bad_stag.validate().is_err());
+    }
+
+    #[test]
+    fn builder_builds_and_rejects() {
+        let spec = SolveSpec::builder(SolverKind::Hybrid)
+            .window(3)
+            .tol(1e-3)
+            .max_iter(50)
+            .max_fevals(200)
+            .lam(1e-6)
+            .fused_forward(false)
+            .damping(Damping::Constant(0.5))
+            .stagnation(StagnationRule { window: 4, eps: 0.1 })
+            .restart_on_breakdown(true)
+            .build()
+            .unwrap();
+        assert_eq!(spec.kind, SolverKind::Hybrid);
+        assert_eq!(spec.window, 3);
+        assert_eq!(spec.stagnation.effective_window(spec.window), 4);
+        assert!(SolveSpec::builder(SolverKind::Forward).tol(-1.0).build().is_err());
+        // to_builder round-trips.
+        let again = spec.to_builder().build().unwrap();
+        assert_eq!(again, spec);
+    }
+
+    #[test]
+    fn damping_schedules() {
+        assert_eq!(Damping::Full.beta(7), 1.0);
+        assert_eq!(Damping::Constant(0.5).beta(3), 0.5);
+        let a = Damping::Anneal { from: 0.5, to: 1.0, decay: 0.5 };
+        assert!((a.beta(0) - 0.5).abs() < 1e-6);
+        assert!((a.beta(1) - 0.75).abs() < 1e-6);
+        assert!(a.beta(20) > 0.99);
+    }
+
+    #[test]
+    fn stagnation_window_resolution() {
+        assert_eq!(StagnationRule { window: 0, eps: 0.03 }.effective_window(5), 5);
+        assert_eq!(StagnationRule { window: 7, eps: 0.03 }.effective_window(5), 7);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let spec = SolveSpec {
+            kind: SolverKind::Hybrid,
+            window: 4,
+            tol: 1e-3,
+            max_iter: 60,
+            max_fevals: 120,
+            lam: 1e-5,
+            fused_forward: false,
+            damping: Damping::Anneal { from: 0.5, to: 1.0, decay: 0.75 },
+            stagnation: StagnationRule { window: 3, eps: 0.05 },
+            restart_on_breakdown: true,
+        };
+        let text = json::to_string(&spec.to_json());
+        let back = SolveSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        // Serialize → parse → serialize is byte-stable.
+        assert_eq!(json::to_string(&back.to_json()), text);
+    }
+
+    #[test]
+    fn json_form_is_readable() {
+        // The shortest-roundtrip float rendering keeps the wire form
+        // human-readable (no f32→f64 noise).
+        let text = json::to_string(&base().to_json());
+        assert!(text.contains("\"tol\":0.001"), "{text}");
+        assert!(text.contains("\"kind\":\"anderson\""), "{text}");
+        assert!(!text.contains("00000001"), "f32 noise leaked: {text}");
+    }
+
+    #[test]
+    fn json_rejects_degenerate_spec() {
+        let mut v = base().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("window".into(), Json::Num(0.0));
+        }
+        assert!(SolveSpec::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn clamps_validate_rejects_degenerate_bounds() {
+        SolveClamps::default().validate().unwrap();
+        for min_tol in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            let c = SolveClamps { min_tol, ..SolveClamps::default() };
+            assert!(c.validate().is_err(), "min_tol {min_tol} accepted");
+        }
+        let c = SolveClamps { max_iter: 0, ..SolveClamps::default() };
+        assert!(c.validate().unwrap_err().to_string().contains("max_iter"));
+    }
+
+    #[test]
+    fn overrides_apply_and_clamp() {
+        let base = base();
+        let clamps = SolveClamps { min_tol: 1e-5, max_iter: 100 };
+        // Empty overrides: identity.
+        let same = SolveOverrides::default().apply(&base, &clamps).unwrap();
+        assert_eq!(same, base);
+        // In-range overrides pass through.
+        let ov = SolveOverrides {
+            kind: Some(SolverKind::Forward),
+            tol: Some(0.5),
+            max_iter: Some(7),
+        };
+        let spec = ov.apply(&base, &clamps).unwrap();
+        assert_eq!(spec.kind, SolverKind::Forward);
+        assert_eq!(spec.tol, 0.5);
+        assert_eq!(spec.max_iter, 7);
+        // Out-of-bounds requests are clamped, not rejected.
+        let greedy = SolveOverrides {
+            kind: None,
+            tol: Some(1e-12),
+            max_iter: Some(1_000_000),
+        };
+        let spec = greedy.apply(&base, &clamps).unwrap();
+        assert_eq!(spec.tol, 1e-5);
+        assert_eq!(spec.max_iter, 100);
+        // tol 0 — e.g. the f32 underflow of a tiny positive request —
+        // clamps to the floor instead of bouncing as malformed.
+        let underflow = SolveOverrides { tol: Some(0.0), ..Default::default() };
+        assert_eq!(underflow.apply(&base, &clamps).unwrap().tol, 1e-5);
+        // Nonsense values are rejected with descriptive errors.
+        let bad_tol = SolveOverrides { tol: Some(-1.0), ..Default::default() };
+        assert!(bad_tol
+            .apply(&base, &clamps)
+            .unwrap_err()
+            .to_string()
+            .contains("override tol"));
+        let bad_iter =
+            SolveOverrides { max_iter: Some(0), ..Default::default() };
+        assert!(bad_iter
+            .apply(&base, &clamps)
+            .unwrap_err()
+            .to_string()
+            .contains("override max_iter"));
+    }
+}

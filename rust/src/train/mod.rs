@@ -22,7 +22,7 @@ use crate::data::{Batcher, Dataset};
 use crate::infer;
 use crate::model::ParamSet;
 use crate::runtime::{Backend, HostTensor};
-use crate::solver::{self, SolveOptions, SolverKind};
+use crate::solver::{self, SolveSpec, SolverKind};
 
 /// Which backward-pass artifact to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,7 +47,9 @@ impl Backward {
 pub struct TrainConfig {
     pub epochs: usize,
     pub batch: usize,
-    pub solver: SolveOptions,
+    /// Spec for the equilibrium solves inside training (forward pass of
+    /// every batch, plus the evaluation passes).
+    pub solver: SolveSpec,
     pub backward: Backward,
     pub seed: u64,
     /// Evaluate on the test set every `eval_every` epochs (0 = never).
@@ -160,8 +162,12 @@ impl<'e> Trainer<'e> {
                     self.engine.execute("encode", cfg.batch, &enc_in)?.remove(0);
 
                 // 2. equilibrium solve
-                let report =
-                    solver::solve(self.engine, &params.tensors, &x_feat, &cfg.solver)?;
+                let report = solver::solve_spec(
+                    self.engine,
+                    &params.tensors,
+                    &x_feat,
+                    &cfg.solver,
+                )?;
                 iters_sum += report.iters() as f32;
                 fevals_sum += report.fevals() as f32;
                 res_sum += report.final_residual();
@@ -351,7 +357,7 @@ impl<'e> Trainer<'e> {
 
 /// Default training config from the manifest + a solver kind.
 pub fn default_config(engine: &dyn Backend, kind: SolverKind, epochs: usize) -> TrainConfig {
-    let mut solver = SolveOptions::from_manifest(engine, kind);
+    let mut solver = SolveSpec::from_manifest(engine, kind);
     // Training solves are capped at 30 evaluations (Kolter et al.'s
     // reference uses 25-30): once the trained cell drifts toward the edge
     // of contractivity, both solvers plateau and further iterations only

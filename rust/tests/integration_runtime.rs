@@ -9,7 +9,7 @@ use std::sync::{Arc, OnceLock};
 use deq_anderson::model::ParamSet;
 use deq_anderson::native;
 use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
-use deq_anderson::solver::{self, SolveOptions, SolverKind};
+use deq_anderson::solver::{self, SolveSpec, SolverKind};
 use deq_anderson::util::rng::Rng;
 
 fn backend() -> &'static Arc<dyn Backend> {
@@ -248,12 +248,12 @@ fn solvers_reach_tolerance_on_init_params() {
     let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
 
     for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
-        let opts = SolveOptions {
+        let opts = SolveSpec {
             tol: 1e-2,
             max_iter: 80,
-            ..SolveOptions::from_manifest(e.as_ref(), kind)
+            ..SolveSpec::from_manifest(e.as_ref(), kind)
         };
-        let rep = solver::solve(e.as_ref(), &p.tensors, &xf, &opts).unwrap();
+        let rep = solver::solve_spec(e.as_ref(), &p.tensors, &xf, &opts).unwrap();
         assert!(
             rep.converged,
             "{}: residual {:.2e} after {} iters",
@@ -282,6 +282,61 @@ fn solvers_reach_tolerance_on_init_params() {
     }
 }
 
+/// The deprecated `SolveOptions`/`solve` shim must reproduce the
+/// `SolveSpec`/`solve_spec` path bit-identically — same step traces,
+/// per-sample counters and terminal iterate for all three kinds — so
+/// pre-redesign callers see unchanged results.
+#[test]
+#[allow(deprecated)]
+fn deprecated_solve_shim_is_bit_identical_to_solve_spec() {
+    use deq_anderson::solver::SolveOptions;
+    let e = backend();
+    let p = e.init_params().unwrap();
+    let meta = e.manifest().model.clone();
+    let batch = 4;
+    let mut rng = Rng::new(11);
+    let img = HostTensor::f32(
+        meta.image_shape(batch),
+        rng.normal_vec(batch * meta.image_dim(), 1.0),
+    )
+    .unwrap();
+    let mut enc_in = p.tensors.clone();
+    enc_in.push(img);
+    let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
+
+    for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+        let opts = SolveOptions {
+            tol: 1e-3,
+            max_iter: 40,
+            ..SolveOptions::from_manifest(e.as_ref(), kind)
+        };
+        let old = solver::solve(e.as_ref(), &p.tensors, &xf, &opts).unwrap();
+        let spec = SolveSpec {
+            tol: 1e-3,
+            max_iter: 40,
+            ..SolveSpec::from_manifest(e.as_ref(), kind)
+        };
+        let new = solver::solve_spec(e.as_ref(), &p.tensors, &xf, &spec).unwrap();
+        assert_eq!(old.kind, new.kind);
+        assert_eq!(old.converged, new.converged);
+        assert_eq!(old.steps.len(), new.steps.len(), "{kind:?} step counts");
+        for (a, b) in old.steps.iter().zip(&new.steps) {
+            assert_eq!(a.sample_residuals, b.sample_residuals, "{kind:?}");
+            assert_eq!(a.mixed, b.mixed, "{kind:?}");
+            assert_eq!(a.fevals, b.fevals, "{kind:?}");
+            assert_eq!(a.active, b.active, "{kind:?}");
+        }
+        assert_eq!(old.sample_iters, new.sample_iters);
+        assert_eq!(old.sample_fevals, new.sample_fevals);
+        assert_eq!(old.sample_converged, new.sample_converged);
+        assert_eq!(
+            old.z_star.f32s().unwrap(),
+            new.z_star.f32s().unwrap(),
+            "{kind:?} terminal iterates diverge"
+        );
+    }
+}
+
 #[test]
 fn anderson_uses_fewer_fevals_than_forward() {
     // The paper's core claim, measured on the selected backend at init.
@@ -300,13 +355,13 @@ fn anderson_uses_fewer_fevals_than_forward() {
     let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
 
     let solve = |kind| {
-        let opts = SolveOptions {
+        let opts = SolveSpec {
             tol: 2e-3,
             max_iter: 120,
             fused_forward: false,
-            ..SolveOptions::from_manifest(e.as_ref(), kind)
+            ..SolveSpec::from_manifest(e.as_ref(), kind)
         };
-        solver::solve(e.as_ref(), &p.tensors, &xf, &opts).unwrap()
+        solver::solve_spec(e.as_ref(), &p.tensors, &xf, &opts).unwrap()
     };
     let fw = solve(SolverKind::Forward);
     let an = solve(SolverKind::Anderson);

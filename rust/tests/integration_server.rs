@@ -14,7 +14,7 @@ use deq_anderson::data;
 use deq_anderson::infer;
 use deq_anderson::runtime::{backend_from_dir, Backend};
 use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
-use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::solver::{SolveClamps, SolveOverrides, SolveSpec, SolverKind};
 use deq_anderson::util::json::{self, Json};
 
 fn engine() -> Arc<dyn Backend> {
@@ -27,7 +27,8 @@ fn make_router(max_wait_ms: u64, mode: SchedMode) -> (Arc<Router>, usize) {
     let image_dim = engine.manifest().model.image_dim();
     let params = Arc::new(engine.init_params().unwrap());
     let cfg = RouterConfig {
-        solver: SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson),
+        solver: SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson),
+        clamps: SolveClamps::default(),
         mode,
         max_wait: Duration::from_millis(max_wait_ms),
         queue_cap: 256,
@@ -138,10 +139,10 @@ fn per_sample_early_exit_matches_batch_granular_solve() {
     // must charge strictly fewer fevals than lockstep accounting.
     let e = engine();
     let params = e.init_params().unwrap();
-    let opts = SolveOptions {
+    let opts = SolveSpec {
         tol: 1e-4,
         max_iter: 80,
-        ..SolveOptions::from_manifest(e.as_ref(), SolverKind::Anderson)
+        ..SolveSpec::from_manifest(e.as_ref(), SolverKind::Anderson)
     };
     for seed in 0..4u64 {
         let (data, _, _) = data::load_auto(8, 8, seed + 20);
@@ -304,4 +305,242 @@ fn router_shutdown_is_clean() {
     let (router, _) = make_router(5, SchedMode::IterationLevel);
     let router = Arc::try_unwrap(router).ok().expect("sole owner");
     router.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Per-request solver control (SolveSpec/SolveOverrides end to end)
+// ---------------------------------------------------------------------------
+
+/// The tentpole acceptance test: one iteration-level batch mixing
+/// different per-request tolerances.  Each lane must retire at *its own*
+/// tol — with correct per-sample `solver_iters` and `converged` — and
+/// the response must echo the effective spec the lane ran under.
+#[test]
+fn heterogeneous_tolerances_retire_each_lane_at_its_own_tol() {
+    let (router, _) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 13);
+    // One identical moderately-stiff image for every request, so lane
+    // retirement order is driven purely by the per-request tolerances.
+    let img = scaled(data.image(0), 0.2);
+    let loose = SolveOverrides { tol: Some(0.3), ..Default::default() };
+    let tight = SolveOverrides {
+        tol: Some(1e-4),
+        max_iter: Some(400),
+        ..Default::default()
+    };
+    let rx_loose = router.submit_with(img.clone(), &loose).unwrap();
+    let rx_mid = router.submit(img.clone()).unwrap(); // router default tol
+    let rx_tight = router.submit_with(img, &tight).unwrap();
+    let loose_r = rx_loose.recv().expect("reply").expect("loose response");
+    let mid_r = rx_mid.recv().expect("reply").expect("mid response");
+    let tight_r = rx_tight.recv().expect("reply").expect("tight response");
+
+    // Every lane converged at its own tolerance...
+    assert!(loose_r.converged, "loose lane did not converge");
+    assert!(mid_r.converged, "default lane did not converge");
+    assert!(tight_r.converged, "tight lane did not converge");
+    // ...and the responses echo the effective per-lane specs.
+    assert_eq!(loose_r.spec.tol, 0.3);
+    assert_eq!(tight_r.spec.tol, 1e-4);
+    assert_eq!(tight_r.spec.max_iter, 400);
+    assert!(
+        mid_r.spec.tol < loose_r.spec.tol && mid_r.spec.tol > tight_r.spec.tol,
+        "router default tol {} not between the overrides",
+        mid_r.spec.tol
+    );
+    // A lane retires the iteration it crosses ITS tol: looser lanes exit
+    // earlier on the same input.
+    assert!(
+        loose_r.solver_iters < tight_r.solver_iters,
+        "loose lane took {} iters, tight {} — per-lane tol retirement broken",
+        loose_r.solver_iters,
+        tight_r.solver_iters
+    );
+    assert!(loose_r.solver_iters <= mid_r.solver_iters);
+    assert!(mid_r.solver_iters <= tight_r.solver_iters);
+    // Per-sample accounting rides each lane's own counters.
+    assert_eq!(loose_r.solver_fevals, loose_r.solver_iters);
+    assert_eq!(tight_r.solver_fevals, tight_r.solver_iters);
+}
+
+/// A per-request `max_iter` override cuts a lane off at its own budget
+/// with `converged: false` and the true iteration count.
+#[test]
+fn max_iter_override_cuts_off_lane_unconverged() {
+    let (router, _) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 17);
+    let img = scaled(data.image(0), 0.03); // stiff: cannot hit 1e-5 in 3 iters
+    let ov = SolveOverrides {
+        tol: Some(1e-5),
+        max_iter: Some(3),
+        ..Default::default()
+    };
+    let resp = router.infer_blocking_with(img, &ov).unwrap();
+    assert_eq!(resp.solver_iters, 3, "lane ignored its max_iter budget");
+    assert!(!resp.converged, "3 stiff iterations cannot reach 1e-5");
+    assert_eq!(resp.spec.max_iter, 3);
+    assert_eq!(resp.spec.tol, 1e-5);
+}
+
+/// A per-request solver-kind override runs inside a router whose default
+/// is a different kind (heterogeneous policies in one lane set).
+#[test]
+fn solver_kind_override_serves_alongside_default_kind() {
+    let (router, _) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 19);
+    let img = scaled(data.image(0), 3.0);
+    let fwd = SolveOverrides {
+        kind: Some(SolverKind::Forward),
+        ..Default::default()
+    };
+    let rx_fwd = router.submit_with(img.clone(), &fwd).unwrap();
+    let rx_def = router.submit(img).unwrap();
+    let fwd_r = rx_fwd.recv().expect("reply").expect("forward response");
+    let def_r = rx_def.recv().expect("reply").expect("default response");
+    assert_eq!(fwd_r.spec.kind, SolverKind::Forward);
+    assert_eq!(def_r.spec.kind, SolverKind::Anderson);
+    assert!(fwd_r.converged && def_r.converged);
+    // Both policies converge to the same equilibrium: logits agree to
+    // tol-level slack (argmax equality is skipped — an untrained model
+    // can have sub-tol logit margins).
+    for (a, b) in fwd_r.logits.iter().zip(&def_r.logits) {
+        assert!((a - b).abs() < 5e-2, "logits diverged: {a} vs {b}");
+    }
+}
+
+/// Malformed overrides error at submission — synchronously, before any
+/// lane or batch is touched — and greedy ones are clamped, not rejected.
+#[test]
+fn overrides_validate_and_clamp_at_submission() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let bad_tol = SolveOverrides { tol: Some(-1.0), ..Default::default() };
+    let err = router
+        .submit_with(vec![0.0; dim], &bad_tol)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("override tol"), "unexpected error: {err}");
+    let bad_iter = SolveOverrides { max_iter: Some(0), ..Default::default() };
+    let err = router
+        .submit_with(vec![0.0; dim], &bad_iter)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("override max_iter"), "unexpected error: {err}");
+
+    // Greedy values clamp to the router's bounds (default clamps:
+    // min_tol 1e-6, max_iter 500) and the echo shows the clamp.
+    let (data, _, _) = data::load_auto(8, 8, 23);
+    let greedy = SolveOverrides {
+        tol: Some(1e-30),
+        max_iter: Some(1_000_000),
+        ..Default::default()
+    };
+    let resp = router
+        .infer_blocking_with(scaled(data.image(0), 3.0), &greedy)
+        .unwrap();
+    assert_eq!(resp.spec.tol, SolveClamps::default().min_tol);
+    assert_eq!(resp.spec.max_iter, SolveClamps::default().max_iter);
+}
+
+/// Per-request overrides also work through the batch-granular baseline:
+/// requests with distinct effective specs are solved as separate
+/// sub-batches, each billed by its own lockstep solve.
+#[test]
+fn batch_granular_mode_honors_per_request_specs() {
+    let (router, _) = make_router(25, SchedMode::BatchGranular);
+    let (data, _, _) = data::load_auto(8, 8, 29);
+    let img = scaled(data.image(0), 0.2);
+    let loose = SolveOverrides { tol: Some(0.3), ..Default::default() };
+    let rx_loose = router.submit_with(img.clone(), &loose).unwrap();
+    let rx_def = router.submit(img).unwrap();
+    let loose_r = rx_loose.recv().expect("reply").expect("loose response");
+    let def_r = rx_def.recv().expect("reply").expect("default response");
+    assert_eq!(loose_r.spec.tol, 0.3);
+    assert!(def_r.spec.tol < 0.3);
+    assert!(loose_r.converged && def_r.converged);
+    // The loose sub-batch stops at its looser tol.
+    assert!(loose_r.solver_iters <= def_r.solver_iters);
+}
+
+// ---------------------------------------------------------------------------
+// TCP protocol error paths: golden JSON replies
+// ---------------------------------------------------------------------------
+
+/// The exact JSON of every protocol error reply is part of the wire
+/// format.  If one of these fails because of an intentional message
+/// change, update the string here AND in the protocol docs — never relax
+/// the comparison.
+#[test]
+fn tcp_error_replies_are_golden() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let reply = |line: &str| json::to_string(&tcp::process_line(&router, dim, line));
+
+    // Malformed JSON (parser error, with byte offset).  The reply embeds
+    // the parser's message, with its inner quote JSON-escaped.
+    assert_eq!(
+        reply("{nope}"),
+        "{\"error\":\"malformed json: json parse error at byte 1: expected '\\\"', found Some('n')\"}"
+    );
+    // Missing image array.
+    assert_eq!(reply("{\"id\":1}"), "{\"error\":\"missing 'image' array\"}");
+    // Wrong image dimension.
+    assert_eq!(
+        reply("{\"image\":[1,2,3]}"),
+        format!("{{\"error\":\"image has 3 values, model wants {dim}\"}}")
+    );
+    // Unknown command.
+    assert_eq!(
+        reply("{\"cmd\":\"warp\"}"),
+        "{\"error\":\"unknown cmd 'warp'\"}"
+    );
+
+    // Override shape/value errors ride a correctly-sized image.
+    let zeros = vec!["0"; dim].join(",");
+    let with = |extra: &str| format!("{{\"image\":[{zeros}],{extra}}}");
+    assert_eq!(
+        reply(&with("\"solver\":\"warp\"")),
+        "{\"error\":\"unknown solver 'warp' (expected forward|anderson|hybrid)\"}"
+    );
+    assert_eq!(
+        reply(&with("\"solver\":7")),
+        "{\"error\":\"override 'solver' must be a string\"}"
+    );
+    assert_eq!(
+        reply(&with("\"tol\":\"tight\"")),
+        "{\"error\":\"override 'tol' must be a number\"}"
+    );
+    assert_eq!(
+        reply(&with("\"tol\":-0.5")),
+        "{\"error\":\"override tol must be a positive finite number, got -0.5\"}"
+    );
+    assert_eq!(
+        reply(&with("\"max_iter\":2.5")),
+        "{\"error\":\"override 'max_iter' must be a positive integer\"}"
+    );
+    assert_eq!(
+        reply(&with("\"max_iter\":0")),
+        "{\"error\":\"override 'max_iter' must be a positive integer\"}"
+    );
+}
+
+/// A successful TCP reply echoes the effective spec (dyadic override
+/// values, so the float rendering is exact).
+#[test]
+fn tcp_reply_echoes_effective_spec() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(4, 4, 31);
+    let img: Vec<String> =
+        scaled(data.image(0), 3.0).iter().map(|v| format!("{v:.4}")).collect();
+    let line = format!(
+        "{{\"id\":9,\"image\":[{}],\"solver\":\"forward\",\"tol\":0.25,\"max_iter\":7}}",
+        img.join(",")
+    );
+    let v = tcp::process_line(&router, dim, &line);
+    assert_eq!(v.get("error"), None, "unexpected error: {v:?}");
+    assert_eq!(v.get("id").and_then(Json::as_i64), Some(9));
+    assert_eq!(v.get("solver").and_then(Json::as_str), Some("forward"));
+    assert_eq!(v.get("tol").and_then(Json::as_f64), Some(0.25));
+    assert_eq!(v.get("max_iter").and_then(Json::as_i64), Some(7));
+    assert!(v.get("converged").and_then(Json::as_bool).is_some());
+    let iters = v.get("solver_iters").and_then(Json::as_i64).unwrap();
+    assert!((1..=7).contains(&iters), "iters {iters} escaped the override");
 }

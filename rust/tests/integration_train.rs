@@ -8,7 +8,7 @@ use std::sync::{Arc, OnceLock};
 use deq_anderson::data;
 use deq_anderson::infer;
 use deq_anderson::runtime::{backend_from_dir, Backend};
-use deq_anderson::solver::{SolveOptions, SolverKind};
+use deq_anderson::solver::{SolveSpec, SolverKind};
 use deq_anderson::train::{default_config, Backward, Trainer};
 
 fn backend() -> &'static Arc<dyn Backend> {
@@ -86,7 +86,7 @@ fn inference_pads_to_buckets() {
     let e = backend().as_ref();
     let params = e.init_params().unwrap();
     let (data, _, _) = data::load_auto(40, 8, 4);
-    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    let opts = SolveSpec::from_manifest(e, SolverKind::Anderson);
     // Sizes that are NOT compiled buckets must still work via padding.
     for n in [1usize, 3, 5, 8, 17, 32] {
         let idx: Vec<usize> = (0..n).collect();
@@ -110,7 +110,7 @@ fn padding_does_not_change_predictions() {
     let e = backend().as_ref();
     let params = e.init_params().unwrap();
     let (data, _, _) = data::load_auto(8, 8, 5);
-    let opts = SolveOptions::from_manifest(e, SolverKind::Forward);
+    let opts = SolveSpec::from_manifest(e, SolverKind::Forward);
     let (img1, _) = data.gather(&[0]);
     let r1 = infer::infer(e, &params, &img1, 1, &opts).unwrap();
     let (img3, _) = data.gather(&[0, 1, 2]);
@@ -125,7 +125,7 @@ fn evaluate_runs_on_test_set() {
     let e = backend().as_ref();
     let params = e.init_params().unwrap();
     let (_, test, _) = data::load_auto(32, 64, 6);
-    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    let opts = SolveSpec::from_manifest(e, SolverKind::Anderson);
     let acc = infer::evaluate(e, &params, &test, 32, &opts).unwrap();
     assert!((0.0..=1.0).contains(&acc));
     let acc_e = infer::evaluate_explicit(e, &params, &test, 32).unwrap();
@@ -142,7 +142,7 @@ fn evaluate_covers_tail_remainder() {
     let params = e.init_params().unwrap();
     let (_, test, _) = data::load_auto(16, 40, 7);
     assert_eq!(test.len(), 40);
-    let opts = SolveOptions::from_manifest(e, SolverKind::Anderson);
+    let opts = SolveSpec::from_manifest(e, SolverKind::Anderson);
     let acc32 = infer::evaluate(e, &params, &test, 32, &opts).unwrap();
     let acc8 = infer::evaluate(e, &params, &test, 8, &opts).unwrap();
     assert_eq!(acc32, acc8, "DEQ accuracy depends on batch chunking");

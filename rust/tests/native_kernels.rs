@@ -18,7 +18,7 @@ use deq_anderson::runtime::{
     Backend, HostTensor, NativeConfig, NativeEngine, SolverMeta,
 };
 use deq_anderson::server::{Router, RouterConfig, SchedMode};
-use deq_anderson::solver::{self, SolveOptions, SolverKind};
+use deq_anderson::solver::{self, SolveClamps, SolveSpec, SolverKind};
 use deq_anderson::util::rng::Rng;
 
 /// Blocked/parallel GEMM must agree with the naive oracle on shapes that
@@ -115,11 +115,11 @@ fn pooled_gemv_parity_across_thread_counts() {
     }
 }
 
-fn solve_opts(e: &NativeEngine, kind: SolverKind) -> SolveOptions {
-    SolveOptions {
+fn solve_opts(e: &NativeEngine, kind: SolverKind) -> SolveSpec {
+    SolveSpec {
         tol: 1e-4,
         max_iter: 40,
-        ..SolveOptions::from_manifest(e, kind)
+        ..SolveSpec::from_manifest(e, kind)
     }
 }
 
@@ -143,11 +143,11 @@ fn steady_state_solves_allocate_pack_and_spawn_nothing() {
         )
         .unwrap();
         let opts = solve_opts(&e, kind);
-        let warm_report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
+        let warm_report = solver::solve_spec(&e, &p.tensors, &x_feat, &opts).unwrap();
         assert!(warm_report.iters() > 0);
         let warm = e.workspace_stats();
         let warm_pool = e.pool_stats();
-        let report = solver::solve(&e, &p.tensors, &x_feat, &opts).unwrap();
+        let report = solver::solve_spec(&e, &p.tensors, &x_feat, &opts).unwrap();
         let after = e.workspace_stats();
         let after_pool = e.pool_stats();
         assert_eq!(
@@ -302,12 +302,13 @@ fn serving_survives_rank_deficient_window() {
     let dim = engine.manifest().model.image_dim();
     let params = Arc::new(engine.init_params().unwrap());
     let solver_opts =
-        SolveOptions::from_manifest(engine.as_ref(), SolverKind::Anderson);
+        SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson);
     let router = Router::start(
         engine,
         params,
         RouterConfig {
             solver: solver_opts,
+            clamps: SolveClamps::default(),
             mode: SchedMode::IterationLevel,
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
@@ -334,7 +335,7 @@ fn oversize_batch_is_rejected_explicitly() {
     let count = max_bucket + 8;
     let dim = e.manifest().model.image_dim();
     let images = vec![0.1f32; count * dim];
-    let opts = SolveOptions::from_manifest(&e, SolverKind::Forward);
+    let opts = SolveSpec::from_manifest(&e, SolverKind::Forward);
     let err = infer::infer(&e, &p, &images, count, &opts).unwrap_err();
     assert!(
         format!("{err:#}").contains("exceeds the largest compiled bucket"),
@@ -352,12 +353,13 @@ fn scheduler_steady_state_allocates_nothing() {
     let dim = engine.manifest().model.image_dim();
     let params = Arc::new(engine.init_params().unwrap());
     let solver_opts =
-        SolveOptions::from_manifest(engine.as_ref() as &dyn Backend, SolverKind::Anderson);
+        SolveSpec::from_manifest(engine.as_ref() as &dyn Backend, SolverKind::Anderson);
     let router = Router::start(
         engine,
         params,
         RouterConfig {
             solver: solver_opts,
+            clamps: SolveClamps::default(),
             mode: SchedMode::IterationLevel,
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
