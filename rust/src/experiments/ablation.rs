@@ -8,6 +8,10 @@
 //!      future-work stochastic Anderson variant [Wei et al. 2021].
 //!   C. backward mode JFB vs truncated-Neumann: short training runs from
 //!      the same init, loss trajectories compared.
+//!   D. adaptive (condition-monitored window + safeguarded step) vs
+//!      fixed-window Anderson on easy and stiff input mixes at equal
+//!      tolerance — fevals to convergence head-to-head, written to
+//!      `adaptive_vs_fixed.csv` (the CI deep-test job uploads it).
 
 use anyhow::Result;
 
@@ -174,5 +178,69 @@ pub fn run(engine: &dyn Backend, opts: &ExpOptions) -> Result<()> {
 
     csv.save(opts.out_dir.join("ablation.csv"))?;
     println!("[ablation] wrote {}", opts.out_dir.join("ablation.csv").display());
+
+    // ---- D. adaptive vs fixed Anderson on easy/stiff mixes -----------
+    // Stiffness is modulated the way the serving tests do: scaling the
+    // input image inflates the latent residuals and stretches the solve.
+    // Both policies run at the same tolerance on the same encoded
+    // features; the comparison is fevals to convergence.
+    println!("\n[ablation] D: adaptive vs fixed Anderson (easy/stiff inputs)");
+    let mut avf = Csv::new(&["policy", "load", "metric", "value"]);
+    let fixed = SolveSpec::from_manifest(engine, SolverKind::Anderson)
+        .to_builder()
+        .window(compiled_m)
+        .tol(2e-3)
+        .max_iter(120)
+        .build()?;
+    let adaptive = fixed
+        .clone()
+        .to_builder()
+        .adaptive_window(true)
+        .safeguard(true)
+        .errorfactor(1e3)
+        .cond_max(1e6)
+        .build()?;
+    println!(
+        "{:>10} {:>8} {:>8} {:>8} {:>14}",
+        "policy", "load", "iters", "fevals", "final_res"
+    );
+    for (load, scale) in [("easy", 1.0f32), ("stiff", 3.0)] {
+        let scaled: Vec<f32> = {
+            let (imgs, _) = train_data.gather(&idx);
+            imgs.iter().map(|v| v * scale).collect()
+        };
+        let x_img = HostTensor::f32(meta.image_shape(batch), scaled)?;
+        let mut enc_in = params.tensors.clone();
+        enc_in.push(x_img);
+        let feat = engine.execute("encode", batch, &enc_in)?.remove(0);
+        for (policy, spec) in [("fixed", &fixed), ("adaptive", &adaptive)] {
+            let rep = solver::solve_spec(engine, &params.tensors, &feat, spec)?;
+            println!(
+                "{:>10} {:>8} {:>8} {:>8} {:>14.3e}",
+                policy,
+                load,
+                rep.iters(),
+                rep.fevals(),
+                rep.final_residual()
+            );
+            for (metric, value) in [
+                ("iters", rep.iters().to_string()),
+                ("fevals", rep.fevals().to_string()),
+                ("final_res", format!("{:.6e}", rep.final_residual())),
+            ] {
+                avf.row(&[
+                    policy.into(),
+                    load.into(),
+                    metric.into(),
+                    value,
+                ]);
+            }
+        }
+    }
+    avf.save(opts.out_dir.join("adaptive_vs_fixed.csv"))?;
+    println!(
+        "[ablation] wrote {}",
+        opts.out_dir.join("adaptive_vs_fixed.csv").display()
+    );
     Ok(())
 }

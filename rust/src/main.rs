@@ -55,6 +55,8 @@ solver flags (train/infer/serve, built into a SolveSpec):
   --solver KIND  --window N  --tol F  --max-iter N  --max-fevals N
   --stagnation-eps F  --no-fused-forward  --damping-beta F
   --restart-on-breakdown
+  --adaptive-window  --errorfactor F  --cond-max F  --safeguard
+                    (condition-monitored window + safeguarded mixed step)
 common flags: --artifacts DIR  --backend auto|native|pjrt  --out DIR
               --seed N  --quiet
 ";
@@ -88,7 +90,11 @@ fn apply_solver_flags(args: &Args, base: SolveSpec) -> Result<SolveSpec> {
         .fused_forward(base.fused_forward && !args.has("no-fused-forward"))
         .restart_on_breakdown(
             args.has("restart-on-breakdown") || base.restart_on_breakdown,
-        );
+        )
+        .adaptive_window(args.has("adaptive-window") || base.adaptive_window)
+        .errorfactor(args.f32_or("errorfactor", base.errorfactor))
+        .cond_max(args.f32_or("cond-max", base.cond_max))
+        .safeguard(args.has("safeguard") || base.safeguard);
     if args.has("damping-beta") {
         b = b.damping(Damping::Constant(args.f32_or("damping-beta", 1.0)));
     }

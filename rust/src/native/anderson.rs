@@ -98,6 +98,26 @@ pub fn mix_masked_window(
     }
 }
 
+/// Condition estimate of the Tikhonov-regularized Anderson system
+/// `H + λI` over residual rows `g` ((k, n), row-major): the same
+/// Gram-then-Cholesky sequence [`mix_masked_window`] performs for the
+/// solve, reused by the adaptive-window monitors in
+/// `crate::solver::anderson` to decide when to truncate history (drop
+/// largest-residual iterates while the estimate exceeds the spec's
+/// `cond_max`).  Returns `INFINITY` when Cholesky rejects the system.
+pub fn window_cond_estimate(g: &[f32], k: usize, n: usize, lam: f32) -> f32 {
+    if k == 0 {
+        return 1.0;
+    }
+    debug_assert_eq!(g.len(), k * n);
+    let mut h = vec![0.0f32; k * k];
+    linalg::gram(g, k, n, &mut h);
+    for i in 0..k {
+        h[i * k + i] += lam;
+    }
+    linalg::spd_cond_estimate(&mut h, k)
+}
+
 /// A vector-valued fixed-point problem z = f(z).
 pub trait FixedPointMap {
     fn dim(&self) -> usize;

@@ -19,8 +19,8 @@ pub mod workspace;
 
 pub use stochastic::{solve_stochastic, StochasticOpts};
 pub use anderson::{
-    rel_residual, solve_anderson, solve_forward, AndersonOpts, AndersonState,
-    FixedPointMap, IterRecord, SolveTrace,
+    rel_residual, solve_anderson, solve_forward, window_cond_estimate,
+    AndersonOpts, AndersonState, FixedPointMap, IterRecord, SolveTrace,
 };
 pub use pack::PackedB;
 pub use pool::{PoolStats, WorkerPool};

@@ -11,10 +11,15 @@
 //!
 //! Every [`Request`] carries its own **effective [`SolveSpec`]**: the
 //! router's default spec, with the client's [`SolveOverrides`] (solver
-//! kind, tol, max_iter) applied under the operator's [`SolveClamps`]
-//! (min tol, max iteration cap) — resolved and validated at submission,
-//! so a malformed override errors at the door and a greedy one cannot
-//! pin a lane.  The [`Response`] echoes the spec the solve actually ran.
+//! kind, tol, max_iter, plus the adaptivity knobs `adaptive_window` /
+//! `errorfactor` / `cond_max` / `safeguard`) applied under the
+//! operator's [`SolveClamps`] (min tol, max iteration cap) — resolved
+//! and validated at submission, so a malformed override errors at the
+//! door and a greedy one cannot pin a lane.  The adaptivity knobs are
+//! validated but unclamped: adaptation only ever *shrinks* a lane's
+//! effective window, so heterogeneous buckets can mix adaptive and
+//! fixed-window lanes freely.  The [`Response`] echoes the spec the
+//! solve actually ran.
 //!
 //! Two scheduling modes ([`SchedMode`]):
 //!

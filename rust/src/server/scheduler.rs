@@ -378,6 +378,13 @@ fn serve_loop(
                         cell_inputs[z_slot].row_f32(i)?,
                         f.row_f32(i)?,
                     );
+                    // Per-lane window adaptation: adaptive policies
+                    // prune this lane's ring (overwrite-with-newest —
+                    // the mask is shared bucket-wide) before the mix;
+                    // fixed-window lanes return None and are untouched.
+                    if let Some(rule) = lane.policy.window_rule() {
+                        hist.adapt_lane(i, rule, cfg.solver.lam);
+                    }
                     mix_mask[i] = true;
                 }
                 LaneStep::Restart => {

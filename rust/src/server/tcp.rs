@@ -3,21 +3,30 @@
 //! Protocol (one JSON object per line):
 //!   request:  {"id": <any>, "image": [f32; hw*hw*c]}
 //!             with optional per-request solver overrides:
-//!               "solver":   "forward" | "anderson" | "hybrid"
-//!               "tol":      <positive number>
-//!               "max_iter": <positive integer>
+//!               "solver":      "forward" | "anderson" | "hybrid"
+//!               "tol":         <positive number>
+//!               "max_iter":    <positive integer>
+//!               "adaptive":    <bool>   (condition-monitored window)
+//!               "safeguard":   <bool>   (damped fallback on a bad mix)
+//!               "errorfactor": <number > 1>
+//!               "cond_max":    <number ≥ 1>
 //!             (overrides resolve against the server's default spec under
 //!              its clamps — min tol, max iteration cap — so a request
 //!              can loosen a solve freely but only tighten it within the
-//!              operator's bounds)
+//!              operator's bounds; the adaptivity knobs are validated but
+//!              unclamped, since adaptation only ever *shrinks* a lane's
+//!              effective window)
 //!             {"cmd": "stats"}    → server metrics
 //!             {"cmd": "ping"}     → {"ok": true}
 //!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n,
 //!              "solver_iters": k, "solver_fevals": k, "converged": b,
-//!              "solver": "...", "tol": t, "max_iter": m}
+//!              "solver": "...", "tol": t, "max_iter": m,
+//!              "adaptive": b, "safeguard": b, "errorfactor": f,
+//!              "cond_max": c}
 //!             (iteration-level scheduling: solver_iters/fevals are this
-//!              sample's own counts, not the batch's; solver/tol/max_iter
-//!              echo the *effective* spec the solve ran under)
+//!              sample's own counts, not the batch's; the solver/tol/
+//!              max_iter/adaptivity fields echo the *effective* spec the
+//!              solve ran under)
 //!             {"error": "..."}    on malformed input or shutdown
 //!
 //! Error replies are part of the wire format: their exact JSON is pinned
@@ -99,6 +108,30 @@ fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
         }
         ov.max_iter = Some(x as usize);
     }
+    if let Some(v) = parsed.get("adaptive") {
+        let on = v.as_bool().ok_or_else(|| {
+            "override 'adaptive' must be a boolean".to_string()
+        })?;
+        ov.adaptive_window = Some(on);
+    }
+    if let Some(v) = parsed.get("safeguard") {
+        let on = v.as_bool().ok_or_else(|| {
+            "override 'safeguard' must be a boolean".to_string()
+        })?;
+        ov.safeguard = Some(on);
+    }
+    if let Some(v) = parsed.get("errorfactor") {
+        let f = v.as_f64().ok_or_else(|| {
+            "override 'errorfactor' must be a number".to_string()
+        })?;
+        ov.errorfactor = Some(f as f32);
+    }
+    if let Some(v) = parsed.get("cond_max") {
+        let c = v.as_f64().ok_or_else(|| {
+            "override 'cond_max' must be a number".to_string()
+        })?;
+        ov.cond_max = Some(c as f32);
+    }
     Ok(ov)
 }
 
@@ -178,6 +211,10 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                 ("solver", json::s(resp.spec.kind.name())),
                 ("tol", f32_json(resp.spec.tol)),
                 ("max_iter", json::num(resp.spec.max_iter as f64)),
+                ("adaptive", Json::Bool(resp.spec.adaptive_window)),
+                ("safeguard", Json::Bool(resp.spec.safeguard)),
+                ("errorfactor", f32_json(resp.spec.errorfactor)),
+                ("cond_max", f32_json(resp.spec.cond_max)),
             ];
             if let Some(id) = parsed.get("id") {
                 pairs.push(("id", id.clone()));

@@ -19,6 +19,32 @@
 use anyhow::Result;
 
 use crate::runtime::HostTensor;
+use crate::solver::policy::WindowRule;
+
+/// Outcome of one window-adaptation pass ([`History::adapt`] /
+/// [`LaneHistory::adapt_lane`]): which ring slots were dropped, and by
+/// which criterion.  The split matters to the property-test harness —
+/// residual-bound drops must each violate the errorfactor criterion,
+/// while condition drops must leave the Gram estimate at or below the
+/// ceiling (or a single-entry window).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdaptOutcome {
+    /// Slots still feeding the mix after adaptation (always ≥ 1).
+    pub kept: usize,
+    /// Slots dropped because their residual norm exceeded
+    /// `errorfactor × min_i ‖f(x_i) − x_i‖`.
+    pub dropped_resid: Vec<usize>,
+    /// Slots dropped (largest residual first) to bring the regularized
+    /// Gram condition estimate under `cond_max`.
+    pub dropped_cond: Vec<usize>,
+}
+
+impl AdaptOutcome {
+    /// Total slots dropped this pass.
+    pub fn dropped(&self) -> usize {
+        self.dropped_resid.len() + self.dropped_cond.len()
+    }
+}
 
 /// Ring-buffer history for batched Anderson over flattened latents.
 ///
@@ -34,6 +60,15 @@ pub struct History {
     xhist: Vec<f32>,
     fhist: Vec<f32>,
     count: usize,
+    /// Per (sample, slot) residual norm ‖f(z) − z‖₂ recorded at push
+    /// time — the bookkeeping behind [`Self::adapt`].
+    norms: Vec<f32>,
+    /// Per-slot keep flags from the last [`Self::adapt`] pass.  The
+    /// kernel mask punches holes where `keep` is false (the engine's
+    /// masked solve accepts non-prefix masks).  All-true when adaptation
+    /// never runs — the mask then degenerates to the plain valid-prefix
+    /// and fixed-window traces stay bit-identical.
+    keep: Vec<bool>,
 }
 
 impl History {
@@ -52,11 +87,21 @@ impl History {
             xhist: vec![0.0; batch * slots * n],
             fhist: vec![0.0; batch * slots * n],
             count: 0,
+            norms: vec![0.0; batch * slots],
+            keep: vec![true; slots],
         }
     }
 
     pub fn valid(&self) -> usize {
         self.count.min(self.m)
+    }
+
+    /// The ring slot holding the most recently pushed pair.  Only
+    /// meaningful once something was pushed; the adaptation pass uses it
+    /// to guarantee the newest iterate is never dropped.
+    pub fn newest_slot(&self) -> usize {
+        debug_assert!(self.count > 0);
+        (self.count + self.m - 1) % self.m
     }
 
     /// Forget the whole window (restart-on-breakdown): zero the rings
@@ -66,6 +111,8 @@ impl History {
         self.xhist.fill(0.0);
         self.fhist.fill(0.0);
         self.count = 0;
+        self.norms.fill(0.0);
+        self.keep.fill(true);
     }
 
     /// Record (z, f(z)) — both flat (batch * n).
@@ -91,15 +138,102 @@ impl History {
             self.xhist[dst..dst + self.n].copy_from_slice(&z[src..src + self.n]);
             self.fhist[dst..dst + self.n]
                 .copy_from_slice(&fz[src..src + self.n]);
+            let mut acc = 0.0f32;
+            for (zi, fi) in z[src..src + self.n].iter().zip(&fz[src..src + self.n])
+            {
+                let d = fi - zi;
+                acc += d * d;
+            }
+            self.norms[b * self.slots + slot] = acc.sqrt();
         }
         self.count += 1;
     }
 
-    /// Mask vector over the padded slots: 1.0 for valid ring entries.
+    /// Condition-monitored window adaptation: recompute the per-slot
+    /// keep flags for the current ring from scratch —
+    ///
+    ///  1. drop slots whose cohort residual norm (max over the batch —
+    ///     the worst lane decides) exceeds `rule.errorfactor ×` the
+    ///     smallest cohort norm in the window;
+    ///  2. while the regularized Gram system over the kept slots
+    ///     (residual rows flattened across the cohort, `G Gᵀ + λI`) has
+    ///     condition estimate above `rule.cond_max`, drop the kept slot
+    ///     with the largest cohort norm.
+    ///
+    /// The newest slot is never dropped, so the window never empties.
+    /// Call after `push_where` and before `fill_tensors`, once per mix.
+    pub fn adapt(&mut self, rule: WindowRule, lam: f32) -> AdaptOutcome {
+        let nv = self.valid();
+        self.keep.fill(true);
+        let mut out = AdaptOutcome { kept: nv, ..Default::default() };
+        if nv <= 1 {
+            return out;
+        }
+        let newest = self.newest_slot();
+        // Cohort norm per slot: the worst sample in the batch decides.
+        let mut sn = vec![0.0f32; nv];
+        for (i, v) in sn.iter_mut().enumerate() {
+            for b in 0..self.batch {
+                *v = v.max(self.norms[b * self.slots + i]);
+            }
+        }
+        let min = sn.iter().cloned().fold(f32::INFINITY, f32::min);
+        for i in 0..nv {
+            if i != newest && sn[i] > rule.errorfactor * min {
+                self.keep[i] = false;
+                out.dropped_resid.push(i);
+            }
+        }
+        // Condition ceiling over the surviving slots.
+        let row = self.batch * self.n;
+        let mut g: Vec<f32> = Vec::new();
+        loop {
+            let kept: Vec<usize> = (0..nv).filter(|&i| self.keep[i]).collect();
+            out.kept = kept.len();
+            if kept.len() <= 1 {
+                break;
+            }
+            g.clear();
+            g.resize(kept.len() * row, 0.0);
+            for (r, &i) in kept.iter().enumerate() {
+                for b in 0..self.batch {
+                    let src = (b * self.slots + i) * self.n;
+                    let dst = (r * self.batch + b) * self.n;
+                    for p in 0..self.n {
+                        g[dst + p] = self.fhist[src + p] - self.xhist[src + p];
+                    }
+                }
+            }
+            let cond =
+                crate::native::window_cond_estimate(&g, kept.len(), row, lam);
+            if cond <= rule.cond_max {
+                break;
+            }
+            let victim = kept
+                .iter()
+                .cloned()
+                .filter(|&i| i != newest)
+                .max_by(|&a, &b| sn[a].total_cmp(&sn[b]));
+            match victim {
+                Some(v) => {
+                    self.keep[v] = false;
+                    out.dropped_cond.push(v);
+                }
+                // Only the newest slot is left in violation — keep it;
+                // a one-entry window cannot be truncated further.
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Mask vector over the padded slots: 1.0 for valid ring entries the
+    /// last adaptation pass kept (all valid entries when adaptation
+    /// never ran).
     pub fn mask(&self) -> Vec<f32> {
         let nv = self.valid();
         (0..self.slots)
-            .map(|i| if i < nv { 1.0 } else { 0.0 })
+            .map(|i| if i < nv && self.keep[i] { 1.0 } else { 0.0 })
             .collect()
     }
 
@@ -122,18 +256,31 @@ impl History {
         fh: &mut HostTensor,
         mask: &mut HostTensor,
     ) -> Result<()> {
-        fill_window(&self.xhist, &self.fhist, self.valid(), self.slots, xh, fh, mask)
+        fill_window(
+            &self.xhist,
+            &self.fhist,
+            self.valid(),
+            self.slots,
+            Some(&self.keep),
+            xh,
+            fh,
+            mask,
+        )
     }
 }
 
 /// Shared copy core of `History::fill_tensors` / `LaneHistory::fill_tensors`:
 /// copy the flat windows into preallocated tensors and rewrite the mask
-/// with `nv` valid slots.
+/// with `nv` valid slots.  `keep` (when given) punches per-slot holes
+/// into the valid prefix — the adaptive-window path; `None` keeps the
+/// plain prefix mask.
+#[allow(clippy::too_many_arguments)]
 fn fill_window(
     xhist: &[f32],
     fhist: &[f32],
     nv: usize,
     slots: usize,
+    keep: Option<&[bool]>,
     xh: &mut HostTensor,
     fh: &mut HostTensor,
     mask: &mut HostTensor,
@@ -161,7 +308,8 @@ fn fill_window(
         md.len()
     );
     for (i, v) in md.iter_mut().enumerate() {
-        *v = if i < nv { 1.0 } else { 0.0 };
+        let kept = keep.map(|k| k[i]).unwrap_or(true);
+        *v = if i < nv && kept { 1.0 } else { 0.0 };
     }
     Ok(())
 }
@@ -187,6 +335,17 @@ pub struct LaneHistory {
     fhist: Vec<f32>,
     /// Per-lane push count (0 = empty ring).
     count: Vec<usize>,
+    /// Per (lane, slot) residual norm ‖f(z) − z‖₂ at push time.
+    norms: Vec<f32>,
+    /// Per (lane, slot) liveness: true only for slots holding a
+    /// *distinct* recorded pair — admission-seed replicas and
+    /// adapt-dropped slots are not live.  Only live slots feed the
+    /// condition monitor; the kernel mask always spans all `m` effective
+    /// slots, because duplicate rows mix exactly like admission seeding
+    /// (equal weight spread over copies of the newest pair = a damped
+    /// step component), which is what lets per-lane adaptation coexist
+    /// with the bucket's *shared* mask vector.
+    live: Vec<bool>,
 }
 
 impl LaneHistory {
@@ -201,12 +360,28 @@ impl LaneHistory {
             xhist: vec![0.0; lanes * slots * n],
             fhist: vec![0.0; lanes * slots * n],
             count: vec![0; lanes],
+            norms: vec![0.0; lanes * slots],
+            live: vec![false; lanes * slots],
         }
     }
 
     /// Valid ring entries for one lane.
     pub fn valid(&self, lane: usize) -> usize {
         self.count[lane].min(self.m)
+    }
+
+    /// Slots of one lane holding distinct (non-replica, non-dropped)
+    /// pairs — what the condition monitor actually sees.
+    pub fn live_slots(&self, lane: usize) -> Vec<usize> {
+        let base = lane * self.slots;
+        (0..self.m).filter(|&i| self.live[base + i]).collect()
+    }
+
+    /// The ring slot holding a lane's most recent pair (requires at
+    /// least one push).
+    pub fn newest_slot(&self, lane: usize) -> usize {
+        debug_assert!(self.count[lane] > 0);
+        (self.count[lane] + self.m - 1) % self.m
     }
 
     /// Forget a lane's window (on admit and on retire).
@@ -216,6 +391,9 @@ impl LaneHistory {
         let len = self.slots * self.n;
         self.xhist[base..base + len].fill(0.0);
         self.fhist[base..base + len].fill(0.0);
+        let sb = lane * self.slots;
+        self.norms[sb..sb + self.slots].fill(0.0);
+        self.live[sb..sb + self.slots].fill(false);
     }
 
     /// Record a lane's (z, f(z)) pair.  The first push seeds every slot
@@ -224,19 +402,123 @@ impl LaneHistory {
     pub fn push_lane(&mut self, lane: usize, z: &[f32], fz: &[f32]) {
         assert_eq!(z.len(), self.n);
         assert_eq!(fz.len(), self.n);
+        let mut acc = 0.0f32;
+        for (zi, fi) in z.iter().zip(fz) {
+            let d = fi - zi;
+            acc += d * d;
+        }
+        let norm = acc.sqrt();
+        let sb = lane * self.slots;
         if self.count[lane] == 0 {
             for slot in 0..self.m {
                 let dst = (lane * self.slots + slot) * self.n;
                 self.xhist[dst..dst + self.n].copy_from_slice(z);
                 self.fhist[dst..dst + self.n].copy_from_slice(fz);
+                self.norms[sb + slot] = norm;
+                // Only the written slot is distinct; the replicas are
+                // seeding artifacts the condition monitor must ignore.
+                self.live[sb + slot] = slot == 0;
             }
         } else {
             let slot = self.count[lane] % self.m;
             let dst = (lane * self.slots + slot) * self.n;
             self.xhist[dst..dst + self.n].copy_from_slice(z);
             self.fhist[dst..dst + self.n].copy_from_slice(fz);
+            self.norms[sb + slot] = norm;
+            self.live[sb + slot] = true;
         }
         self.count[lane] += 1;
+    }
+
+    /// Per-lane condition-monitored window adaptation — the
+    /// [`History::adapt`] twin for the iteration-level scheduler, where
+    /// the kernel mask is *shared* across heterogeneous lanes and cannot
+    /// carry per-lane holes.  Dropping a slot here therefore means
+    /// overwriting it with the lane's newest pair (the admission-seeding
+    /// replication idiom) and marking it not-live:
+    ///
+    ///  1. live slots whose residual norm exceeds `rule.errorfactor ×`
+    ///     the smallest live norm are dropped;
+    ///  2. while the lane's regularized Gram estimate over live slots
+    ///     exceeds `rule.cond_max`, the largest-norm live slot drops.
+    ///
+    /// The newest slot is never dropped; a lane always keeps ≥ 1 live
+    /// slot.  Call after `push_lane` and before `fill_tensors`.
+    pub fn adapt_lane(
+        &mut self,
+        lane: usize,
+        rule: WindowRule,
+        lam: f32,
+    ) -> AdaptOutcome {
+        let base = lane * self.slots;
+        let live: Vec<usize> = self.live_slots(lane);
+        let mut out =
+            AdaptOutcome { kept: live.len().max(1), ..Default::default() };
+        if self.count[lane] == 0 || live.len() <= 1 {
+            return out;
+        }
+        let newest = self.newest_slot(lane);
+        let min = live
+            .iter()
+            .map(|&i| self.norms[base + i])
+            .fold(f32::INFINITY, f32::min);
+        for &i in &live {
+            if i != newest && self.norms[base + i] > rule.errorfactor * min {
+                self.drop_slot(lane, i, newest);
+                out.dropped_resid.push(i);
+            }
+        }
+        let mut g: Vec<f32> = Vec::new();
+        loop {
+            let kept = self.live_slots(lane);
+            out.kept = kept.len();
+            if kept.len() <= 1 {
+                break;
+            }
+            g.clear();
+            g.resize(kept.len() * self.n, 0.0);
+            for (r, &i) in kept.iter().enumerate() {
+                let src = (base + i) * self.n;
+                for p in 0..self.n {
+                    g[r * self.n + p] = self.fhist[src + p] - self.xhist[src + p];
+                }
+            }
+            let cond =
+                crate::native::window_cond_estimate(&g, kept.len(), self.n, lam);
+            if cond <= rule.cond_max {
+                break;
+            }
+            let victim = kept
+                .iter()
+                .cloned()
+                .filter(|&i| i != newest)
+                .max_by(|&a, &b| {
+                    self.norms[base + a].total_cmp(&self.norms[base + b])
+                });
+            match victim {
+                Some(v) => {
+                    self.drop_slot(lane, v, newest);
+                    out.dropped_cond.push(v);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Drop one slot of a lane: overwrite it with the lane's newest pair
+    /// and mark it not-live.  The shared mask keeps covering the slot —
+    /// the duplicate row just spreads mixing weight onto the newest
+    /// iterate, exactly like admission seeding.
+    fn drop_slot(&mut self, lane: usize, slot: usize, newest: usize) {
+        debug_assert_ne!(slot, newest);
+        let src = (lane * self.slots + newest) * self.n;
+        let dst = (lane * self.slots + slot) * self.n;
+        self.xhist.copy_within(src..src + self.n, dst);
+        self.fhist.copy_within(src..src + self.n, dst);
+        let base = lane * self.slots;
+        self.norms[base + slot] = self.norms[base + newest];
+        self.live[base + slot] = false;
     }
 
     /// Materialize the (lanes, slots, n) history tensors + shared mask
@@ -262,7 +544,16 @@ impl LaneHistory {
         fh: &mut HostTensor,
         mask: &mut HostTensor,
     ) -> Result<()> {
-        fill_window(&self.xhist, &self.fhist, self.m, self.slots, xh, fh, mask)
+        fill_window(
+            &self.xhist,
+            &self.fhist,
+            self.m,
+            self.slots,
+            None,
+            xh,
+            fh,
+            mask,
+        )
     }
 }
 
@@ -427,5 +718,128 @@ mod tests {
         let (xh, _, _) = h.tensors().unwrap();
         assert_eq!(&xh.f32s().unwrap()[0..2], &[0.0, 0.0]);
         assert_eq!(h.valid(1), 1);
+    }
+
+    /// Push a pair whose residual f − z has the requested norm.
+    fn push_with_norm(h: &mut History, norm: f32, dir: usize) {
+        let n = 3;
+        let mut z = vec![0.0; n];
+        let mut f = vec![0.0; n];
+        z[dir % n] = 1.0;
+        f[dir % n] = 1.0 + norm;
+        h.push(&z, &f);
+    }
+
+    #[test]
+    fn history_adapt_drops_only_errorfactor_violators() {
+        let rule = WindowRule { errorfactor: 10.0, cond_max: f32::INFINITY };
+        let mut h = History::new(1, 4, 3);
+        // Norms 1, 100, 2, 3 in distinct directions (well conditioned).
+        for (k, norm) in [1.0, 100.0, 2.0, 3.0].into_iter().enumerate() {
+            push_with_norm(&mut h, norm, k);
+        }
+        let out = h.adapt(rule, 1e-3);
+        assert_eq!(out.dropped_resid, vec![1]);
+        assert!(out.dropped_cond.is_empty());
+        assert_eq!(out.kept, 3);
+        assert_eq!(h.mask(), vec![1.0, 0.0, 1.0, 1.0]);
+        // The pass is recomputed from scratch: pushing a fresh pair into
+        // the dropped slot re-validates it on the next adapt.
+        push_with_norm(&mut h, 1.5, 4); // wraps into slot 0
+        push_with_norm(&mut h, 1.2, 5); // slot 1 — overwrites the outlier
+        let out = h.adapt(rule, 1e-3);
+        assert_eq!(out.dropped(), 0);
+        assert_eq!(h.mask(), vec![1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn history_adapt_cond_truncation_keeps_newest_and_never_empties() {
+        // Three nearly-parallel residual rows: condition estimate blows
+        // up, so the ceiling truncates — but the newest slot survives
+        // and the window stays non-empty even under an impossible cap.
+        let rule = WindowRule { errorfactor: 1e6, cond_max: 1.5 };
+        let mut h = History::new(1, 3, 2);
+        for (norm, eps) in [(1.0f32, 0.0f32), (1.01, 1e-4), (0.99, 2e-4)] {
+            h.push(&[0.0, 0.0], &[norm, eps]);
+        }
+        let out = h.adapt(rule, 1e-6);
+        assert!(out.dropped_resid.is_empty());
+        assert!(!out.dropped_cond.is_empty());
+        assert!(out.kept >= 1);
+        let newest = h.newest_slot();
+        assert_eq!(newest, 2);
+        assert_eq!(h.mask()[newest], 1.0);
+        assert!(h.mask().iter().sum::<f32>() >= 1.0);
+    }
+
+    #[test]
+    fn history_adapt_noop_matches_fixed_mask() {
+        // Well-conditioned, similar-norm history: adaptation keeps
+        // everything and the mask equals the fixed-window prefix.
+        let rule = WindowRule { errorfactor: 1e4, cond_max: 1e6 };
+        let mut h = History::new(2, 3, 4);
+        for k in 0..3 {
+            let z = vec![0.1 * k as f32; 8];
+            let f = vec![0.1 * k as f32 + 0.5; 8];
+            h.push(&z, &f);
+        }
+        let fixed = h.mask();
+        let out = h.adapt(rule, 1e-3);
+        assert_eq!(out.dropped(), 0);
+        assert_eq!(h.mask(), fixed);
+    }
+
+    #[test]
+    fn lane_adapt_drops_by_overwriting_with_newest() {
+        let rule = WindowRule { errorfactor: 10.0, cond_max: f32::INFINITY };
+        let mut h = LaneHistory::new(2, 3, 3, 2);
+        // Lane 0: norms 1 (seed), 50 (outlier), 2 (newest) in distinct
+        // directions.
+        h.push_lane(0, &[0.0, 0.0], &[1.0, 0.0]);
+        h.push_lane(0, &[0.0, 0.0], &[0.0, 50.0]);
+        h.push_lane(0, &[0.0, 0.0], &[2.0, 0.1]);
+        assert_eq!(h.live_slots(0), vec![0, 1, 2]);
+        let newest = h.newest_slot(0);
+        assert_eq!(newest, 2);
+        let out = h.adapt_lane(0, rule, 1e-3);
+        assert_eq!(out.dropped_resid, vec![1]);
+        assert_eq!(out.kept, 2);
+        assert_eq!(h.live_slots(0), vec![0, 2]);
+        // The dropped slot now replicates the newest pair, and the
+        // shared mask still spans the full effective window.
+        let (xh, fh, mask) = h.tensors().unwrap();
+        assert_eq!(mask.f32s().unwrap(), &[1.0, 1.0, 1.0]);
+        let x = xh.f32s().unwrap();
+        let f = fh.f32s().unwrap();
+        assert_eq!(&x[2..4], &x[4..6]);
+        assert_eq!(&f[2..4], &[2.0, 0.1]);
+        // Lane 1 untouched by lane 0's adaptation.
+        assert_eq!(h.valid(1), 0);
+        assert!(h.live_slots(1).is_empty());
+        // Pushing into the dropped slot (ring wraps 3 → slot 0, 4 →
+        // slot 1) revives it.
+        h.push_lane(0, &[0.0, 0.0], &[1.5, 0.0]);
+        h.push_lane(0, &[0.0, 0.0], &[1.4, 0.2]);
+        assert_eq!(h.live_slots(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lane_adapt_ignores_seed_replicas_and_keeps_one_slot() {
+        // A freshly seeded lane has m replicated rows — rank one, which
+        // naive condition monitoring would read as catastrophic.  The
+        // live-slot accounting must see exactly one distinct entry and
+        // leave the lane alone.
+        let rule = WindowRule { errorfactor: 2.0, cond_max: 1.0 + 1e-3 };
+        let mut h = LaneHistory::new(1, 4, 4, 3);
+        h.push_lane(0, &[0.0; 3], &[1.0, 2.0, 3.0]);
+        assert_eq!(h.live_slots(0), vec![0]);
+        let out = h.adapt_lane(0, rule, 1e-3);
+        assert_eq!(out.kept, 1);
+        assert_eq!(out.dropped(), 0);
+        // Even with hostile knobs a lane never loses its last live slot.
+        h.push_lane(0, &[0.0; 3], &[1.0 + 1e-4, 2.0, 3.0]);
+        let out = h.adapt_lane(0, rule, 1e-8);
+        assert!(out.kept >= 1);
+        assert!(h.live_slots(0).contains(&h.newest_slot(0)));
     }
 }

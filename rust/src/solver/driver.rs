@@ -227,6 +227,14 @@ pub fn drive<P: SolvePolicy + ?Sized>(
                     f.f32s()?,
                     &track.active_mask(),
                 );
+                // Adaptive policies prune the window before the mix:
+                // the keep-mask holes reach the kernel through the mask
+                // tensor.  Fixed-window policies return None and the
+                // packed mask stays the plain valid-prefix, keeping
+                // their traces bit-identical.
+                if let Some(rule) = policy.window_rule() {
+                    hist.adapt(rule, spec.lam);
+                }
                 {
                     let [xh, fh, mask] = &mut *and_inputs;
                     hist.fill_tensors(xh, fh, mask)?;

@@ -43,13 +43,15 @@ use anyhow::{anyhow, Result};
 use crate::runtime::{Backend, HostTensor};
 use crate::util::json::{self, Json};
 
+pub use anderson::AdaptOutcome;
 pub use driver::{drive, solve_spec};
 pub use policy::{
-    policy_for, AndersonPolicy, ForwardPolicy, LaneStep, SolvePolicy,
+    policy_for, AdaptiveAndersonPolicy, AndersonPolicy, ForwardPolicy,
+    LaneStep, SolvePolicy, WindowRule,
 };
 pub use spec::{
     Damping, SolveClamps, SolveOverrides, SolveSpec, SolveSpecBuilder,
-    StagnationRule,
+    StagnationRule, DEFAULT_COND_MAX, DEFAULT_ERRORFACTOR,
 };
 
 /// Which solver to use.
@@ -130,6 +132,10 @@ impl From<SolveOptions> for SolveSpec {
             damping: Damping::Full,
             stagnation: StagnationRule { window: 0, eps: o.stagnation_eps },
             restart_on_breakdown: false,
+            adaptive_window: false,
+            errorfactor: spec::DEFAULT_ERRORFACTOR,
+            cond_max: spec::DEFAULT_COND_MAX,
+            safeguard: false,
         }
     }
 }

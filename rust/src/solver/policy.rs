@@ -52,6 +52,31 @@ impl LaneStep {
     }
 }
 
+/// Window-adaptation parameters a policy asks its caller to apply to the
+/// lane's history before each mix (see
+/// [`History::adapt`](crate::solver::anderson::History::adapt) /
+/// [`LaneHistory::adapt_lane`](crate::solver::anderson::LaneHistory::adapt_lane)).
+/// Policies stay cheap state machines — the ring buffers and their
+/// residual-norm bookkeeping live with the caller, so the rule is plain
+/// data rather than a tensor-touching callback.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowRule {
+    /// Drop history iterates whose residual norm exceeds
+    /// `errorfactor × min_i ‖f(x_i) − x_i‖`.
+    pub errorfactor: f32,
+    /// Truncate (largest residual first) while the regularized Gram
+    /// system's condition estimate exceeds this ceiling.
+    pub cond_max: f32,
+}
+
+impl WindowRule {
+    /// The rule a spec describes (regardless of whether the spec arms
+    /// adaptivity — gating on `adaptive_window` is the policy's job).
+    pub fn from_spec(spec: &SolveSpec) -> Self {
+        Self { errorfactor: spec.errorfactor, cond_max: spec.cond_max }
+    }
+}
+
 /// One lane's (or one batch cohort's) solve policy.
 ///
 /// The driver owns the loop — evaluate, observe residuals, freeze
@@ -92,6 +117,14 @@ pub trait SolvePolicy {
     /// decide the lane's next update.  Called once per iteration per
     /// active lane, *not* for frozen (converged) lanes.
     fn observe(&mut self, rel: f32) -> LaneStep;
+
+    /// Window adaptation the caller should apply to the lane's history
+    /// before each mix; `None` (the default) leaves the window fixed.
+    /// Fixed-window policies never override this, which is what keeps
+    /// their traces bit-identical to the pre-adaptivity drivers.
+    fn window_rule(&self) -> Option<WindowRule> {
+        None
+    }
 }
 
 /// Detect stagnation over the trailing `window` residuals: returns true
@@ -271,13 +304,177 @@ impl SolvePolicy for AndersonPolicy {
     }
 }
 
+/// Condition-monitored adaptive Anderson: the safety mechanisms that
+/// "Stable Anderson Acceleration for Deep Learning" (Lupo Pasini et al.)
+/// and Saad's condition-monitored truncation add on top of fixed-window
+/// mixing, as one policy:
+///
+///  * **adaptive window** — via [`SolvePolicy::window_rule`] the caller
+///    prunes the lane's history before each mix: iterates whose residual
+///    norm exceeds `errorfactor × min_i ‖f(x_i) − x_i‖` are dropped, and
+///    the window truncates (largest residual first, newest never) while
+///    the regularized Gram system's condition estimate exceeds
+///    `cond_max`;
+///  * **safeguarded step** — when a mixed step fails to reduce the
+///    residual, the next update is the plain damped step from the newest
+///    iterate (the history window is *kept*, unlike
+///    `restart_on_breakdown`), after which mixing resumes;
+///  * the stagnation fallback and restart-on-breakdown of
+///    [`AndersonPolicy`] still compose: stagnation drops the lane to
+///    forward steps permanently, and when the safeguard is *not* armed a
+///    post-mix residual rise restarts the window instead.
+///
+/// `kind()` still reports `anderson`/`hybrid` — adaptivity is an
+/// orthogonal property of the spec (`adaptive_window` / `safeguard`),
+/// not a new solver kind, so the serving wire format's solver-name
+/// namespace is unchanged.
+#[derive(Debug, Clone)]
+pub struct AdaptiveAndersonPolicy {
+    /// `(window, eps)` when the stagnation fallback is armed (hybrid).
+    stagnation: Option<(usize, f32)>,
+    restart_on_breakdown: bool,
+    safeguard: bool,
+    /// `Some` when the spec armed the condition-monitored window.
+    rule: Option<WindowRule>,
+    damping: Damping,
+    residuals: Vec<f32>,
+    prev: Option<f32>,
+    /// False once the stagnation rule dropped this lane to forward steps.
+    mixing: bool,
+    /// True while the *last* emitted step was a mix — the safeguard only
+    /// judges mixed steps, not its own fallback steps.
+    last_mixed: bool,
+    fwd_steps: usize,
+    safeguard_steps: usize,
+}
+
+impl AdaptiveAndersonPolicy {
+    /// Build from a spec: stagnation is armed for `Hybrid` kind, the
+    /// window rule when `adaptive_window` is set, the safeguarded step
+    /// when `safeguard` is set.
+    pub fn new(spec: &SolveSpec) -> Self {
+        Self {
+            stagnation: (spec.kind == SolverKind::Hybrid).then(|| {
+                (spec.stagnation.effective_window(spec.window), spec.stagnation.eps)
+            }),
+            restart_on_breakdown: spec.restart_on_breakdown,
+            safeguard: spec.safeguard,
+            rule: spec.adaptive_window.then(|| WindowRule::from_spec(spec)),
+            damping: spec.damping,
+            residuals: Vec::new(),
+            prev: None,
+            mixing: true,
+            last_mixed: false,
+            fwd_steps: 0,
+            safeguard_steps: 0,
+        }
+    }
+
+    /// True while the lane is still Anderson-mixing.
+    pub fn is_mixing(&self) -> bool {
+        self.mixing
+    }
+
+    /// Safeguarded (post-mix fallback) steps taken so far — property
+    /// tests pin that each one is exactly the plain damped step.
+    pub fn safeguard_steps(&self) -> usize {
+        self.safeguard_steps
+    }
+}
+
+impl SolvePolicy for AdaptiveAndersonPolicy {
+    fn kind(&self) -> SolverKind {
+        if self.stagnation.is_some() {
+            SolverKind::Hybrid
+        } else {
+            SolverKind::Anderson
+        }
+    }
+
+    fn uses_history(&self) -> bool {
+        true
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+        self.prev = None;
+        self.mixing = true;
+        self.last_mixed = false;
+        self.fwd_steps = 0;
+        self.safeguard_steps = 0;
+    }
+
+    fn observe(&mut self, rel: f32) -> LaneStep {
+        let prev = self.prev.replace(rel);
+        let rose = prev.map(|p| rel > p).unwrap_or(false);
+        if self.mixing && self.last_mixed && rose {
+            if self.safeguard {
+                // The mixed step did not reduce the residual: fall back
+                // to the plain damped step from the newest iterate.  The
+                // window survives — one bad combination is not evidence
+                // the whole history is stale.
+                if self.stagnation.is_some() {
+                    // Keep the trajectory: stagnation judges the lane on
+                    // the next mixed step.
+                    self.residuals.push(rel);
+                }
+                self.last_mixed = false;
+                self.safeguard_steps += 1;
+                let beta = self.damping.beta(self.fwd_steps);
+                self.fwd_steps += 1;
+                return LaneStep::Forward { beta };
+            }
+            if self.restart_on_breakdown {
+                self.residuals.clear();
+                self.residuals.push(rel);
+                self.last_mixed = true;
+                return LaneStep::Restart;
+            }
+        }
+        if self.mixing {
+            if let Some((window, eps)) = self.stagnation {
+                self.residuals.push(rel);
+                if stagnated(&self.residuals, window, eps) {
+                    self.mixing = false;
+                    self.residuals = Vec::new();
+                }
+            }
+        }
+        if self.mixing {
+            self.last_mixed = true;
+            LaneStep::Mix
+        } else {
+            self.last_mixed = false;
+            let beta = self.damping.beta(self.fwd_steps);
+            self.fwd_steps += 1;
+            LaneStep::Forward { beta }
+        }
+    }
+
+    fn window_rule(&self) -> Option<WindowRule> {
+        if self.mixing {
+            self.rule
+        } else {
+            None
+        }
+    }
+}
+
 /// Build the policy a spec describes.  One instance covers one lane (the
 /// scheduler) or one whole-batch cohort (the batch driver, which feeds
 /// the cohort's max residual so the batch crosses over together — the
-/// pre-redesign hybrid semantics).
+/// pre-redesign hybrid semantics).  Anderson-family specs with either
+/// adaptivity knob armed (`adaptive_window` / `safeguard`) get the
+/// [`AdaptiveAndersonPolicy`]; default knobs keep the fixed-window
+/// policies (and their bit-identical traces).
 pub fn policy_for(spec: &SolveSpec) -> Box<dyn SolvePolicy + Send> {
     match spec.kind {
         SolverKind::Forward => Box::new(ForwardPolicy::new(spec)),
+        SolverKind::Anderson | SolverKind::Hybrid
+            if spec.adaptive_window || spec.safeguard =>
+        {
+            Box::new(AdaptiveAndersonPolicy::new(spec))
+        }
         SolverKind::Anderson => Box::new(AndersonPolicy::new(spec)),
         SolverKind::Hybrid => Box::new(AndersonPolicy::hybrid(spec)),
     }
@@ -418,5 +615,108 @@ mod tests {
         assert!(LaneStep::Mix.mixes());
         assert!(LaneStep::Restart.mixes());
         assert!(!LaneStep::Forward { beta: 1.0 }.mixes());
+    }
+
+    #[test]
+    fn policy_for_dispatches_adaptive_on_knobs() {
+        // Default knobs keep the fixed-window policies (bit-identical
+        // traces), either adaptivity knob upgrades without changing the
+        // reported kind.
+        for kind in [SolverKind::Anderson, SolverKind::Hybrid] {
+            let fixed = SolveSpec::new(kind);
+            assert!(policy_for(&fixed).window_rule().is_none());
+            let adaptive =
+                SolveSpec { adaptive_window: true, ..SolveSpec::new(kind) };
+            let p = policy_for(&adaptive);
+            assert_eq!(p.kind(), kind);
+            assert_eq!(
+                p.window_rule(),
+                Some(WindowRule::from_spec(&adaptive))
+            );
+            let safe = SolveSpec { safeguard: true, ..SolveSpec::new(kind) };
+            let p = policy_for(&safe);
+            assert_eq!(p.kind(), kind);
+            // Safeguard alone leaves the window fixed.
+            assert!(p.window_rule().is_none());
+        }
+        // Forward specs ignore the knobs entirely.
+        let fwd = SolveSpec {
+            adaptive_window: true,
+            safeguard: true,
+            ..SolveSpec::new(SolverKind::Forward)
+        };
+        assert_eq!(policy_for(&fwd).kind(), SolverKind::Forward);
+    }
+
+    #[test]
+    fn safeguard_takes_damped_step_and_resumes_mixing() {
+        let spec = SolveSpec {
+            safeguard: true,
+            restart_on_breakdown: true, // safeguard must take precedence
+            ..SolveSpec::new(SolverKind::Anderson)
+        };
+        let mut p = AdaptiveAndersonPolicy::new(&spec);
+        assert_eq!(p.observe(1.0), LaneStep::Mix);
+        assert_eq!(p.observe(0.5), LaneStep::Mix);
+        // A mixed step made the residual rise: plain damped step, window
+        // kept (no Restart even though restart_on_breakdown is armed).
+        assert_eq!(p.observe(0.8), LaneStep::Forward { beta: 1.0 });
+        assert_eq!(p.safeguard_steps(), 1);
+        // The safeguard never judges its own forward step — even a rise
+        // after it goes back to mixing.
+        assert_eq!(p.observe(0.9), LaneStep::Mix);
+        // ... but the next post-mix rise safeguards again.
+        assert_eq!(p.observe(1.1), LaneStep::Forward { beta: 1.0 });
+        assert_eq!(p.safeguard_steps(), 2);
+    }
+
+    #[test]
+    fn adaptive_without_safeguard_still_restarts_on_breakdown() {
+        let spec = SolveSpec {
+            adaptive_window: true,
+            restart_on_breakdown: true,
+            ..SolveSpec::new(SolverKind::Anderson)
+        };
+        let mut p = AdaptiveAndersonPolicy::new(&spec);
+        assert_eq!(p.observe(1.0), LaneStep::Mix);
+        assert_eq!(p.observe(0.5), LaneStep::Mix);
+        assert_eq!(p.observe(0.8), LaneStep::Restart);
+        assert_eq!(p.observe(0.4), LaneStep::Mix);
+    }
+
+    #[test]
+    fn adaptive_hybrid_stagnation_disarms_window_rule() {
+        let spec = SolveSpec {
+            window: 3,
+            adaptive_window: true,
+            stagnation: StagnationRule { window: 0, eps: 0.05 },
+            ..SolveSpec::new(SolverKind::Hybrid)
+        };
+        let mut p = AdaptiveAndersonPolicy::new(&spec);
+        assert_eq!(p.kind(), SolverKind::Hybrid);
+        assert!(p.window_rule().is_some());
+        for k in 0..4 {
+            assert_eq!(p.observe(0.5f32.powi(k)), LaneStep::Mix, "iter {k}");
+        }
+        let mut fell_back = false;
+        // Descend slowly enough that no step ever *rises* (which would
+        // trip the safeguard-less breakdown path) while the windowed
+        // best still stagnates.
+        for k in 0..10 {
+            match p.observe(0.06 - 1e-4 * k as f32) {
+                LaneStep::Forward { .. } => fell_back = true,
+                LaneStep::Mix => {
+                    assert!(!fell_back, "resumed mixing after stagnation")
+                }
+                LaneStep::Restart => panic!("restart without breakdown arm"),
+            }
+        }
+        assert!(fell_back, "flat trajectory never stagnated");
+        // Once the lane stops mixing, window adaptation stops with it.
+        assert!(p.window_rule().is_none());
+        p.reset();
+        assert!(p.is_mixing());
+        assert!(p.window_rule().is_some());
+        assert_eq!(p.safeguard_steps(), 0);
     }
 }

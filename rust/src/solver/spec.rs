@@ -204,7 +204,36 @@ pub struct SolveSpec {
     /// mixed step (windowed-restart safeguarding; Saad, *Acceleration
     /// methods for fixed point iterations*, catalogs the family).
     pub restart_on_breakdown: bool,
+    /// Condition-monitored adaptive window (DFTK-style): before each mix
+    /// the window drops history iterates whose residual norm exceeds
+    /// `errorfactor × min_i ‖f(x_i) − x_i‖` and truncates further while
+    /// the regularized Gram system's condition estimate exceeds
+    /// `cond_max` (largest-residual iterates go first; the newest iterate
+    /// is never dropped).  Off by default — the fixed-window policies and
+    /// their bit-exact traces are untouched.
+    pub adaptive_window: bool,
+    /// Residual-spread bound for the adaptive window (must be > 1;
+    /// consulted only when `adaptive_window` is set).  CDLS21 suggests
+    /// 1e4 as a robust default.
+    pub errorfactor: f32,
+    /// Condition-estimate ceiling for the adaptive window (must be ≥ 1;
+    /// consulted only when `adaptive_window` is set).
+    pub cond_max: f32,
+    /// Safeguarded mixing (Lupo Pasini et al., *Stable Anderson
+    /// Acceleration for Deep Learning*): when a mixed step fails to
+    /// reduce the residual, take the plain damped step from the newest
+    /// iterate instead of mixing again, then resume.  Unlike
+    /// `restart_on_breakdown` the history window is kept.  When both are
+    /// armed the safeguard wins (it is the gentler recovery).
+    pub safeguard: bool,
 }
+
+/// Default residual-spread bound for the adaptive window (CDLS21's
+/// robust choice; DFTK ships 1e5 for SCF mixing).
+pub const DEFAULT_ERRORFACTOR: f32 = 1e4;
+/// Default condition-estimate ceiling for the adaptive window (DFTK's
+/// default for the Anderson system).
+pub const DEFAULT_COND_MAX: f32 = 1e6;
 
 impl SolveSpec {
     /// Backend defaults for a solver kind (the manifest's SolverMeta).
@@ -221,6 +250,10 @@ impl SolveSpec {
             damping: Damping::Full,
             stagnation: StagnationRule::default(),
             restart_on_breakdown: false,
+            adaptive_window: false,
+            errorfactor: DEFAULT_ERRORFACTOR,
+            cond_max: DEFAULT_COND_MAX,
+            safeguard: false,
         }
     }
 
@@ -237,6 +270,10 @@ impl SolveSpec {
             damping: Damping::Full,
             stagnation: StagnationRule::default(),
             restart_on_breakdown: false,
+            adaptive_window: false,
+            errorfactor: DEFAULT_ERRORFACTOR,
+            cond_max: DEFAULT_COND_MAX,
+            safeguard: false,
         }
     }
 
@@ -269,6 +306,20 @@ impl SolveSpec {
         }
         self.damping.validate()?;
         self.stagnation.validate()?;
+        if !self.errorfactor.is_finite() || self.errorfactor <= 1.0 {
+            bail!(
+                "solver errorfactor must be a finite number > 1 \
+                 (a bound ≤ 1 would drop the minimum-residual iterate itself), got {}",
+                self.errorfactor
+            );
+        }
+        if !self.cond_max.is_finite() || self.cond_max < 1.0 {
+            bail!(
+                "solver cond_max must be a finite number >= 1 \
+                 (an SPD system's condition number is never below 1), got {}",
+                self.cond_max
+            );
+        }
         Ok(())
     }
 
@@ -276,7 +327,11 @@ impl SolveSpec {
     /// in the shortest decimal form that round-trips the f32 exactly.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
+            ("adaptive_window", Json::Bool(self.adaptive_window)),
+            ("cond_max", f32_json(self.cond_max)),
             ("damping", self.damping.to_json()),
+            ("errorfactor", f32_json(self.errorfactor)),
+            ("safeguard", Json::Bool(self.safeguard)),
             ("fused_forward", Json::Bool(self.fused_forward)),
             ("kind", json::s(self.kind.name())),
             ("lam", f32_json(self.lam)),
@@ -299,6 +354,11 @@ impl SolveSpec {
     }
 
     /// Parse and validate the JSON form.
+    ///
+    /// The adaptivity fields (`adaptive_window`, `errorfactor`,
+    /// `cond_max`, `safeguard`) are *optional* and default to the
+    /// fixed-policy values when absent, so specs serialized before the
+    /// adaptive policies existed keep parsing unchanged.
     pub fn from_json(v: &Json) -> Result<Self> {
         let kind_name = v
             .get("kind")
@@ -349,6 +409,24 @@ impl SolveSpec {
                     .ok_or_else(|| anyhow!("stagnation missing 'eps'"))?,
             },
             restart_on_breakdown: flag("restart_on_breakdown")?,
+            adaptive_window: v
+                .get("adaptive_window")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            errorfactor: v
+                .get("errorfactor")
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .unwrap_or(DEFAULT_ERRORFACTOR),
+            cond_max: v
+                .get("cond_max")
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .unwrap_or(DEFAULT_COND_MAX),
+            safeguard: v
+                .get("safeguard")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
         };
         spec.validate()?;
         Ok(spec)
@@ -412,6 +490,26 @@ impl SolveSpecBuilder {
         self
     }
 
+    pub fn adaptive_window(mut self, on: bool) -> Self {
+        self.spec.adaptive_window = on;
+        self
+    }
+
+    pub fn errorfactor(mut self, f: f32) -> Self {
+        self.spec.errorfactor = f;
+        self
+    }
+
+    pub fn cond_max(mut self, c: f32) -> Self {
+        self.spec.cond_max = c;
+        self
+    }
+
+    pub fn safeguard(mut self, on: bool) -> Self {
+        self.spec.safeguard = on;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<SolveSpec> {
         self.spec.validate()?;
@@ -426,11 +524,26 @@ pub struct SolveOverrides {
     pub kind: Option<SolverKind>,
     pub tol: Option<f32>,
     pub max_iter: Option<usize>,
+    /// Arm (or disarm) the condition-monitored adaptive window.  The
+    /// adaptivity knobs are validated but not clamped: shrinking a
+    /// window only *reduces* a lane's per-iteration cost, so they are
+    /// not a resource-pinning vector the way `tol`/`max_iter` are.
+    pub adaptive_window: Option<bool>,
+    pub errorfactor: Option<f32>,
+    pub cond_max: Option<f32>,
+    /// Arm (or disarm) the safeguarded mixed step.
+    pub safeguard: Option<bool>,
 }
 
 impl SolveOverrides {
     pub fn is_empty(&self) -> bool {
-        self.kind.is_none() && self.tol.is_none() && self.max_iter.is_none()
+        self.kind.is_none()
+            && self.tol.is_none()
+            && self.max_iter.is_none()
+            && self.adaptive_window.is_none()
+            && self.errorfactor.is_none()
+            && self.cond_max.is_none()
+            && self.safeguard.is_none()
     }
 
     /// Resolve against `base` under `clamps`: overrides are validated
@@ -462,6 +575,24 @@ impl SolveOverrides {
                 bail!("override max_iter must be >= 1");
             }
             spec.max_iter = max_iter.min(clamps.max_iter);
+        }
+        if let Some(on) = self.adaptive_window {
+            spec.adaptive_window = on;
+        }
+        if let Some(f) = self.errorfactor {
+            if !f.is_finite() || f <= 1.0 {
+                bail!("override errorfactor must be a finite number > 1, got {f}");
+            }
+            spec.errorfactor = f;
+        }
+        if let Some(c) = self.cond_max {
+            if !c.is_finite() || c < 1.0 {
+                bail!("override cond_max must be a finite number >= 1, got {c}");
+            }
+            spec.cond_max = c;
+        }
+        if let Some(on) = self.safeguard {
+            spec.safeguard = on;
         }
         spec.validate()?;
         Ok(spec)
@@ -633,6 +764,10 @@ mod tests {
             damping: Damping::Anneal { from: 0.5, to: 1.0, decay: 0.75 },
             stagnation: StagnationRule { window: 3, eps: 0.05 },
             restart_on_breakdown: true,
+            adaptive_window: true,
+            errorfactor: 1e3,
+            cond_max: 1e8,
+            safeguard: true,
         };
         let text = json::to_string(&spec.to_json());
         let back = SolveSpec::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -649,6 +784,79 @@ mod tests {
         assert!(text.contains("\"tol\":0.001"), "{text}");
         assert!(text.contains("\"kind\":\"anderson\""), "{text}");
         assert!(!text.contains("00000001"), "f32 noise leaked: {text}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_adaptivity_knobs() {
+        for ef in [1.0f32, 0.5, -3.0, f32::NAN, f32::INFINITY] {
+            let spec = SolveSpec { errorfactor: ef, ..base() };
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains("errorfactor"), "ef={ef}: {err}");
+        }
+        for cm in [0.5f32, -1.0, f32::NAN, f32::INFINITY] {
+            let spec = SolveSpec { cond_max: cm, ..base() };
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains("cond_max"), "cm={cm}: {err}");
+        }
+        // The bounds themselves apply whether or not adaptivity is
+        // armed — a spec is either valid data or not.
+        let armed = SolveSpec { adaptive_window: true, ..base() };
+        armed.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_sets_adaptivity_knobs() {
+        let spec = SolveSpec::builder(SolverKind::Anderson)
+            .adaptive_window(true)
+            .errorfactor(500.0)
+            .cond_max(1e7)
+            .safeguard(true)
+            .build()
+            .unwrap();
+        assert!(spec.adaptive_window);
+        assert_eq!(spec.errorfactor, 500.0);
+        assert_eq!(spec.cond_max, 1e7);
+        assert!(spec.safeguard);
+        assert!(SolveSpec::builder(SolverKind::Anderson)
+            .errorfactor(1.0)
+            .build()
+            .is_err());
+        assert!(SolveSpec::builder(SolverKind::Anderson)
+            .cond_max(0.0)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn overrides_apply_adaptivity_knobs() {
+        let base = base();
+        let clamps = SolveClamps::default();
+        let ov = SolveOverrides {
+            adaptive_window: Some(true),
+            errorfactor: Some(250.0),
+            cond_max: Some(1e5),
+            safeguard: Some(true),
+            ..Default::default()
+        };
+        assert!(!ov.is_empty());
+        let spec = ov.apply(&base, &clamps).unwrap();
+        assert!(spec.adaptive_window);
+        assert_eq!(spec.errorfactor, 250.0);
+        assert_eq!(spec.cond_max, 1e5);
+        assert!(spec.safeguard);
+        // Value errors bounce at the door with descriptive messages.
+        let bad = SolveOverrides { errorfactor: Some(1.0), ..Default::default() };
+        assert!(bad
+            .apply(&base, &clamps)
+            .unwrap_err()
+            .to_string()
+            .contains("override errorfactor"));
+        let bad = SolveOverrides { cond_max: Some(0.5), ..Default::default() };
+        assert!(bad
+            .apply(&base, &clamps)
+            .unwrap_err()
+            .to_string()
+            .contains("override cond_max"));
     }
 
     #[test]

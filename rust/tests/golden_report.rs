@@ -13,7 +13,10 @@
 use std::time::Duration;
 
 use deq_anderson::runtime::HostTensor;
-use deq_anderson::solver::{SolveReport, SolveStep, SolverKind};
+use deq_anderson::solver::{
+    SolveReport, SolveSpec, SolveStep, SolverKind, DEFAULT_COND_MAX,
+    DEFAULT_ERRORFACTOR,
+};
 use deq_anderson::util::json;
 
 /// A two-lane solve where lane 0 froze at step 0 and lane 1 at step 1.
@@ -133,4 +136,68 @@ fn legacy_report_without_sample_fields_parses() {
     assert!(rep.steps[0].sample_residuals.is_empty());
     // fevals_total falls back to the lockstep estimate: fevals × batch.
     assert_eq!(rep.fevals_total(), 2);
+}
+
+#[test]
+fn pr5_era_solve_spec_without_adaptivity_fields_parses_to_fixed_defaults() {
+    // A spec serialized before the adaptive policies existed carries no
+    // adaptive_window/errorfactor/cond_max/safeguard keys.  It must keep
+    // parsing, and it must come back as a *fixed-window* spec: adaptivity
+    // off, CDLS21/DFTK default bounds.  Values are dyadic so the float
+    // round-trips are exact.
+    let legacy = "{\"damping\":{\"mode\":\"full\"},\"fused_forward\":true,\
+\"kind\":\"anderson\",\"lam\":0.5,\"max_fevals\":0,\"max_iter\":64,\
+\"restart_on_breakdown\":false,\"stagnation\":{\"eps\":0.25,\"window\":4},\
+\"tol\":0.125,\"window\":5}";
+    let spec = SolveSpec::from_json(&json::parse(legacy).unwrap()).unwrap();
+    assert_eq!(spec.kind, SolverKind::Anderson);
+    assert_eq!(spec.window, 5);
+    assert_eq!(spec.tol, 0.125);
+    assert_eq!(spec.lam, 0.5);
+    assert!(!spec.adaptive_window);
+    assert!(!spec.safeguard);
+    assert_eq!(spec.errorfactor, DEFAULT_ERRORFACTOR);
+    assert_eq!(spec.cond_max, DEFAULT_COND_MAX);
+    // Parsing a legacy spec and a default-built spec of the same shape
+    // agree on every adaptivity knob.
+    let built = SolveSpec::builder(SolverKind::Anderson)
+        .window(5)
+        .tol(0.125)
+        .lam(0.5)
+        .max_iter(64)
+        .build()
+        .unwrap();
+    assert_eq!(spec.adaptive_window, built.adaptive_window);
+    assert_eq!(spec.errorfactor, built.errorfactor);
+    assert_eq!(spec.cond_max, built.cond_max);
+    assert_eq!(spec.safeguard, built.safeguard);
+}
+
+#[test]
+fn solve_spec_adaptivity_fields_roundtrip_byte_stable() {
+    // Non-default adaptivity knobs survive serialize → parse → serialize
+    // with byte-identical output (sorted keys, shortest-decimal floats),
+    // and the parsed spec compares equal field-for-field.
+    let spec = SolveSpec::builder(SolverKind::Hybrid)
+        .window(7)
+        .tol(0.0625)
+        .adaptive_window(true)
+        .errorfactor(1024.0)
+        .cond_max(65536.0)
+        .safeguard(true)
+        .build()
+        .unwrap();
+    let wire = json::to_string(&spec.to_json());
+    // The adaptivity keys are present on the wire once set.
+    for key in [
+        "\"adaptive_window\":true",
+        "\"safeguard\":true",
+        "\"errorfactor\":",
+        "\"cond_max\":",
+    ] {
+        assert!(wire.contains(key), "missing {key} in {wire}");
+    }
+    let back = SolveSpec::from_json(&json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(json::to_string(&back.to_json()), wire);
 }

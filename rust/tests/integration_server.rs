@@ -544,3 +544,138 @@ fn tcp_reply_echoes_effective_spec() {
     let iters = v.get("solver_iters").and_then(Json::as_i64).unwrap();
     assert!((1..=7).contains(&iters), "iters {iters} escaped the override");
 }
+
+/// Adaptive-policy satellite: one iteration-level window mixes lanes
+/// running the condition-monitored adaptive policy (randomized knobs)
+/// with fixed-window lanes, all through the TCP request path.  Every
+/// lane must retire inside its own budget and each reply must echo the
+/// effective adaptivity fields that lane actually ran under — adaptive
+/// lanes their overrides, fixed lanes the router defaults.
+#[test]
+fn tcp_mixes_adaptive_and_fixed_lanes_in_one_bucket() {
+    let (router, dim) = make_router(25, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 41);
+
+    // Small deterministic LCG: the adaptive/fixed split, the knob
+    // values, and the per-lane stiffness vary across lanes but the test
+    // stays reproducible.
+    let mut state = 0x5EED_CAFEu64;
+    let mut next = move |m: u32| -> u32 {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((state >> 33) as u32) % m
+    };
+
+    // Exactly-representable f32 knob values so the shortest-decimal echo
+    // compares exactly after the f64 parse.
+    const ERRORFACTORS: [f32; 3] = [10.0, 100.0, 1000.0];
+    const COND_MAXES: [f32; 3] = [1e4, 1e6, 1e8];
+
+    struct Lane {
+        id: i64,
+        adaptive: bool,
+        safeguard: bool,
+        errorfactor: Option<f32>,
+        cond_max: Option<f32>,
+        max_iter: usize,
+        line: String,
+    }
+
+    let lanes: Vec<Lane> = (0..6)
+        .map(|i| {
+            // Force at least one lane of each flavor into the bucket.
+            let adaptive = match i {
+                0 => true,
+                1 => false,
+                _ => next(2) == 0,
+            };
+            let safeguard = adaptive && next(2) == 0;
+            let errorfactor =
+                adaptive.then(|| ERRORFACTORS[next(3) as usize]);
+            let cond_max = adaptive.then(|| COND_MAXES[next(3) as usize]);
+            let max_iter = 40 + 20 * next(4) as usize;
+            let scale = [0.4f32, 1.0, 3.0][next(3) as usize];
+            let img: Vec<String> = scaled(data.image(i as usize), scale)
+                .iter()
+                .map(|v| format!("{v:.4}"))
+                .collect();
+            let mut line = format!(
+                "{{\"id\":{i},\"image\":[{}],\"tol\":0.05,\"max_iter\":{max_iter}",
+                img.join(",")
+            );
+            if adaptive {
+                line.push_str(&format!(
+                    ",\"adaptive\":true,\"safeguard\":{safeguard},\
+\"errorfactor\":{},\"cond_max\":{}",
+                    errorfactor.unwrap(),
+                    cond_max.unwrap()
+                ));
+            }
+            line.push('}');
+            Lane { id: i, adaptive, safeguard, errorfactor, cond_max, max_iter, line }
+        })
+        .collect();
+
+    // Fire all six lanes concurrently so the 25ms window batches them
+    // into shared buckets.
+    let replies: Vec<(usize, Json)> = std::thread::scope(|s| {
+        let handles: Vec<_> = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, lane)| {
+                let router = router.clone();
+                let line = lane.line.clone();
+                s.spawn(move || (i, tcp::process_line(&router, dim, &line)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("lane thread")).collect()
+    });
+
+    let base = SolveSpec::from_manifest(engine().as_ref(), SolverKind::Anderson);
+    for (i, v) in replies {
+        let lane = &lanes[i];
+        assert_eq!(v.get("error"), None, "lane {i} errored: {v:?}");
+        assert_eq!(v.get("id").and_then(Json::as_i64), Some(lane.id));
+        // Per-lane retirement: the lane stopped inside its own budget.
+        let iters = v
+            .get("solver_iters")
+            .and_then(Json::as_i64)
+            .expect("solver_iters") as usize;
+        assert!(
+            (1..=lane.max_iter).contains(&iters),
+            "lane {i} ran {iters} iters past its max_iter {}",
+            lane.max_iter
+        );
+        // Effective-spec echo: adaptive lanes see their overrides,
+        // fixed lanes the router defaults.
+        assert_eq!(
+            v.get("adaptive").and_then(Json::as_bool),
+            Some(lane.adaptive),
+            "lane {i} adaptive echo"
+        );
+        assert_eq!(
+            v.get("safeguard").and_then(Json::as_bool),
+            Some(lane.safeguard),
+            "lane {i} safeguard echo"
+        );
+        let want_ef = lane.errorfactor.unwrap_or(base.errorfactor) as f64;
+        let want_cm = lane.cond_max.unwrap_or(base.cond_max) as f64;
+        assert_eq!(
+            v.get("errorfactor").and_then(Json::as_f64),
+            Some(want_ef),
+            "lane {i} errorfactor echo"
+        );
+        assert_eq!(
+            v.get("cond_max").and_then(Json::as_f64),
+            Some(want_cm),
+            "lane {i} cond_max echo"
+        );
+        assert!(
+            v.get("converged").and_then(Json::as_bool).is_some(),
+            "lane {i} missing converged"
+        );
+    }
+    // Sanity: the randomized split really did mix policies.
+    assert!(lanes.iter().any(|l| l.adaptive) && lanes.iter().any(|l| !l.adaptive));
+}
