@@ -7,10 +7,19 @@
 //! sizes.  Writes a machine-readable `BENCH_native_kernels.json`
 //! summary for trend tracking (uploaded by the CI `bench-smoke` job).
 //!
-//! **Regression guard** (not a perf gate): the run exits nonzero if the
-//! warm packed microkernel fails to at least match the blocked kernel
-//! (mean blocked→micro-warm speedup < 1.0), so CI catches a microkernel
-//! regression without demanding any particular margin.
+//! PR 7 adds the SIMD/precision axes: the dispatched microkernel vs the
+//! forced-scalar oracle over the same warm pack (isolating the explicit
+//! AVX2 win at fixed packing and chunking), a bf16-panel warm pass, and
+//! the pack-cache resident-byte gauges.
+//!
+//! **Regression guards** (not perf gates): the run exits nonzero if
+//!  * the warm packed microkernel fails to at least match the blocked
+//!    kernel (mean blocked→micro-warm speedup < 1.0),
+//!  * on an AVX2 host, the dispatched kernel fails to beat the scalar
+//!    oracle by ≥ 1.15× (skipped when dispatch resolves to scalar —
+//!    the two paths are then the same code), or
+//!  * bf16 packs exceed 0.55× the f32 pack bytes (they are exactly
+//!    0.5× by construction).
 //!
 //!     cargo bench --bench native_kernels -- [--iters 40] \
 //!         [--out BENCH_native_kernels.json]
@@ -18,7 +27,7 @@
 use std::time::Duration;
 
 use deq_anderson::model::params::next_param_version;
-use deq_anderson::native::pack::{self, PackedB};
+use deq_anderson::native::pack::{self, PackPrecision, PackedB, SimdLevel};
 use deq_anderson::native::{kernels, linalg, WorkerPool};
 use deq_anderson::runtime::{Backend, HostTensor, NativeConfig, NativeEngine};
 use deq_anderson::util::bench::{bench, header};
@@ -123,7 +132,9 @@ fn main() {
     let max_iters = args.usize_or("iters", 40);
     let budget = Duration::from_millis(500);
     let threads = kernels::max_threads();
-    println!("threads: {threads} (DEQ_NATIVE_THREADS to override)\n");
+    let simd = SimdLevel::from_env();
+    println!("threads: {threads} (DEQ_NATIVE_THREADS to override)");
+    println!("simd: {} (DEQ_NATIVE_SIMD to override)\n", simd.name());
     let mut rng = Rng::new(4);
 
     // --- GEMM: naive reference vs blocked vs packed microkernel ---
@@ -133,6 +144,8 @@ fn main() {
     let pool = WorkerPool::new(threads);
     let mut gemm_rows: Vec<Json> = Vec::new();
     let mut micro_speedups: Vec<f64> = Vec::new();
+    let mut simd_speedups: Vec<f64> = Vec::new();
+    let mut bf16_byte_ratios: Vec<f64> = Vec::new();
     for &(m, k, n) in &[(128usize, 256usize, 192usize), (256, 384, 320)] {
         let a = rng.normal_vec(m * k, 1.0);
         let b = rng.normal_vec(k * n, 1.0);
@@ -166,7 +179,7 @@ fn main() {
             1,
             max_iters,
             budget,
-            || pack::gemm_micro_with(&a, &b, m, k, n, &mut c, chunks, Some(&pool)),
+            || pack::gemm_micro_with(&a, &b, m, k, n, &mut c, chunks, Some(&pool), simd),
         );
         println!(
             "{}  ({:.2} GFLOP/s)",
@@ -185,11 +198,15 @@ fn main() {
             1,
             max_iters,
             budget,
-            || pack::gemm_packed_chunked(&a, &bp, m, &mut c, chunks, &pool, &mut apacks),
+            || {
+                pack::gemm_packed_chunked(
+                    &a, &bp, m, &mut c, chunks, &pool, &mut apacks, simd,
+                )
+            },
         );
         let vs_blocked =
             blocked.mean.as_secs_f64() / micro_warm.mean.as_secs_f64();
-        // The regression guard compares *minimum* times: on shared CI
+        // The regression guards compare *minimum* times: on shared CI
         // runners the mean absorbs scheduler noise, while best-observed
         // time is the standard noise-robust microbench statistic.
         micro_speedups
@@ -198,6 +215,56 @@ fn main() {
             "{}  ({:.2} GFLOP/s, {vs_blocked:.2}x vs blocked)",
             micro_warm.report(),
             gflops(macs, micro_warm.mean)
+        );
+        // Forced-scalar pass over the same warm pack: same packing, same
+        // chunking — the ratio isolates the explicit SIMD microkernel.
+        let micro_scalar = bench(
+            &format!("gemm micro sclr {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || {
+                pack::gemm_packed_chunked(
+                    &a,
+                    &bp,
+                    m,
+                    &mut c,
+                    chunks,
+                    &pool,
+                    &mut apacks,
+                    SimdLevel::Scalar,
+                )
+            },
+        );
+        let simd_vs_scalar =
+            micro_scalar.min.as_secs_f64() / micro_warm.min.as_secs_f64();
+        simd_speedups.push(simd_vs_scalar);
+        println!(
+            "{}  ({:.2} GFLOP/s, simd {simd_vs_scalar:.2}x vs scalar)",
+            micro_scalar.report(),
+            gflops(macs, micro_scalar.mean)
+        );
+        // bf16 panels: half the resident pack bytes, dispatched kernel.
+        let bp16 = PackedB::pack_with(&b, k, n, PackPrecision::Bf16);
+        bf16_byte_ratios
+            .push(bp16.packed_bytes() as f64 / bp.packed_bytes() as f64);
+        let micro_bf16 = bench(
+            &format!("gemm micro bf16 {m}x{k}x{n}"),
+            1,
+            max_iters,
+            budget,
+            || {
+                pack::gemm_packed_chunked(
+                    &a, &bp16, m, &mut c, chunks, &pool, &mut apacks, simd,
+                )
+            },
+        );
+        println!(
+            "{}  ({:.2} GFLOP/s, {} pack bytes vs {} f32)",
+            micro_bf16.report(),
+            gflops(macs, micro_bf16.mean),
+            bp16.packed_bytes(),
+            bp.packed_bytes()
         );
         gemm_rows.push(json::obj(vec![
             ("m", json::num(m as f64)),
@@ -208,10 +275,20 @@ fn main() {
             ("gflops_micro_cold", json::num(gflops(macs, micro_cold.mean))),
             ("gflops_micro_warm", json::num(gflops(macs, micro_warm.mean))),
             (
+                "gflops_micro_scalar",
+                json::num(gflops(macs, micro_scalar.mean)),
+            ),
+            ("gflops_micro_bf16", json::num(gflops(macs, micro_bf16.mean))),
+            (
                 "speedup",
                 json::num(naive.mean.as_secs_f64() / blocked.mean.as_secs_f64()),
             ),
             ("micro_warm_vs_blocked", json::num(vs_blocked)),
+            ("simd_vs_scalar", json::num(simd_vs_scalar)),
+            (
+                "bf16_vs_f32_bytes",
+                json::num(bp16.packed_bytes() as f64 / bp.packed_bytes() as f64),
+            ),
         ]));
     }
 
@@ -338,9 +415,13 @@ fn main() {
     let speedup = naive.mean.as_secs_f64() / pooled.mean.as_secs_f64();
     println!("{}  ({speedup:.2}x vs pooled)", naive.report());
 
-    // Mean across shapes of the min-time speedups (see above).
+    // Means across shapes of the min-time speedups (see above).
     let mean_micro_speedup =
         micro_speedups.iter().sum::<f64>() / micro_speedups.len() as f64;
+    let mean_simd_speedup =
+        simd_speedups.iter().sum::<f64>() / simd_speedups.len() as f64;
+    let max_bf16_ratio =
+        bf16_byte_ratios.iter().cloned().fold(0.0f64, f64::max);
     let summary = json::obj(vec![
         ("bench", json::s("native_kernels")),
         ("threads", json::num(threads as f64)),
@@ -378,9 +459,15 @@ fn main() {
                 ("speedup", json::num(speedup)),
                 ("steady_state_allocs", json::num(steady_allocs as f64)),
                 ("steady_state_repacks", json::num(steady_packs as f64)),
+                ("pack_bytes_f32", json::num(after.pack_bytes_f32 as f64)),
+                ("pack_bytes_bf16", json::num(after.pack_bytes_bf16 as f64)),
+                ("pack_entries", json::num(after.pack_entries as f64)),
             ]),
         ),
         ("micro_warm_vs_blocked_mean", json::num(mean_micro_speedup)),
+        ("simd_level", json::s(simd.name())),
+        ("simd_vs_scalar_mean", json::num(mean_simd_speedup)),
+        ("bf16_vs_f32_bytes_max", json::num(max_bf16_ratio)),
     ]);
     std::fs::write(&out_path, json::to_string(&summary) + "\n")
         .expect("write bench summary");
@@ -397,5 +484,39 @@ fn main() {
     }
     println!(
         "microkernel regression guard: warm vs blocked {mean_micro_speedup:.2}x >= 1.0 ok"
+    );
+
+    // SIMD guard: only meaningful when dispatch actually resolved to a
+    // vector kernel — forced-scalar runs compare identical code and
+    // would gate on pure scheduler noise.
+    if simd == SimdLevel::Avx2 {
+        if mean_simd_speedup < 1.15 {
+            eprintln!(
+                "REGRESSION: dispatched AVX2 microkernel is not >= 1.15x the \
+                 scalar oracle (mean speedup {mean_simd_speedup:.3})"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "simd regression guard: avx2 vs scalar {mean_simd_speedup:.2}x >= 1.15 ok"
+        );
+    } else {
+        println!(
+            "simd regression guard: skipped (dispatch resolved to {})",
+            simd.name()
+        );
+    }
+
+    // bf16 footprint guard: packs are exactly half the f32 bytes by
+    // construction, so this only fires if the panel layout regresses.
+    if max_bf16_ratio > 0.55 {
+        eprintln!(
+            "REGRESSION: bf16 packs are {max_bf16_ratio:.3}x the f32 pack \
+             bytes (must be <= 0.55)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "bf16 footprint guard: {max_bf16_ratio:.2}x f32 pack bytes <= 0.55 ok"
     );
 }

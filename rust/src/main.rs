@@ -29,7 +29,7 @@ use deq_anderson::native::{self, maps::DeqLikeMap, AndersonOpts};
 use deq_anderson::runtime::{select_backend, Backend};
 use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
 use deq_anderson::solver::{
-    Damping, SolveClamps, SolveSpec, SolverKind, StagnationRule,
+    Damping, GramMode, SolveClamps, SolveSpec, SolverKind, StagnationRule,
 };
 use deq_anderson::train::{default_config, Backward, Trainer};
 use deq_anderson::util::cli::Args;
@@ -57,6 +57,8 @@ solver flags (train/infer/serve, built into a SolveSpec):
   --restart-on-breakdown
   --adaptive-window  --errorfactor F  --cond-max F  --safeguard
                     (condition-monitored window + safeguarded mixed step)
+  --gram-sketch N   (sketched Gram condition probes for window
+                    adaptation; 0 = exact Gram, the default)
 common flags: --artifacts DIR  --backend auto|native|pjrt  --out DIR
               --seed N  --quiet
 ";
@@ -94,7 +96,10 @@ fn apply_solver_flags(args: &Args, base: SolveSpec) -> Result<SolveSpec> {
         .adaptive_window(args.has("adaptive-window") || base.adaptive_window)
         .errorfactor(args.f32_or("errorfactor", base.errorfactor))
         .cond_max(args.f32_or("cond-max", base.cond_max))
-        .safeguard(args.has("safeguard") || base.safeguard);
+        .safeguard(args.has("safeguard") || base.safeguard)
+        .gram(GramMode::from_sketch_dim(
+            args.usize_or("gram-sketch", base.gram.sketch_dim()),
+        ));
     if args.has("damping-beta") {
         b = b.damping(Damping::Constant(args.f32_or("damping-beta", 1.0)));
     }

@@ -19,7 +19,11 @@
 //!
 //! The blocked kernel here is the *uncached* path (and the bench
 //! baseline); the engine's steady-state GEMMs run the packed microkernel
-//! in [`crate::native::pack`] over cached weight packs instead.
+//! in [`crate::native::pack`] over cached weight packs instead.  That is
+//! also where SIMD lives: the kernels below stay portable scalar loops
+//! for the autovectorizer, while `pack` carries the explicit AVX2
+//! microkernel behind runtime dispatch (`DEQ_NATIVE_SIMD`) plus the bf16
+//! packed-panel precision mode (`DEQ_NATIVE_PRECISION`).
 //!
 //! Thread count comes from the `DEQ_NATIVE_THREADS` env knob (unset or
 //! `0` → `available_parallelism`, capped at 8), read **at pool

@@ -1,6 +1,7 @@
 //! Native (pure-Rust) solver substrate: small linear algebra, blocked
 //! multi-threaded compute kernels, a packed-panel microkernel GEMM with
-//! weight packing ([`pack`]), a persistent worker pool ([`pool`]), a
+//! weight packing, runtime SIMD dispatch and bf16 panel storage
+//! ([`pack`]), a persistent worker pool ([`pool`]), a
 //! reusable scratch-buffer workspace, the Anderson twin of the AOT
 //! kernel, and synthetic fixed-point maps.  Powers the device-model
 //! simulations, property tests and hyperparameter sweeps without
@@ -17,11 +18,11 @@ pub mod pool;
 pub mod stochastic;
 pub mod workspace;
 
-pub use stochastic::{solve_stochastic, StochasticOpts};
+pub use stochastic::{sketch_coords, solve_stochastic, StochasticOpts};
 pub use anderson::{
     rel_residual, solve_anderson, solve_forward, window_cond_estimate,
     AndersonOpts, AndersonState, FixedPointMap, IterRecord, SolveTrace,
 };
-pub use pack::PackedB;
+pub use pack::{PackPrecision, PackedB, SimdLevel};
 pub use pool::{PoolStats, WorkerPool};
 pub use workspace::{Workspace, WorkspaceStats};

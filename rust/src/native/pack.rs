@@ -12,20 +12,38 @@
 //!     edge branches.  The engine caches one `PackedB` per weight matrix
 //!     (see `NativeEngine`'s pack cache), keyed by the parameter version
 //!     counter from [`crate::model::params`] — steady-state iterations do
-//!     **zero** weight packing.
+//!     **zero** weight packing.  Panels come in two precisions
+//!     ([`PackPrecision`]): full `f32`, or `bf16` storage (truncated
+//!     8-bit-mantissa floats, round-to-nearest-even) that **halves the
+//!     pack-cache footprint** — the paper's speed-vs-memory axis — while
+//!     the kernel still accumulates in `f32`.
 //!   * **A (activations)**: fresh every iteration.  `pack_a` repacks
 //!     the current panel into [`MR`]-tall column-major strips in caller
 //!     scratch (workspace-pooled on the engine path), an O(m·k) copy that
 //!     buys the O(m·k·n) loop perfect access patterns.
 //!
-//! The inner loop is an [`MR`]×[`NR`] (8×8) register tile: 64 scalar
-//! accumulators the compiler keeps in vector registers, updated by
-//! unrolled multiply-adds over the packed panels — a portable, safe-Rust
-//! microkernel that vectorizes on any target without `std::simd` (the
-//! scalar code *is* the fallback; on AVX the 8-wide rows map directly to
-//! one register each).  Accumulation order over k is ascending for every
-//! C element, exactly like `kernels::gemm_reference`, so results are
-//! independent of the row-chunking used for parallelism.
+//! The inner loop is an [`MR`]×[`NR`] (8×8) register tile, in two
+//! implementations behind runtime CPU-feature dispatch ([`SimdLevel`]):
+//!
+//!   * the **scalar microkernel** — 64 scalar accumulators in portable
+//!     safe Rust, fixed-trip loops the compiler auto-vectorizes; kept
+//!     verbatim as the **parity oracle** (and the only kernel off
+//!     x86-64);
+//!   * the **explicit AVX2 microkernel** (`std::arch`) — each of the 8
+//!     accumulator rows is exactly one `__m256`, updated by broadcast +
+//!     separate multiply and add (deliberately *not* FMA: contraction
+//!     would change rounding, and the AVX2 path is **bit-identical** to
+//!     the scalar oracle — per C element both sum the same k terms in the
+//!     same ascending order with one rounding per multiply and add).
+//!
+//! Dispatch is resolved **once** per engine/pool construction (the env
+//! knob `DEQ_NATIVE_SIMD=off|scalar|avx2` forces a level; unset
+//! auto-detects), then threaded through the entry points as an explicit
+//! [`SimdLevel`] argument — no per-call feature detection.
+//!
+//! Accumulation order over k is ascending for every C element, exactly
+//! like `kernels::gemm_reference`, so results are independent of the
+//! row-chunking used for parallelism *and* of the dispatched SIMD level.
 //!
 //! Parallelism comes from a [`WorkerPool`] (no per-call thread spawns):
 //! rows of C are split into contiguous chunks, one job per chunk, each
@@ -44,6 +62,124 @@ pub const KC: usize = 256;
 /// set of B strips walked per A panel so they stay L2-resident.
 pub const NC: usize = 512;
 
+// The AVX2 microkernels hold one __m256 per accumulator row and load
+// NR-wide B strips as one vector; they are written for exactly this tile.
+const _: () = assert!(MR == 8 && NR == 8, "AVX2 microkernels assume 8x8 tiles");
+
+/// Which microkernel implementation the packed GEMM entry points run.
+///
+/// Resolved **once** at engine/pool construction via [`SimdLevel::from_env`]
+/// (the `DEQ_NATIVE_SIMD` knob) and passed down explicitly — the hot path
+/// never re-detects CPU features.  `Avx2` is only ever constructed after a
+/// successful runtime `avx2` feature detection, which is what makes the
+/// `unsafe` kernel calls sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// The portable safe-Rust microkernel (also the parity oracle).
+    Scalar,
+    /// The explicit `std::arch` AVX2 microkernel (x86-64 only;
+    /// bit-identical to [`SimdLevel::Scalar`] for f32 packs).
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Best level the running CPU supports.
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+        }
+        SimdLevel::Scalar
+    }
+
+    /// Resolve the `DEQ_NATIVE_SIMD` override against runtime detection:
+    /// `off` / `scalar` force the scalar oracle, `avx2` asks for AVX2
+    /// (silently capped at what the CPU supports), anything else (or
+    /// unset) auto-detects.  Call once at construction, not per kernel.
+    pub fn from_env() -> Self {
+        Self::resolve(std::env::var("DEQ_NATIVE_SIMD").ok().as_deref(), Self::detect())
+    }
+
+    /// Pure resolution core of [`Self::from_env`] (unit-testable without
+    /// touching process environment).
+    fn resolve(knob: Option<&str>, detected: SimdLevel) -> SimdLevel {
+        match knob.map(|s| s.trim().to_ascii_lowercase()) {
+            Some(ref s) if s == "off" || s == "scalar" => SimdLevel::Scalar,
+            // "avx2" (or any unknown value) can never exceed detection.
+            _ => detected,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Storage precision of a [`PackedB`] weight panel.  The microkernel
+/// always accumulates in `f32`; `Bf16` only changes how the packed B
+/// elements are *stored* (upper 16 bits of the f32, round-to-nearest-
+/// even), halving resident pack-cache bytes at ~3 decimal digits of
+/// weight precision.  Resolved once at engine construction via the
+/// `DEQ_NATIVE_PRECISION=f32|bf16` knob (default `f32`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackPrecision {
+    F32,
+    Bf16,
+}
+
+impl PackPrecision {
+    /// Resolve the `DEQ_NATIVE_PRECISION` knob (default [`Self::F32`]).
+    pub fn from_env() -> Self {
+        Self::resolve(std::env::var("DEQ_NATIVE_PRECISION").ok().as_deref())
+    }
+
+    /// Pure resolution core of [`Self::from_env`].
+    fn resolve(knob: Option<&str>) -> Self {
+        match knob.map(|s| s.trim().to_ascii_lowercase()) {
+            Some(ref s) if s == "bf16" => PackPrecision::Bf16,
+            _ => PackPrecision::F32,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackPrecision::F32 => "f32",
+            PackPrecision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Convert one f32 to bf16 storage (upper 16 bits), rounding to nearest
+/// even; NaNs truncate with a forced quiet bit so they stay NaN.
+#[inline]
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFFu32 + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Widen bf16 storage back to f32 — exact (bf16 is a prefix of f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Packed panel storage: one precision per pack (the engine's cache
+/// keeps both per weight slot, invalidated together by version).
+#[derive(Debug, Clone)]
+enum PanelData {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
 /// A weight matrix (k, n) repacked for the microkernel: for each k-tile
 /// of height ≤ [`KC`], the columns are laid out in [`NR`]-wide strips,
 /// row-major *within* the strip (`strip[p * NR + c] = B[p0 + p][j0 + c]`),
@@ -54,13 +190,22 @@ pub struct PackedB {
     pub k: usize,
     /// Columns of the original matrix (the GEMM n dimension).
     pub n: usize,
-    data: Vec<f32>,
+    data: PanelData,
 }
 
 impl PackedB {
-    /// Pack a row-major (k, n) matrix.  O(k·n) copy; the engine amortizes
-    /// it across every subsequent iteration via its pack cache.
+    /// Pack a row-major (k, n) matrix at full f32 precision.  O(k·n)
+    /// copy; the engine amortizes it across every subsequent iteration
+    /// via its pack cache.
     pub fn pack(b: &[f32], k: usize, n: usize) -> Self {
+        Self::pack_with(b, k, n, PackPrecision::F32)
+    }
+
+    /// [`Self::pack`] with an explicit storage precision.  `Bf16` rounds
+    /// each element to nearest-even bf16 at pack time (the one-time
+    /// quantization); the kernels widen back to f32 on load and
+    /// accumulate in f32.
+    pub fn pack_with(b: &[f32], k: usize, n: usize, precision: PackPrecision) -> Self {
         assert_eq!(b.len(), k * n, "PackedB::pack: data/shape mismatch");
         let nstrips = n.div_ceil(NR);
         let mut data = vec![0.0f32; k * nstrips * NR];
@@ -77,21 +222,90 @@ impl PackedB {
                 off += kc * NR;
             }
         }
+        let data = match precision {
+            PackPrecision::F32 => PanelData::F32(data),
+            PackPrecision::Bf16 => {
+                PanelData::Bf16(data.iter().map(|&v| f32_to_bf16(v)).collect())
+            }
+        };
         Self { k, n, data }
     }
 
-    /// Packed bytes (for stats / bench reporting).
-    pub fn packed_len(&self) -> usize {
-        self.data.len()
+    /// The storage precision this panel was packed at.
+    pub fn precision(&self) -> PackPrecision {
+        match self.data {
+            PanelData::F32(_) => PackPrecision::F32,
+            PanelData::Bf16(_) => PackPrecision::Bf16,
+        }
     }
 
-    /// The [`NR`]-wide strip `s` of the k-tile starting at row `p0`
-    /// (which has height `kc`).
+    /// Packed element count (padding included) — precision-independent.
+    pub fn packed_len(&self) -> usize {
+        match &self.data {
+            PanelData::F32(d) => d.len(),
+            PanelData::Bf16(d) => d.len(),
+        }
+    }
+
+    /// Resident bytes of this pack (the stats/bench footprint gauge):
+    /// bf16 panels cost exactly half the f32 bytes for the same shape.
+    pub fn packed_bytes(&self) -> usize {
+        match &self.data {
+            PanelData::F32(d) => d.len() * std::mem::size_of::<f32>(),
+            PanelData::Bf16(d) => d.len() * std::mem::size_of::<u16>(),
+        }
+    }
+
+    /// Start of the [`NR`]-wide strip `s` of the k-tile at row `p0`
+    /// (height `kc`): tiles before `p0` hold `p0` full rows of
+    /// `n.div_ceil(NR)` strips.
     #[inline]
-    fn strip(&self, p0: usize, kc: usize, s: usize) -> &[f32] {
-        // Tiles before p0 hold p0 full rows of n.div_ceil(NR) strips.
-        let base = p0 * self.n.div_ceil(NR) * NR + s * kc * NR;
-        &self.data[base..base + kc * NR]
+    fn strip_base(&self, p0: usize, kc: usize, s: usize) -> usize {
+        p0 * self.n.div_ceil(NR) * NR + s * kc * NR
+    }
+
+    /// Run the dispatched microkernel over one packed A block and this
+    /// panel's strip `s` of the k-tile at `p0`.
+    #[inline]
+    fn microkernel_at(
+        &self,
+        p0: usize,
+        kc: usize,
+        s: usize,
+        ap: &[f32],
+        acc: &mut [f32; MR * NR],
+        simd: SimdLevel,
+    ) {
+        let base = self.strip_base(p0, kc, s);
+        match &self.data {
+            PanelData::F32(d) => {
+                let bstrip = &d[base..base + kc * NR];
+                match simd {
+                    SimdLevel::Scalar => microkernel(kc, ap, bstrip, acc),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: Avx2 is only constructed after runtime
+                    // detection succeeded (SimdLevel::detect/resolve).
+                    SimdLevel::Avx2 => unsafe {
+                        microkernel_avx2(kc, ap, bstrip, acc)
+                    },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    SimdLevel::Avx2 => microkernel(kc, ap, bstrip, acc),
+                }
+            }
+            PanelData::Bf16(d) => {
+                let bstrip = &d[base..base + kc * NR];
+                match simd {
+                    SimdLevel::Scalar => microkernel_bf16(kc, ap, bstrip, acc),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: as above.
+                    SimdLevel::Avx2 => unsafe {
+                        microkernel_bf16_avx2(kc, ap, bstrip, acc)
+                    },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    SimdLevel::Avx2 => microkernel_bf16(kc, ap, bstrip, acc),
+                }
+            }
+        }
     }
 }
 
@@ -124,11 +338,12 @@ fn pack_a(a: &[f32], lda: usize, rows: usize, p0: usize, kc: usize, apack: &mut 
     }
 }
 
-/// The 8×8 register tile: 64 accumulators updated by unrolled
-/// multiply-adds over one packed A block and one packed B strip.  The
-/// two inner loops are fixed-trip (`MR`, `NR`) over contiguous slices,
-/// which is exactly the shape LLVM turns into broadcast+FMA vector code;
-/// on targets without SIMD the same loop *is* the scalar fallback.
+/// The scalar 8×8 register tile — the **parity oracle**: 64 accumulators
+/// updated by unrolled multiply-adds over one packed A block and one
+/// packed B strip.  The two inner loops are fixed-trip (`MR`, `NR`) over
+/// contiguous slices, which auto-vectorizes well on any target; the
+/// explicit [`microkernel_avx2`] twin must stay bit-identical to this
+/// exact loop (same k order, separate multiply and add per term).
 #[inline]
 fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
     debug_assert!(ap.len() >= kc * MR);
@@ -142,13 +357,110 @@ fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
     }
 }
 
-/// C = A · B over a pre-packed B, serial.  `apack` is caller scratch of
-/// at least [`apack_len`]`(m, bp.k)` elements (pooled on the hot path).
+/// Scalar bf16-panel microkernel: widen each stored element to f32
+/// (exact — bf16 is an f32 prefix) and accumulate in f32.  The parity
+/// oracle for [`microkernel_bf16_avx2`]; vs the f32 kernels the only
+/// difference is the one-time pack rounding of B.
+#[inline]
+fn microkernel_bf16(kc: usize, ap: &[f32], bp: &[u16], acc: &mut [f32; MR * NR]) {
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    for (arow, brow) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
+        for (&ar, accrow) in arow.iter().zip(acc.chunks_exact_mut(NR)) {
+            for (av, &bv) in accrow.iter_mut().zip(brow) {
+                *av += ar * bf16_to_f32(bv);
+            }
+        }
+    }
+}
+
+/// Explicit AVX2 8×8 tile: one `__m256` per accumulator row, broadcast
+/// A element, **separate** `_mm256_mul_ps` + `_mm256_add_ps` per k term.
+/// Not FMA on purpose: the scalar oracle rounds after the multiply and
+/// after the add, so a fused multiply-add would change low bits — this
+/// way the AVX2 path is bit-identical to [`microkernel`] and default-knob
+/// solve traces don't depend on the dispatched level.
+///
+/// # Safety
+/// Caller must ensure the running CPU supports AVX2 (guaranteed by
+/// [`SimdLevel::Avx2`] construction).  Slices must hold at least
+/// `kc * MR` / `kc * NR` elements (packed panels are tile-padded).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    let mut rows = [_mm256_setzero_ps(); MR];
+    for (r, row) in rows.iter_mut().enumerate() {
+        *row = _mm256_loadu_ps(acc.as_ptr().add(r * NR));
+    }
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(bp.as_ptr().add(p * NR));
+        let apk = ap.as_ptr().add(p * MR);
+        for (r, row) in rows.iter_mut().enumerate() {
+            let ar = _mm256_set1_ps(*apk.add(r));
+            *row = _mm256_add_ps(*row, _mm256_mul_ps(ar, bv));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), *row);
+    }
+}
+
+/// AVX2 bf16-panel tile: load 8 stored u16, zero-extend to 32 bits and
+/// shift into the f32 high half (the exact widening), then the same
+/// mul+add accumulation as [`microkernel_avx2`] — bit-identical to the
+/// scalar [`microkernel_bf16`].
+///
+/// # Safety
+/// As [`microkernel_avx2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_bf16_avx2(
+    kc: usize,
+    ap: &[f32],
+    bp: &[u16],
+    acc: &mut [f32; MR * NR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    let mut rows = [_mm256_setzero_ps(); MR];
+    for (r, row) in rows.iter_mut().enumerate() {
+        *row = _mm256_loadu_ps(acc.as_ptr().add(r * NR));
+    }
+    for p in 0..kc {
+        let raw = _mm_loadu_si128(bp.as_ptr().add(p * NR) as *const __m128i);
+        let bv = _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(raw), 16));
+        let apk = ap.as_ptr().add(p * MR);
+        for (r, row) in rows.iter_mut().enumerate() {
+            let ar = _mm256_set1_ps(*apk.add(r));
+            *row = _mm256_add_ps(*row, _mm256_mul_ps(ar, bv));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), *row);
+    }
+}
+
+/// C = A · B over a pre-packed B, serial, through the dispatched
+/// microkernel.  `apack` is caller scratch of at least
+/// [`apack_len`]`(m, bp.k)` elements (pooled on the hot path); `simd` is
+/// the level resolved once at engine/pool construction.
 ///
 /// Per C element the k-summation is ascending regardless of tiling, so
-/// the result is identical for any row chunking (and bit-stable across
-/// repeat calls — the property the pooled solve tests assert).
-pub fn gemm_packed(a: &[f32], bp: &PackedB, m: usize, c: &mut [f32], apack: &mut [f32]) {
+/// the result is identical for any row chunking *and any f32 SIMD level*
+/// (and bit-stable across repeat calls — the property the pooled solve
+/// tests assert).
+pub fn gemm_packed(
+    a: &[f32],
+    bp: &PackedB,
+    m: usize,
+    c: &mut [f32],
+    apack: &mut [f32],
+    simd: SimdLevel,
+) {
     let (k, n) = (bp.k, bp.n);
     assert_eq!(a.len(), m * k, "gemm_packed: A len");
     assert_eq!(c.len(), m * n, "gemm_packed: C len");
@@ -174,11 +486,10 @@ pub fn gemm_packed(a: &[f32], bp: &PackedB, m: usize, c: &mut [f32], apack: &mut
                 let rh = MR.min(m - i0);
                 let ap = &apack[ib * kc * MR..(ib + 1) * kc * MR];
                 for s in sg0..sg1 {
-                    let bstrip = bp.strip(p0, kc, s);
                     let j0 = s * NR;
                     let jw = NR.min(n - j0);
                     acc.fill(0.0);
-                    microkernel(kc, ap, bstrip, &mut acc);
+                    bp.microkernel_at(p0, kc, s, ap, &mut acc, simd);
                     for r in 0..rh {
                         let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw];
                         for (cv, av) in crow.iter_mut().zip(&acc[r * NR..r * NR + jw]) {
@@ -196,6 +507,7 @@ pub fn gemm_packed(a: &[f32], bp: &PackedB, m: usize, c: &mut [f32], apack: &mut
 /// A-pack scratch from `apacks` (at least `ceil(m / ceil(m/chunks))`
 /// buffers, each of [`apack_len`]`(rows_per_chunk, bp.k)` elements).
 /// Results are identical to the serial call for any chunk count.
+#[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
 pub fn gemm_packed_chunked(
     a: &[f32],
     bp: &PackedB,
@@ -204,6 +516,7 @@ pub fn gemm_packed_chunked(
     chunks: usize,
     pool: &WorkerPool,
     apacks: &mut [Vec<f32>],
+    simd: SimdLevel,
 ) {
     let (k, n) = (bp.k, bp.n);
     assert_eq!(a.len(), m * k, "gemm_packed_chunked: A len");
@@ -222,7 +535,7 @@ pub fn gemm_packed_chunked(
         let rows = c_chunk.len() / n;
         let a_chunk = &a[ti * rows_per * k..ti * rows_per * k + rows * k];
         tasks.push(Box::new(move || {
-            gemm_packed(a_chunk, bp, rows, c_chunk, apack)
+            gemm_packed(a_chunk, bp, rows, c_chunk, apack, simd)
         }));
     }
     pool.run(tasks);
@@ -247,6 +560,7 @@ pub fn cell_rows_packed(
     res: &mut [f32],
     fnorm: &mut [f32],
     apack: &mut [f32],
+    simd: SimdLevel,
 ) {
     debug_assert_eq!(bp.k, n);
     debug_assert_eq!(bp.n, n);
@@ -256,7 +570,7 @@ pub fn cell_rows_packed(
     debug_assert_eq!(f.len(), rows * n);
     debug_assert_eq!(res.len(), rows);
     debug_assert_eq!(fnorm.len(), rows);
-    gemm_packed(z, bp, rows, f, apack);
+    gemm_packed(z, bp, rows, f, apack, simd);
     for s in 0..rows {
         let zs = &z[s * n..(s + 1) * n];
         let xs = &x[s * n..(s + 1) * n];
@@ -293,6 +607,7 @@ pub fn cell_batch_packed(
     chunks: usize,
     pool: Option<&WorkerPool>,
     apacks: &mut [Vec<f32>],
+    simd: SimdLevel,
 ) {
     if batch == 0 || n == 0 {
         return;
@@ -307,7 +622,9 @@ pub fn cell_batch_packed(
                 "cell_batch_packed: serial fallback needs one apack of \
                  apack_len(batch, n)"
             );
-            cell_rows_packed(bp, bias, z, x, batch, n, f, res, fnorm, &mut apacks[0]);
+            cell_rows_packed(
+                bp, bias, z, x, batch, n, f, res, fnorm, &mut apacks[0], simd,
+            );
             return;
         }
     };
@@ -326,22 +643,27 @@ pub fn cell_batch_packed(
         let z_c = &z[ti * rows_per * n..ti * rows_per * n + rows * n];
         let x_c = &x[ti * rows_per * n..ti * rows_per * n + rows * n];
         tasks.push(Box::new(move || {
-            cell_rows_packed(bp, bias, z_c, x_c, rows, n, f_c, res_c, fn_c, apack)
+            cell_rows_packed(
+                bp, bias, z_c, x_c, rows, n, f_c, res_c, fn_c, apack, simd,
+            )
         }));
     }
     pool.run(tasks);
 }
 
-/// Standalone microkernel GEMM: packs B fresh (no cache) and allocates
-/// its own scratch — the un-cached entry for tests, benches and callers
-/// outside the engine's pack cache.
+/// Standalone microkernel GEMM: packs B fresh (no cache), allocates its
+/// own scratch and resolves the SIMD level from the environment — the
+/// un-cached convenience entry for tests, benches and callers outside
+/// the engine's pack cache.  Hot paths latch a [`SimdLevel`] once and
+/// call [`gemm_packed`]/[`gemm_packed_chunked`] instead.
 pub fn gemm_micro(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    gemm_micro_with(a, b, m, k, n, c, 1, None);
+    gemm_micro_with(a, b, m, k, n, c, 1, None, SimdLevel::from_env());
 }
 
-/// [`gemm_micro`] with an explicit chunk count and pool — the
-/// deterministic serial-vs-parallel test surface (chunking, not worker
-/// count, fixes the partition, so any pool size gives the same split).
+/// [`gemm_micro`] with an explicit chunk count, pool and SIMD level —
+/// the deterministic serial-vs-parallel and scalar-vs-SIMD test surface
+/// (chunking, not worker count, fixes the partition, so any pool size
+/// gives the same split).
 #[allow(clippy::too_many_arguments)] // flat numeric kernel, no state to bundle
 pub fn gemm_micro_with(
     a: &[f32],
@@ -352,6 +674,7 @@ pub fn gemm_micro_with(
     c: &mut [f32],
     chunks: usize,
     pool: Option<&WorkerPool>,
+    simd: SimdLevel,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -367,11 +690,11 @@ pub fn gemm_micro_with(
             let nchunks = m.div_ceil(rows_per);
             let mut apacks: Vec<Vec<f32>> =
                 (0..nchunks).map(|_| vec![0.0; apack_len(rows_per, k)]).collect();
-            gemm_packed_chunked(a, &bp, m, c, chunks, p, &mut apacks);
+            gemm_packed_chunked(a, &bp, m, c, chunks, p, &mut apacks, simd);
         }
         _ => {
             let mut apack = vec![0.0; apack_len(m, k)];
-            gemm_packed(a, &bp, m, c, &mut apack);
+            gemm_packed(a, &bp, m, c, &mut apack, simd);
         }
     }
 }
@@ -413,6 +736,32 @@ mod tests {
     }
 
     #[test]
+    fn simd_levels_are_bit_identical_for_f32() {
+        // The whole point of the mul+add (non-FMA) AVX2 kernel: both
+        // levels sum the same k terms in the same order with the same
+        // roundings, so f32 results match *bitwise* on every shape —
+        // including ragged tiles that exercise the padded-edge loads.
+        let mut rng = Rng::new(53);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (MR - 1, 5, NR - 1),
+            (MR + 1, 7, NR + 1),
+            (17, KC + 3, 2 * NR + 3),
+            (64, 64, 64),
+        ] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut scalar = vec![0.0f32; m * n];
+            gemm_micro_with(&a, &b, m, k, n, &mut scalar, 1, None, SimdLevel::Scalar);
+            let mut simd = vec![0.0f32; m * n];
+            gemm_micro_with(
+                &a, &b, m, k, n, &mut simd, 1, None, SimdLevel::detect(),
+            );
+            assert_eq!(simd, scalar, "({m},{k},{n}) diverged across SIMD levels");
+        }
+    }
+
+    #[test]
     fn chunked_is_identical_to_serial() {
         let mut rng = Rng::new(51);
         let (m, k, n) = (29usize, 37usize, 23usize);
@@ -423,7 +772,10 @@ mod tests {
         let pool = WorkerPool::new(3);
         for chunks in [2usize, 3, 5, 29] {
             let mut par = vec![0.0f32; m * n];
-            gemm_micro_with(&a, &b, m, k, n, &mut par, chunks, Some(&pool));
+            gemm_micro_with(
+                &a, &b, m, k, n, &mut par, chunks, Some(&pool),
+                SimdLevel::from_env(),
+            );
             assert_eq!(par, serial, "chunks={chunks} diverged bitwise");
         }
     }
@@ -435,6 +787,85 @@ mod tests {
         assert_eq!(c, vec![0.0; 6], "k = 0 must zero C");
         gemm_micro(&[], &[1.0, 2.0], 0, 1, 2, &mut []);
         gemm_micro(&[1.0, 2.0], &[], 2, 1, 0, &mut []);
+    }
+
+    #[test]
+    fn bf16_conversion_rounds_to_nearest_even_and_keeps_nan() {
+        // Exactly representable values survive the round-trip.
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.15625] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v} not preserved");
+        }
+        // 1.0 + 2^-9 sits exactly halfway between bf16(1.0) and the next
+        // step 1.0 + 2^-8: nearest-even rounds *down* to 1.0.
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 2f32.powi(-9))), 1.0);
+        // 1.0 + 3·2^-9 is halfway to the odd side: rounds *up* to
+        // 1.0 + 2^-7.
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(1.0 + 3.0 * 2f32.powi(-9))),
+            1.0 + 2f32.powi(-7)
+        );
+        // Anything above the halfway point rounds up.
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(1.0 + 2f32.powi(-9) + 2f32.powi(-12))),
+            1.0 + 2f32.powi(-8)
+        );
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_pack_halves_bytes_and_stays_close_to_f32() {
+        let mut rng = Rng::new(54);
+        let (m, k, n) = (17usize, 33usize, NR * 2 + 3);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let bp32 = PackedB::pack(&b, k, n);
+        let bp16 = PackedB::pack_with(&b, k, n, PackPrecision::Bf16);
+        assert_eq!(bp32.precision(), PackPrecision::F32);
+        assert_eq!(bp16.precision(), PackPrecision::Bf16);
+        assert_eq!(bp16.packed_len(), bp32.packed_len());
+        assert_eq!(bp16.packed_bytes() * 2, bp32.packed_bytes());
+
+        let mut apack = vec![0.0f32; apack_len(m, k)];
+        let mut c32 = vec![0.0f32; m * n];
+        gemm_packed(&a, &bp32, m, &mut c32, &mut apack, SimdLevel::Scalar);
+        for simd in [SimdLevel::Scalar, SimdLevel::detect()] {
+            let mut c16 = vec![0.0f32; m * n];
+            gemm_packed(&a, &bp16, m, &mut c16, &mut apack, simd);
+            // bf16 keeps 8 mantissa bits ⇒ each B element moves by at
+            // most a 2^-8 relative step; k random-sign terms accumulate
+            // ~sqrt(k) of that (documented tolerance, same as the
+            // integration sweep in tests/native_kernels.rs).
+            close(&c16, &c32, 0.02 * (k as f32).sqrt(), "bf16 gemm");
+        }
+        // And the two bf16 kernels agree bitwise (widening is exact).
+        let mut scalar16 = vec![0.0f32; m * n];
+        gemm_packed(&a, &bp16, m, &mut scalar16, &mut apack, SimdLevel::Scalar);
+        let mut simd16 = vec![0.0f32; m * n];
+        gemm_packed(&a, &bp16, m, &mut simd16, &mut apack, SimdLevel::detect());
+        assert_eq!(simd16, scalar16);
+    }
+
+    #[test]
+    fn simd_knob_resolution_is_pure_and_capped_by_detection() {
+        use SimdLevel::*;
+        for detected in [Scalar, Avx2] {
+            assert_eq!(SimdLevel::resolve(Some("off"), detected), Scalar);
+            assert_eq!(SimdLevel::resolve(Some("scalar"), detected), Scalar);
+            assert_eq!(SimdLevel::resolve(Some(" OFF "), detected), Scalar);
+            // Forcing avx2 can never exceed what the CPU reports.
+            assert_eq!(SimdLevel::resolve(Some("avx2"), detected), detected);
+            assert_eq!(SimdLevel::resolve(None, detected), detected);
+            assert_eq!(SimdLevel::resolve(Some("???"), detected), detected);
+        }
+        assert_eq!(PackPrecision::resolve(Some("bf16")), PackPrecision::Bf16);
+        assert_eq!(PackPrecision::resolve(Some(" BF16 ")), PackPrecision::Bf16);
+        assert_eq!(PackPrecision::resolve(Some("f32")), PackPrecision::F32);
+        assert_eq!(PackPrecision::resolve(None), PackPrecision::F32);
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+        assert_eq!(PackPrecision::Bf16.name(), "bf16");
     }
 
     #[test]
@@ -451,13 +882,15 @@ mod tests {
         crate::native::kernels::cell_batch(
             &w, &bias, &z, &x, batch, n, &mut f_want, &mut res_want, &mut fn_want,
         );
+        let simd = SimdLevel::from_env();
         let bp = PackedB::pack(&w, n, n);
         let mut apack = vec![0.0f32; apack_len(batch, n)];
         let mut f = vec![0.0f32; batch * n];
         let mut res = vec![0.0f32; batch];
         let mut fnorm = vec![0.0f32; batch];
         cell_rows_packed(
-            &bp, &bias, &z, &x, batch, n, &mut f, &mut res, &mut fnorm, &mut apack,
+            &bp, &bias, &z, &x, batch, n, &mut f, &mut res, &mut fnorm,
+            &mut apack, simd,
         );
         close(&f, &f_want, 1e-5, "cell f");
         close(&res, &res_want, 1e-5, "cell res");
@@ -472,7 +905,7 @@ mod tests {
         let mut fn2 = vec![0.0f32; batch];
         cell_batch_packed(
             &bp, &bias, &z, &x, batch, n, &mut f2, &mut res2, &mut fn2, 3,
-            Some(&pool), &mut apacks,
+            Some(&pool), &mut apacks, simd,
         );
         assert_eq!(f2, f);
         assert_eq!(res2, res);
@@ -496,7 +929,7 @@ mod tests {
         }
         let mut c = vec![0.0f32; k * n];
         let mut apack = vec![0.0f32; apack_len(k, k)];
-        gemm_packed(&a, &bp, k, &mut c, &mut apack);
+        gemm_packed(&a, &bp, k, &mut c, &mut apack, SimdLevel::from_env());
         assert_eq!(c, b, "identity × B must reproduce B exactly");
     }
 }

@@ -47,6 +47,24 @@ impl Default for StochasticOpts {
     }
 }
 
+/// Draw the coordinate subsample for a sketched Gram build.
+///
+/// Returns `None` when the sketch is a no-op (`sketch == 0` or
+/// `sketch >= n`: use every coordinate, exactly), otherwise the sampled
+/// coordinate indices (with replacement, uniform over `0..n`) plus the
+/// `sqrt(n / s)` scale that makes the sketched Gram an unbiased estimate
+/// of GᵀG.  Shared by [`sketched_alpha`] and the adaptive-window
+/// condition probes in `native::anderson`, so both paths sketch the same
+/// way.
+pub fn sketch_coords(n: usize, sketch: usize, rng: &mut Rng) -> Option<(Vec<usize>, f32)> {
+    if sketch == 0 || sketch >= n {
+        return None;
+    }
+    let coords: Vec<usize> = (0..sketch).map(|_| rng.below(n)).collect();
+    let scale = (n as f32 / sketch as f32).sqrt();
+    Some((coords, scale))
+}
+
 /// Sketched constrained Anderson solve over an explicit window.
 ///
 /// Returns (alpha, used_coords). Exact when `sketch == 0 || sketch >= n`.
@@ -66,28 +84,27 @@ pub fn sketched_alpha(
     rng: &mut Rng,
 ) -> Result<(Vec<f32>, usize)> {
     assert!(newest < nv, "newest slot {newest} outside valid window {nv}");
-    let use_all = sketch == 0 || sketch >= n;
-    let s = if use_all { n } else { sketch };
+    let drawn = sketch_coords(n, sketch, rng);
+    let s = drawn.as_ref().map_or(n, |(c, _)| c.len());
 
-    // Residual rows restricted to the sampled coordinates.
+    // Residual rows restricted to the sampled coordinates, scaled so the
+    // sketched Gram is an unbiased estimate of GᵀG (scale 1 when exact).
     let mut g = vec![0.0f32; nv * s];
-    let mut coords: Vec<usize> = Vec::with_capacity(s);
-    if use_all {
-        coords.extend(0..n);
-    } else {
-        for _ in 0..s {
-            coords.push(rng.below(n));
+    match &drawn {
+        None => {
+            for i in 0..nv {
+                for c in 0..n {
+                    g[i * s + c] = fs[i * n + c] - xs[i * n + c];
+                }
+            }
         }
-    }
-    for i in 0..nv {
-        for (t, &c) in coords.iter().enumerate() {
-            g[i * s + t] = fs[i * n + c] - xs[i * n + c];
+        Some((coords, scale)) => {
+            for i in 0..nv {
+                for (t, &c) in coords.iter().enumerate() {
+                    g[i * s + t] = scale * (fs[i * n + c] - xs[i * n + c]);
+                }
+            }
         }
-    }
-    // Scale so the sketched Gram is an unbiased estimate of GᵀG.
-    let scale = (n as f32 / s as f32).sqrt();
-    for v in g.iter_mut() {
-        *v *= scale;
     }
 
     let mut h = vec![0.0f32; nv * nv];

@@ -44,6 +44,15 @@ pub struct WorkspaceStats {
     /// Packs performed for unversioned tensors (never cached — raw
     /// `HostTensor`s that did not come from a `ParamSet`).
     pub pack_uncached: u64,
+    /// Resident bytes of cached f32 weight packs (the pack-cache memory
+    /// footprint gauge; zero when the engine runs bf16 panels).
+    pub pack_bytes_f32: usize,
+    /// Resident bytes of cached bf16 weight packs — exactly half the
+    /// f32 bytes for the same weights.
+    pub pack_bytes_bf16: usize,
+    /// Resident packs across all cache slots and precisions (a slot
+    /// holding both an f32 and a bf16 pack counts twice).
+    pub pack_entries: usize,
 }
 
 /// A best-fit pool of reusable `f32` scratch buffers.

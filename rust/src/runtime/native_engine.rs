@@ -33,7 +33,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::model::ParamSet;
 use crate::native::anderson::mix_masked_window;
-use crate::native::pack::{self, PackedB};
+use crate::native::pack::{self, PackPrecision, PackedB, SimdLevel};
 use crate::native::{kernels, PoolStats, WorkerPool, Workspace, WorkspaceStats};
 use crate::runtime::backend::{check_inputs, Backend, EntryStats, StatsBook};
 use crate::runtime::manifest::{
@@ -77,6 +77,15 @@ pub struct NativeConfig {
     /// (see [`kernels::max_threads`]).  Tests pin explicit sizes to
     /// exercise serial vs parallel paths deterministically.
     pub threads: usize,
+    /// Microkernel SIMD level; `None` (the default) resolves the
+    /// `DEQ_NATIVE_SIMD` knob against CPU detection once at engine
+    /// construction ([`SimdLevel::from_env`]).  Tests pin explicit
+    /// levels to exercise scalar vs SIMD paths without env races.
+    pub simd: Option<SimdLevel>,
+    /// Packed-panel storage precision; `None` (the default) reads
+    /// `DEQ_NATIVE_PRECISION` once at engine construction
+    /// ([`PackPrecision::from_env`]).
+    pub precision: Option<PackPrecision>,
 }
 
 impl Default for NativeConfig {
@@ -106,6 +115,8 @@ impl Default for NativeConfig {
             cell_gain: 0.8,
             init_seed: 17,
             threads: 0,
+            simd: None,
+            precision: None,
         }
     }
 }
@@ -260,16 +271,53 @@ fn add_param_grads(
     }
 }
 
-/// The engine's packed-weight cache: one [`PackedB`] per parameter
+/// One pack-cache slot: the parameter revision the packs were built
+/// from, plus up to one resident pack per storage precision.  Both
+/// precisions key off the same `version`, so a new parameter revision
+/// drops them together — the f32 and bf16 panels of a slot can never
+/// disagree about which weights they hold.
+#[derive(Debug)]
+struct PackEntry {
+    version: u64,
+    f32_pack: Option<Arc<PackedB>>,
+    bf16_pack: Option<Arc<PackedB>>,
+}
+
+impl PackEntry {
+    fn fresh(version: u64, precision: PackPrecision, p: &Arc<PackedB>) -> Self {
+        let mut e = Self { version, f32_pack: None, bf16_pack: None };
+        *e.slot_mut(precision) = Some(p.clone());
+        e
+    }
+
+    fn get(&self, precision: PackPrecision) -> Option<&Arc<PackedB>> {
+        match precision {
+            PackPrecision::F32 => self.f32_pack.as_ref(),
+            PackPrecision::Bf16 => self.bf16_pack.as_ref(),
+        }
+    }
+
+    fn slot_mut(&mut self, precision: PackPrecision) -> &mut Option<Arc<PackedB>> {
+        match precision {
+            PackPrecision::F32 => &mut self.f32_pack,
+            PackPrecision::Bf16 => &mut self.bf16_pack,
+        }
+    }
+}
+
+/// The engine's packed-weight cache: one [`PackEntry`] per parameter
 /// slot, keyed by the tensor's [`crate::model::params`] version.
 /// Steady-state solve iterations replay the same versions and hit every
 /// time; a training step stamps fresh versions and the next forward
 /// re-packs exactly the changed weights (`invalidations` counts those
-/// re-packs).  Unversioned tensors (version 0 — not from a `ParamSet`)
-/// are packed per call and never cached, so stale data can't be served.
+/// re-packs, and clears *both* precisions of the slot).  A version
+/// match that lacks the requested precision is a `miss` — the new pack
+/// joins the resident one, so f32 and bf16 panels coexist per slot.
+/// Unversioned tensors (version 0 — not from a `ParamSet`) are packed
+/// per call and never cached, so stale data can't be served.
 #[derive(Debug, Default)]
 struct PackCache {
-    entries: Vec<Option<(u64, Arc<PackedB>)>>,
+    entries: Vec<Option<PackEntry>>,
     hits: u64,
     misses: u64,
     invalidations: u64,
@@ -293,6 +341,13 @@ pub struct NativeEngine {
     pool: WorkerPool,
     /// Packed-weight cache (see [`PackCache`]).
     packs: Mutex<PackCache>,
+    /// Microkernel SIMD level, resolved once at construction (config
+    /// pin, else `DEQ_NATIVE_SIMD` against CPU detection) — dispatch is
+    /// a latched field read, never a per-call feature probe.
+    simd: SimdLevel,
+    /// Packed-panel storage precision, resolved once at construction
+    /// (config pin, else `DEQ_NATIVE_PRECISION`).
+    precision: PackPrecision,
 }
 
 impl NativeEngine {
@@ -304,6 +359,8 @@ impl NativeEngine {
     pub fn new(cfg: NativeConfig) -> Self {
         let manifest = build_manifest(&cfg);
         let threads = if cfg.threads > 0 { cfg.threads } else { kernels::max_threads() };
+        let simd = cfg.simd.unwrap_or_else(SimdLevel::from_env);
+        let precision = cfg.precision.unwrap_or_else(PackPrecision::from_env);
         Self {
             cfg,
             manifest,
@@ -314,7 +371,19 @@ impl NativeEngine {
                 entries: (0..NP).map(|_| None).collect(),
                 ..PackCache::default()
             }),
+            simd,
+            precision,
         }
+    }
+
+    /// The SIMD microkernel level latched at construction.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// The packed-panel storage precision latched at construction.
+    pub fn pack_precision(&self) -> PackPrecision {
+        self.precision
     }
 
     pub fn config(&self) -> &NativeConfig {
@@ -331,6 +400,16 @@ impl NativeEngine {
         s.pack_misses = pc.misses;
         s.pack_invalidations = pc.invalidations;
         s.pack_uncached = pc.uncached;
+        for e in pc.entries.iter().flatten() {
+            if let Some(p) = &e.f32_pack {
+                s.pack_bytes_f32 += p.packed_bytes();
+                s.pack_entries += 1;
+            }
+            if let Some(p) = &e.bf16_pack {
+                s.pack_bytes_bf16 += p.packed_bytes();
+                s.pack_entries += 1;
+            }
+        }
         s
     }
 
@@ -363,8 +442,9 @@ impl NativeEngine {
     /// The microkernel-ready pack of a (k, n) weight tensor, served from
     /// the version-keyed cache when possible.  Versioned tensors (from a
     /// `ParamSet`) hit the cache on every steady-state iteration and are
-    /// re-packed exactly once per parameter revision; unversioned
-    /// tensors are packed fresh each call and never cached.
+    /// re-packed exactly once per parameter revision *and* storage
+    /// precision; unversioned tensors are packed fresh each call and
+    /// never cached.
     fn packed_weight(
         &self,
         slot: usize,
@@ -372,6 +452,7 @@ impl NativeEngine {
         k: usize,
         n: usize,
     ) -> Result<Arc<PackedB>> {
+        let prec = self.precision;
         // Fast path under the lock: pure bookkeeping.  The O(k·n) pack
         // itself always runs *outside* the mutex so a concurrent cache
         // hit on another thread never blocks behind a repack.
@@ -379,29 +460,49 @@ impl NativeEngine {
             let mut pc = self.packs.lock().unwrap();
             if t.version == 0 {
                 pc.uncached += 1;
-            } else if pc.entries[slot].as_ref().map(|(v, _)| *v) == Some(t.version) {
-                pc.hits += 1;
-                let p = pc.entries[slot].as_ref().unwrap().1.clone();
-                return Ok(p);
+            } else {
+                let cached = pc.entries[slot]
+                    .as_ref()
+                    .filter(|e| e.version == t.version)
+                    .and_then(|e| e.get(prec).cloned());
+                if let Some(p) = cached {
+                    pc.hits += 1;
+                    return Ok(p);
+                }
             }
         }
-        let p = Arc::new(PackedB::pack(t.f32s()?, k, n));
+        let p = Arc::new(PackedB::pack_with(t.f32s()?, k, n, prec));
         if t.version == 0 {
             return Ok(p); // never cached (counted above)
         }
-        let mut pc = self.packs.lock().unwrap();
-        match pc.entries[slot].as_ref().map(|(v, _)| *v) {
-            // Another thread raced us to the same revision: serve the
-            // cached pack (identical contents) and drop ours.
-            Some(v) if v == t.version => {
-                pc.hits += 1;
-                let cached = pc.entries[slot].as_ref().unwrap().1.clone();
-                return Ok(cached);
+        let mut guard = self.packs.lock().unwrap();
+        let pc = &mut *guard;
+        match &mut pc.entries[slot] {
+            Some(e) if e.version == t.version => {
+                // Another thread raced us to the same revision and
+                // precision: serve the cached pack (identical contents)
+                // and drop ours.
+                if let Some(cached) = e.get(prec).cloned() {
+                    pc.hits += 1;
+                    return Ok(cached);
+                }
+                // Same revision, other precision resident: a genuine
+                // miss for this precision — both packs now share the
+                // slot (and the version key).
+                *e.slot_mut(prec) = Some(p.clone());
+                pc.misses += 1;
             }
-            Some(_) => pc.invalidations += 1,
-            None => pc.misses += 1,
+            other => {
+                // New revision drops every precision at once; a bare
+                // slot is a plain first-time miss.
+                if other.is_some() {
+                    pc.invalidations += 1;
+                } else {
+                    pc.misses += 1;
+                }
+                *other = Some(PackEntry::fresh(t.version, prec, &p));
+            }
         }
-        pc.entries[slot] = Some((t.version, p.clone()));
         Ok(p)
     }
 
@@ -412,7 +513,7 @@ impl NativeEngine {
         let chunks = kernels::parallel_chunks(m, wp.k, wp.n, self.pool.size());
         if chunks <= 1 {
             let mut apack = self.take_dirty(pack::apack_len(m, wp.k));
-            pack::gemm_packed(a, wp, m, c, &mut apack);
+            pack::gemm_packed(a, wp, m, c, &mut apack, self.simd);
             self.give(apack);
             return;
         }
@@ -421,7 +522,7 @@ impl NativeEngine {
         let nchunks = m.div_ceil(rows_per);
         let mut apacks: Vec<Vec<f32>> =
             (0..nchunks).map(|_| self.take_dirty(len)).collect();
-        pack::gemm_packed_chunked(a, wp, m, c, chunks, &self.pool, &mut apacks);
+        pack::gemm_packed_chunked(a, wp, m, c, chunks, &self.pool, &mut apacks, self.simd);
         for b in apacks {
             self.give(b);
         }
@@ -467,7 +568,7 @@ impl NativeEngine {
             // bookkeeping — the common case stays truly allocation-free.
             let mut apack = self.take_dirty(pack::apack_len(batch, n));
             pack::cell_rows_packed(
-                wp, bias, z, x, batch, n, f, res, fnorm, &mut apack,
+                wp, bias, z, x, batch, n, f, res, fnorm, &mut apack, self.simd,
             );
             self.give(apack);
             return;
@@ -479,7 +580,7 @@ impl NativeEngine {
             (0..nbufs).map(|_| self.take_dirty(len)).collect();
         pack::cell_batch_packed(
             wp, bias, z, x, batch, n, f, res, fnorm, chunks, Some(&self.pool),
-            &mut apacks,
+            &mut apacks, self.simd,
         );
         for b in apacks {
             self.give(b);
@@ -1464,6 +1565,79 @@ mod tests {
         let s = e.workspace_stats();
         assert_eq!(s.pack_uncached, 2, "unversioned weights pack per call");
         assert_eq!((s.pack_misses, s.pack_hits), (0, 0));
+    }
+
+    #[test]
+    fn bf16_engine_matches_f32_within_tolerance_and_halves_pack_bytes() {
+        let mk = |prec| {
+            NativeEngine::new(NativeConfig {
+                precision: Some(prec),
+                ..NativeConfig::default()
+            })
+        };
+        let ef = mk(PackPrecision::F32);
+        let eb = mk(PackPrecision::Bf16);
+        let p = ef.init_params().unwrap();
+        let n = ef.config().latent_dim();
+        let batch = 8;
+        let mut rng = Rng::new(41);
+        let z = rng.normal_vec(batch * n, 1.0);
+        let x = rng.normal_vec(batch * n, 1.0);
+        let mut inputs = p.tensors.clone();
+        let shape = ef.manifest().model.latent_shape(batch);
+        inputs.push(HostTensor::f32(shape.clone(), z).unwrap());
+        inputs.push(HostTensor::f32(shape, x).unwrap());
+        let of = ef.execute("cell_step", batch, &inputs).unwrap();
+        let ob = eb.execute("cell_step", batch, &inputs).unwrap();
+        // bf16 storage carries ~2^-9 relative weight error; tanh and the
+        // contraction keep the output deviation well under 0.05.
+        for (a, b) in of[0].f32s().unwrap().iter().zip(ob[0].f32s().unwrap()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        let (sf, sb) = (ef.workspace_stats(), eb.workspace_stats());
+        assert_eq!(sf.pack_bytes_bf16, 0);
+        assert_eq!(sb.pack_bytes_f32, 0);
+        assert_eq!(
+            sf.pack_bytes_f32,
+            2 * sb.pack_bytes_bf16,
+            "bf16 panels must cost exactly half the f32 bytes"
+        );
+        assert_eq!((sf.pack_entries, sb.pack_entries), (1, 1));
+    }
+
+    #[test]
+    fn pack_cache_keeps_both_precisions_per_slot_and_invalidates_together() {
+        let mut e = NativeEngine::new(NativeConfig {
+            precision: Some(PackPrecision::F32),
+            ..NativeConfig::default()
+        });
+        let p = e.init_params().unwrap();
+        let n = e.config().latent_dim();
+        let t = p.tensors[P_W_CELL].clone();
+        e.packed_weight(P_W_CELL, &t, n, n).unwrap();
+        // Re-latch the other precision on the same engine: the bf16 pack
+        // must join the resident f32 pack (a miss, not an invalidation).
+        e.precision = PackPrecision::Bf16;
+        e.packed_weight(P_W_CELL, &t, n, n).unwrap();
+        let s = e.workspace_stats();
+        assert_eq!(
+            (s.pack_misses, s.pack_hits, s.pack_invalidations),
+            (2, 0, 0),
+            "second precision is a fresh miss on a version match"
+        );
+        assert_eq!(s.pack_entries, 2);
+        assert!(s.pack_bytes_f32 > 0 && s.pack_bytes_bf16 > 0);
+        assert_eq!(s.pack_bytes_f32, 2 * s.pack_bytes_bf16);
+        e.packed_weight(P_W_CELL, &t, n, n).unwrap();
+        assert_eq!(e.workspace_stats().pack_hits, 1, "bf16 now hits");
+        // A new parameter revision must drop *both* precisions at once.
+        let p2 = crate::model::ParamSet::from_tensors(p.tensors.clone());
+        e.packed_weight(P_W_CELL, &p2.tensors[P_W_CELL], n, n).unwrap();
+        let s = e.workspace_stats();
+        assert_eq!(s.pack_invalidations, 1);
+        assert_eq!(s.pack_entries, 1, "stale f32 pack must go too");
+        assert_eq!(s.pack_bytes_f32, 0);
+        assert!(s.pack_bytes_bf16 > 0);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //!               "safeguard":   <bool>   (damped fallback on a bad mix)
 //!               "errorfactor": <number > 1>
 //!               "cond_max":    <number ≥ 1>
+//!               "gram":        "exact" | <integer ≥ 1>  (sketched Gram
+//!                              condition probes for window adaptation)
 //!             (overrides resolve against the server's default spec under
 //!              its clamps — min tol, max iteration cap — so a request
 //!              can loosen a solve freely but only tighten it within the
@@ -22,7 +24,7 @@
 //!              "solver_iters": k, "solver_fevals": k, "converged": b,
 //!              "solver": "...", "tol": t, "max_iter": m,
 //!              "adaptive": b, "safeguard": b, "errorfactor": f,
-//!              "cond_max": c}
+//!              "cond_max": c, "gram": "exact" | s}
 //!             (iteration-level scheduling: solver_iters/fevals are this
 //!              sample's own counts, not the batch's; the solver/tol/
 //!              max_iter/adaptivity fields echo the *effective* spec the
@@ -39,7 +41,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::server::Router;
-use crate::solver::{spec::f32_json, SolveOverrides, SolverKind};
+use crate::solver::{spec::f32_json, GramMode, SolveOverrides, SolverKind};
 use crate::util::json::{self, Json};
 
 /// Handle one client connection (blocking, one request at a time per
@@ -132,6 +134,25 @@ fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
         })?;
         ov.cond_max = Some(c as f32);
     }
+    if let Some(v) = parsed.get("gram") {
+        const MSG: &str =
+            "override 'gram' must be \"exact\" or a positive integer";
+        let mode = if let Some(s) = v.as_str() {
+            if s == "exact" {
+                GramMode::Exact
+            } else {
+                return Err(MSG.to_string());
+            }
+        } else {
+            match v.as_f64() {
+                Some(n) if n >= 1.0 && n.fract() == 0.0 => {
+                    GramMode::Sketched { dim: n as usize }
+                }
+                _ => return Err(MSG.to_string()),
+            }
+        };
+        ov.gram = Some(mode);
+    }
     Ok(ov)
 }
 
@@ -167,6 +188,18 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                             (
                                 "pack_uncached",
                                 json::num(h.pack_uncached as f64),
+                            ),
+                            (
+                                "pack_bytes_f32",
+                                json::num(h.pack_bytes_f32 as f64),
+                            ),
+                            (
+                                "pack_bytes_bf16",
+                                json::num(h.pack_bytes_bf16 as f64),
+                            ),
+                            (
+                                "pack_entries",
+                                json::num(h.pack_entries as f64),
                             ),
                         ]),
                     ));
@@ -215,6 +248,13 @@ pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
                 ("safeguard", Json::Bool(resp.spec.safeguard)),
                 ("errorfactor", f32_json(resp.spec.errorfactor)),
                 ("cond_max", f32_json(resp.spec.cond_max)),
+                (
+                    "gram",
+                    match resp.spec.gram {
+                        GramMode::Exact => json::s("exact"),
+                        GramMode::Sketched { dim } => json::num(dim as f64),
+                    },
+                ),
             ];
             if let Some(id) = parsed.get("id") {
                 pairs.push(("id", id.clone()));

@@ -18,8 +18,11 @@
 
 use anyhow::Result;
 
+use crate::native::sketch_coords;
 use crate::runtime::HostTensor;
 use crate::solver::policy::WindowRule;
+use crate::solver::spec::GramMode;
+use crate::util::rng::Rng;
 
 /// Outcome of one window-adaptation pass ([`History::adapt`] /
 /// [`LaneHistory::adapt_lane`]): which ring slots were dropped, and by
@@ -184,8 +187,20 @@ impl History {
                 out.dropped_resid.push(i);
             }
         }
-        // Condition ceiling over the surviving slots.
+        // Condition ceiling over the surviving slots.  Probe rows are the
+        // full flattened cohort residuals, or — under GramMode::Sketched —
+        // an unbiased coordinate subsample drawn ONCE per adapt call
+        // (deterministically from the push counter, so solves replay
+        // bit-identically) and reused across the whole truncation loop.
         let row = self.batch * self.n;
+        let sketch = match rule.gram {
+            GramMode::Exact => None,
+            GramMode::Sketched { dim } => {
+                let mut rng = Rng::new(0x517C ^ self.count as u64);
+                sketch_coords(row, dim, &mut rng)
+            }
+        };
+        let probe_row = sketch.as_ref().map_or(row, |(c, _)| c.len());
         let mut g: Vec<f32> = Vec::new();
         loop {
             let kept: Vec<usize> = (0..nv).filter(|&i| self.keep[i]).collect();
@@ -194,18 +209,34 @@ impl History {
                 break;
             }
             g.clear();
-            g.resize(kept.len() * row, 0.0);
-            for (r, &i) in kept.iter().enumerate() {
-                for b in 0..self.batch {
-                    let src = (b * self.slots + i) * self.n;
-                    let dst = (r * self.batch + b) * self.n;
-                    for p in 0..self.n {
-                        g[dst + p] = self.fhist[src + p] - self.xhist[src + p];
+            g.resize(kept.len() * probe_row, 0.0);
+            match &sketch {
+                None => {
+                    for (r, &i) in kept.iter().enumerate() {
+                        for b in 0..self.batch {
+                            let src = (b * self.slots + i) * self.n;
+                            let dst = (r * self.batch + b) * self.n;
+                            for p in 0..self.n {
+                                g[dst + p] =
+                                    self.fhist[src + p] - self.xhist[src + p];
+                            }
+                        }
+                    }
+                }
+                Some((coords, scale)) => {
+                    for (r, &i) in kept.iter().enumerate() {
+                        for (t, &c) in coords.iter().enumerate() {
+                            // Coordinate c of the flattened (batch, n) row.
+                            let src = (c / self.n * self.slots + i) * self.n
+                                + c % self.n;
+                            g[r * probe_row + t] =
+                                scale * (self.fhist[src] - self.xhist[src]);
+                        }
                     }
                 }
             }
             let cond =
-                crate::native::window_cond_estimate(&g, kept.len(), row, lam);
+                crate::native::window_cond_estimate(&g, kept.len(), probe_row, lam);
             if cond <= rule.cond_max {
                 break;
             }
@@ -468,6 +499,19 @@ impl LaneHistory {
                 out.dropped_resid.push(i);
             }
         }
+        // Sketched or exact Gram probe rows, mirroring History::adapt —
+        // the coordinate draw is seeded from (lane, push count) so each
+        // lane sketches independently yet replays deterministically.
+        let sketch = match rule.gram {
+            GramMode::Exact => None,
+            GramMode::Sketched { dim } => {
+                let mut rng = Rng::new(
+                    0x1A4E ^ ((lane as u64) << 32) ^ self.count[lane] as u64,
+                );
+                sketch_coords(self.n, dim, &mut rng)
+            }
+        };
+        let probe_row = sketch.as_ref().map_or(self.n, |(c, _)| c.len());
         let mut g: Vec<f32> = Vec::new();
         loop {
             let kept = self.live_slots(lane);
@@ -476,15 +520,29 @@ impl LaneHistory {
                 break;
             }
             g.clear();
-            g.resize(kept.len() * self.n, 0.0);
-            for (r, &i) in kept.iter().enumerate() {
-                let src = (base + i) * self.n;
-                for p in 0..self.n {
-                    g[r * self.n + p] = self.fhist[src + p] - self.xhist[src + p];
+            g.resize(kept.len() * probe_row, 0.0);
+            match &sketch {
+                None => {
+                    for (r, &i) in kept.iter().enumerate() {
+                        let src = (base + i) * self.n;
+                        for p in 0..self.n {
+                            g[r * self.n + p] =
+                                self.fhist[src + p] - self.xhist[src + p];
+                        }
+                    }
+                }
+                Some((coords, scale)) => {
+                    for (r, &i) in kept.iter().enumerate() {
+                        let src = (base + i) * self.n;
+                        for (t, &c) in coords.iter().enumerate() {
+                            g[r * probe_row + t] = scale
+                                * (self.fhist[src + c] - self.xhist[src + c]);
+                        }
+                    }
                 }
             }
             let cond =
-                crate::native::window_cond_estimate(&g, kept.len(), self.n, lam);
+                crate::native::window_cond_estimate(&g, kept.len(), probe_row, lam);
             if cond <= rule.cond_max {
                 break;
             }
@@ -732,7 +790,11 @@ mod tests {
 
     #[test]
     fn history_adapt_drops_only_errorfactor_violators() {
-        let rule = WindowRule { errorfactor: 10.0, cond_max: f32::INFINITY };
+        let rule = WindowRule {
+            errorfactor: 10.0,
+            cond_max: f32::INFINITY,
+            gram: GramMode::Exact,
+        };
         let mut h = History::new(1, 4, 3);
         // Norms 1, 100, 2, 3 in distinct directions (well conditioned).
         for (k, norm) in [1.0, 100.0, 2.0, 3.0].into_iter().enumerate() {
@@ -757,7 +819,7 @@ mod tests {
         // Three nearly-parallel residual rows: condition estimate blows
         // up, so the ceiling truncates — but the newest slot survives
         // and the window stays non-empty even under an impossible cap.
-        let rule = WindowRule { errorfactor: 1e6, cond_max: 1.5 };
+        let rule = WindowRule { errorfactor: 1e6, cond_max: 1.5, gram: GramMode::Exact };
         let mut h = History::new(1, 3, 2);
         for (norm, eps) in [(1.0f32, 0.0f32), (1.01, 1e-4), (0.99, 2e-4)] {
             h.push(&[0.0, 0.0], &[norm, eps]);
@@ -776,7 +838,7 @@ mod tests {
     fn history_adapt_noop_matches_fixed_mask() {
         // Well-conditioned, similar-norm history: adaptation keeps
         // everything and the mask equals the fixed-window prefix.
-        let rule = WindowRule { errorfactor: 1e4, cond_max: 1e6 };
+        let rule = WindowRule { errorfactor: 1e4, cond_max: 1e6, gram: GramMode::Exact };
         let mut h = History::new(2, 3, 4);
         for k in 0..3 {
             let z = vec![0.1 * k as f32; 8];
@@ -790,8 +852,82 @@ mod tests {
     }
 
     #[test]
+    fn sketched_adapt_degrades_to_exact_when_wide_and_stays_deterministic() {
+        // A sketch at least as wide as the flattened row is exactly the
+        // full build (sketch_coords returns None), so the adapt outcome
+        // and mask match the exact mode bit-for-bit.
+        let exact = WindowRule { errorfactor: 1e6, cond_max: 1.5, gram: GramMode::Exact };
+        let wide = WindowRule { gram: GramMode::Sketched { dim: 1_000 }, ..exact };
+        let build = || {
+            let mut h = History::new(1, 3, 2);
+            for (norm, eps) in [(1.0f32, 0.0f32), (1.01, 1e-4), (0.99, 2e-4)] {
+                h.push(&[0.0, 0.0], &[norm, eps]);
+            }
+            h
+        };
+        let mut he = build();
+        let oe = he.adapt(exact, 1e-6);
+        let mut hw = build();
+        let ow = hw.adapt(wide, 1e-6);
+        assert_eq!(ow, oe, "wide sketch must equal exact adapt");
+        assert_eq!(hw.mask(), he.mask());
+
+        // A genuinely narrow sketch: invariants hold (newest kept, never
+        // empties) and the coordinate draw is a pure function of the push
+        // counter — the same history adapts the same way every time.
+        let narrow = WindowRule { gram: GramMode::Sketched { dim: 4 }, ..exact };
+        let outs: Vec<AdaptOutcome> = (0..2)
+            .map(|_| {
+                let mut h = History::new(2, 4, 16);
+                let mut rng = Rng::new(77);
+                for _ in 0..6 {
+                    let z = rng.normal_vec(32, 1.0);
+                    let f = rng.normal_vec(32, 1.0);
+                    h.push(&z, &f);
+                }
+                let out = h.adapt(narrow, 1e-6);
+                assert!(out.kept >= 1);
+                assert_eq!(h.mask()[h.newest_slot()], 1.0);
+                out
+            })
+            .collect();
+        assert_eq!(outs[0], outs[1], "sketched adapt must be deterministic");
+    }
+
+    #[test]
+    fn lane_sketched_adapt_is_deterministic_and_keeps_newest() {
+        let rule = WindowRule {
+            errorfactor: 1e6,
+            cond_max: 2.0,
+            gram: GramMode::Sketched { dim: 3 },
+        };
+        let outs: Vec<AdaptOutcome> = (0..2)
+            .map(|_| {
+                let mut h = LaneHistory::new(2, 4, 4, 12);
+                let mut rng = Rng::new(78);
+                for _ in 0..5 {
+                    let z = rng.normal_vec(12, 1.0);
+                    let f = rng.normal_vec(12, 1.0);
+                    h.push_lane(1, &z, &f);
+                }
+                let out = h.adapt_lane(1, rule, 1e-6);
+                assert!(out.kept >= 1);
+                assert!(h.live_slots(1).contains(&h.newest_slot(1)));
+                // Lane 0 untouched by lane 1's sketch.
+                assert!(h.live_slots(0).is_empty());
+                out
+            })
+            .collect();
+        assert_eq!(outs[0], outs[1], "lane sketch must be deterministic");
+    }
+
+    #[test]
     fn lane_adapt_drops_by_overwriting_with_newest() {
-        let rule = WindowRule { errorfactor: 10.0, cond_max: f32::INFINITY };
+        let rule = WindowRule {
+            errorfactor: 10.0,
+            cond_max: f32::INFINITY,
+            gram: GramMode::Exact,
+        };
         let mut h = LaneHistory::new(2, 3, 3, 2);
         // Lane 0: norms 1 (seed), 50 (outlier), 2 (newest) in distinct
         // directions.
@@ -829,7 +965,11 @@ mod tests {
         // naive condition monitoring would read as catastrophic.  The
         // live-slot accounting must see exactly one distinct entry and
         // leave the lane alone.
-        let rule = WindowRule { errorfactor: 2.0, cond_max: 1.0 + 1e-3 };
+        let rule = WindowRule {
+            errorfactor: 2.0,
+            cond_max: 1.0 + 1e-3,
+            gram: GramMode::Exact,
+        };
         let mut h = LaneHistory::new(1, 4, 4, 3);
         h.push_lane(0, &[0.0; 3], &[1.0, 2.0, 3.0]);
         assert_eq!(h.live_slots(0), vec![0]);

@@ -50,8 +50,8 @@ pub use policy::{
     LaneStep, SolvePolicy, WindowRule,
 };
 pub use spec::{
-    Damping, SolveClamps, SolveOverrides, SolveSpec, SolveSpecBuilder,
-    StagnationRule, DEFAULT_COND_MAX, DEFAULT_ERRORFACTOR,
+    Damping, GramMode, SolveClamps, SolveOverrides, SolveSpec,
+    SolveSpecBuilder, StagnationRule, DEFAULT_COND_MAX, DEFAULT_ERRORFACTOR,
 };
 
 /// Which solver to use.
@@ -136,6 +136,7 @@ impl From<SolveOptions> for SolveSpec {
             errorfactor: spec::DEFAULT_ERRORFACTOR,
             cond_max: spec::DEFAULT_COND_MAX,
             safeguard: false,
+            gram: GramMode::Exact,
         }
     }
 }

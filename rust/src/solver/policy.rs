@@ -27,7 +27,7 @@
 //! just per-lane policy state.
 
 use crate::runtime::Backend;
-use crate::solver::spec::{Damping, SolveSpec};
+use crate::solver::spec::{Damping, GramMode, SolveSpec};
 use crate::solver::SolverKind;
 
 /// What a policy wants for a lane after observing its latest residual.
@@ -67,13 +67,16 @@ pub struct WindowRule {
     /// Truncate (largest residual first) while the regularized Gram
     /// system's condition estimate exceeds this ceiling.
     pub cond_max: f32,
+    /// How the caller builds the Gram condition probe: exact rows, or an
+    /// unbiased coordinate sketch (cheap probes for wide windows).
+    pub gram: GramMode,
 }
 
 impl WindowRule {
     /// The rule a spec describes (regardless of whether the spec arms
     /// adaptivity — gating on `adaptive_window` is the policy's job).
     pub fn from_spec(spec: &SolveSpec) -> Self {
-        Self { errorfactor: spec.errorfactor, cond_max: spec.cond_max }
+        Self { errorfactor: spec.errorfactor, cond_max: spec.cond_max, gram: spec.gram }
     }
 }
 

@@ -149,6 +149,81 @@ impl StagnationRule {
     }
 }
 
+/// How the adaptive window builds the regularized ΔF Gram system it
+/// probes for conditioning (and truncates against `cond_max`).
+///
+/// `Exact` computes every Gram entry from full D-length residual rows —
+/// O(window²·D) per adapt, and the bit-exact default.  `Sketched` draws
+/// `dim` random coordinates (with replacement, scaled to keep the Gram
+/// an unbiased estimate of GᵀG — `native::stochastic::sketch_coords`)
+/// and builds the probe from those, cutting the adapt cost to
+/// O(window²·dim): the randomized-sketching route Saad catalogs for
+/// keeping wide-window mixing cheap relative to the map evaluation.
+/// The sketch only steers *window truncation*; mixing weights are still
+/// solved from the exact history, so solves land on the same fixed
+/// point within tol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GramMode {
+    /// Full-length Gram rows (the default; pre-sketch behaviour).
+    Exact,
+    /// Coordinate-sketched Gram rows of dimension `dim` (≥ 1; sketches
+    /// wider than the state dimension degrade gracefully to exact).
+    Sketched { dim: usize },
+}
+
+impl GramMode {
+    /// The sketch dimension as a plain count (0 = exact) — the CLI form.
+    pub fn sketch_dim(&self) -> usize {
+        match *self {
+            GramMode::Exact => 0,
+            GramMode::Sketched { dim } => dim,
+        }
+    }
+
+    /// Canonical mode from a plain count (0 = exact).
+    pub fn from_sketch_dim(dim: usize) -> Self {
+        if dim == 0 {
+            GramMode::Exact
+        } else {
+            GramMode::Sketched { dim }
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let GramMode::Sketched { dim } = *self {
+            if dim == 0 {
+                bail!(
+                    "solver gram sketch dimension must be >= 1 \
+                     (use \"exact\" for exact Gram builds)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            GramMode::Exact => json::s("exact"),
+            GramMode::Sketched { dim } => json::num(dim as f64),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        if let Some(s) = v.as_str() {
+            if s == "exact" {
+                return Ok(GramMode::Exact);
+            }
+            bail!("SolveSpec 'gram' must be \"exact\" or a positive integer, got \"{s}\"");
+        }
+        match v.as_f64() {
+            Some(n) if n >= 1.0 && n.fract() == 0.0 => {
+                Ok(GramMode::Sketched { dim: n as usize })
+            }
+            _ => bail!("SolveSpec 'gram' must be \"exact\" or a positive integer"),
+        }
+    }
+}
+
 /// Declarative description of one equilibrium solve.
 ///
 /// Field-for-field superset of the old flat `SolveOptions`, so struct
@@ -226,6 +301,10 @@ pub struct SolveSpec {
     /// `restart_on_breakdown` the history window is kept.  When both are
     /// armed the safeguard wins (it is the gentler recovery).
     pub safeguard: bool,
+    /// How the adaptive window builds its Gram condition probe (exact or
+    /// coordinate-sketched).  Consulted only when `adaptive_window` is
+    /// set; the fixed-window policies never build the probe at all.
+    pub gram: GramMode,
 }
 
 /// Default residual-spread bound for the adaptive window (CDLS21's
@@ -254,6 +333,7 @@ impl SolveSpec {
             errorfactor: DEFAULT_ERRORFACTOR,
             cond_max: DEFAULT_COND_MAX,
             safeguard: false,
+            gram: GramMode::Exact,
         }
     }
 
@@ -274,6 +354,7 @@ impl SolveSpec {
             errorfactor: DEFAULT_ERRORFACTOR,
             cond_max: DEFAULT_COND_MAX,
             safeguard: false,
+            gram: GramMode::Exact,
         }
     }
 
@@ -320,6 +401,7 @@ impl SolveSpec {
                 self.cond_max
             );
         }
+        self.gram.validate()?;
         Ok(())
     }
 
@@ -333,6 +415,7 @@ impl SolveSpec {
             ("errorfactor", f32_json(self.errorfactor)),
             ("safeguard", Json::Bool(self.safeguard)),
             ("fused_forward", Json::Bool(self.fused_forward)),
+            ("gram", self.gram.to_json()),
             ("kind", json::s(self.kind.name())),
             ("lam", f32_json(self.lam)),
             ("max_fevals", json::num(self.max_fevals as f64)),
@@ -356,9 +439,10 @@ impl SolveSpec {
     /// Parse and validate the JSON form.
     ///
     /// The adaptivity fields (`adaptive_window`, `errorfactor`,
-    /// `cond_max`, `safeguard`) are *optional* and default to the
-    /// fixed-policy values when absent, so specs serialized before the
-    /// adaptive policies existed keep parsing unchanged.
+    /// `cond_max`, `safeguard`, `gram`) are *optional* and default to
+    /// the fixed-policy values when absent, so specs serialized before
+    /// the adaptive policies (or the Gram sketch) existed keep parsing
+    /// unchanged.
     pub fn from_json(v: &Json) -> Result<Self> {
         let kind_name = v
             .get("kind")
@@ -427,6 +511,12 @@ impl SolveSpec {
                 .get("safeguard")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            // Absent on pre-sketch specs: default to exact Gram builds.
+            gram: v
+                .get("gram")
+                .map(GramMode::from_json)
+                .transpose()?
+                .unwrap_or(GramMode::Exact),
         };
         spec.validate()?;
         Ok(spec)
@@ -510,6 +600,11 @@ impl SolveSpecBuilder {
         self
     }
 
+    pub fn gram(mut self, g: GramMode) -> Self {
+        self.spec.gram = g;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<SolveSpec> {
         self.spec.validate()?;
@@ -533,6 +628,10 @@ pub struct SolveOverrides {
     pub cond_max: Option<f32>,
     /// Arm (or disarm) the safeguarded mixed step.
     pub safeguard: Option<bool>,
+    /// Switch the adaptive window's Gram build (exact or sketched).
+    /// Like the other adaptivity knobs: validated, not clamped —
+    /// sketching only *cheapens* the adapt probe.
+    pub gram: Option<GramMode>,
 }
 
 impl SolveOverrides {
@@ -544,6 +643,7 @@ impl SolveOverrides {
             && self.errorfactor.is_none()
             && self.cond_max.is_none()
             && self.safeguard.is_none()
+            && self.gram.is_none()
     }
 
     /// Resolve against `base` under `clamps`: overrides are validated
@@ -593,6 +693,11 @@ impl SolveOverrides {
         }
         if let Some(on) = self.safeguard {
             spec.safeguard = on;
+        }
+        if let Some(g) = self.gram {
+            g.validate()
+                .map_err(|_| anyhow!("override gram sketch dimension must be >= 1"))?;
+            spec.gram = g;
         }
         spec.validate()?;
         Ok(spec)
@@ -768,6 +873,7 @@ mod tests {
             errorfactor: 1e3,
             cond_max: 1e8,
             safeguard: true,
+            gram: GramMode::Sketched { dim: 48 },
         };
         let text = json::to_string(&spec.to_json());
         let back = SolveSpec::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -860,6 +966,77 @@ mod tests {
     }
 
     #[test]
+    fn gram_mode_json_and_dim_helpers() {
+        assert_eq!(GramMode::Exact.sketch_dim(), 0);
+        assert_eq!(GramMode::Sketched { dim: 32 }.sketch_dim(), 32);
+        assert_eq!(GramMode::from_sketch_dim(0), GramMode::Exact);
+        assert_eq!(GramMode::from_sketch_dim(9), GramMode::Sketched { dim: 9 });
+        // Malformed wire forms bounce with descriptive errors.
+        for bad in ["\"fast\"", "0", "-4", "2.5", "true"] {
+            let v = json::parse(bad).unwrap();
+            let err = GramMode::from_json(&v).unwrap_err().to_string();
+            assert!(err.contains("'gram'"), "{bad}: {err}");
+        }
+        // Sketched{0} can only arise from struct literals; validate
+        // rejects it wherever it lands.
+        let spec = SolveSpec { gram: GramMode::Sketched { dim: 0 }, ..base() };
+        assert!(spec.validate().unwrap_err().to_string().contains("gram"));
+        let ov = SolveOverrides {
+            gram: Some(GramMode::Sketched { dim: 0 }),
+            ..Default::default()
+        };
+        assert!(!ov.is_empty());
+        let err = ov
+            .apply(&base(), &SolveClamps::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("override gram"), "{err}");
+        // And a well-formed override lands on the spec.
+        let ov = SolveOverrides {
+            gram: Some(GramMode::Sketched { dim: 16 }),
+            ..Default::default()
+        };
+        let spec = ov.apply(&base(), &SolveClamps::default()).unwrap();
+        assert_eq!(spec.gram, GramMode::Sketched { dim: 16 });
+    }
+
+    #[test]
+    fn pre_sketch_json_parses_to_exact_gram_and_round_trips_byte_stable() {
+        // Golden: a default Anderson spec exactly as PR 5/6 serialized it
+        // — no "gram" key existed on the wire.
+        let old = concat!(
+            "{\"adaptive_window\":false,\"cond_max\":1000000,",
+            "\"damping\":{\"mode\":\"full\"},\"errorfactor\":10000,",
+            "\"fused_forward\":true,\"kind\":\"anderson\",\"lam\":0.00001,",
+            "\"max_fevals\":0,\"max_iter\":100,",
+            "\"restart_on_breakdown\":false,\"safeguard\":false,",
+            "\"stagnation\":{\"eps\":0.03,\"window\":0},",
+            "\"tol\":0.001,\"window\":5}",
+        );
+        let spec = SolveSpec::from_json(&json::parse(old).unwrap()).unwrap();
+        assert_eq!(spec, base(), "pre-sketch golden must parse to the defaults");
+        assert_eq!(spec.gram, GramMode::Exact, "missing 'gram' must mean exact");
+        // Re-serializing inserts only the new key, in sorted position…
+        let new_text = json::to_string(&spec.to_json());
+        assert_eq!(
+            new_text,
+            old.replace(
+                "\"fused_forward\":true",
+                "\"fused_forward\":true,\"gram\":\"exact\""
+            ),
+        );
+        // …and the new form round-trips byte-stable.
+        let back = SolveSpec::from_json(&json::parse(&new_text).unwrap()).unwrap();
+        assert_eq!(json::to_string(&back.to_json()), new_text);
+        // Sketched mode rides the wire as a bare integer.
+        let sk = SolveSpec { gram: GramMode::Sketched { dim: 32 }, ..base() };
+        let sk_text = json::to_string(&sk.to_json());
+        assert!(sk_text.contains("\"gram\":32"), "{sk_text}");
+        let sk_back = SolveSpec::from_json(&json::parse(&sk_text).unwrap()).unwrap();
+        assert_eq!(sk_back, sk);
+    }
+
+    #[test]
     fn json_rejects_degenerate_spec() {
         let mut v = base().to_json();
         if let Json::Obj(map) = &mut v {
@@ -891,6 +1068,7 @@ mod tests {
             kind: Some(SolverKind::Forward),
             tol: Some(0.5),
             max_iter: Some(7),
+            ..Default::default()
         };
         let spec = ov.apply(&base, &clamps).unwrap();
         assert_eq!(spec.kind, SolverKind::Forward);
@@ -901,6 +1079,7 @@ mod tests {
             kind: None,
             tol: Some(1e-12),
             max_iter: Some(1_000_000),
+            ..Default::default()
         };
         let spec = greedy.apply(&base, &clamps).unwrap();
         assert_eq!(spec.tol, 1e-5);

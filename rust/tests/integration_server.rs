@@ -520,6 +520,18 @@ fn tcp_error_replies_are_golden() {
         reply(&with("\"max_iter\":0")),
         "{\"error\":\"override 'max_iter' must be a positive integer\"}"
     );
+    assert_eq!(
+        reply(&with("\"gram\":\"fast\"")),
+        "{\"error\":\"override 'gram' must be \\\"exact\\\" or a positive integer\"}"
+    );
+    assert_eq!(
+        reply(&with("\"gram\":0")),
+        "{\"error\":\"override 'gram' must be \\\"exact\\\" or a positive integer\"}"
+    );
+    assert_eq!(
+        reply(&with("\"gram\":2.5")),
+        "{\"error\":\"override 'gram' must be \\\"exact\\\" or a positive integer\"}"
+    );
 }
 
 /// A successful TCP reply echoes the effective spec (dyadic override
@@ -540,9 +552,47 @@ fn tcp_reply_echoes_effective_spec() {
     assert_eq!(v.get("solver").and_then(Json::as_str), Some("forward"));
     assert_eq!(v.get("tol").and_then(Json::as_f64), Some(0.25));
     assert_eq!(v.get("max_iter").and_then(Json::as_i64), Some(7));
+    // No gram override → the effective spec echoes the exact default.
+    assert_eq!(v.get("gram").and_then(Json::as_str), Some("exact"));
     assert!(v.get("converged").and_then(Json::as_bool).is_some());
     let iters = v.get("solver_iters").and_then(Json::as_i64).unwrap();
     assert!((1..=7).contains(&iters), "iters {iters} escaped the override");
+}
+
+/// A per-request sketched-Gram override rides the adaptive knobs through
+/// TCP and is echoed back as the sketch dimension (the exact form echoes
+/// as the string); afterwards the stats command reports the resident
+/// pack-cache footprint gauges.
+#[test]
+fn tcp_gram_override_echo_and_stats_report_pack_footprint() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(4, 4, 37);
+    let img: Vec<String> =
+        scaled(data.image(0), 1.0).iter().map(|v| format!("{v:.4}")).collect();
+    let line = format!(
+        "{{\"id\":3,\"image\":[{}],\"adaptive\":true,\"gram\":32}}",
+        img.join(",")
+    );
+    let v = tcp::process_line(&router, dim, &line);
+    assert_eq!(v.get("error"), None, "unexpected error: {v:?}");
+    assert_eq!(v.get("gram").and_then(Json::as_f64), Some(32.0));
+    let line =
+        format!("{{\"id\":4,\"image\":[{}],\"gram\":\"exact\"}}", img.join(","));
+    let v = tcp::process_line(&router, dim, &line);
+    assert_eq!(v.get("error"), None, "unexpected error: {v:?}");
+    assert_eq!(v.get("gram").and_then(Json::as_str), Some("exact"));
+
+    // The serving backend has packed weights by now: the footprint
+    // gauges show resident f32 packs and (at the default precision) no
+    // bf16 packs.
+    let v = tcp::process_line(&router, dim, "{\"cmd\":\"stats\"}");
+    let hot = v.get("hot_path").expect("hot_path stats");
+    let f32b = hot.get("pack_bytes_f32").and_then(Json::as_f64).unwrap();
+    let bf16b = hot.get("pack_bytes_bf16").and_then(Json::as_f64).unwrap();
+    let entries = hot.get("pack_entries").and_then(Json::as_f64).unwrap();
+    assert!(f32b > 0.0, "no f32 pack bytes resident after serving");
+    assert_eq!(bf16b, 0.0, "default precision must never pack bf16");
+    assert!(entries >= 1.0, "no resident pack entries after serving");
 }
 
 /// Adaptive-policy satellite: one iteration-level window mixes lanes

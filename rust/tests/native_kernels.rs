@@ -1,9 +1,11 @@
 //! Integration tier for the native kernels + pack + pool + workspace
 //! subsystem: microkernel/blocked GEMM parity through the public paths,
-//! the steady-state no-allocation / no-repack / no-spawn invariants
-//! across whole solver drives, pack-cache invalidation across a training
-//! step, pool shutdown on engine drop, the serving-level
-//! rank-deficient-window regression, and the oversize-batch contract.
+//! SIMD-vs-scalar bit-identity and bf16-pack parity through the public
+//! dispatch surface, the steady-state no-allocation / no-repack /
+//! no-spawn invariants across whole solver drives, pack-cache
+//! invalidation across a training step, pool shutdown on engine drop,
+//! the serving-level rank-deficient-window regression, and the
+//! oversize-batch contract.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -13,7 +15,7 @@ use deq_anderson::model::ParamSet;
 use deq_anderson::native::kernels;
 use deq_anderson::native::linalg;
 use deq_anderson::native::pack;
-use deq_anderson::native::WorkerPool;
+use deq_anderson::native::{PackPrecision, SimdLevel, WorkerPool};
 use deq_anderson::runtime::{
     Backend, HostTensor, NativeConfig, NativeEngine, SolverMeta,
 };
@@ -75,7 +77,7 @@ fn packed_microkernel_gemm_parity_odd_shapes_and_threads() {
                 for (threads, pool) in &pools {
                     let mut par = vec![0.0f32; m * n];
                     pack::gemm_micro_with(
-                        &a, &b, m, k, n, &mut par, *threads, Some(pool),
+                        &a, &b, m, k, n, &mut par, *threads, Some(pool), SimdLevel::from_env(),
                     );
                     assert_eq!(
                         par, serial,
@@ -84,6 +86,65 @@ fn packed_microkernel_gemm_parity_odd_shapes_and_threads() {
                 }
             }
         }
+    }
+}
+
+/// The explicit SIMD microkernel must be **bit-identical** to the scalar
+/// oracle for f32 packs across the odd-shape sweep: the AVX2 path does
+/// the same per-k-step multiply then add (no FMA contraction), so the
+/// dispatch level can never change a solve trace.
+#[test]
+fn simd_dispatch_is_bit_identical_to_scalar_for_f32() {
+    let dims = [1usize, 7, 17, 64, 129];
+    let pool = WorkerPool::new(2);
+    let mut rng = Rng::new(101);
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let a = rng.normal_vec(m * k, 1.0);
+                let b = rng.normal_vec(k * n, 1.0);
+                let mut scalar = vec![0.0f32; m * n];
+                pack::gemm_micro_with(
+                    &a, &b, m, k, n, &mut scalar, 2, Some(&pool), SimdLevel::Scalar,
+                );
+                let mut simd = vec![0.0f32; m * n];
+                pack::gemm_micro_with(
+                    &a, &b, m, k, n, &mut simd, 2, Some(&pool), SimdLevel::detect(),
+                );
+                assert_eq!(simd, scalar, "({m},{k},{n}): simd diverged");
+            }
+        }
+    }
+}
+
+/// bf16 packed panels through the public GEMM path: within the
+/// documented relative tolerance of the f32 result (storage rounds to
+/// bf16, accumulation stays f32), at exactly half the resident bytes,
+/// and bit-identical across SIMD levels (the widening load rounds
+/// nowhere).
+#[test]
+fn bf16_pack_gemm_parity_and_footprint() {
+    let mut rng = Rng::new(103);
+    for &(m, k, n) in &[(17usize, 33usize, 9usize), (64, 128, 65)] {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let bp32 = pack::PackedB::pack(&b, k, n);
+        let bp16 = pack::PackedB::pack_with(&b, k, n, PackPrecision::Bf16);
+        assert_eq!(bp16.packed_bytes() * 2, bp32.packed_bytes());
+        let mut apack = vec![0.0f32; pack::apack_len(m, k)];
+        let mut c32 = vec![0.0f32; m * n];
+        pack::gemm_packed(&a, &bp32, m, &mut c32, &mut apack, SimdLevel::from_env());
+        let mut c16 = vec![0.0f32; m * n];
+        pack::gemm_packed(&a, &bp16, m, &mut c16, &mut apack, SimdLevel::from_env());
+        let tol = 0.02 * (k as f32).sqrt();
+        for (i, (x, y)) in c16.iter().zip(&c32).enumerate() {
+            assert!((x - y).abs() <= tol, "({m},{k},{n})[{i}]: bf16 {x} vs f32 {y}");
+        }
+        let mut c16_scalar = vec![0.0f32; m * n];
+        pack::gemm_packed(&a, &bp16, m, &mut c16_scalar, &mut apack, SimdLevel::Scalar);
+        let mut c16_simd = vec![0.0f32; m * n];
+        pack::gemm_packed(&a, &bp16, m, &mut c16_simd, &mut apack, SimdLevel::detect());
+        assert_eq!(c16_simd, c16_scalar, "({m},{k},{n}): bf16 simd diverged");
     }
 }
 

@@ -4,17 +4,29 @@
 //! harness over the deterministic PRNG: each property runs across a sweep
 //! of random seeds/shapes and shrinks failures by reporting the seed.
 
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
 use deq_anderson::native::{
     self, maps::AffineMap, maps::TanhMap, AndersonOpts, AndersonState,
     FixedPointMap,
 };
+use deq_anderson::runtime::{backend_from_dir, Backend, HostTensor};
 use deq_anderson::solver::anderson::{History, LaneHistory};
-use deq_anderson::solver::driver::damp_in_place;
+use deq_anderson::solver::driver::{damp_in_place, solve_spec};
 use deq_anderson::solver::{
-    crossover, AdaptiveAndersonPolicy, LaneStep, SolvePolicy, SolveSpec,
-    SolverKind, WindowRule,
+    crossover, AdaptiveAndersonPolicy, GramMode, LaneStep, SolvePolicy,
+    SolveSpec, SolverKind, WindowRule,
 };
 use deq_anderson::util::rng::Rng;
+
+fn backend() -> &'static Arc<dyn Backend> {
+    static B: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    B.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        backend_from_dir(dir).expect("backend selection never fails in auto mode")
+    })
+}
 
 /// Run `prop` over `cases` seeds; panic with the failing seed.
 ///
@@ -354,6 +366,12 @@ fn prop_effective_window_never_exceeds_spec_window() {
         let rule = WindowRule {
             errorfactor: 1.0 + rng.range(0.1, 30.0),
             cond_max: rng.range(1.0, 1e6),
+            // Both probe flavors must uphold the structural invariants.
+            gram: if seed % 2 == 0 {
+                GramMode::Exact
+            } else {
+                GramMode::Sketched { dim: 1 + (seed as usize % 8) }
+            },
         };
         let out = hist.adapt(rule, 1e-3);
         let mask = hist.mask();
@@ -471,7 +489,11 @@ fn prop_dropped_iterates_violate_errorfactor_bound() {
         // cond_max = ∞ disables the ceiling outright (even a failed
         // factorization's INFINITY estimate satisfies `cond ≤ ∞`), so
         // the residual rule is provably the only dropper here.
-        let rule = WindowRule { errorfactor: ef, cond_max: f32::INFINITY };
+        let rule = WindowRule {
+            errorfactor: ef,
+            cond_max: f32::INFINITY,
+            gram: GramMode::Exact,
+        };
         let out = h.adapt(rule, 1e-3);
         assert!(out.dropped_cond.is_empty(), "seed={seed}: cond ceiling was disabled");
         let nv = pushes.min(m);
@@ -534,6 +556,13 @@ fn prop_cond_truncation_never_leaves_empty_window() {
         let rule = WindowRule {
             errorfactor: f32::MAX,
             cond_max: rng.range(1.0, 100.0),
+            // Half the seeds truncate through the sketched condition
+            // probe, so the hostile-cap invariants cover both flavors.
+            gram: if seed % 2 == 0 {
+                GramMode::Exact
+            } else {
+                GramMode::Sketched { dim: 4 + (seed as usize % 16) }
+            },
         };
         let lam = if seed % 2 == 0 { 1e-6 } else { 1e-3 };
 
@@ -587,5 +616,60 @@ fn prop_cond_truncation_never_leaves_empty_window() {
         );
         // Lane 0 (never touched) stays empty.
         assert!(lh.live_slots(0).is_empty(), "seed={seed}: cross-lane leak");
+    });
+}
+
+#[test]
+fn prop_sketched_gram_solves_reach_the_exact_fixed_point() {
+    // GramMode changes only the *condition probe* driving adaptive window
+    // truncation, never the mixing algebra: an adaptive Anderson solve
+    // under a sketched Gram must still converge, and to the same fixed
+    // point as the exact-Gram solve (the equilibrium is unique, so both
+    // approximate it to within solver tolerance).
+    for_seeds(4, |seed| {
+        let e = backend();
+        let p = e.init_params().unwrap();
+        let meta = e.manifest().model.clone();
+        let batch = 2;
+        let mut rng = Rng::new(seed.wrapping_mul(0x5E7C) + 3);
+        let img = HostTensor::f32(
+            meta.image_shape(batch),
+            rng.normal_vec(batch * meta.image_dim(), 1.0),
+        )
+        .unwrap();
+        let mut enc_in = p.tensors.clone();
+        enc_in.push(img);
+        let xf = e.execute("encode", batch, &enc_in).unwrap().remove(0);
+        let tol = 1e-3f32;
+        let solve = |gram: GramMode| {
+            let spec = SolveSpec {
+                tol,
+                max_iter: 120,
+                adaptive_window: true,
+                gram,
+                ..SolveSpec::from_manifest(e.as_ref(), SolverKind::Anderson)
+            };
+            solve_spec(e.as_ref(), &p.tensors, &xf, &spec).unwrap()
+        };
+        let exact = solve(GramMode::Exact);
+        let dim = 4 + (seed as usize % 29);
+        let sketched = solve(GramMode::Sketched { dim });
+        assert!(exact.converged, "seed={seed}: exact-gram solve diverged");
+        assert!(
+            sketched.converged,
+            "seed={seed} dim={dim}: sketched-gram solve diverged"
+        );
+        let ze = exact.z_star.f32s().unwrap();
+        let zs = sketched.z_star.f32s().unwrap();
+        let scale = ze.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        let maxerr = ze
+            .iter()
+            .zip(zs)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            maxerr <= 100.0 * tol * scale,
+            "seed={seed} dim={dim}: fixed points diverge by {maxerr} (scale {scale})"
+        );
     });
 }
