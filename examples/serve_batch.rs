@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example serve_batch -- \
 //!         [--clients 8] [--requests 64] [--solver anderson] \
-//!         [--sched iteration|batch] [--max-wait-ms 10]
+//!         [--sched iteration|batch] [--max-wait-ms 10] [--replicas 1]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: 4096,
+        replicas: args.usize_or("replicas", 1),
     };
     // Warm the compiled buckets so latency numbers are steady-state.
     let buckets = engine.manifest().batches_for("encode");

@@ -1,19 +1,35 @@
 //! Serving bench: iteration-level continuous batching vs the
-//! batch-granular baseline at smoke scale, with a machine-readable JSON
-//! summary for trend tracking (the CI `bench-smoke` job uploads it).
+//! batch-granular baseline at smoke scale, plus an open-loop saturation
+//! sweep (offered load at multiples of measured single-replica capacity,
+//! for 1 vs N replicas) with a graceful-degradation gate.  Emits a
+//! machine-readable JSON summary for trend tracking (the CI
+//! `bench-smoke` job uploads it).
 //!
 //!     cargo bench --bench serving -- [--requests 48] [--stiff-frac 0.5] \
-//!         [--out BENCH_serving.json]
+//!         [--replicas 1,2] [--loads 1,10,100] [--sat-requests 48] \
+//!         [--queue-cap 32] [--out BENCH_serving.json]
+//!
+//! The gate: at every offered load ≥ 10× capacity the server must shed
+//! (not crash) — some requests accepted, none errored, accepted-request
+//! p99 finite and bounded.  A violation exits nonzero so `bench-smoke`
+//! fails.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use deq_anderson::experiments::serving::{drive, mixed_traffic, ModeOutcome};
+use deq_anderson::experiments::serving::{
+    drive, mixed_traffic, saturate, ModeOutcome, SaturationOutcome,
+};
 use deq_anderson::runtime::backend_from_dir;
 use deq_anderson::server::SchedMode;
 use deq_anderson::solver::{SolveSpec, SolverKind};
 use deq_anderson::util::bench;
 use deq_anderson::util::cli::Args;
 use deq_anderson::util::json::{self, Json};
+
+/// Shed-rate aside, accepted-request p99 under overload must stay below
+/// this bound for the run to count as graceful.
+const P99_BOUND: Duration = Duration::from_secs(30);
 
 fn mode_json(name: &str, o: &ModeOutcome) -> Json {
     json::obj(vec![
@@ -27,11 +43,31 @@ fn mode_json(name: &str, o: &ModeOutcome) -> Json {
     ])
 }
 
+fn sat_json(o: &SaturationOutcome) -> Json {
+    json::obj(vec![
+        ("replicas", json::num(o.replicas as f64)),
+        ("load_x", json::num(o.load_multiplier)),
+        ("offered", json::num(o.offered as f64)),
+        ("accepted", json::num(o.accepted as f64)),
+        ("shed", json::num(o.shed as f64)),
+        ("shed_rate", json::num(o.shed_rate())),
+        ("errors", json::num(o.errors as f64)),
+        ("p50_ms", json::num(o.p50.as_secs_f64() * 1e3)),
+        ("p99_ms", json::num(o.p99.as_secs_f64() * 1e3)),
+        ("throughput_rps", json::num(o.throughput())),
+        ("graceful", Json::Bool(o.graceful(P99_BOUND))),
+    ])
+}
+
 fn main() {
     let args = Args::from_env();
-    bench::header("serving — iteration-level vs batch-granular");
+    bench::header("serving — scheduling modes + saturation sweep");
     let requests = args.usize_or("requests", 48);
     let stiff_frac = args.f32_or("stiff-frac", 0.5);
+    let replicas_list = args.usize_list_or("replicas", &[1, 2]);
+    let loads = args.usize_list_or("loads", &[1, 10, 100]);
+    let sat_requests = args.usize_or("sat-requests", requests);
+    let queue_cap = args.usize_or("queue-cap", 32);
     let out_path = args.str_or("out", "BENCH_serving.json");
 
     // PJRT over real artifacts when available, hermetic native otherwise.
@@ -44,10 +80,12 @@ fn main() {
     };
     let images = mixed_traffic(requests, stiff_frac, 1);
 
-    let base = drive(&engine, &params, &images, SchedMode::BatchGranular, &solver)
-        .expect("batch-granular drive");
+    // --- part 1: scheduling-mode A/B at closed-loop smoke scale ---
+    let base =
+        drive(&engine, &params, &images, SchedMode::BatchGranular, &solver, 1)
+            .expect("batch-granular drive");
     let sched =
-        drive(&engine, &params, &images, SchedMode::IterationLevel, &solver)
+        drive(&engine, &params, &images, SchedMode::IterationLevel, &solver, 1)
             .expect("iteration-level drive");
     let mismatches = base
         .predictions
@@ -74,6 +112,79 @@ fn main() {
         sched.occupancy
     );
 
+    // --- part 2: open-loop saturation sweep ---
+    // The closed-loop iteration-level run above doubles as the capacity
+    // probe: its throughput is what one replica sustains when never
+    // starved for work.
+    let capacity_rps = sched.throughput().max(1e-3);
+    println!(
+        "single-replica capacity ≈ {capacity_rps:.1} req/s; sweeping \
+         offered load ×{loads:?} for replicas {replicas_list:?} \
+         (queue_cap {queue_cap}, {sat_requests} requests per point)"
+    );
+    let sat_images = mixed_traffic(sat_requests.max(1), stiff_frac, 2);
+    let mut sat_rows: Vec<Json> = Vec::new();
+    let mut sat_outcomes: Vec<SaturationOutcome> = Vec::new();
+    let mut gate_ok = true;
+    for &n in &replicas_list {
+        for &mult in &loads {
+            let rate = capacity_rps * mult as f64;
+            let mut o = saturate(
+                &engine,
+                &params,
+                &sat_images,
+                n,
+                sat_requests,
+                rate,
+                queue_cap,
+                &solver,
+            )
+            .expect("saturation run");
+            o.load_multiplier = mult as f64;
+            let graceful = o.graceful(P99_BOUND);
+            println!(
+                "replicas={n} load={mult:>3}x offered={} accepted={} shed={} \
+                 ({:.0}% shed) errors={} p50={:.1}ms p99={:.1}ms {:.0} req/s{}",
+                o.offered,
+                o.accepted,
+                o.shed,
+                o.shed_rate() * 100.0,
+                o.errors,
+                o.p50.as_secs_f64() * 1e3,
+                o.p99.as_secs_f64() * 1e3,
+                o.throughput(),
+                if graceful { "" } else { "  [NOT GRACEFUL]" }
+            );
+            if mult >= 10 && !graceful {
+                gate_ok = false;
+            }
+            sat_rows.push(sat_json(&o));
+            sat_outcomes.push(o);
+        }
+    }
+
+    // Replica scaling at overload: the acceptance story is that N > 1
+    // replicas beat 1 on throughput once offered load exceeds one
+    // replica's capacity.  Reported (JSON + stdout) but not gated — CI
+    // machines are too noisy to hard-fail a throughput ratio.
+    let overload_tput = |n: usize| {
+        sat_outcomes
+            .iter()
+            .find(|o| o.replicas == n && o.load_multiplier >= 10.0)
+            .map(|o| o.throughput())
+    };
+    let max_replicas = replicas_list.iter().copied().max().unwrap_or(1);
+    let speedup = match (overload_tput(1), overload_tput(max_replicas)) {
+        (Some(one), Some(many)) if one > 0.0 && max_replicas > 1 => {
+            let s = many / one;
+            println!(
+                "throughput at ≥10x load: {max_replicas} replicas / 1 replica = {s:.2}x"
+            );
+            s
+        }
+        _ => 1.0,
+    };
+
     let summary = json::obj(vec![
         ("bench", json::s("serving")),
         (
@@ -86,8 +197,19 @@ fn main() {
         ("prediction_mismatches", json::num(mismatches as f64)),
         ("requests", json::num(requests as f64)),
         ("stiff_frac", json::num(stiff_frac as f64)),
+        ("capacity_rps", json::num(capacity_rps)),
+        ("saturation", Json::Arr(sat_rows)),
+        ("overload_speedup", json::num(speedup)),
     ]);
     std::fs::write(&out_path, json::to_string(&summary) + "\n")
         .expect("write bench summary");
     println!("wrote {out_path}");
+
+    if !gate_ok {
+        eprintln!(
+            "graceful-degradation gate FAILED: a ≥10x-load run crashed, \
+             errored accepted requests, or blew the {P99_BOUND:?} p99 bound"
+        );
+        std::process::exit(1);
+    }
 }

@@ -11,7 +11,7 @@
 //! throughput, lane occupancy, and prediction parity.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -20,8 +20,8 @@ use crate::experiments::ExpOptions;
 use crate::metrics::{Csv, Stats};
 use crate::model::ParamSet;
 use crate::runtime::Backend;
-use crate::server::{Router, RouterConfig, SchedMode};
-use crate::solver::{SolveClamps, SolveSpec, SolverKind};
+use crate::server::{Router, RouterConfig, SchedMode, SubmitRejection};
+use crate::solver::{SolveClamps, SolveOverrides, SolveSpec, SolverKind};
 
 /// Deterministic mixed-difficulty workload: synthetic images scaled so a
 /// `stiff_frac` share of them drive the cell near its slow linear regime
@@ -72,6 +72,7 @@ pub fn drive(
     images: &[Vec<f32>],
     mode: SchedMode,
     solver: &SolveSpec,
+    replicas: usize,
 ) -> Result<ModeOutcome> {
     let cfg = RouterConfig {
         solver: solver.clone(),
@@ -79,6 +80,7 @@ pub fn drive(
         mode,
         max_wait: Duration::from_millis(2),
         queue_cap: images.len() + 16,
+        replicas,
     };
     let router = Router::start(engine.clone(), params.clone(), cfg)?;
     let t0 = std::time::Instant::now();
@@ -125,6 +127,126 @@ pub fn drive(
     })
 }
 
+/// Outcome of one open-loop saturation run (see [`saturate`]).
+pub struct SaturationOutcome {
+    pub replicas: usize,
+    /// Offered load as a multiple of measured single-replica capacity.
+    pub load_multiplier: f64,
+    /// Requests offered (admitted + shed).
+    pub offered: usize,
+    /// Requests admitted past the backpressure door.
+    pub accepted: usize,
+    /// Requests refused with an explicit `overloaded`/`retry_after_ms`.
+    pub shed: usize,
+    /// Accepted requests that came back as errors (should be zero — any
+    /// non-zero value means the server failed under load rather than
+    /// shedding gracefully).
+    pub errors: usize,
+    /// Latency percentiles over *accepted, answered* requests.
+    pub p50: Duration,
+    pub p99: Duration,
+    pub wall: Duration,
+}
+
+impl SaturationOutcome {
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.offered.max(1) as f64
+    }
+
+    pub fn throughput(&self) -> f64 {
+        (self.accepted - self.errors) as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Graceful-degradation gate: under overload the server must keep
+    /// answering — some requests accepted, none of them errored, and
+    /// the accepted-request p99 finite and under `p99_bound` (shedding
+    /// keeps the queue — and therefore waiting time — bounded).
+    pub fn graceful(&self, p99_bound: Duration) -> bool {
+        self.accepted > 0
+            && self.errors == 0
+            && self.p99.as_secs_f64().is_finite()
+            && self.p99 <= p99_bound
+    }
+}
+
+/// Open-loop saturation probe: offer `offered` requests at a fixed
+/// arrival rate (`rate_rps`), independent of how the server is coping —
+/// the regime where a closed-loop driver would self-throttle and hide
+/// the overload.  Shed requests are counted, accepted ones awaited to
+/// completion; tears the router down before returning.
+#[allow(clippy::too_many_arguments)] // a bench harness, not an API
+pub fn saturate(
+    engine: &Arc<dyn Backend>,
+    params: &Arc<ParamSet>,
+    images: &[Vec<f32>],
+    replicas: usize,
+    offered: usize,
+    rate_rps: f64,
+    queue_cap: usize,
+    solver: &SolveSpec,
+) -> Result<SaturationOutcome> {
+    let cfg = RouterConfig {
+        solver: solver.clone(),
+        clamps: SolveClamps::default(),
+        mode: SchedMode::IterationLevel,
+        max_wait: Duration::from_millis(2),
+        queue_cap,
+        replicas,
+    };
+    let router = Router::start(engine.clone(), params.clone(), cfg)?;
+    let interarrival = Duration::from_secs_f64(1.0 / rate_rps.max(1e-9));
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(offered);
+    let mut shed = 0usize;
+    for i in 0..offered {
+        // Pace against the schedule, not the previous send, so a slow
+        // admission doesn't quietly lower the offered rate.
+        let due = t0 + interarrival * (i as u32);
+        let pause = due.saturating_duration_since(Instant::now());
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
+        let image = images[i % images.len()].clone();
+        match router.try_submit(image, &SolveOverrides::default(), None) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitRejection::Overloaded { retry_after_ms }) => {
+                debug_assert!(retry_after_ms >= 1);
+                shed += 1;
+            }
+            Err(other) => return Err(anyhow::anyhow!(other.to_string())),
+        }
+    }
+    let accepted = receivers.len();
+    let mut lat = Stats::default();
+    let mut errors = 0usize;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(resp)) => lat.push_duration(resp.latency),
+            Ok(Err(_)) | Err(_) => errors += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    router.shutdown();
+    let pct = |p: f64| {
+        if lat.count() == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(lat.percentile(p))
+        }
+    };
+    Ok(SaturationOutcome {
+        replicas,
+        load_multiplier: 0.0, // stamped by the caller, which measured capacity
+        offered,
+        accepted,
+        shed,
+        errors,
+        p50: pct(50.0),
+        p99: pct(99.0),
+        wall,
+    })
+}
+
 pub fn run(engine: &Arc<dyn Backend>, opts: &ExpOptions) -> Result<()> {
     let params = Arc::new(engine.init_params()?);
     let total = opts.test_size.clamp(32, 96);
@@ -158,10 +280,22 @@ pub fn run(engine: &Arc<dyn Backend>, opts: &ExpOptions) -> Result<()> {
     let mut all_better = true;
     for &frac in &[0.0f32, 0.25, 0.5, 0.75] {
         let images = mixed_traffic(total, frac, opts.seed);
-        let base =
-            drive(engine, &params, &images, SchedMode::BatchGranular, &solver)?;
-        let sched =
-            drive(engine, &params, &images, SchedMode::IterationLevel, &solver)?;
+        let base = drive(
+            engine,
+            &params,
+            &images,
+            SchedMode::BatchGranular,
+            &solver,
+            1,
+        )?;
+        let sched = drive(
+            engine,
+            &params,
+            &images,
+            SchedMode::IterationLevel,
+            &solver,
+            1,
+        )?;
         let mismatches = base
             .predictions
             .iter()

@@ -47,6 +47,10 @@ commands:
                     retire the moment their sample converges)
                     --min-tol F --max-iter-cap N (server-side clamps on
                     per-request solver overrides)
+                    --replicas N (engine replicas draining one shared
+                    queue; default 1) --queue-cap N (shed beyond this
+                    backlog with an overloaded/retry_after_ms reply)
+                    --max-inflight N (per-connection in-flight cap)
   experiment ID     table1|fig1|fig2|fig5|fig6|fig7|ablation|serving|all
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
@@ -239,7 +243,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mode,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: args.usize_or("queue-cap", 1024),
+        replicas: args.usize_or("replicas", 1),
     };
+    let replicas = cfg.replicas;
     let image_dim = engine.manifest().model.image_dim();
     // Pre-compile all serving buckets so first requests aren't slow.
     let buckets = engine.manifest().batches_for("encode");
@@ -250,10 +256,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     engine.warmup(&warm)?;
-    println!("[server] scheduling mode: {}", mode.name());
+    println!(
+        "[server] scheduling mode: {} replicas: {replicas}",
+        mode.name()
+    );
     let router = Arc::new(Router::start(engine, params, cfg)?);
     let addr = args.str_or("addr", "127.0.0.1:7070");
-    tcp::serve_tcp(router, image_dim, &addr)
+    let max_inflight =
+        args.usize_or("max-inflight", tcp::DEFAULT_MAX_INFLIGHT);
+    tcp::serve_tcp_with(router, image_dim, &addr, max_inflight)
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {

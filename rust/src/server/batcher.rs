@@ -57,7 +57,9 @@ pub fn should_fire(
     queued >= max_bucket || oldest_wait.map(|w| w >= max_wait).unwrap_or(false)
 }
 
-/// The batcher thread body.
+/// The batcher thread body for one replica.  Multi-replica bursts shard
+/// naturally: each replica drains at most one largest-bucket batch per
+/// fire, leaving the remainder for its siblings' condvar wakeups.
 pub(crate) fn run(
     engine: Arc<dyn Backend>,
     params: Arc<ParamSet>,
@@ -65,6 +67,7 @@ pub(crate) fn run(
     metrics: Arc<ServerMetrics>,
     cfg: RouterConfig,
     buckets: Vec<usize>,
+    replica: usize,
 ) {
     let max_bucket = *buckets.last().unwrap();
     loop {
@@ -102,7 +105,15 @@ pub(crate) fn run(
         // overrides — stays a single group.
         for (spec, group) in split_by_spec(batch) {
             let bucket = pick_bucket(&buckets, group.len());
-            run_batch(engine.as_ref(), &params, &spec, group, bucket, &metrics);
+            run_batch(
+                engine.as_ref(),
+                &params,
+                &spec,
+                group,
+                bucket,
+                &metrics,
+                replica,
+            );
         }
     }
 }
@@ -163,6 +174,7 @@ mod tests {
                 spec: spec.clone(),
                 enqueued: Instant::now(),
                 respond: tx,
+                progress: None,
             }
         };
         let batch = vec![

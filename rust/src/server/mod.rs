@@ -5,9 +5,17 @@
 //! Architecture (std-only; the offline crate set has no tokio — threads +
 //! condvar stand in for the async runtime, see DESIGN.md §Substitutions):
 //!
-//!   clients → [`Router::submit`] / [`Router::submit_with`]
-//!           → shared queue → worker thread
-//!           → per-lane equilibrium solve → per-request responses
+//!   clients ⇄ TCP (multiplexed NDJSON: per-connection reader + writer
+//!           │      threads, replies matched by client id, optional
+//!           │      per-iteration progress frames)
+//!           → [`Router::try_submit`] (validate → clamp → backpressure:
+//!           │      beyond `queue_cap` the request is *shed* with an
+//!           │      explicit `overloaded` + `retry_after_ms` reply)
+//!           → shared bounded queue ─┬→ replica 0 (solve-loop lanes)
+//!                                   ├→ replica 1   … work-stealing
+//!                                   └→ replica N−1   admission at
+//!           → per-lane equilibrium solve      iteration boundaries
+//!           → progress frames (streaming) + per-request responses
 //!
 //! Every [`Request`] carries its own **effective [`SolveSpec`]**: the
 //! router's default spec, with the client's [`SolveOverrides`] (solver
@@ -39,14 +47,23 @@
 //!    bench.  Requests with distinct effective specs are solved as
 //!    separate sub-batches (a lockstep solve has one tol for everyone).
 //!
+//! The router runs `cfg.replicas` identical workers (scheduler or
+//! batcher) over one shared `Arc<dyn Backend>` + parameter set and one
+//! shared queue — see `replica.rs` for the work-stealing admission
+//! split.  `--replicas 1` (the default) is bit-for-bit the single
+//! worker of old.
+//!
 //! Replies are `Result`-shaped: on shutdown the queue is drained with an
 //! explicit "server shutting down" error instead of silently dropping
 //! senders, and solve failures report the error text to every waiter.
-//! A TCP front-end (`serve_tcp`) speaks newline-delimited JSON for the
-//! `deq-anderson serve` subcommand and the serving example; it parses
-//! the per-request override fields and echoes the effective spec.
+//! A TCP front-end (`serve_tcp`) speaks the multiplexed NDJSON protocol
+//! documented in [`protocol`] for the `deq-anderson serve` subcommand
+//! and the serving example; it parses the per-request override fields
+//! and echoes the effective spec.
 
 pub mod batcher;
+pub mod protocol;
+pub(crate) mod replica;
 pub mod scheduler;
 pub mod tcp;
 
@@ -62,6 +79,17 @@ use crate::metrics::Stats;
 use crate::model::ParamSet;
 use crate::runtime::Backend;
 use crate::solver::{SolveClamps, SolveOverrides, SolveSpec};
+use crate::util::json::{self, Json};
+
+/// Per-iteration streaming callback: `(iteration, relative residual)`,
+/// invoked by the iteration-level scheduler from its solve loop for
+/// every iteration the request's lane runs — including the retiring
+/// one, *before* the final reply is sent, so a streaming client always
+/// sees progress frames ahead of the answer.  Implementations MUST NOT
+/// block (the TCP front-end drops frames on a full writer queue rather
+/// than stalling every other lane).  The batch-granular baseline
+/// ignores progress hooks — it has no per-iteration boundary to report.
+pub type ProgressHook = Box<dyn Fn(usize, f32) + Send>;
 
 /// One inference request: a flat NHWC image plus the effective solve
 /// spec it should run under (router default + client overrides, already
@@ -72,6 +100,8 @@ pub struct Request {
     pub spec: SolveSpec,
     pub enqueued: Instant,
     pub respond: Sender<Reply>,
+    /// Streaming progress subscription, if any (see [`ProgressHook`]).
+    pub progress: Option<ProgressHook>,
 }
 
 /// What a waiter receives: the answer, or a structured failure (backend
@@ -147,8 +177,14 @@ pub struct RouterConfig {
     /// partial batch fires.  The iteration-level scheduler admits at
     /// every iteration boundary and never waits.
     pub max_wait: Duration,
-    /// Upper bound on queued requests (backpressure).
+    /// Upper bound on queued requests.  Beyond it requests are *shed*:
+    /// [`Router::try_submit`] returns [`SubmitRejection::Overloaded`]
+    /// with a `retry_after_ms` hint instead of queueing unboundedly.
     pub queue_cap: usize,
+    /// Engine replicas: independent scheduler/batcher workers draining
+    /// the shared queue (work-stealing at iteration boundaries).  The
+    /// default 1 preserves the single-worker router bit-for-bit.
+    pub replicas: usize,
 }
 
 /// Aggregated serving metrics.
@@ -174,9 +210,61 @@ pub struct ServerMetrics {
     /// lane width — so idle lanes never count as savings); see
     /// [`Self::fevals_saved`].
     pub lockstep_fevals: AtomicU64,
+    /// Requests shed with an explicit `overloaded` reply (shared queue
+    /// at capacity, or a connection over its in-flight cap).
+    pub shed: AtomicU64,
+    /// Queue depth observed at each successful submission (after the
+    /// push), so `queue_depth_p50`/`max` describe the backlog admitted
+    /// requests actually waited behind.
+    pub queue_depth: Mutex<Stats>,
+    /// Per-replica gauges, one slot per worker.  Empty under
+    /// `Default`; sized by [`ServerMetrics::new`] (the router always
+    /// uses `new`).
+    pub replicas: Vec<ReplicaGauges>,
+}
+
+/// Observability for one engine replica.
+#[derive(Debug, Default)]
+pub struct ReplicaGauges {
+    /// Requests this replica retired (answered).
+    pub served: AtomicU64,
+    /// Solve-loop iterations executed (scheduler) / batches fired
+    /// (batcher) by this replica.
+    pub iterations: AtomicU64,
+    /// Occupied-lane fraction per iteration (scheduler) or batch fill
+    /// (batcher) of this replica.
+    pub occupancy: Mutex<Stats>,
 }
 
 impl ServerMetrics {
+    /// Metrics sized for `replicas` workers.
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            replicas: (0..replicas).map(|_| ReplicaGauges::default()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// One scheduling step by `replica`: `occupied` of `lanes` lanes
+    /// busy (scheduler iteration) or a `occupied`-of-`lanes` batch
+    /// fired (batcher).
+    pub fn replica_iteration(&self, replica: usize, occupied: usize, lanes: usize) {
+        if let Some(g) = self.replicas.get(replica) {
+            g.iterations.fetch_add(1, Ordering::Relaxed);
+            g.occupancy
+                .lock()
+                .unwrap()
+                .push(occupied as f64 / lanes.max(1) as f64);
+        }
+    }
+
+    /// One request answered by `replica`.
+    pub fn replica_served(&self, replica: usize) {
+        if let Some(g) = self.replicas.get(replica) {
+            g.served.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn record(&self, latency: Duration, batch: usize, bucket: usize) {
         self.served.fetch_add(1, Ordering::Relaxed);
         self.latency.lock().unwrap().push_duration(latency);
@@ -246,6 +334,66 @@ impl ServerMetrics {
         }
         s
     }
+
+    /// Structured stats for the TCP `stats` command: counters and
+    /// percentiles as individual JSON fields plus a `replicas` array of
+    /// per-worker gauges.  The legacy one-line blob rides along under
+    /// `"summary"` for humans and old scrapers.  Percentiles of empty
+    /// reservoirs report 0 (NaN is not representable in JSON).
+    pub fn stat_pairs(&self) -> Vec<(&'static str, Json)> {
+        fn pct_ms(stats: &Stats, p: f64) -> Json {
+            let v = if stats.count() == 0 { 0.0 } else { stats.percentile(p) };
+            json::num(v * 1e3)
+        }
+        // `summary()` takes the same locks — build it before holding any.
+        let summary = self.summary();
+        let lat = self.latency.lock().unwrap();
+        let fill = self.batch_fill.lock().unwrap();
+        let occ = self.lane_occupancy.lock().unwrap();
+        let retire = self.time_to_retire.lock().unwrap();
+        let depth = self.queue_depth.lock().unwrap();
+        let mut pairs = vec![
+            ("served", json::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("batches", json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("shed", json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("latency_p50_ms", pct_ms(&lat, 50.0)),
+            ("latency_p95_ms", pct_ms(&lat, 95.0)),
+            ("latency_p99_ms", pct_ms(&lat, 99.0)),
+            ("mean_fill", json::num(fill.mean())),
+            ("occupancy", json::num(occ.mean())),
+            ("retire_p50_ms", pct_ms(&retire, 50.0)),
+            ("retire_p95_ms", pct_ms(&retire, 95.0)),
+            ("fevals_saved", json::num(self.fevals_saved() as f64)),
+            ("queue_depth_p50", {
+                let v = if depth.count() == 0 { 0.0 } else { depth.percentile(50.0) };
+                json::num(v)
+            }),
+            ("queue_depth_max", {
+                let v = if depth.count() == 0 { 0.0 } else { depth.max() };
+                json::num(v)
+            }),
+            ("summary", json::s(&summary)),
+        ];
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let g_occ = g.occupancy.lock().unwrap();
+                json::obj(vec![
+                    ("replica", json::num(i as f64)),
+                    ("served", json::num(g.served.load(Ordering::Relaxed) as f64)),
+                    (
+                        "iterations",
+                        json::num(g.iterations.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("occupancy", json::num(g_occ.mean())),
+                ])
+            })
+            .collect();
+        pairs.push(("replicas", Json::Arr(replicas)));
+        pairs
+    }
 }
 
 pub(crate) struct Queue {
@@ -263,24 +411,56 @@ pub(crate) fn drain_with_error(items: &mut Vec<Request>, why: &str) {
     }
 }
 
+/// Why [`Router::try_submit`] refused a request.
+#[derive(Debug)]
+pub enum SubmitRejection {
+    /// The shared queue is at capacity: the request was shed.  The hint
+    /// estimates when capacity frees up, from the live retire-time p50
+    /// and the number of admission waves the backlog represents.
+    Overloaded { retry_after_ms: u64 },
+    /// Malformed request (wrong image size, invalid override values).
+    Invalid(String),
+    /// The router is shutting down (or its workers died).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded; retry in {retry_after_ms}ms")
+            }
+            Self::Invalid(msg) => f.write_str(msg),
+            Self::ShuttingDown => {
+                f.write_str("router worker is not running (shut down or failed)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitRejection {}
+
 /// The continuous-batching inference router.
 pub struct Router {
     queue: Arc<Queue>,
     pub metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     cfg: RouterConfig,
     /// Flat image length the model expects; checked at submission so one
     /// malformed request can never fail a whole batch downstream.
     image_dim: usize,
+    /// Σ lanes across replicas (largest bucket × replicas): the service
+    /// capacity one admission wave represents, for retry-hint math.
+    total_lanes: usize,
     /// The serving backend, kept so stats endpoints can surface its
     /// hot-path counters (workspace pool, packed-weight cache).
     backend: Arc<dyn Backend>,
 }
 
 impl Router {
-    /// Spawn the worker thread (scheduler or batcher, per `cfg.mode`)
-    /// over an engine + parameters.
+    /// Spawn `cfg.replicas` worker threads (schedulers or batchers, per
+    /// `cfg.mode`) over a shared engine + parameters.
     pub fn start(
         engine: Arc<dyn Backend>,
         params: Arc<ParamSet>,
@@ -290,6 +470,7 @@ impl Router {
         // requests later.
         cfg.solver.validate()?;
         cfg.clamps.validate()?;
+        anyhow::ensure!(cfg.replicas >= 1, "router needs at least one replica");
         // Clamps can never make an override *stricter than the default*:
         // a client restating the server's own tol/max_iter must get
         // exactly the default spec back, so the clamps widen to admit it.
@@ -300,40 +481,37 @@ impl Router {
             signal: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
-        let metrics = Arc::new(ServerMetrics::default());
+        let metrics = Arc::new(ServerMetrics::new(cfg.replicas));
         let buckets = engine.manifest().batches_for("encode");
         anyhow::ensure!(!buckets.is_empty(), "no encode artifacts");
+        let max_bucket = *buckets.last().unwrap();
         let image_dim = engine.manifest().model.image_dim();
         let backend = engine.clone();
+        let slots = Arc::new(replica::ReplicaSlots::new(cfg.replicas, max_bucket));
 
-        let worker = {
-            let queue = queue.clone();
-            let metrics = metrics.clone();
-            let cfg2 = cfg.clone();
-            let (name, body): (&str, Box<dyn FnOnce() + Send>) = match cfg.mode {
-                SchedMode::IterationLevel => (
-                    "deq-scheduler",
-                    Box::new(move || {
-                        scheduler::run(engine, params, queue, metrics, cfg2, buckets)
-                    }),
-                ),
-                SchedMode::BatchGranular => (
-                    "deq-batcher",
-                    Box::new(move || {
-                        batcher::run(engine, params, queue, metrics, cfg2, buckets)
-                    }),
-                ),
-            };
-            std::thread::Builder::new().name(name.into()).spawn(body)?
-        };
+        let mut workers = Vec::with_capacity(cfg.replicas);
+        for r in 0..cfg.replicas {
+            workers.push(replica::spawn(
+                r,
+                engine.clone(),
+                params.clone(),
+                queue.clone(),
+                metrics.clone(),
+                cfg.clone(),
+                buckets.clone(),
+                slots.clone(),
+            )?);
+        }
 
+        let total_lanes = max_bucket * cfg.replicas;
         Ok(Self {
             queue,
             metrics,
             next_id: AtomicU64::new(1),
-            worker: Some(worker),
+            workers,
             cfg,
             image_dim,
+            total_lanes,
             backend,
         })
     }
@@ -356,43 +534,87 @@ impl Router {
     /// [`SolveClamps`] **here**, so a malformed override (tol ≤ 0,
     /// max_iter 0) errors at submission instead of poisoning a batch.
     /// Also errors on a wrong-sized image, when the queue is at capacity
-    /// (backpressure), or when the worker is gone (shut down, or the
-    /// scheduler hit a fatal backend error) — a request enqueued after
-    /// that would never be answered.
+    /// (shed — see [`Self::try_submit`] for the structured rejection),
+    /// or when the workers are gone (shut down, or the scheduler hit a
+    /// fatal backend error) — a request enqueued after that would never
+    /// be answered.
     pub fn submit_with(
         &self,
         image: Vec<f32>,
         overrides: &SolveOverrides,
     ) -> Result<Receiver<Reply>> {
-        anyhow::ensure!(
-            image.len() == self.image_dim,
-            "image has {} values, model wants {}",
-            image.len(),
-            self.image_dim
-        );
-        let spec = overrides.apply(&self.cfg.solver, &self.cfg.clamps)?;
+        self.try_submit(image, overrides, None)
+            .map_err(|r| anyhow::anyhow!(r.to_string()))
+    }
+
+    /// Structured admission: validate, clamp, and enqueue — or say
+    /// precisely why not.  The wire front-end uses this to turn
+    /// [`SubmitRejection::Overloaded`] into an explicit
+    /// `{"error":"overloaded","retry_after_ms":…}` shed reply, and to
+    /// attach a per-iteration [`ProgressHook`] for streaming requests.
+    pub fn try_submit(
+        &self,
+        image: Vec<f32>,
+        overrides: &SolveOverrides,
+        progress: Option<ProgressHook>,
+    ) -> Result<Receiver<Reply>, SubmitRejection> {
+        if image.len() != self.image_dim {
+            return Err(SubmitRejection::Invalid(format!(
+                "image has {} values, model wants {}",
+                image.len(),
+                self.image_dim
+            )));
+        }
+        let spec = overrides
+            .apply(&self.cfg.solver, &self.cfg.clamps)
+            .map_err(|e| SubmitRejection::Invalid(format!("{e:#}")))?;
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.items.lock().unwrap();
-            anyhow::ensure!(
-                !self.queue.shutdown.load(Ordering::SeqCst),
-                "router worker is not running (shut down or failed)"
-            );
-            anyhow::ensure!(
-                q.len() < self.cfg.queue_cap,
-                "queue full ({} requests)",
-                q.len()
-            );
+            if self.queue.shutdown.load(Ordering::SeqCst) {
+                return Err(SubmitRejection::ShuttingDown);
+            }
+            if q.len() >= self.cfg.queue_cap {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let retry_after_ms = self.retry_estimate_ms(q.len());
+                return Err(SubmitRejection::Overloaded { retry_after_ms });
+            }
             q.push(Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 image,
                 spec,
                 enqueued: Instant::now(),
                 respond: tx,
+                progress,
             });
+            self.metrics.queue_depth.lock().unwrap().push(q.len() as f64);
         }
         self.queue.signal.notify_one();
         Ok(rx)
+    }
+
+    /// Estimated milliseconds until queue capacity frees, for shed
+    /// replies: the observed retire-time p50 (falling back to the
+    /// latency p50, then a 25 ms prior before any sample exists) times
+    /// the number of admission waves the current backlog represents.
+    fn retry_estimate_ms(&self, queued: usize) -> u64 {
+        let retire_p50 = {
+            let retire = self.metrics.time_to_retire.lock().unwrap();
+            (retire.count() > 0).then(|| retire.percentile(50.0))
+        };
+        let latency_p50 = {
+            let lat = self.metrics.latency.lock().unwrap();
+            (lat.count() > 0).then(|| lat.percentile(50.0))
+        };
+        let p50 = retire_p50.or(latency_p50).unwrap_or(0.025);
+        let waves = (queued as f64 / self.total_lanes.max(1) as f64).ceil().max(1.0);
+        ((p50 * waves * 1e3).ceil() as u64).clamp(1, 60_000)
+    }
+
+    /// Current shed hint for callers that refuse work *before* the
+    /// queue (e.g. the per-connection in-flight cap in the TCP layer).
+    pub fn retry_after_hint(&self) -> u64 {
+        self.retry_estimate_ms(self.queue_depth())
     }
 
     /// Blocking convenience: submit and wait.
@@ -418,12 +640,13 @@ impl Router {
         self.queue.items.lock().unwrap().len()
     }
 
-    /// Stop the worker thread.  Queued (and, in iteration-level mode,
-    /// in-flight) requests receive an explicit "server shutting down"
-    /// error reply rather than a dropped channel.
+    /// Stop every replica worker.  Queued (and, in iteration-level
+    /// mode, in-flight) requests receive an explicit "server shutting
+    /// down" error reply rather than a dropped channel; the call
+    /// returns only after all replicas have drained and exited.
     pub fn shutdown(mut self) {
         signal_shutdown(&self.queue);
-        if let Some(h) = self.worker.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -444,7 +667,7 @@ fn signal_shutdown(queue: &Queue) {
 impl Drop for Router {
     fn drop(&mut self) {
         signal_shutdown(&self.queue);
-        if let Some(h) = self.worker.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -463,6 +686,7 @@ pub(crate) fn run_batch(
     mut batch: Vec<Request>,
     bucket: usize,
     metrics: &ServerMetrics,
+    replica: usize,
 ) {
     let dim = engine.manifest().model.image_dim();
     let count = batch.len();
@@ -471,11 +695,13 @@ pub(crate) fn run_batch(
         images.extend_from_slice(&r.image);
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.replica_iteration(replica, count, bucket);
     match infer::infer(engine, params, &images, count, solver) {
         Ok(result) => {
             for (i, req) in batch.drain(..).enumerate() {
                 let latency = req.enqueued.elapsed();
                 metrics.record(latency, count, bucket);
+                metrics.replica_served(replica);
                 let _ = req.respond.send(Ok(Response {
                     id: req.id,
                     class: result.predictions[i],

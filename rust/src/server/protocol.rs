@@ -1,0 +1,287 @@
+//! Wire protocol for the multiplexed NDJSON serving front-end: frame
+//! parsing and frame building, split from the socket plumbing in
+//! [`super::tcp`] so every shape on the wire is a pure, unit-testable
+//! function.
+//!
+//! One JSON object per line, in either direction.  Requests carry a
+//! **client-chosen `id`** (any JSON value, echoed verbatim); many
+//! requests may be in flight per connection and replies are matched by
+//! `id`, **not** by order — a fast solve overtakes a stiff one:
+//!
+//! ```text
+//! → {"id":"a","image":[…],"tol":1e-5}          (stiff: many iterations)
+//! → {"id":"b","image":[…],"tol":0.3}           (easy: a few iterations)
+//! ← {"id":"b","class":3,"solver_iters":2,…}    (b retires first)
+//! ← {"id":"a","class":7,"solver_iters":41,…}
+//! ```
+//!
+//! An opt-in `"stream": true` field subscribes the request to
+//! per-iteration **progress frames**, emitted live from the scheduler's
+//! solve loop before the final reply:
+//!
+//! ```text
+//! → {"id":5,"image":[…],"stream":true}
+//! ← {"event":"progress","id":5,"iter":1,"residual":0.81}
+//! ← {"event":"progress","id":5,"iter":2,"residual":0.13}
+//! ← {"id":5,"class":3,"solver_iters":3,…}
+//! ```
+//!
+//! Progress frames are lossy by design: they are dropped (never
+//! buffered unboundedly, never blocking the solve loop) when the
+//! connection's writer queue is full.  The final reply is reliable.
+//!
+//! Load shedding is part of the wire format: a request refused at the
+//! admission door (shared queue at capacity, or the connection over its
+//! in-flight cap) gets an explicit
+//! `{"error":"overloaded","retry_after_ms":…}` reply — the hint is
+//! computed from the live retire-time p50 — instead of an opaque error
+//! or a silently growing queue.
+//!
+//! Error replies carry the request's `id` when one was parseable, so a
+//! multiplexing client can always match them.  **Back-compat:** a
+//! legacy request without an `id` (and without `"stream"`) receives
+//! byte-identical replies to the old synchronous protocol — same keys,
+//! same error strings — and the blocking entry point
+//! [`super::tcp::process_line`] preserves the old no-id error shapes
+//! exactly (pinned by golden tests).
+
+use crate::server::Response;
+use crate::solver::spec::f32_json;
+use crate::solver::{GramMode, SolveOverrides, SolverKind};
+use crate::util::json::{self, Json};
+
+/// Default per-connection in-flight request cap: one client cannot hold
+/// more lanes than this across all replicas, no matter how fast it
+/// pipelines (`--max-inflight` on `deq-anderson serve`).
+pub const DEFAULT_MAX_INFLIGHT: usize = 64;
+
+/// A parsed inference request line.
+pub struct InferFrame {
+    /// Client-chosen correlation id, echoed verbatim on every frame the
+    /// request produces (progress, final reply, errors).
+    pub id: Option<Json>,
+    pub image: Vec<f32>,
+    pub overrides: SolveOverrides,
+    /// Subscribe to per-iteration progress frames.
+    pub stream: bool,
+}
+
+/// One parsed protocol line, dispatched by the connection handler.
+pub enum Incoming {
+    /// `{"cmd": "..."}` — ping / stats.
+    Cmd { cmd: String },
+    /// An inference request.
+    Infer(InferFrame),
+    /// Rejected at parse/validation time.  `id` is what the wire path
+    /// echoes on the error frame (None for legacy no-id requests, whose
+    /// error replies stay byte-identical to the old protocol).
+    Bad { msg: String, id: Option<Json> },
+}
+
+/// Parse one protocol line.  Validation order matches the legacy
+/// protocol exactly (malformed JSON → cmd dispatch → image → overrides)
+/// so every legacy error string is preserved; the `stream` flag is
+/// validated last, after the legacy surface.
+pub fn parse_line(image_dim: usize, line: &str) -> Incoming {
+    let parsed = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Incoming::Bad { msg: format!("malformed json: {e}"), id: None }
+        }
+    };
+    if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+        return Incoming::Cmd { cmd: cmd.to_string() };
+    }
+    let id = parsed.get("id").cloned();
+    let image = match parse_image(&parsed, image_dim) {
+        Ok(img) => img,
+        Err(msg) => return Incoming::Bad { msg, id },
+    };
+    let overrides = match parse_overrides(&parsed) {
+        Ok(ov) => ov,
+        Err(msg) => return Incoming::Bad { msg, id },
+    };
+    let stream = match parsed.get("stream") {
+        None => false,
+        Some(v) => match v.as_bool() {
+            Some(b) => b,
+            None => {
+                return Incoming::Bad {
+                    msg: "'stream' must be a boolean".to_string(),
+                    id,
+                }
+            }
+        },
+    };
+    Incoming::Infer(InferFrame { id, image, overrides, stream })
+}
+
+/// Extract and validate the `image` array.  Every element must be a
+/// number: the old `filter_map(Json::as_f64)` silently *dropped*
+/// non-numeric elements, reporting a wrong-length image downstream — or
+/// worse, passing with shifted values when the length still matched.
+pub fn parse_image(parsed: &Json, image_dim: usize) -> Result<Vec<f32>, String> {
+    let arr = parsed
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing 'image' array".to_string())?;
+    let mut image = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        match v.as_f64() {
+            Some(x) => image.push(x as f32),
+            None => return Err(format!("image[{i}] is not a number")),
+        }
+    }
+    if image.len() != image_dim {
+        return Err(format!(
+            "image has {} values, model wants {image_dim}",
+            image.len()
+        ));
+    }
+    Ok(image)
+}
+
+/// Parse the optional per-request solver override fields.  Shape errors
+/// (wrong JSON type, unknown solver name, non-integer iteration cap) are
+/// caught here with stable messages; *value* errors (tol ≤ 0 etc.) are
+/// caught by `SolveOverrides::apply` at submission.
+pub fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
+    let mut ov = SolveOverrides::default();
+    if let Some(v) = parsed.get("solver") {
+        let name = v
+            .as_str()
+            .ok_or_else(|| "override 'solver' must be a string".to_string())?;
+        ov.kind = Some(SolverKind::parse(name).ok_or_else(|| {
+            format!("unknown solver '{name}' (expected forward|anderson|hybrid)")
+        })?);
+    }
+    if let Some(v) = parsed.get("tol") {
+        let tol = v
+            .as_f64()
+            .ok_or_else(|| "override 'tol' must be a number".to_string())?;
+        ov.tol = Some(tol as f32);
+    }
+    if let Some(v) = parsed.get("max_iter") {
+        let x = v.as_f64().ok_or_else(|| {
+            "override 'max_iter' must be a positive integer".to_string()
+        })?;
+        if x.fract() != 0.0 || x < 1.0 {
+            return Err(
+                "override 'max_iter' must be a positive integer".to_string()
+            );
+        }
+        ov.max_iter = Some(x as usize);
+    }
+    if let Some(v) = parsed.get("adaptive") {
+        let on = v.as_bool().ok_or_else(|| {
+            "override 'adaptive' must be a boolean".to_string()
+        })?;
+        ov.adaptive_window = Some(on);
+    }
+    if let Some(v) = parsed.get("safeguard") {
+        let on = v.as_bool().ok_or_else(|| {
+            "override 'safeguard' must be a boolean".to_string()
+        })?;
+        ov.safeguard = Some(on);
+    }
+    if let Some(v) = parsed.get("errorfactor") {
+        let f = v.as_f64().ok_or_else(|| {
+            "override 'errorfactor' must be a number".to_string()
+        })?;
+        ov.errorfactor = Some(f as f32);
+    }
+    if let Some(v) = parsed.get("cond_max") {
+        let c = v.as_f64().ok_or_else(|| {
+            "override 'cond_max' must be a number".to_string()
+        })?;
+        ov.cond_max = Some(c as f32);
+    }
+    if let Some(v) = parsed.get("gram") {
+        const MSG: &str =
+            "override 'gram' must be \"exact\" or a positive integer";
+        let mode = if let Some(s) = v.as_str() {
+            if s == "exact" {
+                GramMode::Exact
+            } else {
+                return Err(MSG.to_string());
+            }
+        } else {
+            match v.as_f64() {
+                Some(n) if n >= 1.0 && n.fract() == 0.0 => {
+                    GramMode::Sketched { dim: n as usize }
+                }
+                _ => return Err(MSG.to_string()),
+            }
+        };
+        ov.gram = Some(mode);
+    }
+    Ok(ov)
+}
+
+/// Append the echoed client id (when known) and build the frame.  Keys
+/// serialize sorted, so attachment order never changes the bytes.
+fn with_id(mut pairs: Vec<(&str, Json)>, id: Option<&Json>) -> Json {
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    json::obj(pairs)
+}
+
+/// `{"error": msg}` (+ `"id"` when the request carried one).
+pub fn error_frame(msg: &str, id: Option<&Json>) -> Json {
+    with_id(vec![("error", json::s(msg))], id)
+}
+
+/// The load-shedding reply: the request was refused at the admission
+/// door and should be retried after `retry_after_ms`.
+pub fn overloaded_frame(retry_after_ms: u64, id: Option<&Json>) -> Json {
+    with_id(
+        vec![
+            ("error", json::s("overloaded")),
+            ("retry_after_ms", json::num(retry_after_ms as f64)),
+        ],
+        id,
+    )
+}
+
+/// One per-iteration streaming progress frame.
+pub fn progress_frame(id: Option<&Json>, iter: usize, residual: f32) -> Json {
+    with_id(
+        vec![
+            ("event", json::s("progress")),
+            ("iter", json::num(iter as f64)),
+            ("residual", f32_json(residual)),
+        ],
+        id,
+    )
+}
+
+/// The final reply for a served request.  Exactly the legacy reply
+/// shape — the solver/tol/max_iter/adaptivity fields echo the
+/// *effective* spec the solve ran under — so a request without new
+/// fields gets byte-identical bytes to the old protocol.
+pub fn response_frame(resp: &Response, id: Option<&Json>) -> Json {
+    let pairs = vec![
+        ("class", json::num(resp.class as f64)),
+        ("latency_ms", json::num(resp.latency.as_secs_f64() * 1e3)),
+        ("batch", json::num(resp.batch_size as f64)),
+        ("solver_iters", json::num(resp.solver_iters as f64)),
+        ("solver_fevals", json::num(resp.solver_fevals as f64)),
+        ("converged", Json::Bool(resp.converged)),
+        ("solver", json::s(resp.spec.kind.name())),
+        ("tol", f32_json(resp.spec.tol)),
+        ("max_iter", json::num(resp.spec.max_iter as f64)),
+        ("adaptive", Json::Bool(resp.spec.adaptive_window)),
+        ("safeguard", Json::Bool(resp.spec.safeguard)),
+        ("errorfactor", f32_json(resp.spec.errorfactor)),
+        ("cond_max", f32_json(resp.spec.cond_max)),
+        (
+            "gram",
+            match resp.spec.gram {
+                GramMode::Exact => json::s("exact"),
+                GramMode::Sketched { dim } => json::num(dim as f64),
+            },
+        ),
+    ];
+    with_id(pairs, id)
+}

@@ -1,0 +1,100 @@
+//! Engine replicas: N scheduler/batcher workers over one shared
+//! `Arc<dyn Backend>` + parameter set, draining one shared queue.
+//!
+//! Work-stealing falls out of the shared queue: every replica drains it
+//! at its own iteration boundaries, so an idle replica picks up work
+//! the moment a busy one leaves it queued.  [`ReplicaSlots`] adds a
+//! *fair-share* admission split on top — each replica publishes its
+//! free-lane count at every boundary and takes only its proportional
+//! share of the backlog, so a burst shards across replicas (filling
+//! small buckets everywhere) instead of serializing behind whichever
+//! replica's lock attempt wins the race.
+//!
+//! With one replica the split degenerates to `min(queued, free)` —
+//! exactly the pre-replica admission rule, keeping `--replicas 1`
+//! bit-for-bit identical to the single-worker router.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::ParamSet;
+use crate::runtime::Backend;
+use crate::server::{batcher, scheduler, Queue, RouterConfig, SchedMode, ServerMetrics};
+
+/// Published free-lane counts, one slot per replica.  Advisory only:
+/// counts are racy snapshots (Relaxed loads), which is fine — the split
+/// is a placement heuristic, and the shared queue guarantees no request
+/// is ever lost or double-admitted regardless of what the counts say.
+pub(crate) struct ReplicaSlots {
+    free: Vec<AtomicUsize>,
+}
+
+impl ReplicaSlots {
+    /// All replicas start fully idle (`lanes` free lanes each).
+    pub fn new(replicas: usize, lanes: usize) -> Self {
+        Self { free: (0..replicas).map(|_| AtomicUsize::new(lanes)).collect() }
+    }
+
+    /// Publish `replica`'s current free-lane count.
+    pub fn set_free(&self, replica: usize, free: usize) {
+        self.free[replica].store(free, Ordering::Relaxed);
+    }
+
+    /// How many of `queued` requests `replica` should admit right now,
+    /// given it has `my_free` open lanes: its ceil-rounded proportional
+    /// share of the backlog by free capacity.  Ceil keeps small
+    /// backlogs moving (a lone request is never split to zero) and lets
+    /// the fastest replica steal the remainder on its next boundary.
+    pub fn fair_take(&self, replica: usize, queued: usize, my_free: usize) -> usize {
+        if queued == 0 || my_free == 0 {
+            return 0;
+        }
+        if self.free.len() == 1 {
+            return queued.min(my_free);
+        }
+        // Ensure our own published count is part of the total even if
+        // the slot is stale (another thread read-modify-wrote since).
+        let total: usize = self
+            .free
+            .iter()
+            .enumerate()
+            .map(|(r, f)| if r == replica { my_free } else { f.load(Ordering::Relaxed) })
+            .sum();
+        let share = queued.saturating_mul(my_free).div_ceil(total.max(1));
+        share.min(my_free).min(queued)
+    }
+}
+
+/// Spawn one replica worker (scheduler or batcher per the configured
+/// mode), named `deq-scheduler-{r}` / `deq-batcher-{r}`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn(
+    replica: usize,
+    engine: Arc<dyn Backend>,
+    params: Arc<ParamSet>,
+    queue: Arc<Queue>,
+    metrics: Arc<ServerMetrics>,
+    cfg: RouterConfig,
+    buckets: Vec<usize>,
+    slots: Arc<ReplicaSlots>,
+) -> Result<std::thread::JoinHandle<()>> {
+    let (name, body): (String, Box<dyn FnOnce() + Send>) = match cfg.mode {
+        SchedMode::IterationLevel => (
+            format!("deq-scheduler-{replica}"),
+            Box::new(move || {
+                scheduler::run(
+                    engine, params, queue, metrics, cfg, buckets, replica, slots,
+                )
+            }),
+        ),
+        SchedMode::BatchGranular => (
+            format!("deq-batcher-{replica}"),
+            Box::new(move || {
+                batcher::run(engine, params, queue, metrics, cfg, buckets, replica)
+            }),
+        ),
+    };
+    Ok(std::thread::Builder::new().name(name).spawn(body)?)
+}

@@ -50,6 +50,7 @@ use crate::infer;
 use crate::model::ParamSet;
 use crate::runtime::{Backend, HostTensor, ModelMeta};
 use crate::server::batcher::{pick_bucket, QueueHandle};
+use crate::server::replica::ReplicaSlots;
 use crate::server::{
     drain_with_error, Queue, Request, Response, RouterConfig, ServerMetrics,
 };
@@ -71,9 +72,11 @@ struct Lane {
     admitted: Instant,
 }
 
-/// The scheduler thread body.  On a backend failure the error text goes
-/// to every waiter — queued *and* in-flight — instead of a dropped
-/// channel (the contract [`crate::server::Reply`] documents).
+/// The scheduler thread body for one replica.  On a backend failure the
+/// error text goes to every waiter — queued *and* in-flight — instead
+/// of a dropped channel (the contract [`crate::server::Reply`]
+/// documents).
+#[allow(clippy::too_many_arguments)] // one replica's full wiring
 pub(crate) fn run(
     engine: Arc<dyn Backend>,
     params: Arc<ParamSet>,
@@ -81,6 +84,8 @@ pub(crate) fn run(
     metrics: Arc<ServerMetrics>,
     cfg: RouterConfig,
     buckets: Vec<usize>,
+    replica: usize,
+    slots: Arc<ReplicaSlots>,
 ) {
     let bucket = *buckets.last().expect("router checked buckets non-empty");
     let mut lanes: Vec<Option<Lane>> = (0..bucket).map(|_| None).collect();
@@ -92,6 +97,8 @@ pub(crate) fn run(
         &cfg,
         &buckets,
         &mut lanes,
+        replica,
+        &slots,
     ) {
         let msg = format!("scheduler failed: {e:#}");
         eprintln!("[server] {msg}");
@@ -201,6 +208,8 @@ fn serve_loop(
     cfg: &RouterConfig,
     buckets: &[usize],
     lanes: &mut Vec<Option<Lane>>,
+    replica: usize,
+    slots: &ReplicaSlots,
 ) -> Result<()> {
     let meta = engine.manifest().model.clone();
     let bucket = *buckets.last().expect("router checked buckets non-empty");
@@ -246,6 +255,9 @@ fn serve_loop(
             .filter_map(|(i, l)| if l.is_none() { Some(i) } else { None })
             .collect();
         let any_busy = free.len() < bucket;
+        // Publish our free-lane count so sibling replicas' fair shares
+        // reflect this boundary.
+        slots.set_free(replica, free.len());
         let admitted: Vec<(usize, Request)> = {
             let mut items = queue.items.lock().unwrap();
             loop {
@@ -256,7 +268,13 @@ fn serve_loop(
                     return Ok(());
                 }
                 if any_busy || !items.is_empty() {
-                    let take = items.len().min(free.len());
+                    // Take our fair share of the backlog by free
+                    // capacity (all of it, up to free lanes, when this
+                    // is the only replica).  Whatever is left is picked
+                    // up — stolen — by the next replica to hit an
+                    // iteration boundary.
+                    let take =
+                        slots.fair_take(replica, items.len(), free.len());
                     let reqs: Vec<Request> = items.drain(..take).collect();
                     break free.iter().copied().zip(reqs).collect();
                 }
@@ -269,6 +287,7 @@ fn serve_loop(
                 items = guard;
             }
         };
+        slots.set_free(replica, free.len() - admitted.len());
         {
             let (head, tail) = cell_inputs.split_at_mut(x_slot);
             admit_all(
@@ -296,12 +315,20 @@ fn serve_loop(
         engine.recycle(vec![res_t, fnorm_t]);
         let occupied = lanes.iter().filter(|l| l.is_some()).count();
         metrics.record_iteration(occupied, bucket, pick_bucket(buckets, occupied));
+        metrics.replica_iteration(replica, occupied, bucket);
 
         retire_mask.fill(false);
         for (i, slot) in lanes.iter_mut().enumerate() {
             if let Some(lane) = slot.as_mut() {
                 lane.iters += 1;
                 lane.fevals += 1;
+                // Streaming: report this iteration's residual before any
+                // retirement decision, so the final progress frame always
+                // precedes the reply (the hook and the reply channel feed
+                // the same FIFO writer queue).
+                if let Some(hook) = &lane.req.progress {
+                    hook(lane.iters, rel[i]);
+                }
                 // Retirement is per-lane policy: this lane's own tol,
                 // iteration cap and (optional) feval budget.
                 let spec = &lane.req.spec;
@@ -333,6 +360,7 @@ fn serve_loop(
                 let latency = lane.req.enqueued.elapsed();
                 metrics.record(latency, occupied, bucket);
                 metrics.record_retire(lane.admitted.elapsed());
+                metrics.replica_served(replica);
                 // Distinguishes tol-crossing retirement from a lane cut
                 // off at its iteration/feval budget.
                 let converged = rel[i] < lane.req.spec.tol;

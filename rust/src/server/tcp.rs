@@ -1,60 +1,90 @@
-//! TCP front-end: newline-delimited JSON over a `std::net` listener.
+//! TCP front-end: multiplexed newline-delimited JSON over a `std::net`
+//! listener.
 //!
-//! Protocol (one JSON object per line):
-//!   request:  {"id": <any>, "image": [f32; hw*hw*c]}
-//!             with optional per-request solver overrides:
-//!               "solver":      "forward" | "anderson" | "hybrid"
-//!               "tol":         <positive number>
-//!               "max_iter":    <positive integer>
-//!               "adaptive":    <bool>   (condition-monitored window)
-//!               "safeguard":   <bool>   (damped fallback on a bad mix)
-//!               "errorfactor": <number > 1>
-//!               "cond_max":    <number ≥ 1>
-//!               "gram":        "exact" | <integer ≥ 1>  (sketched Gram
-//!                              condition probes for window adaptation)
-//!             (overrides resolve against the server's default spec under
-//!              its clamps — min tol, max iteration cap — so a request
-//!              can loosen a solve freely but only tighten it within the
-//!              operator's bounds; the adaptivity knobs are validated but
-//!              unclamped, since adaptation only ever *shrinks* a lane's
-//!              effective window)
-//!             {"cmd": "stats"}    → server metrics
-//!             {"cmd": "ping"}     → {"ok": true}
-//!   response: {"id": ..., "class": k, "latency_ms": ..., "batch": n,
-//!              "solver_iters": k, "solver_fevals": k, "converged": b,
-//!              "solver": "...", "tol": t, "max_iter": m,
-//!              "adaptive": b, "safeguard": b, "errorfactor": f,
-//!              "cond_max": c, "gram": "exact" | s}
-//!             (iteration-level scheduling: solver_iters/fevals are this
-//!              sample's own counts, not the batch's; the solver/tol/
-//!              max_iter/adaptivity fields echo the *effective* spec the
-//!              solve ran under)
-//!             {"error": "..."}    on malformed input or shutdown
+//! Frame shapes, ids, streaming, and shedding semantics live in
+//! [`super::protocol`]; this module is the socket plumbing.  Per
+//! connection:
 //!
-//! Error replies are part of the wire format: their exact JSON is pinned
-//! by golden tests in `tests/integration_server.rs`.
+//! ```text
+//!   reader (this thread) ──parse──► Router::try_submit ──► shared queue
+//!        │ per request                    │rejected
+//!        │ spawns a waiter thread         ▼
+//!        │ that recv()s the reply    overloaded / error frame
+//!        ▼
+//!   bounded channel (replies + progress frames, any order)
+//!        ▼
+//!   writer thread ──serialized NDJSON──► socket
+//! ```
+//!
+//! * The reader never blocks on a solve: each admitted request hands its
+//!   reply receiver to a small waiter thread, so many requests are in
+//!   flight per connection and replies go out in completion order.
+//! * The writer thread is the only socket writer; interleaved replies
+//!   and progress frames from different requests cannot tear.
+//! * Reader and writer are decoupled by a *bounded* channel: a client
+//!   that stops reading backpressures its own connection only.
+//!   Progress frames use a non-blocking send and are dropped when the
+//!   channel is full; final replies use a blocking send and are
+//!   reliable.
+//! * A per-connection in-flight cap (`max_inflight`) sheds the excess
+//!   with `{"error":"overloaded","retry_after_ms":…}` so one client
+//!   cannot monopolize every lane of every replica.
+//!
+//! Legacy clients need no changes: requests without `"id"`/`"stream"`
+//! get byte-identical replies to the old synchronous protocol, and the
+//! exact JSON of error replies is pinned by golden tests in
+//! `tests/integration_server.rs` via [`process_line`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::server::Router;
-use crate::solver::{spec::f32_json, GramMode, SolveOverrides, SolverKind};
+use crate::server::protocol::{self, Incoming, InferFrame};
+use crate::server::{ProgressHook, Router, SubmitRejection};
 use crate::util::json::{self, Json};
 
-/// Handle one client connection (blocking, one request at a time per
-/// connection; concurrency comes from one thread per connection).
-fn handle_client(router: &Router, image_dim: usize, stream: TcpStream) {
-    let peer = stream
-        .peer_addr()
-        .map(|a| a.to_string())
-        .unwrap_or_else(|_| "?".into());
-    let mut writer = match stream.try_clone() {
+pub use crate::server::protocol::DEFAULT_MAX_INFLIGHT;
+
+/// Depth of the per-connection writer channel (frames, not bytes).
+/// Final replies block when it fills; progress frames are dropped.
+const WRITER_QUEUE_FRAMES: usize = 256;
+
+/// Handle one client connection: parse lines, admit requests, and fan
+/// replies back through the single writer thread.  Returns when the
+/// client disconnects and all of its in-flight replies have drained.
+fn handle_client(
+    router: &Arc<Router>,
+    image_dim: usize,
+    stream: TcpStream,
+    max_inflight: usize,
+) {
+    let writer_stream = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let (out_tx, out_rx) = sync_channel::<String>(WRITER_QUEUE_FRAMES);
+    let writer = std::thread::spawn(move || {
+        let mut w = writer_stream;
+        let mut broken = false;
+        // Keep draining after a write error so blocked senders always
+        // unblock; the loop ends when every sender clone has dropped.
+        while let Ok(text) = out_rx.recv() {
+            if broken {
+                continue;
+            }
+            if w.write_all(text.as_bytes()).is_err()
+                || w.write_all(b"\n").is_err()
+            {
+                broken = true;
+            }
+        }
+    });
+
+    let inflight = Arc::new(AtomicUsize::new(0));
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {
@@ -64,218 +94,195 @@ fn handle_client(router: &Router, image_dim: usize, stream: TcpStream) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = process_line(router, image_dim, &line);
-        let text = json::to_string(&reply);
-        if writer.write_all(text.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
-            break;
+        handle_line(router, image_dim, &line, &out_tx, &inflight, max_inflight);
+    }
+
+    // Reader done: drop our sender so the writer exits once the last
+    // in-flight waiter (and progress hook) has sent its frames.
+    drop(out_tx);
+    let _ = writer.join();
+}
+
+/// Parse one line and either answer immediately (commands, parse
+/// errors, shed requests) or admit it and spawn a waiter thread that
+/// forwards the reply when the solve retires.
+fn handle_line(
+    router: &Arc<Router>,
+    image_dim: usize,
+    line: &str,
+    out: &SyncSender<String>,
+    inflight: &Arc<AtomicUsize>,
+    max_inflight: usize,
+) {
+    let send = |frame: &Json| {
+        let _ = out.send(json::to_string(frame));
+    };
+    match protocol::parse_line(image_dim, line) {
+        Incoming::Bad { msg, id } => {
+            send(&protocol::error_frame(&msg, id.as_ref()));
+        }
+        Incoming::Cmd { cmd } => send(&run_cmd(router, &cmd)),
+        Incoming::Infer(frame) => {
+            let InferFrame { id, image, overrides, stream } = frame;
+            if inflight.load(Ordering::Acquire) >= max_inflight {
+                router.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                send(&protocol::overloaded_frame(
+                    router.retry_after_hint(),
+                    id.as_ref(),
+                ));
+                return;
+            }
+            let progress: Option<ProgressHook> = if stream {
+                let tx = out.clone();
+                let pid = id.clone();
+                Some(Box::new(move |iter, residual| {
+                    let frame =
+                        protocol::progress_frame(pid.as_ref(), iter, residual);
+                    // Lossy on purpose: a slow client drops progress
+                    // frames instead of stalling the scheduler's lane
+                    // step for every other request.
+                    let _ = tx.try_send(json::to_string(&frame));
+                }))
+            } else {
+                None
+            };
+            match router.try_submit(image, &overrides, progress) {
+                Ok(rx) => {
+                    inflight.fetch_add(1, Ordering::AcqRel);
+                    let tx = out.clone();
+                    let inflight = inflight.clone();
+                    std::thread::spawn(move || {
+                        let frame = match rx.recv() {
+                            Ok(Ok(resp)) => {
+                                protocol::response_frame(&resp, id.as_ref())
+                            }
+                            Ok(Err(msg)) => {
+                                protocol::error_frame(&msg, id.as_ref())
+                            }
+                            Err(_) => protocol::error_frame(
+                                "router worker is not running (shut down or failed)",
+                                id.as_ref(),
+                            ),
+                        };
+                        let _ = tx.send(json::to_string(&frame));
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(SubmitRejection::Overloaded { retry_after_ms }) => {
+                    send(&protocol::overloaded_frame(retry_after_ms, id.as_ref()));
+                }
+                Err(other) => {
+                    send(&protocol::error_frame(&other.to_string(), id.as_ref()));
+                }
+            }
         }
     }
-    let _ = peer;
 }
 
 fn error_reply(msg: &str) -> Json {
     json::obj(vec![("error", json::s(msg))])
 }
 
-/// Parse the optional per-request solver override fields.  Shape errors
-/// (wrong JSON type, unknown solver name, non-integer iteration cap) are
-/// caught here with stable messages; *value* errors (tol ≤ 0 etc.) are
-/// caught by `SolveOverrides::apply` at submission.
-fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
-    let mut ov = SolveOverrides::default();
-    if let Some(v) = parsed.get("solver") {
-        let name = v
-            .as_str()
-            .ok_or_else(|| "override 'solver' must be a string".to_string())?;
-        ov.kind = Some(SolverKind::parse(name).ok_or_else(|| {
-            format!("unknown solver '{name}' (expected forward|anderson|hybrid)")
-        })?);
-    }
-    if let Some(v) = parsed.get("tol") {
-        let tol = v
-            .as_f64()
-            .ok_or_else(|| "override 'tol' must be a number".to_string())?;
-        ov.tol = Some(tol as f32);
-    }
-    if let Some(v) = parsed.get("max_iter") {
-        let x = v.as_f64().ok_or_else(|| {
-            "override 'max_iter' must be a positive integer".to_string()
-        })?;
-        if x.fract() != 0.0 || x < 1.0 {
-            return Err(
-                "override 'max_iter' must be a positive integer".to_string()
-            );
-        }
-        ov.max_iter = Some(x as usize);
-    }
-    if let Some(v) = parsed.get("adaptive") {
-        let on = v.as_bool().ok_or_else(|| {
-            "override 'adaptive' must be a boolean".to_string()
-        })?;
-        ov.adaptive_window = Some(on);
-    }
-    if let Some(v) = parsed.get("safeguard") {
-        let on = v.as_bool().ok_or_else(|| {
-            "override 'safeguard' must be a boolean".to_string()
-        })?;
-        ov.safeguard = Some(on);
-    }
-    if let Some(v) = parsed.get("errorfactor") {
-        let f = v.as_f64().ok_or_else(|| {
-            "override 'errorfactor' must be a number".to_string()
-        })?;
-        ov.errorfactor = Some(f as f32);
-    }
-    if let Some(v) = parsed.get("cond_max") {
-        let c = v.as_f64().ok_or_else(|| {
-            "override 'cond_max' must be a number".to_string()
-        })?;
-        ov.cond_max = Some(c as f32);
-    }
-    if let Some(v) = parsed.get("gram") {
-        const MSG: &str =
-            "override 'gram' must be \"exact\" or a positive integer";
-        let mode = if let Some(s) = v.as_str() {
-            if s == "exact" {
-                GramMode::Exact
-            } else {
-                return Err(MSG.to_string());
-            }
-        } else {
-            match v.as_f64() {
-                Some(n) if n >= 1.0 && n.fract() == 0.0 => {
-                    GramMode::Sketched { dim: n as usize }
-                }
-                _ => return Err(MSG.to_string()),
-            }
-        };
-        ov.gram = Some(mode);
-    }
-    Ok(ov)
-}
-
-/// Parse and execute one protocol line. Pure function → unit-testable.
-pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
-    let parsed = match json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return error_reply(&format!("malformed json: {e}")),
-    };
-
-    if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "ping" => json::obj(vec![("ok", Json::Bool(true))]),
-            "stats" => {
-                let mut pairs =
-                    vec![("stats", json::s(&router.metrics.summary()))];
-                // Pack-cache + workspace health of the serving backend:
-                // in steady state `pack_hits` grows while misses and
-                // invalidations stay flat (invalidations move only when
-                // parameters are hot-swapped by a training step).
-                if let Some(h) = router.backend_hot_stats() {
-                    pairs.push((
-                        "hot_path",
-                        json::obj(vec![
-                            ("ws_hits", json::num(h.hits as f64)),
-                            ("ws_allocs", json::num(h.allocs as f64)),
-                            ("pack_hits", json::num(h.pack_hits as f64)),
-                            ("pack_misses", json::num(h.pack_misses as f64)),
-                            (
-                                "pack_invalidations",
-                                json::num(h.pack_invalidations as f64),
-                            ),
-                            (
-                                "pack_uncached",
-                                json::num(h.pack_uncached as f64),
-                            ),
-                            (
-                                "pack_bytes_f32",
-                                json::num(h.pack_bytes_f32 as f64),
-                            ),
-                            (
-                                "pack_bytes_bf16",
-                                json::num(h.pack_bytes_bf16 as f64),
-                            ),
-                            (
-                                "pack_entries",
-                                json::num(h.pack_entries as f64),
-                            ),
-                        ]),
-                    ));
-                }
-                json::obj(pairs)
-            }
-            other => error_reply(&format!("unknown cmd '{other}'")),
-        };
-    }
-
-    let image: Vec<f32> = match parsed.get("image").and_then(Json::as_arr) {
-        Some(arr) => arr
-            .iter()
-            .filter_map(Json::as_f64)
-            .map(|v| v as f32)
-            .collect(),
-        None => return error_reply("missing 'image' array"),
-    };
-    if image.len() != image_dim {
-        return error_reply(&format!(
-            "image has {} values, model wants {image_dim}",
-            image.len()
-        ));
-    }
-    let overrides = match parse_overrides(&parsed) {
-        Ok(ov) => ov,
-        Err(msg) => return error_reply(&msg),
-    };
-
-    match router.infer_blocking_with(image, &overrides) {
-        Ok(resp) => {
-            let mut pairs = vec![
-                ("class", json::num(resp.class as f64)),
-                ("latency_ms", json::num(resp.latency.as_secs_f64() * 1e3)),
-                ("batch", json::num(resp.batch_size as f64)),
-                ("solver_iters", json::num(resp.solver_iters as f64)),
-                ("solver_fevals", json::num(resp.solver_fevals as f64)),
-                ("converged", Json::Bool(resp.converged)),
-                // Echo the *effective* spec the solve ran under, so a
-                // client can see what its overrides resolved to after
-                // server-side clamping.
-                ("solver", json::s(resp.spec.kind.name())),
-                ("tol", f32_json(resp.spec.tol)),
-                ("max_iter", json::num(resp.spec.max_iter as f64)),
-                ("adaptive", Json::Bool(resp.spec.adaptive_window)),
-                ("safeguard", Json::Bool(resp.spec.safeguard)),
-                ("errorfactor", f32_json(resp.spec.errorfactor)),
-                ("cond_max", f32_json(resp.spec.cond_max)),
-                (
-                    "gram",
-                    match resp.spec.gram {
-                        GramMode::Exact => json::s("exact"),
-                        GramMode::Sketched { dim } => json::num(dim as f64),
-                    },
-                ),
-            ];
-            if let Some(id) = parsed.get("id") {
-                pairs.push(("id", id.clone()));
+/// Execute a `{"cmd": ...}` line.  `stats` returns structured JSON
+/// fields (counters, percentiles, per-replica gauges) plus the legacy
+/// one-line `summary` blob.
+fn run_cmd(router: &Router, cmd: &str) -> Json {
+    match cmd {
+        "ping" => json::obj(vec![("ok", Json::Bool(true))]),
+        "stats" => {
+            let mut pairs = router.metrics.stat_pairs();
+            pairs.push(("queue_now", json::num(router.queue_depth() as f64)));
+            // Pack-cache + workspace health of the serving backend:
+            // in steady state `pack_hits` grows while misses and
+            // invalidations stay flat (invalidations move only when
+            // parameters are hot-swapped by a training step).
+            if let Some(h) = router.backend_hot_stats() {
+                pairs.push((
+                    "hot_path",
+                    json::obj(vec![
+                        ("ws_hits", json::num(h.hits as f64)),
+                        ("ws_allocs", json::num(h.allocs as f64)),
+                        ("pack_hits", json::num(h.pack_hits as f64)),
+                        ("pack_misses", json::num(h.pack_misses as f64)),
+                        (
+                            "pack_invalidations",
+                            json::num(h.pack_invalidations as f64),
+                        ),
+                        (
+                            "pack_uncached",
+                            json::num(h.pack_uncached as f64),
+                        ),
+                        (
+                            "pack_bytes_f32",
+                            json::num(h.pack_bytes_f32 as f64),
+                        ),
+                        (
+                            "pack_bytes_bf16",
+                            json::num(h.pack_bytes_bf16 as f64),
+                        ),
+                        (
+                            "pack_entries",
+                            json::num(h.pack_entries as f64),
+                        ),
+                    ]),
+                ));
             }
             json::obj(pairs)
         }
-        Err(e) => error_reply(&format!("{e}")),
+        other => error_reply(&format!("unknown cmd '{other}'")),
     }
 }
 
-/// Serve until the process is killed.  One thread per connection; the
-/// router's batcher thread does the actual batching across connections.
+/// Parse and execute one protocol line, blocking until the reply is
+/// ready.  This is the legacy synchronous entry point: error replies
+/// never carry an `id` and their exact JSON is pinned by golden tests
+/// (the multiplexed wire path in [`serve_tcp`] attaches ids and sheds
+/// with structured `overloaded` frames instead).  Pure function →
+/// unit-testable.
+pub fn process_line(router: &Router, image_dim: usize, line: &str) -> Json {
+    match protocol::parse_line(image_dim, line) {
+        Incoming::Bad { msg, .. } => error_reply(&msg),
+        Incoming::Cmd { cmd } => run_cmd(router, &cmd),
+        Incoming::Infer(frame) => {
+            match router.infer_blocking_with(frame.image, &frame.overrides) {
+                Ok(resp) => protocol::response_frame(&resp, frame.id.as_ref()),
+                Err(e) => error_reply(&format!("{e}")),
+            }
+        }
+    }
+}
+
+/// Serve until the process is killed with the default per-connection
+/// in-flight cap.
 pub fn serve_tcp(router: Arc<Router>, image_dim: usize, addr: &str) -> Result<()> {
+    serve_tcp_with(router, image_dim, addr, DEFAULT_MAX_INFLIGHT)
+}
+
+/// Serve until the process is killed.  One reader thread plus one
+/// writer thread per connection; the router's replicas do the actual
+/// batching across connections.
+pub fn serve_tcp_with(
+    router: Arc<Router>,
+    image_dim: usize,
+    addr: &str,
+    max_inflight: usize,
+) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    println!("[server] listening on {addr} (ndjson protocol)");
+    println!("[server] listening on {addr} (multiplexed ndjson protocol)");
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
+                let peer = s
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "?".into());
+                println!("[server] client {peer} connected");
                 let router = router.clone();
-                std::thread::spawn(move || handle_client(&router, image_dim, s));
+                std::thread::spawn(move || {
+                    handle_client(&router, image_dim, s, max_inflight);
+                    println!("[server] client {peer} disconnected");
+                });
             }
             Err(e) => eprintln!("[server] accept error: {e}"),
         }

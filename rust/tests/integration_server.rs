@@ -13,7 +13,9 @@ use std::time::Duration;
 use deq_anderson::data;
 use deq_anderson::infer;
 use deq_anderson::runtime::{backend_from_dir, Backend};
-use deq_anderson::server::{tcp, Router, RouterConfig, SchedMode};
+use deq_anderson::server::{
+    tcp, Router, RouterConfig, SchedMode, SubmitRejection,
+};
 use deq_anderson::solver::{SolveClamps, SolveOverrides, SolveSpec, SolverKind};
 use deq_anderson::util::json::{self, Json};
 
@@ -23,6 +25,15 @@ fn engine() -> Arc<dyn Backend> {
 }
 
 fn make_router(max_wait_ms: u64, mode: SchedMode) -> (Arc<Router>, usize) {
+    make_router_n(max_wait_ms, mode, 1, 256)
+}
+
+fn make_router_n(
+    max_wait_ms: u64,
+    mode: SchedMode,
+    replicas: usize,
+    queue_cap: usize,
+) -> (Arc<Router>, usize) {
     let engine = engine();
     let image_dim = engine.manifest().model.image_dim();
     let params = Arc::new(engine.init_params().unwrap());
@@ -31,7 +42,8 @@ fn make_router(max_wait_ms: u64, mode: SchedMode) -> (Arc<Router>, usize) {
         clamps: SolveClamps::default(),
         mode,
         max_wait: Duration::from_millis(max_wait_ms),
-        queue_cap: 256,
+        queue_cap,
+        replicas,
     };
     (Arc::new(Router::start(engine, params, cfg).unwrap()), image_dim)
 }
@@ -487,6 +499,22 @@ fn tcp_error_replies_are_golden() {
         reply("{\"image\":[1,2,3]}"),
         format!("{{\"error\":\"image has 3 values, model wants {dim}\"}}")
     );
+    // Non-numeric image element: an explicit per-element error.  The old
+    // `filter_map(Json::as_f64)` silently dropped the element and
+    // misreported the image as short (or, worse, passed a shifted image
+    // when the length happened to still match).
+    assert_eq!(
+        reply("{\"image\":[1,\"x\",3]}"),
+        "{\"error\":\"image[1] is not a number\"}"
+    );
+    // ...including at the correct length, where the old code shifted
+    // values instead of erroring.
+    let mut vals = vec!["0"; dim];
+    vals[1] = "\"x\"";
+    assert_eq!(
+        reply(&format!("{{\"image\":[{}]}}", vals.join(","))),
+        "{\"error\":\"image[1] is not a number\"}"
+    );
     // Unknown command.
     assert_eq!(
         reply("{\"cmd\":\"warp\"}"),
@@ -531,6 +559,11 @@ fn tcp_error_replies_are_golden() {
     assert_eq!(
         reply(&with("\"gram\":2.5")),
         "{\"error\":\"override 'gram' must be \\\"exact\\\" or a positive integer\"}"
+    );
+    // The streaming opt-in flag must be a boolean.
+    assert_eq!(
+        reply(&with("\"stream\":\"yes\"")),
+        "{\"error\":\"'stream' must be a boolean\"}"
     );
 }
 
@@ -728,4 +761,338 @@ fn tcp_mixes_adaptive_and_fixed_lanes_in_one_bucket() {
     }
     // Sanity: the randomized split really did mix policies.
     assert!(lanes.iter().any(|l| l.adaptive) && lanes.iter().any(|l| !l.adaptive));
+}
+
+// ---------------------------------------------------------------------------
+// Multiplexed wire protocol: ids, streaming, shedding, replicas
+// ---------------------------------------------------------------------------
+
+/// Spawn a TCP server for `router` on `addr` and connect one client.
+fn serve_and_connect(
+    router: &Arc<Router>,
+    dim: usize,
+    addr: &'static str,
+    max_inflight: usize,
+) -> (TcpStream, BufReader<TcpStream>) {
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = tcp::serve_tcp_with(router, dim, addr, max_inflight);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    let stream = TcpStream::connect(addr).expect("connect");
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read frame");
+    json::parse(line.trim()).expect("parse frame")
+}
+
+/// The heart of multiplexing: two requests pipelined on one connection,
+/// stiff first — and the *easy* reply comes back first, matched by the
+/// client-chosen string id, not by submission order.
+#[test]
+fn tcp_replies_are_matched_by_id_not_order() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (mut stream, mut reader) =
+        serve_and_connect(&router, dim, "127.0.0.1:17974", 64);
+    let (data, _, _) = data::load_auto(8, 8, 9);
+    let fmt = |img: &[f32]| -> String {
+        img.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+    };
+    let stiff = format!(
+        "{{\"id\":\"stiff\",\"image\":[{}],\"tol\":1e-5,\"max_iter\":400}}\n",
+        fmt(&scaled(data.image(0), 0.03))
+    );
+    let easy = format!(
+        "{{\"id\":\"easy\",\"image\":[{}],\"tol\":0.3}}\n",
+        fmt(&scaled(data.image(1), 3.0))
+    );
+    stream.write_all(stiff.as_bytes()).unwrap();
+    stream.write_all(easy.as_bytes()).unwrap();
+
+    let first = read_frame(&mut reader);
+    let second = read_frame(&mut reader);
+    assert_eq!(first.get("error"), None, "first reply errored: {first:?}");
+    assert_eq!(second.get("error"), None, "second reply errored: {second:?}");
+    assert_eq!(
+        first.get("id").and_then(Json::as_str),
+        Some("easy"),
+        "easy solve did not overtake the stiff one: {first:?}"
+    );
+    assert_eq!(second.get("id").and_then(Json::as_str), Some("stiff"));
+    let easy_iters = first.get("solver_iters").and_then(Json::as_i64).unwrap();
+    let stiff_iters = second.get("solver_iters").and_then(Json::as_i64).unwrap();
+    assert!(easy_iters < stiff_iters);
+}
+
+/// `"stream": true` subscribes a request to per-iteration progress
+/// frames, all delivered before the final reply on the same connection.
+#[test]
+fn tcp_stream_emits_progress_frames_before_reply() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (mut stream, mut reader) =
+        serve_and_connect(&router, dim, "127.0.0.1:17975", 64);
+    let (data, _, _) = data::load_auto(8, 8, 11);
+    let img: Vec<String> =
+        scaled(data.image(0), 0.2).iter().map(|v| format!("{v:.4}")).collect();
+    let req =
+        format!("{{\"id\":5,\"image\":[{}],\"stream\":true}}\n", img.join(","));
+    stream.write_all(req.as_bytes()).unwrap();
+
+    let mut progress = Vec::new();
+    let reply = loop {
+        let v = read_frame(&mut reader);
+        if v.get("event").and_then(Json::as_str) == Some("progress") {
+            progress.push(v);
+        } else {
+            break v;
+        }
+    };
+    assert!(
+        !progress.is_empty(),
+        "streaming request produced no progress frames"
+    );
+    let mut last_iter = 0;
+    for (k, frame) in progress.iter().enumerate() {
+        assert_eq!(frame.get("id").and_then(Json::as_i64), Some(5));
+        let iter = frame
+            .get("iter")
+            .and_then(Json::as_i64)
+            .expect("progress frame missing iter");
+        assert!(iter > last_iter, "frame {k} iter {iter} not increasing");
+        last_iter = iter;
+        let residual = frame
+            .get("residual")
+            .and_then(Json::as_f64)
+            .expect("progress frame missing residual");
+        assert!(residual.is_finite() && residual >= 0.0);
+    }
+    // The final reply carries the answer, after every progress frame.
+    assert_eq!(reply.get("error"), None, "unexpected error: {reply:?}");
+    assert_eq!(reply.get("id").and_then(Json::as_i64), Some(5));
+    let iters = reply.get("solver_iters").and_then(Json::as_i64).unwrap();
+    assert!(
+        iters >= last_iter,
+        "final reply reports {iters} iters, saw a progress frame for {last_iter}"
+    );
+}
+
+/// Queue at capacity → the extra request is shed on the wire with a
+/// structured `overloaded` frame carrying a retry hint and the id.
+#[test]
+fn tcp_sheds_with_overloaded_frame_when_queue_full() {
+    // Batch-granular with a long window: submissions pile up in the
+    // queue (nothing fires before max_wait), so the third request finds
+    // it at its cap of 2 deterministically.
+    let (router, dim) =
+        make_router_n(60_000, SchedMode::BatchGranular, 1, 2);
+    let (mut stream, mut reader) =
+        serve_and_connect(&router, dim, "127.0.0.1:17976", 64);
+    let zeros = vec!["0"; dim].join(",");
+    let mut lines = String::new();
+    for id in 1..=3 {
+        lines.push_str(&format!("{{\"id\":{id},\"image\":[{zeros}]}}\n"));
+    }
+    stream.write_all(lines.as_bytes()).unwrap();
+
+    // Requests 1 and 2 are parked in the queue; the only frame on the
+    // wire is request 3's shed reply.
+    let v = read_frame(&mut reader);
+    assert_eq!(v.get("error").and_then(Json::as_str), Some("overloaded"));
+    assert_eq!(v.get("id").and_then(Json::as_i64), Some(3));
+    let retry = v
+        .get("retry_after_ms")
+        .and_then(Json::as_i64)
+        .expect("overloaded frame missing retry_after_ms");
+    assert!(retry >= 1, "retry hint must be at least 1ms, got {retry}");
+    assert_eq!(
+        router
+            .metrics
+            .shed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+/// The structured admission API itself: a full queue returns
+/// `SubmitRejection::Overloaded` (not a stringly error) and bumps the
+/// shed counter.
+#[test]
+fn try_submit_rejects_structured_overload() {
+    let (router, dim) = make_router_n(60_000, SchedMode::BatchGranular, 1, 1);
+    let _parked = router
+        .try_submit(vec![0.0; dim], &SolveOverrides::default(), None)
+        .expect("first request fits the queue");
+    match router.try_submit(vec![0.0; dim], &SolveOverrides::default(), None) {
+        Err(SubmitRejection::Overloaded { retry_after_ms }) => {
+            assert!(retry_after_ms >= 1);
+        }
+        other => panic!(
+            "expected Overloaded, got {:?}",
+            other.map(|_| "Ok(receiver)")
+        ),
+    }
+    assert_eq!(
+        router
+            .metrics
+            .shed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    // Bad requests are still structured as Invalid, not Overloaded.
+    match router.try_submit(vec![0.0; dim + 1], &SolveOverrides::default(), None)
+    {
+        Err(SubmitRejection::Invalid(msg)) => {
+            assert!(msg.contains("image has"), "unexpected message: {msg}")
+        }
+        _ => panic!("wrong-size image must reject as Invalid"),
+    }
+}
+
+/// Back-compat pin: a legacy request (no `id`, no `stream`) gets a reply
+/// with exactly the legacy key set — nothing multiplexing-related leaks
+/// into old clients' replies.
+#[test]
+fn tcp_reply_without_id_keeps_legacy_key_set() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (mut stream, mut reader) =
+        serve_and_connect(&router, dim, "127.0.0.1:17977", 64);
+    let (data, _, _) = data::load_auto(4, 4, 3);
+    let img: Vec<String> =
+        data.image(0).iter().map(|v| format!("{v:.4}")).collect();
+    let req = format!("{{\"image\":[{}]}}\n", img.join(","));
+    stream.write_all(req.as_bytes()).unwrap();
+    let v = read_frame(&mut reader);
+    let Json::Obj(map) = &v else { panic!("reply is not an object: {v:?}") };
+    let keys: Vec<&str> = map.keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "adaptive",
+            "batch",
+            "class",
+            "cond_max",
+            "converged",
+            "errorfactor",
+            "gram",
+            "latency_ms",
+            "max_iter",
+            "safeguard",
+            "solver",
+            "solver_fevals",
+            "solver_iters",
+            "tol",
+        ],
+        "legacy reply key set drifted"
+    );
+}
+
+/// The per-connection in-flight cap sheds the pipelined excess while a
+/// slow solve is still running.
+#[test]
+fn tcp_inflight_cap_sheds_pipelined_excess() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (mut stream, mut reader) =
+        serve_and_connect(&router, dim, "127.0.0.1:17978", 1);
+    let (data, _, _) = data::load_auto(8, 8, 9);
+    let fmt = |img: &[f32]| -> String {
+        img.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+    };
+    // A stiff request occupies the single in-flight slot for many
+    // iterations; the immediately pipelined second request must be shed
+    // at the connection door.
+    let stiff = format!(
+        "{{\"id\":1,\"image\":[{}],\"tol\":1e-5,\"max_iter\":400}}\n",
+        fmt(&scaled(data.image(0), 0.03))
+    );
+    let easy = format!(
+        "{{\"id\":2,\"image\":[{}],\"tol\":0.3}}\n",
+        fmt(&scaled(data.image(1), 3.0))
+    );
+    stream.write_all(stiff.as_bytes()).unwrap();
+    stream.write_all(easy.as_bytes()).unwrap();
+
+    let shed = read_frame(&mut reader);
+    assert_eq!(shed.get("error").and_then(Json::as_str), Some("overloaded"));
+    assert_eq!(shed.get("id").and_then(Json::as_i64), Some(2));
+    assert!(shed.get("retry_after_ms").and_then(Json::as_i64).unwrap() >= 1);
+    // The in-flight request itself is unharmed.
+    let reply = read_frame(&mut reader);
+    assert_eq!(reply.get("id").and_then(Json::as_i64), Some(1));
+    assert_eq!(reply.get("error"), None, "unexpected error: {reply:?}");
+}
+
+/// Two replicas drain one shared queue: every request is answered, both
+/// replicas exist in the gauges, and per-replica served counts account
+/// for exactly the offered traffic.
+#[test]
+fn multi_replica_router_serves_all_and_tracks_gauges() {
+    let (router, _) = make_router_n(5, SchedMode::IterationLevel, 2, 256);
+    let (data, _, _) = data::load_auto(16, 8, 2);
+    let receivers: Vec<_> = (0..8)
+        .map(|i| router.submit(data.image(i).to_vec()).unwrap())
+        .collect();
+    for rx in receivers {
+        rx.recv().expect("reply").expect("response");
+    }
+    assert_eq!(router.metrics.replicas.len(), 2);
+    let per_replica: Vec<u64> = router
+        .metrics
+        .replicas
+        .iter()
+        .map(|g| g.served.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+    assert_eq!(
+        per_replica.iter().sum::<u64>(),
+        8,
+        "per-replica served {per_replica:?} does not sum to the traffic"
+    );
+    // Queue-depth observations: one per successful submission.
+    assert_eq!(router.metrics.queue_depth.lock().unwrap().count(), 8);
+}
+
+/// `stats` is structured now: counters and percentiles as JSON fields,
+/// a per-replica gauge array, and the legacy summary blob riding along.
+#[test]
+fn stats_reply_is_structured_json() {
+    let (router, dim) = make_router_n(5, SchedMode::IterationLevel, 2, 256);
+    let (data, _, _) = data::load_auto(4, 4, 3);
+    router.infer_blocking(data.image(0).to_vec()).unwrap();
+    let v = tcp::process_line(&router, dim, "{\"cmd\":\"stats\"}");
+    assert_eq!(v.get("served").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(v.get("shed").and_then(Json::as_f64), Some(0.0));
+    for key in [
+        "batches",
+        "latency_p50_ms",
+        "latency_p95_ms",
+        "latency_p99_ms",
+        "mean_fill",
+        "occupancy",
+        "retire_p50_ms",
+        "retire_p95_ms",
+        "fevals_saved",
+        "queue_depth_p50",
+        "queue_depth_max",
+        "queue_now",
+    ] {
+        assert!(
+            v.get(key).and_then(Json::as_f64).is_some(),
+            "stats missing numeric field {key}: {v:?}"
+        );
+    }
+    let replicas = v.get("replicas").and_then(Json::as_arr).expect("replicas");
+    assert_eq!(replicas.len(), 2);
+    let served_total: f64 = replicas
+        .iter()
+        .map(|g| g.get("served").and_then(Json::as_f64).unwrap())
+        .sum();
+    assert_eq!(served_total, 1.0);
+    // The legacy blob survives for old scrapers.
+    let summary = v.get("summary").and_then(Json::as_str).expect("summary");
+    assert!(summary.contains("served="), "summary blob drifted: {summary}");
 }

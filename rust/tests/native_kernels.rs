@@ -373,6 +373,7 @@ fn serving_survives_rank_deficient_window() {
             mode: SchedMode::IterationLevel,
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
+            replicas: 1,
         },
     )
     .unwrap();
@@ -424,6 +425,7 @@ fn scheduler_steady_state_allocates_nothing() {
             mode: SchedMode::IterationLevel,
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
+            replicas: 1,
         },
     )
     .unwrap();
