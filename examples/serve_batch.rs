@@ -37,6 +37,8 @@ fn main() -> Result<()> {
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: 4096,
         replicas: args.usize_or("replicas", 1),
+        default_deadline: None,
+        redrive_budget: 1,
     };
     // Warm the compiled buckets so latency numbers are steady-state.
     let buckets = engine.manifest().batches_for("encode");

@@ -81,6 +81,8 @@ pub fn drive(
         max_wait: Duration::from_millis(2),
         queue_cap: images.len() + 16,
         replicas,
+        default_deadline: None,
+        redrive_budget: 1,
     };
     let router = Router::start(engine.clone(), params.clone(), cfg)?;
     let t0 = std::time::Instant::now();
@@ -103,7 +105,14 @@ pub fn drive(
         predictions.push(resp.class);
     }
     let wall = t0.elapsed();
-    let occupancy = router.metrics.lane_occupancy.lock().unwrap().mean();
+    let occupancy = {
+        let occ = router
+            .metrics
+            .lane_occupancy
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        occ.mean()
+    };
     let fevals_saved = router.metrics.fevals_saved();
     router.shutdown();
     Ok(ModeOutcome {
@@ -192,6 +201,8 @@ pub fn saturate(
         max_wait: Duration::from_millis(2),
         queue_cap,
         replicas,
+        default_deadline: None,
+        redrive_budget: 1,
     };
     let router = Router::start(engine.clone(), params.clone(), cfg)?;
     let interarrival = Duration::from_secs_f64(1.0 / rate_rps.max(1e-9));
@@ -207,7 +218,7 @@ pub fn saturate(
             std::thread::sleep(pause);
         }
         let image = images[i % images.len()].clone();
-        match router.try_submit(image, &SolveOverrides::default(), None) {
+        match router.try_submit(image, &SolveOverrides::default(), None, None) {
             Ok(rx) => receivers.push(rx),
             Err(SubmitRejection::Overloaded { retry_after_ms }) => {
                 debug_assert!(retry_after_ms >= 1);

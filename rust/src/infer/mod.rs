@@ -25,15 +25,22 @@ pub struct InferResult {
     pub sample_fevals: Vec<usize>,
     /// Per-sample converged flags.
     pub sample_converged: Vec<bool>,
+    /// Per-sample quarantine flags: the lane's solve hit a non-finite
+    /// residual and was retired with a numerical fault — its logits and
+    /// prediction are garbage and callers must not trust them.
+    pub sample_faulted: Vec<bool>,
     pub solver_residual: f32,
     pub latency: Duration,
 }
 
-/// Argmax over one logit row.
+/// Argmax over one logit row.  `total_cmp` rather than
+/// `partial_cmp().unwrap()`: a quarantined lane's logits can be NaN, and
+/// classifying a poisoned row must yield *a* class (the lane is reported
+/// faulted), never a panic in the serving loop.
 pub fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -123,6 +130,12 @@ pub fn infer(
             .take(count)
             .copied()
             .collect(),
+        sample_faulted: report
+            .sample_faulted
+            .iter()
+            .take(count)
+            .copied()
+            .collect(),
         solver_residual: report.final_residual(),
         latency: t0.elapsed(),
     })
@@ -200,6 +213,17 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_survives_nan_rows() {
+        // NaN sorts above every finite float under total_cmp, so a fully
+        // poisoned row returns its last NaN index — any class is fine,
+        // what matters is that it does not panic mid-serve.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 1);
+        // A partially poisoned row still never panics.
+        let _ = argmax(&[0.5, f32::NAN, 0.9]);
+        assert_eq!(argmax(&[]), 0);
     }
 
     #[test]

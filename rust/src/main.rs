@@ -51,6 +51,10 @@ commands:
                     queue; default 1) --queue-cap N (shed beyond this
                     backlog with an overloaded/retry_after_ms reply)
                     --max-inflight N (per-connection in-flight cap)
+                    --deadline-ms N (default deadline for requests that
+                    don't send their own; 0 = none)
+                    --redrive-budget N (times an in-flight request is
+                    re-queued after a replica crash; default 1)
   experiment ID     table1|fig1|fig2|fig5|fig6|fig7|ablation|serving|all
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
@@ -244,6 +248,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 10)),
         queue_cap: args.usize_or("queue-cap", 1024),
         replicas: args.usize_or("replicas", 1),
+        default_deadline: match args.u64_or("deadline-ms", 0) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+        redrive_budget: args.u64_or("redrive-budget", 1) as u32,
     };
     let replicas = cfg.replicas;
     let image_dim = engine.manifest().model.image_dim();

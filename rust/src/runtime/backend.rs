@@ -103,6 +103,14 @@ pub trait Backend: Send + Sync {
     fn stats_report(&self) -> String {
         render_stats(&self.stats())
     }
+
+    /// Total faults injected by a [`crate::runtime::faults::FaultInjector`]
+    /// wrapping this backend; `0` (the default) for every real substrate.
+    /// Serving stats surface this so chaos runs can assert their plan
+    /// actually fired.
+    fn faults_injected(&self) -> u64 {
+        0
+    }
 }
 
 /// Validate an input list against an entry spec (count, shape, dtype).
@@ -196,6 +204,12 @@ pub fn render_stats(rows: &[((String, usize), EntryStats)]) -> String {
 ///   * `"auto"`   — PJRT when the feature is enabled *and*
 ///     `dir/manifest.json` exists, native otherwise.
 pub fn select_backend(choice: &str, dir: &Path) -> Result<Arc<dyn Backend>> {
+    // Chaos runs wrap whatever substrate was chosen; with `DEQ_FAULTS`
+    // unset this is the identity (same Arc, no decorator, no cost).
+    crate::runtime::faults::wrap_from_env(select_raw(choice, dir)?)
+}
+
+fn select_raw(choice: &str, dir: &Path) -> Result<Arc<dyn Backend>> {
     if choice == "native" {
         return Ok(Arc::new(NativeEngine::tiny()));
     }

@@ -1,0 +1,473 @@
+//! Deterministic fault injection: a seeded [`FaultPlan`] wrapped around
+//! any [`Backend`] as a decorator, so every tier above the runtime —
+//! solver drivers, the iteration-level scheduler, the replica
+//! supervisor, the TCP front-end — can be chaos-tested without touching
+//! engine code.
+//!
+//! **Off by default and zero-cost when off**: the injector is a separate
+//! `Backend` wrapper that only exists when a plan is configured
+//! (`DEQ_FAULTS` env var, the [`NativeConfig::faults`] knob, or an
+//! explicit [`FaultInjector::new`]).  With no plan there is no wrapper —
+//! no extra dispatch, no extra allocation on the hot path — which is
+//! what keeps the steady-state alloc assertions and the bench gates
+//! byte-identical to a build without this module.
+//!
+//! # Plan format
+//!
+//! A plan is a semicolon-separated list of clauses:
+//!
+//! ```text
+//! seed=42;panic@cell_step#7;nan@encode#3;stall@cell_step%0.05:25ms
+//! ```
+//!
+//! * `seed=N` — seeds the PRNG used by rate triggers (default 0).
+//! * `panic@ENTRY#N` — panic on the N-th call (1-based) of `ENTRY`.
+//! * `nan@ENTRY#N` — return the real outputs with row 0 of every output
+//!   tensor overwritten with NaN (poisons exactly one lane of a batched
+//!   call — the per-sample kernels keep the rot from spreading).
+//! * `stall@ENTRY#N:MSms` — sleep `MS` milliseconds before the call
+//!   (injected latency; the call then proceeds normally).
+//! * `KIND@ENTRY%P[...]` — rate form: instead of an exact call count,
+//!   fire with probability `P` (0..=1) per call, drawn from the seeded
+//!   PRNG — deterministic for a fixed seed and call sequence.
+//! * `ENTRY` may be `*` to match every entry point.
+//!
+//! Call counts are tracked per entry name across the injector's
+//! lifetime, so a respawned replica sharing the engine `Arc` keeps
+//! counting where the crashed one stopped — an exact-count panic fires
+//! once, not once per respawn.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ParamSet;
+use crate::runtime::backend::Backend;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native_engine::{NativeConfig, NativeEngine};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Environment variable holding the fault plan for process-wide
+/// injection (applied by [`crate::runtime::select_backend`]).
+pub const FAULTS_ENV: &str = "DEQ_FAULTS";
+
+/// What an injected fault does to the matched call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Panic before dispatching (simulates a crashed replica worker).
+    Panic,
+    /// Execute normally, then overwrite row 0 of every output tensor
+    /// with NaN (simulates numerical breakdown in one lane).
+    NonFinite,
+    /// Sleep this long before dispatching (injected latency).
+    Stall(Duration),
+}
+
+/// When a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// On exactly the N-th matching call (1-based), once.
+    OnCall(u64),
+    /// With this probability per matching call, from the seeded PRNG.
+    Rate(f32),
+}
+
+/// One clause of a plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    /// Entry-point name to match (`*` matches every entry).
+    pub entry: String,
+    pub trigger: Trigger,
+    pub kind: FaultKind,
+}
+
+impl FaultRule {
+    fn matches(&self, entry: &str) -> bool {
+        self.entry == "*" || self.entry == entry
+    }
+}
+
+/// A parsed, deterministic fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse the plan text format documented at module level.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in text.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse()
+                    .with_context(|| format!("bad fault seed '{seed}'"))?;
+                continue;
+            }
+            plan.rules.push(parse_rule(clause)?);
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from `DEQ_FAULTS`; `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(text) if !text.trim().is_empty() => {
+                Ok(Some(Self::parse(&text).with_context(|| {
+                    format!("parsing {FAULTS_ENV}='{text}'")
+                })?))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Parse one `KIND@ENTRY(#N|%P)[:MSms]` clause.
+fn parse_rule(clause: &str) -> Result<FaultRule> {
+    let (kind_name, rest) = clause
+        .split_once('@')
+        .with_context(|| format!("fault clause '{clause}' missing '@'"))?;
+    // The stall duration rides after a ':' on the trigger half.
+    let (rest, stall_ms) = match rest.split_once(':') {
+        Some((head, ms)) => {
+            let ms = ms
+                .strip_suffix("ms")
+                .with_context(|| format!("stall duration '{ms}' missing 'ms'"))?
+                .parse::<u64>()
+                .with_context(|| format!("bad stall duration in '{clause}'"))?;
+            (head, Some(ms))
+        }
+        None => (rest, None),
+    };
+    let (entry, trigger) = if let Some((entry, n)) = rest.split_once('#') {
+        let n: u64 = n
+            .parse()
+            .with_context(|| format!("bad call count in '{clause}'"))?;
+        anyhow::ensure!(n >= 1, "call counts are 1-based in '{clause}'");
+        (entry, Trigger::OnCall(n))
+    } else if let Some((entry, p)) = rest.split_once('%') {
+        let p: f32 = p
+            .parse()
+            .with_context(|| format!("bad rate in '{clause}'"))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&p),
+            "rate must be in 0..=1 in '{clause}'"
+        );
+        (entry, Trigger::Rate(p))
+    } else {
+        bail!("fault clause '{clause}' needs '#N' or '%P'");
+    };
+    anyhow::ensure!(!entry.is_empty(), "empty entry in '{clause}'");
+    let kind = match (kind_name, stall_ms) {
+        ("panic", None) => FaultKind::Panic,
+        ("nan", None) => FaultKind::NonFinite,
+        ("stall", Some(ms)) => FaultKind::Stall(Duration::from_millis(ms)),
+        ("stall", None) => bail!("stall clause '{clause}' needs ':MSms'"),
+        _ => bail!(
+            "unknown fault kind '{kind_name}' (expected panic|nan|stall)"
+        ),
+    };
+    Ok(FaultRule { entry: entry.to_string(), trigger, kind })
+}
+
+/// The decorator: delegates everything to the inner backend, injecting
+/// the plan's faults on matching `execute` calls.
+pub struct FaultInjector {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    /// Per-entry call counts (exact-count triggers index into these).
+    calls: Mutex<HashMap<String, u64>>,
+    rng: Mutex<Rng>,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> Self {
+        let rng = Mutex::new(Rng::new(plan.seed));
+        Self {
+            inner,
+            plan,
+            calls: Mutex::new(HashMap::new()),
+            rng,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Total faults injected so far (all kinds).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Decide whether this call faults.  All locks are released before
+    /// returning so a `Panic` decision never poisons injector state.
+    fn decide(&self, entry: &str) -> Option<(FaultKind, u64)> {
+        let count = {
+            let mut calls = self
+                .calls
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let c = calls.entry(entry.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        for rule in &self.plan.rules {
+            if !rule.matches(entry) {
+                continue;
+            }
+            let fires = match rule.trigger {
+                Trigger::OnCall(n) => count == n,
+                Trigger::Rate(p) => {
+                    let draw = self
+                        .rng
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .uniform();
+                    draw < p
+                }
+            };
+            if fires {
+                return Some((rule.kind, count));
+            }
+        }
+        None
+    }
+}
+
+/// Overwrite row 0 of the tensor with NaN (one lane of a batched call).
+fn poison_row0(t: &mut HostTensor) {
+    let rw = t.row_len();
+    if let Ok(data) = t.f32s_mut() {
+        let rw = rw.min(data.len());
+        for v in &mut data[..rw] {
+            *v = f32::NAN;
+        }
+    }
+}
+
+impl Backend for FaultInjector {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn platform(&self) -> String {
+        format!("{}+faults", self.inner.platform())
+    }
+
+    fn execute(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        match self.decide(name) {
+            None => self.inner.execute(name, batch, inputs),
+            Some((FaultKind::Panic, count)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                panic!(
+                    "injected fault: panic on {name}@b{batch} call #{count}"
+                );
+            }
+            Some((FaultKind::Stall(d), _)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(d);
+                self.inner.execute(name, batch, inputs)
+            }
+            Some((FaultKind::NonFinite, _)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                let mut out = self.inner.execute(name, batch, inputs)?;
+                for t in &mut out {
+                    poison_row0(t);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn init_params(&self) -> Result<ParamSet> {
+        self.inner.init_params()
+    }
+
+    fn recycle(&self, tensors: Vec<HostTensor>) {
+        self.inner.recycle(tensors);
+    }
+
+    fn warmup(&self, entries: &[(&str, usize)]) -> Result<()> {
+        self.inner.warmup(entries)
+    }
+
+    fn stats(&self) -> Vec<((String, usize), super::backend::EntryStats)> {
+        self.inner.stats()
+    }
+
+    fn hot_stats(&self) -> Option<crate::native::WorkspaceStats> {
+        self.inner.hot_stats()
+    }
+
+    fn faults_injected(&self) -> u64 {
+        self.injected()
+    }
+}
+
+/// Wrap `backend` with the `DEQ_FAULTS` plan when one is set; the
+/// identity (no wrapper, no cost) otherwise.
+pub fn wrap_from_env(backend: Arc<dyn Backend>) -> Result<Arc<dyn Backend>> {
+    Ok(match FaultPlan::from_env()? {
+        Some(plan) => {
+            eprintln!(
+                "[faults] DEQ_FAULTS active: {} rule(s), seed {}",
+                plan.rules.len(),
+                plan.seed
+            );
+            Arc::new(FaultInjector::new(backend, plan))
+        }
+        None => backend,
+    })
+}
+
+/// Build a native engine from `cfg`, honoring its `faults` plan knob:
+/// the configured plan wraps the engine, `None` returns it bare.
+pub fn native_with_faults(cfg: NativeConfig) -> Result<Arc<dyn Backend>> {
+    let plan = match &cfg.faults {
+        Some(text) => Some(FaultPlan::parse(text)?),
+        None => None,
+    };
+    let engine: Arc<dyn Backend> = Arc::new(NativeEngine::new(cfg));
+    Ok(match plan {
+        Some(plan) => Arc::new(FaultInjector::new(engine, plan)),
+        None => engine,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_all_clause_forms() {
+        let p = FaultPlan::parse(
+            "seed=7;panic@cell_step#3;nan@*#1;stall@encode%0.25:15ms",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(
+            p.rules[0],
+            FaultRule {
+                entry: "cell_step".into(),
+                trigger: Trigger::OnCall(3),
+                kind: FaultKind::Panic,
+            }
+        );
+        assert_eq!(
+            p.rules[1],
+            FaultRule {
+                entry: "*".into(),
+                trigger: Trigger::OnCall(1),
+                kind: FaultKind::NonFinite,
+            }
+        );
+        assert_eq!(
+            p.rules[2],
+            FaultRule {
+                entry: "encode".into(),
+                trigger: Trigger::Rate(0.25),
+                kind: FaultKind::Stall(Duration::from_millis(15)),
+            }
+        );
+        // Empty plan is valid (no rules).
+        assert_eq!(FaultPlan::parse("").unwrap().rules.len(), 0);
+    }
+
+    #[test]
+    fn plan_rejects_malformed_clauses() {
+        for bad in [
+            "panic@cell_step",      // no trigger
+            "panic@cell_step#0",    // counts are 1-based
+            "warp@cell_step#1",     // unknown kind
+            "stall@cell_step#1",    // stall without duration
+            "panic@cell_step#1:5ms", // duration on a non-stall
+            "nan@cell_step%1.5",    // rate out of range
+            "seed=x",               // bad seed
+            "panic@#1",             // empty entry
+        ] {
+            assert!(
+                FaultPlan::parse(bad).is_err(),
+                "'{bad}' should not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_count_trigger_fires_once_and_counts() {
+        let plan = FaultPlan::parse("nan@cell_step#2").unwrap();
+        let inner: Arc<dyn Backend> = Arc::new(NativeEngine::tiny());
+        let inj = FaultInjector::new(inner.clone(), plan);
+        let meta = inj.manifest().model.clone();
+        let p = inj.init_params().unwrap();
+        let mut inputs = p.tensors.clone();
+        inputs.push(HostTensor::zeros(meta.latent_shape(1)));
+        inputs.push(HostTensor::zeros(meta.latent_shape(1)));
+        // Call 1: clean.  Call 2: poisoned.  Call 3: clean again.
+        let clean = inj.execute("cell_step", 1, &inputs).unwrap();
+        assert!(clean[0].f32s().unwrap().iter().all(|v| v.is_finite()));
+        let bad = inj.execute("cell_step", 1, &inputs).unwrap();
+        assert!(bad[0].f32s().unwrap()[0].is_nan(), "row 0 not poisoned");
+        // Per-sample norm outputs get their lane-0 slot poisoned too.
+        assert!(bad[1].f32s().unwrap()[0].is_nan());
+        let clean2 = inj.execute("cell_step", 1, &inputs).unwrap();
+        assert!(clean2[0].f32s().unwrap().iter().all(|v| v.is_finite()));
+        assert_eq!(inj.injected(), 1);
+        assert_eq!(inj.faults_injected(), 1);
+        assert!(inj.platform().ends_with("+faults"));
+    }
+
+    #[test]
+    fn rate_trigger_is_deterministic_for_a_seed() {
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            let plan =
+                FaultPlan::parse(&format!("seed={seed};stall@x%0.5:0ms"))
+                    .unwrap();
+            let inner: Arc<dyn Backend> = Arc::new(NativeEngine::tiny());
+            let inj = FaultInjector::new(inner, plan);
+            (0..32)
+                .map(|_| {
+                    let before = inj.injected();
+                    // decide() is exercised through execute on a bogus
+                    // entry; the inner engine rejects it, but the
+                    // injection decision (a stall of 0ms) happens first.
+                    let _ = inj.execute("x", 1, &[]);
+                    inj.injected() > before
+                })
+                .collect()
+        };
+        let a = fire_pattern(11);
+        let b = fire_pattern(11);
+        let c = fire_pattern(12);
+        assert_eq!(a, b, "same seed must fire identically");
+        assert_ne!(a, c, "different seeds should differ (32 draws)");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn env_plan_absent_means_no_wrapper() {
+        // Hermetic: read via an explicit empty-var simulation — from_env
+        // on the (unset in tests) var returns None, and wrap_from_env
+        // then returns the exact same Arc.
+        if std::env::var(FAULTS_ENV).is_ok() {
+            return; // the chaos CI job sets it; skip the identity check
+        }
+        let b: Arc<dyn Backend> = Arc::new(NativeEngine::tiny());
+        let before = Arc::as_ptr(&b) as *const ();
+        let wrapped = wrap_from_env(b).unwrap();
+        assert_eq!(before, Arc::as_ptr(&wrapped) as *const ());
+    }
+}

@@ -16,11 +16,13 @@
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod faults;
 pub mod manifest;
 pub mod native_engine;
 pub mod tensor;
 
 pub use backend::{backend_from_dir, select_backend, Backend, EntryStats};
+pub use faults::{FaultInjector, FaultKind, FaultPlan, FaultRule};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{EntrySpec, Manifest, ModelMeta, SolverMeta, TensorSpec, TrainMeta};

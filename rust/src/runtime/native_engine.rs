@@ -86,6 +86,11 @@ pub struct NativeConfig {
     /// `DEQ_NATIVE_PRECISION` once at engine construction
     /// ([`PackPrecision::from_env`]).
     pub precision: Option<PackPrecision>,
+    /// Optional fault-injection plan text (see [`crate::runtime::faults`]
+    /// for the format).  `None` — the default — builds no injector at
+    /// all; construct through [`crate::runtime::faults::native_with_faults`]
+    /// for the knob to take effect (the engine itself never injects).
+    pub faults: Option<String>,
 }
 
 impl Default for NativeConfig {
@@ -117,6 +122,7 @@ impl Default for NativeConfig {
             threads: 0,
             simd: None,
             precision: None,
+            faults: None,
         }
     }
 }

@@ -7,17 +7,13 @@
 //! sample's convergence and respond all at once.
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::model::ParamSet;
-use crate::runtime::Backend;
+use crate::server::supervise::{panic_text, ReplicaCtx, RunOutcome};
 use crate::server::{
-    drain_with_error, run_batch, Request, RouterConfig, ServerMetrics,
+    drain_with_error, lock_unpoisoned, run_batch, Request, ServeFailure,
 };
 use crate::solver::SolveSpec;
-
-pub(crate) type QueueHandle = Arc<super::Queue>;
 
 /// Pick the compiled bucket for `n` queued requests: the smallest bucket
 /// ≥ n.
@@ -60,60 +56,97 @@ pub fn should_fire(
 /// The batcher thread body for one replica.  Multi-replica bursts shard
 /// naturally: each replica drains at most one largest-bucket batch per
 /// fire, leaving the remainder for its siblings' condvar wakeups.
-pub(crate) fn run(
-    engine: Arc<dyn Backend>,
-    params: Arc<ParamSet>,
-    queue: QueueHandle,
-    metrics: Arc<ServerMetrics>,
-    cfg: RouterConfig,
-    buckets: Vec<usize>,
-    replica: usize,
-) {
-    let max_bucket = *buckets.last().unwrap();
+///
+/// Each per-spec sub-batch solves under its own `catch_unwind`: a panic
+/// (injected fault, backend bug) loses neither the un-answered riders of
+/// the panicking sub-batch nor the later sub-batches — all travel back
+/// to the supervisor for redrive.
+pub(crate) fn run(ctx: &ReplicaCtx, replica: usize) -> RunOutcome {
+    let max_bucket = *ctx.buckets.last().expect("router checked buckets non-empty");
     loop {
         // Wait for work (or shutdown), with the timeout needed to honor
         // max_wait on partially filled batches.
         let batch: Vec<Request> = {
-            let mut items = queue.items.lock().unwrap();
+            let mut items = lock_unpoisoned(&ctx.queue.items);
             loop {
-                if queue.shutdown.load(Ordering::SeqCst) {
+                if ctx.queue.shutdown.load(Ordering::SeqCst) {
                     drain_with_error(&mut items, "server shutting down");
-                    return;
+                    return RunOutcome::Clean;
                 }
                 let oldest = items.first().map(|r| r.enqueued.elapsed());
-                if should_fire(items.len(), oldest, max_bucket, cfg.max_wait) {
+                if should_fire(items.len(), oldest, max_bucket, ctx.cfg.max_wait)
+                {
                     let take = items.len().min(max_bucket);
                     break items.drain(..take).collect();
                 }
                 // Sleep until notified or until the oldest request ages out.
                 let wait = match items.first() {
-                    Some(r) => cfg
+                    Some(r) => ctx
+                        .cfg
                         .max_wait
                         .saturating_sub(r.enqueued.elapsed())
                         .max(Duration::from_micros(100)),
                     None => Duration::from_millis(50),
                 };
-                let (guard, _timeout) =
-                    queue.signal.wait_timeout(items, wait).unwrap();
+                let (guard, _timeout) = ctx
+                    .queue
+                    .signal
+                    .wait_timeout(items, wait)
+                    .unwrap_or_else(|e| e.into_inner());
                 items = guard;
             }
         };
+
+        // Shed requests whose deadline expired while they queued before
+        // paying for their solve.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.expired(now) {
+                ctx.metrics
+                    .deadline_exceeded
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(ServeFailure::deadline(0, 0)));
+            } else {
+                live.push(req);
+            }
+        }
 
         // A lockstep solve runs one spec for every rider, so requests
         // with distinct effective specs (per-request overrides) are
         // solved as separate sub-batches.  The common case — no
         // overrides — stays a single group.
-        for (spec, group) in split_by_spec(batch) {
-            let bucket = pick_bucket(&buckets, group.len());
-            run_batch(
-                engine.as_ref(),
-                &params,
-                &spec,
-                group,
-                bucket,
-                &metrics,
-                replica,
-            );
+        let mut groups = split_by_spec(live);
+        for gi in 0..groups.len() {
+            let bucket = pick_bucket(&ctx.buckets, groups[gi].1.len());
+            let panicked = {
+                let (spec, group) = &mut groups[gi];
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_batch(
+                        ctx.engine.as_ref(),
+                        &ctx.params,
+                        spec,
+                        group,
+                        bucket,
+                        &ctx.metrics,
+                        replica,
+                    )
+                }))
+                .err()
+            };
+            if let Some(payload) = panicked {
+                // Un-answered riders of the panicking sub-batch (answered
+                // ones were drained out before the panic) plus every
+                // later sub-batch go back for redrive.
+                let mut inflight: Vec<Request> = Vec::new();
+                for (_, group) in groups.iter_mut().skip(gi) {
+                    inflight.append(group);
+                }
+                return RunOutcome::Crashed {
+                    inflight,
+                    panic_msg: panic_text(payload.as_ref()),
+                };
+            }
         }
     }
 }
@@ -173,6 +206,8 @@ mod tests {
                 image: Vec::new(),
                 spec: spec.clone(),
                 enqueued: Instant::now(),
+                deadline: None,
+                redrives_left: 0,
                 respond: tx,
                 progress: None,
             }

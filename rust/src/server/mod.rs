@@ -65,6 +65,7 @@ pub mod batcher;
 pub mod protocol;
 pub(crate) mod replica;
 pub mod scheduler;
+pub(crate) mod supervise;
 pub mod tcp;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -99,14 +100,126 @@ pub struct Request {
     pub image: Vec<f32>,
     pub spec: SolveSpec,
     pub enqueued: Instant,
+    /// Absolute wallclock deadline (per-request `deadline_ms`, or the
+    /// router's `default_deadline`).  Checked at admission — an expired
+    /// request is shed before costing an encode — and at iteration
+    /// boundaries, where the lane is retired with `deadline_exceeded`.
+    pub deadline: Option<Instant>,
+    /// Redrives remaining: how many more times this request may be
+    /// pushed back onto the queue after its replica dies mid-flight.
+    /// At 0 a crash becomes a terminal retryable-internal reply.
+    pub redrives_left: u32,
     pub respond: Sender<Reply>,
     /// Streaming progress subscription, if any (see [`ProgressHook`]).
     pub progress: Option<ProgressHook>,
 }
 
+impl Request {
+    /// Whether this request's deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
 /// What a waiter receives: the answer, or a structured failure (backend
-/// error, shutdown drain) instead of a silently dropped channel.
-pub type Reply = Result<Response, String>;
+/// error, deadline, crashed replica, numerical fault, shutdown drain)
+/// instead of a silently dropped channel.
+pub type Reply = Result<Response, ServeFailure>;
+
+/// Failure taxonomy of one request — what the wire layer turns into the
+/// distinct `{"error":…}` reply shapes (see [`protocol::failure_frame`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Plain request/backend error (bad image, encode failure, solve
+    /// failure, shutdown drain).  Displays as the bare detail text —
+    /// the legacy reply format, byte-compatible with pre-taxonomy
+    /// clients and goldens.
+    Error,
+    /// The request's deadline passed (in queue or mid-solve).
+    DeadlineExceeded,
+    /// The serving replica died and the redrive budget is exhausted;
+    /// the request itself may be fine — safe to retry.
+    Internal,
+    /// The lane hit a non-finite residual and was quarantined.
+    Numerical,
+}
+
+/// A structured failure reply: kind + human detail + the partial
+/// per-request solve stats at the moment of failure (0/0 when the
+/// request never reached a lane).
+#[derive(Debug, Clone)]
+pub struct ServeFailure {
+    pub kind: FailureKind,
+    pub detail: String,
+    /// Iterations this request's lane ran before failing.
+    pub iters: usize,
+    /// Cell evaluations charged before failing.
+    pub fevals: usize,
+}
+
+impl ServeFailure {
+    /// Plain error (legacy shape — Display is the bare detail).
+    pub fn error(detail: impl Into<String>) -> Self {
+        Self { kind: FailureKind::Error, detail: detail.into(), iters: 0, fevals: 0 }
+    }
+
+    /// Deadline exceeded, with the partial stats accrued so far.
+    pub fn deadline(iters: usize, fevals: usize) -> Self {
+        Self {
+            kind: FailureKind::DeadlineExceeded,
+            detail: "deadline exceeded".to_string(),
+            iters,
+            fevals,
+        }
+    }
+
+    /// Replica crash with the redrive budget exhausted (retryable).
+    pub fn internal(detail: impl Into<String>) -> Self {
+        Self { kind: FailureKind::Internal, detail: detail.into(), iters: 0, fevals: 0 }
+    }
+
+    /// Non-finite quarantine, with the partial stats accrued so far.
+    pub fn numerical(detail: impl Into<String>, iters: usize, fevals: usize) -> Self {
+        Self { kind: FailureKind::Numerical, detail: detail.into(), iters, fevals }
+    }
+
+    /// Whether a client may safely resubmit the identical request.
+    pub fn retryable(&self) -> bool {
+        self.kind == FailureKind::Internal
+    }
+}
+
+impl std::fmt::Display for ServeFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            // Bare detail: the pre-taxonomy reply text, pinned by the
+            // TCP golden tests.
+            FailureKind::Error => f.write_str(&self.detail),
+            FailureKind::DeadlineExceeded => write!(
+                f,
+                "deadline_exceeded after {} iterations",
+                self.iters
+            ),
+            FailureKind::Internal => {
+                write!(f, "internal: {} (retryable)", self.detail)
+            }
+            FailureKind::Numerical => {
+                write!(f, "numerical fault: {}", self.detail)
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeFailure {}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Every server-side mutex (queue, metrics reservoirs, gauges) guards
+/// plain data that stays structurally valid across a panic at any
+/// await-free point, so poisoning must not cascade the panic into
+/// waiters and siblings — the supervisor handles the crashed thread.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// The server's answer.
 #[derive(Debug, Clone)]
@@ -185,6 +298,14 @@ pub struct RouterConfig {
     /// the shared queue (work-stealing at iteration boundaries).  The
     /// default 1 preserves the single-worker router bit-for-bit.
     pub replicas: usize,
+    /// Deadline applied to requests that don't carry their own
+    /// `deadline_ms`.  `None` (the default) means requests without an
+    /// explicit deadline never expire — the pre-deadline behaviour.
+    pub default_deadline: Option<Duration>,
+    /// How many times an in-flight request may be pushed back onto the
+    /// queue after its replica crashes before the supervisor gives up
+    /// and replies `internal` (retryable).  Default 1.
+    pub redrive_budget: u32,
 }
 
 /// Aggregated serving metrics.
@@ -213,6 +334,17 @@ pub struct ServerMetrics {
     /// Requests shed with an explicit `overloaded` reply (shared queue
     /// at capacity, or a connection over its in-flight cap).
     pub shed: AtomicU64,
+    /// Replica workers respawned by the supervisor after a crash.
+    pub replica_restarts: AtomicU64,
+    /// In-flight requests re-queued (redriven) after their replica
+    /// crashed mid-solve.
+    pub redrives: AtomicU64,
+    /// Requests retired with a `deadline_exceeded` reply — expired in
+    /// queue (shed before encode) or at an iteration boundary.
+    pub deadline_exceeded: AtomicU64,
+    /// Lanes quarantined after a non-finite residual (the request got a
+    /// `numerical_fault` reply; its bucket-mates were unaffected).
+    pub quarantined: AtomicU64,
     /// Queue depth observed at each successful submission (after the
     /// push), so `queue_depth_p50`/`max` describe the backlog admitted
     /// requests actually waited behind.
@@ -251,9 +383,7 @@ impl ServerMetrics {
     pub fn replica_iteration(&self, replica: usize, occupied: usize, lanes: usize) {
         if let Some(g) = self.replicas.get(replica) {
             g.iterations.fetch_add(1, Ordering::Relaxed);
-            g.occupancy
-                .lock()
-                .unwrap()
+            lock_unpoisoned(&g.occupancy)
                 .push(occupied as f64 / lanes.max(1) as f64);
         }
     }
@@ -267,11 +397,8 @@ impl ServerMetrics {
 
     pub fn record(&self, latency: Duration, batch: usize, bucket: usize) {
         self.served.fetch_add(1, Ordering::Relaxed);
-        self.latency.lock().unwrap().push_duration(latency);
-        self.batch_fill
-            .lock()
-            .unwrap()
-            .push(batch as f64 / bucket as f64);
+        lock_unpoisoned(&self.latency).push_duration(latency);
+        lock_unpoisoned(&self.batch_fill).push(batch as f64 / bucket as f64);
     }
 
     /// One solve-loop iteration over `occupied` of `lanes` total lanes;
@@ -286,9 +413,7 @@ impl ServerMetrics {
         lockstep_bucket: usize,
     ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.lane_occupancy
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.lane_occupancy)
             .push(occupied as f64 / lanes.max(1) as f64);
         self.lane_fevals.fetch_add(occupied as u64, Ordering::Relaxed);
         self.lockstep_fevals
@@ -297,7 +422,7 @@ impl ServerMetrics {
 
     /// One lane retired after `solve` wallclock in its lane.
     pub fn record_retire(&self, solve: Duration) {
-        self.time_to_retire.lock().unwrap().push_duration(solve);
+        lock_unpoisoned(&self.time_to_retire).push_duration(solve);
     }
 
     /// Cell evaluations saved vs a lockstep batch-granular solve of the
@@ -310,10 +435,10 @@ impl ServerMetrics {
     }
 
     pub fn summary(&self) -> String {
-        let lat = self.latency.lock().unwrap();
-        let fill = self.batch_fill.lock().unwrap();
-        let occ = self.lane_occupancy.lock().unwrap();
-        let retire = self.time_to_retire.lock().unwrap();
+        let lat = lock_unpoisoned(&self.latency);
+        let fill = lock_unpoisoned(&self.batch_fill);
+        let occ = lock_unpoisoned(&self.lane_occupancy);
+        let retire = lock_unpoisoned(&self.time_to_retire);
         let mut s = format!(
             "served={} batches={} p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_fill={:.2}",
             self.served.load(Ordering::Relaxed),
@@ -347,15 +472,28 @@ impl ServerMetrics {
         }
         // `summary()` takes the same locks — build it before holding any.
         let summary = self.summary();
-        let lat = self.latency.lock().unwrap();
-        let fill = self.batch_fill.lock().unwrap();
-        let occ = self.lane_occupancy.lock().unwrap();
-        let retire = self.time_to_retire.lock().unwrap();
-        let depth = self.queue_depth.lock().unwrap();
+        let lat = lock_unpoisoned(&self.latency);
+        let fill = lock_unpoisoned(&self.batch_fill);
+        let occ = lock_unpoisoned(&self.lane_occupancy);
+        let retire = lock_unpoisoned(&self.time_to_retire);
+        let depth = lock_unpoisoned(&self.queue_depth);
         let mut pairs = vec![
             ("served", json::num(self.served.load(Ordering::Relaxed) as f64)),
             ("batches", json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("shed", json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            (
+                "replica_restarts",
+                json::num(self.replica_restarts.load(Ordering::Relaxed) as f64),
+            ),
+            ("redrives", json::num(self.redrives.load(Ordering::Relaxed) as f64)),
+            (
+                "deadline_exceeded",
+                json::num(self.deadline_exceeded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "quarantined",
+                json::num(self.quarantined.load(Ordering::Relaxed) as f64),
+            ),
             ("latency_p50_ms", pct_ms(&lat, 50.0)),
             ("latency_p95_ms", pct_ms(&lat, 95.0)),
             ("latency_p99_ms", pct_ms(&lat, 99.0)),
@@ -379,7 +517,7 @@ impl ServerMetrics {
             .iter()
             .enumerate()
             .map(|(i, g)| {
-                let g_occ = g.occupancy.lock().unwrap();
+                let g_occ = lock_unpoisoned(&g.occupancy);
                 json::obj(vec![
                     ("replica", json::num(i as f64)),
                     ("served", json::num(g.served.load(Ordering::Relaxed) as f64)),
@@ -407,9 +545,14 @@ pub(crate) struct Queue {
 /// closed channel.
 pub(crate) fn drain_with_error(items: &mut Vec<Request>, why: &str) {
     for req in items.drain(..) {
-        let _ = req.respond.send(Err(why.to_string()));
+        let _ = req.respond.send(Err(ServeFailure::error(why)));
     }
 }
+
+/// Retry hint before any retire/latency sample exists: a cold router
+/// always answers `retry_after_ms == COLD_RETRY_PRIOR_MS` on its first
+/// shed (pinned by a golden test — clients key backoff off it).
+pub const COLD_RETRY_PRIOR_MS: u64 = 25;
 
 /// Why [`Router::try_submit`] refused a request.
 #[derive(Debug)]
@@ -445,7 +588,10 @@ pub struct Router {
     queue: Arc<Queue>,
     pub metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// The supervisor thread owns the replica worker handles: it joins
+    /// crashed replicas, redrives their in-flight requests, and
+    /// respawns them (see `supervise.rs`).  Joined on shutdown/drop.
+    supervisor: Option<std::thread::JoinHandle<()>>,
     cfg: RouterConfig,
     /// Flat image length the model expects; checked at submission so one
     /// malformed request can never fail a whole batch downstream.
@@ -489,26 +635,32 @@ impl Router {
         let backend = engine.clone();
         let slots = Arc::new(replica::ReplicaSlots::new(cfg.replicas, max_bucket));
 
-        let mut workers = Vec::with_capacity(cfg.replicas);
+        let ctx = Arc::new(supervise::ReplicaCtx {
+            engine,
+            params,
+            queue: queue.clone(),
+            metrics: metrics.clone(),
+            cfg: cfg.clone(),
+            buckets,
+            slots,
+        });
+        // The supervisor keeps a sender clone alive, so `recv` on this
+        // channel can never see Disconnected while it runs.
+        let (exit_tx, exit_rx) = mpsc::channel();
+        let mut handles = Vec::with_capacity(cfg.replicas);
         for r in 0..cfg.replicas {
-            workers.push(replica::spawn(
-                r,
-                engine.clone(),
-                params.clone(),
-                queue.clone(),
-                metrics.clone(),
-                cfg.clone(),
-                buckets.clone(),
-                slots.clone(),
-            )?);
+            handles.push(Some(replica::spawn(r, ctx.clone(), exit_tx.clone())?));
         }
+        let supervisor = std::thread::Builder::new()
+            .name("deq-supervisor".into())
+            .spawn(move || supervise::supervise(ctx, handles, exit_rx, exit_tx))?;
 
         let total_lanes = max_bucket * cfg.replicas;
         Ok(Self {
             queue,
             metrics,
             next_id: AtomicU64::new(1),
-            workers,
+            supervisor: Some(supervisor),
             cfg,
             image_dim,
             total_lanes,
@@ -521,6 +673,14 @@ impl Router {
     /// `stats` command so cache behaviour is observable in production.
     pub fn backend_hot_stats(&self) -> Option<crate::native::WorkspaceStats> {
         self.backend.hot_stats()
+    }
+
+    /// Faults injected so far by the backend's fault-injection wrapper
+    /// (0 when `DEQ_FAULTS` is unset and the backend is bare) — surfaced
+    /// by the TCP `stats` command so chaos runs can assert their plan
+    /// actually fired.
+    pub fn backend_faults_injected(&self) -> u64 {
+        self.backend.faults_injected()
     }
 
     /// Submit one image under the router's default solve spec; returns a
@@ -543,20 +703,23 @@ impl Router {
         image: Vec<f32>,
         overrides: &SolveOverrides,
     ) -> Result<Receiver<Reply>> {
-        self.try_submit(image, overrides, None)
+        self.try_submit(image, overrides, None, None)
             .map_err(|r| anyhow::anyhow!(r.to_string()))
     }
 
     /// Structured admission: validate, clamp, and enqueue — or say
     /// precisely why not.  The wire front-end uses this to turn
     /// [`SubmitRejection::Overloaded`] into an explicit
-    /// `{"error":"overloaded","retry_after_ms":…}` shed reply, and to
-    /// attach a per-iteration [`ProgressHook`] for streaming requests.
+    /// `{"error":"overloaded","retry_after_ms":…}` shed reply, to
+    /// attach a per-iteration [`ProgressHook`] for streaming requests,
+    /// and to carry the client's `deadline_ms` (falling back to the
+    /// router's `default_deadline` when `None`).
     pub fn try_submit(
         &self,
         image: Vec<f32>,
         overrides: &SolveOverrides,
         progress: Option<ProgressHook>,
+        deadline: Option<Duration>,
     ) -> Result<Receiver<Reply>, SubmitRejection> {
         if image.len() != self.image_dim {
             return Err(SubmitRejection::Invalid(format!(
@@ -569,8 +732,15 @@ impl Router {
             .apply(&self.cfg.solver, &self.cfg.clamps)
             .map_err(|e| SubmitRejection::Invalid(format!("{e:#}")))?;
         let (tx, rx) = mpsc::channel();
+        // One clock read serves both the queue timestamp and the
+        // absolute deadline, so `deadline_ms=N` means N ms from the
+        // moment of admission, exactly.
+        let now = Instant::now();
+        let deadline = deadline
+            .or(self.cfg.default_deadline)
+            .map(|d| now + d);
         {
-            let mut q = self.queue.items.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queue.items);
             if self.queue.shutdown.load(Ordering::SeqCst) {
                 return Err(SubmitRejection::ShuttingDown);
             }
@@ -583,11 +753,13 @@ impl Router {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 image,
                 spec,
-                enqueued: Instant::now(),
+                enqueued: now,
+                deadline,
+                redrives_left: self.cfg.redrive_budget,
                 respond: tx,
                 progress,
             });
-            self.metrics.queue_depth.lock().unwrap().push(q.len() as f64);
+            lock_unpoisoned(&self.metrics.queue_depth).push(q.len() as f64);
         }
         self.queue.signal.notify_one();
         Ok(rx)
@@ -595,18 +767,21 @@ impl Router {
 
     /// Estimated milliseconds until queue capacity frees, for shed
     /// replies: the observed retire-time p50 (falling back to the
-    /// latency p50, then a 25 ms prior before any sample exists) times
-    /// the number of admission waves the current backlog represents.
+    /// latency p50, then the [`COLD_RETRY_PRIOR_MS`] prior before any
+    /// sample exists) times the number of admission waves the current
+    /// backlog represents.
     fn retry_estimate_ms(&self, queued: usize) -> u64 {
         let retire_p50 = {
-            let retire = self.metrics.time_to_retire.lock().unwrap();
+            let retire = lock_unpoisoned(&self.metrics.time_to_retire);
             (retire.count() > 0).then(|| retire.percentile(50.0))
         };
         let latency_p50 = {
-            let lat = self.metrics.latency.lock().unwrap();
+            let lat = lock_unpoisoned(&self.metrics.latency);
             (lat.count() > 0).then(|| lat.percentile(50.0))
         };
-        let p50 = retire_p50.or(latency_p50).unwrap_or(0.025);
+        let p50 = retire_p50
+            .or(latency_p50)
+            .unwrap_or(COLD_RETRY_PRIOR_MS as f64 / 1e3);
         let waves = (queued as f64 / self.total_lanes.max(1) as f64).ceil().max(1.0);
         ((p50 * waves * 1e3).ceil() as u64).clamp(1, 60_000)
     }
@@ -631,22 +806,23 @@ impl Router {
         let rx = self.submit_with(image, overrides)?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
+            Ok(Err(fail)) => Err(anyhow::anyhow!(fail)),
             Err(_) => Err(anyhow::anyhow!("router dropped request")),
         }
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue.items.lock().unwrap().len()
+        lock_unpoisoned(&self.queue.items).len()
     }
 
     /// Stop every replica worker.  Queued (and, in iteration-level
     /// mode, in-flight) requests receive an explicit "server shutting
     /// down" error reply rather than a dropped channel; the call
-    /// returns only after all replicas have drained and exited.
+    /// returns only after the supervisor has joined all replicas and
+    /// exited.
     pub fn shutdown(mut self) {
         signal_shutdown(&self.queue);
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
     }
@@ -658,7 +834,7 @@ impl Router {
 /// worker's check and its wait, losing the wakeup for a full timeout.
 fn signal_shutdown(queue: &Queue) {
     {
-        let _guard = queue.items.lock().unwrap();
+        let _guard = lock_unpoisoned(&queue.items);
         queue.shutdown.store(true, Ordering::SeqCst);
     }
     queue.signal.notify_all();
@@ -667,7 +843,7 @@ fn signal_shutdown(queue: &Queue) {
 impl Drop for Router {
     fn drop(&mut self) {
         signal_shutdown(&self.queue);
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
     }
@@ -683,7 +859,7 @@ pub(crate) fn run_batch(
     engine: &dyn Backend,
     params: &ParamSet,
     solver: &SolveSpec,
-    mut batch: Vec<Request>,
+    batch: &mut Vec<Request>,
     bucket: usize,
     metrics: &ServerMetrics,
     replica: usize,
@@ -691,15 +867,30 @@ pub(crate) fn run_batch(
     let dim = engine.manifest().model.image_dim();
     let count = batch.len();
     let mut images = Vec::with_capacity(count * dim);
-    for r in &batch {
+    for r in batch.iter() {
         images.extend_from_slice(&r.image);
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.replica_iteration(replica, count, bucket);
     match infer::infer(engine, params, &images, count, solver) {
         Ok(result) => {
+            // `batch` is taken by reference and drained only after the
+            // solve succeeds: if the backend panics mid-infer, the
+            // supervisor recovers every un-answered rider for redrive.
             for (i, req) in batch.drain(..).enumerate() {
                 let latency = req.enqueued.elapsed();
+                if result.sample_faulted.get(i).copied().unwrap_or(false) {
+                    // This rider's lane went non-finite; its logits are
+                    // garbage.  Quarantine it alone — bucket-mates above
+                    // already got (or below will get) their real answers.
+                    metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeFailure::numerical(
+                        "non-finite residual during solve",
+                        result.sample_iters.get(i).copied().unwrap_or(0),
+                        result.sample_fevals.get(i).copied().unwrap_or(0),
+                    )));
+                    continue;
+                }
                 metrics.record(latency, count, bucket);
                 metrics.replica_served(replica);
                 let _ = req.respond.send(Ok(Response {
@@ -719,7 +910,7 @@ pub(crate) fn run_batch(
             let msg = format!("batch inference failed: {e:#}");
             eprintln!("[server] {msg}");
             for req in batch.drain(..) {
-                let _ = req.respond.send(Err(msg.clone()));
+                let _ = req.respond.send(Err(ServeFailure::error(msg.clone())));
             }
         }
     }

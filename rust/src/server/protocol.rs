@@ -45,7 +45,7 @@
 //! [`super::tcp::process_line`] preserves the old no-id error shapes
 //! exactly (pinned by golden tests).
 
-use crate::server::Response;
+use crate::server::{FailureKind, Response, ServeFailure};
 use crate::solver::spec::f32_json;
 use crate::solver::{GramMode, SolveOverrides, SolverKind};
 use crate::util::json::{self, Json};
@@ -64,6 +64,11 @@ pub struct InferFrame {
     pub overrides: SolveOverrides,
     /// Subscribe to per-iteration progress frames.
     pub stream: bool,
+    /// Per-request deadline in milliseconds from admission.  A request
+    /// that cannot finish in time is retired with
+    /// `{"error":"deadline_exceeded",…}` carrying its partial solve
+    /// stats.  `None` falls back to the router's `--deadline-ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 /// One parsed protocol line, dispatched by the connection handler.
@@ -113,7 +118,20 @@ pub fn parse_line(image_dim: usize, line: &str) -> Incoming {
             }
         },
     };
-    Incoming::Infer(InferFrame { id, image, overrides, stream })
+    let deadline_ms = match parsed.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(x) if x.fract() == 0.0 && x >= 1.0 => Some(x as u64),
+            _ => {
+                return Incoming::Bad {
+                    msg: "'deadline_ms' must be a positive integer"
+                        .to_string(),
+                    id,
+                }
+            }
+        },
+    };
+    Incoming::Infer(InferFrame { id, image, overrides, stream, deadline_ms })
 }
 
 /// Extract and validate the `image` array.  Every element must be a
@@ -230,6 +248,49 @@ fn with_id(mut pairs: Vec<(&str, Json)>, id: Option<&Json>) -> Json {
 /// `{"error": msg}` (+ `"id"` when the request carried one).
 pub fn error_frame(msg: &str, id: Option<&Json>) -> Json {
     with_id(vec![("error", json::s(msg))], id)
+}
+
+/// The reply for a structured [`ServeFailure`], one distinct shape per
+/// [`FailureKind`]:
+///
+/// * `Error` → `{"error": detail}` — byte-identical to the legacy
+///   [`error_frame`] shape (shutdown drains, encode failures, …);
+/// * `DeadlineExceeded` → `{"error":"deadline_exceeded"}` plus the
+///   partial `solver_iters`/`solver_fevals` at retirement;
+/// * `Internal` → `{"error":"internal","retryable":true,"detail":…}` —
+///   the serving replica died, the request may be resubmitted verbatim;
+/// * `Numerical` → `{"error":"numerical_fault","detail":…}` plus the
+///   partial stats — the lane was quarantined, resubmitting the same
+///   request will likely fault again.
+pub fn failure_frame(fail: &ServeFailure, id: Option<&Json>) -> Json {
+    match fail.kind {
+        FailureKind::Error => error_frame(&fail.detail, id),
+        FailureKind::DeadlineExceeded => with_id(
+            vec![
+                ("error", json::s("deadline_exceeded")),
+                ("solver_iters", json::num(fail.iters as f64)),
+                ("solver_fevals", json::num(fail.fevals as f64)),
+            ],
+            id,
+        ),
+        FailureKind::Internal => with_id(
+            vec![
+                ("error", json::s("internal")),
+                ("retryable", Json::Bool(true)),
+                ("detail", json::s(&fail.detail)),
+            ],
+            id,
+        ),
+        FailureKind::Numerical => with_id(
+            vec![
+                ("error", json::s("numerical_fault")),
+                ("detail", json::s(&fail.detail)),
+                ("solver_iters", json::num(fail.iters as f64)),
+                ("solver_fevals", json::num(fail.fevals as f64)),
+            ],
+            id,
+        ),
+    }
 }
 
 /// The load-shedding reply: the request was refused at the admission

@@ -15,13 +15,13 @@
 //! bit-for-bit identical to the single-worker router.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::model::ParamSet;
-use crate::runtime::Backend;
-use crate::server::{batcher, scheduler, Queue, RouterConfig, SchedMode, ServerMetrics};
+use crate::server::supervise::{Exit, ReplicaCtx};
+use crate::server::{batcher, scheduler, SchedMode};
 
 /// Published free-lane counts, one slot per replica.  Advisory only:
 /// counts are racy snapshots (Relaxed loads), which is fine — the split
@@ -68,33 +68,24 @@ impl ReplicaSlots {
 }
 
 /// Spawn one replica worker (scheduler or batcher per the configured
-/// mode), named `deq-scheduler-{r}` / `deq-batcher-{r}`.
-#[allow(clippy::too_many_arguments)]
+/// mode), named `deq-scheduler-{r}` / `deq-batcher-{r}`.  The worker's
+/// last act is reporting how its serve loop ended (clean exit, or a
+/// crash with the recovered in-flight requests) over `exits` — the
+/// supervisor joins the handle and reacts (see `supervise.rs`).
 pub(crate) fn spawn(
     replica: usize,
-    engine: Arc<dyn Backend>,
-    params: Arc<ParamSet>,
-    queue: Arc<Queue>,
-    metrics: Arc<ServerMetrics>,
-    cfg: RouterConfig,
-    buckets: Vec<usize>,
-    slots: Arc<ReplicaSlots>,
+    ctx: Arc<ReplicaCtx>,
+    exits: Sender<Exit>,
 ) -> Result<std::thread::JoinHandle<()>> {
-    let (name, body): (String, Box<dyn FnOnce() + Send>) = match cfg.mode {
-        SchedMode::IterationLevel => (
-            format!("deq-scheduler-{replica}"),
-            Box::new(move || {
-                scheduler::run(
-                    engine, params, queue, metrics, cfg, buckets, replica, slots,
-                )
-            }),
-        ),
-        SchedMode::BatchGranular => (
-            format!("deq-batcher-{replica}"),
-            Box::new(move || {
-                batcher::run(engine, params, queue, metrics, cfg, buckets, replica)
-            }),
-        ),
+    let name = match ctx.cfg.mode {
+        SchedMode::IterationLevel => format!("deq-scheduler-{replica}"),
+        SchedMode::BatchGranular => format!("deq-batcher-{replica}"),
     };
-    Ok(std::thread::Builder::new().name(name).spawn(body)?)
+    Ok(std::thread::Builder::new().name(name).spawn(move || {
+        let outcome = match ctx.cfg.mode {
+            SchedMode::IterationLevel => scheduler::run(&ctx, replica),
+            SchedMode::BatchGranular => batcher::run(&ctx, replica),
+        };
+        let _ = exits.send(Exit { replica, outcome });
+    })?)
 }

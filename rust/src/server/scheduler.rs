@@ -41,7 +41,6 @@
 //! vs a lockstep batch-granular solve of the same occupied samples.
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -49,10 +48,10 @@ use anyhow::Result;
 use crate::infer;
 use crate::model::ParamSet;
 use crate::runtime::{Backend, HostTensor, ModelMeta};
-use crate::server::batcher::{pick_bucket, QueueHandle};
-use crate::server::replica::ReplicaSlots;
+use crate::server::batcher::pick_bucket;
+use crate::server::supervise::{panic_text, ReplicaCtx, RunOutcome};
 use crate::server::{
-    drain_with_error, Queue, Request, Response, RouterConfig, ServerMetrics,
+    drain_with_error, lock_unpoisoned, Request, Response, ServeFailure,
 };
 use crate::solver::anderson::LaneHistory;
 use crate::solver::driver::damp_in_place;
@@ -75,40 +74,47 @@ struct Lane {
 /// The scheduler thread body for one replica.  On a backend failure the
 /// error text goes to every waiter — queued *and* in-flight — instead
 /// of a dropped channel (the contract [`crate::server::Reply`]
-/// documents).
-#[allow(clippy::too_many_arguments)] // one replica's full wiring
-pub(crate) fn run(
-    engine: Arc<dyn Backend>,
-    params: Arc<ParamSet>,
-    queue: QueueHandle,
-    metrics: Arc<ServerMetrics>,
-    cfg: RouterConfig,
-    buckets: Vec<usize>,
-    replica: usize,
-    slots: Arc<ReplicaSlots>,
-) {
-    let bucket = *buckets.last().expect("router checked buckets non-empty");
+/// documents).  A *panic* in the serve loop (injected fault, backend
+/// bug) is caught here: the lanes vector lives outside the unwind
+/// boundary, so the in-flight requests survive and travel back to the
+/// supervisor for redrive.
+pub(crate) fn run(ctx: &ReplicaCtx, replica: usize) -> RunOutcome {
+    let bucket = *ctx.buckets.last().expect("router checked buckets non-empty");
     let mut lanes: Vec<Option<Lane>> = (0..bucket).map(|_| None).collect();
-    if let Err(e) = serve_loop(
-        engine.as_ref(),
-        &params,
-        &queue,
-        &metrics,
-        &cfg,
-        &buckets,
-        &mut lanes,
-        replica,
-        &slots,
-    ) {
-        let msg = format!("scheduler failed: {e:#}");
-        eprintln!("[server] {msg}");
-        retire_all_with_error(&mut lanes, &msg);
-        // Raise the shutdown flag under the queue lock before draining:
-        // `submit` checks it under the same lock, so no request can slip
-        // in after the drain and hang on a reply that will never come.
-        let mut items = queue.items.lock().unwrap();
-        queue.shutdown.store(true, Ordering::SeqCst);
-        drain_with_error(&mut items, &msg);
+    // AssertUnwindSafe: on panic we only *extract requests* from `lanes`
+    // (each a channel sender + plain data, valid at any interruption
+    // point) and drop the solve-state tensors wholesale.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(ctx, &mut lanes, replica)
+    }));
+    match result {
+        Ok(Ok(())) => RunOutcome::Clean,
+        Ok(Err(e)) => {
+            // Fatal but orderly backend error: every waiter is told, the
+            // router stops admitting.  Nothing left to recover.
+            let msg = format!("scheduler failed: {e:#}");
+            eprintln!("[server] {msg}");
+            retire_all_with_error(&mut lanes, &msg);
+            // Raise the shutdown flag under the queue lock before
+            // draining: `submit` checks it under the same lock, so no
+            // request can slip in after the drain and hang on a reply
+            // that will never come.
+            {
+                let mut items = lock_unpoisoned(&ctx.queue.items);
+                ctx.queue.shutdown.store(true, Ordering::SeqCst);
+                drain_with_error(&mut items, &msg);
+            }
+            ctx.queue.signal.notify_all();
+            RunOutcome::Clean
+        }
+        Err(payload) => RunOutcome::Crashed {
+            inflight: lanes
+                .iter_mut()
+                .filter_map(|slot| slot.take())
+                .map(|lane| lane.req)
+                .collect(),
+            panic_msg: panic_text(payload.as_ref()),
+        },
     }
 }
 
@@ -142,10 +148,10 @@ fn admit_all(
         if req.image.len() == dim {
             good.push((lane_idx, req));
         } else {
-            let _ = req.respond.send(Err(format!(
+            let _ = req.respond.send(Err(ServeFailure::error(format!(
                 "image has {} values, model wants {dim}",
                 req.image.len()
-            )));
+            ))));
         }
     }
     if good.is_empty() {
@@ -161,7 +167,7 @@ fn admit_all(
             let msg = format!("admission encode failed: {e:#}");
             eprintln!("[server] {msg}");
             for (_, req) in good {
-                let _ = req.respond.send(Err(msg.clone()));
+                let _ = req.respond.send(Err(ServeFailure::error(msg.clone())));
             }
             return Ok(());
         }
@@ -194,23 +200,25 @@ fn admit_all(
 fn retire_all_with_error(lanes: &mut [Option<Lane>], why: &str) {
     for slot in lanes.iter_mut() {
         if let Some(lane) = slot.take() {
-            let _ = lane.req.respond.send(Err(why.to_string()));
+            let _ = lane.req.respond.send(Err(ServeFailure::error(why)));
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)] // lanes live in run() for error drain
+// `lanes` lives in run(), outside the unwind boundary, so a panic here
+// leaves the in-flight requests recoverable for redrive.
 fn serve_loop(
-    engine: &dyn Backend,
-    params: &ParamSet,
-    queue: &Queue,
-    metrics: &ServerMetrics,
-    cfg: &RouterConfig,
-    buckets: &[usize],
+    ctx: &ReplicaCtx,
     lanes: &mut Vec<Option<Lane>>,
     replica: usize,
-    slots: &ReplicaSlots,
 ) -> Result<()> {
+    let engine = ctx.engine.as_ref();
+    let params = ctx.params.as_ref();
+    let queue = ctx.queue.as_ref();
+    let metrics = ctx.metrics.as_ref();
+    let cfg = &ctx.cfg;
+    let buckets = &ctx.buckets;
+    let slots = ctx.slots.as_ref();
     let meta = engine.manifest().model.clone();
     let bucket = *buckets.last().expect("router checked buckets non-empty");
     let n = meta.latent_dim();
@@ -246,6 +254,11 @@ fn serve_loop(
     let mut fwd_mask = vec![false; bucket];
     // Scratch row for per-lane damped forward blends (β < 1 lanes).
     let mut blend_row = vec![0.0f32; n];
+    // Preallocated zero row: quarantined lanes' iterate rows are wiped
+    // so a non-finite value never rides into the next bucket-wide
+    // dispatch (all kernels are row-wise, but a wiped row is cheap
+    // insurance and keeps dumps readable).
+    let zero_row = vec![0.0f32; n];
 
     loop {
         // --- admission at the iteration boundary ---
@@ -259,7 +272,7 @@ fn serve_loop(
         // reflect this boundary.
         slots.set_free(replica, free.len());
         let admitted: Vec<(usize, Request)> = {
-            let mut items = queue.items.lock().unwrap();
+            let mut items = lock_unpoisoned(&queue.items);
             loop {
                 if queue.shutdown.load(Ordering::SeqCst) {
                     drain_with_error(&mut items, "server shutting down");
@@ -283,10 +296,27 @@ fn serve_loop(
                 let (guard, _timeout) = queue
                     .signal
                     .wait_timeout(items, Duration::from_millis(50))
-                    .unwrap();
+                    .unwrap_or_else(|e| e.into_inner());
                 items = guard;
             }
         };
+        // Shed requests whose deadline expired while they queued,
+        // *before* paying their encode.  (Empty on the steady-state
+        // fully-occupied path: collecting an empty iterator does not
+        // allocate.)
+        let now = Instant::now();
+        let admitted: Vec<(usize, Request)> = admitted
+            .into_iter()
+            .filter_map(|(lane_idx, req)| {
+                if req.expired(now) {
+                    metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeFailure::deadline(0, 0)));
+                    None
+                } else {
+                    Some((lane_idx, req))
+                }
+            })
+            .collect();
         slots.set_free(replica, free.len() - admitted.len());
         {
             let (head, tail) = cell_inputs.split_at_mut(x_slot);
@@ -318,26 +348,59 @@ fn serve_loop(
         metrics.replica_iteration(replica, occupied, bucket);
 
         retire_mask.fill(false);
+        // One clock read serves every lane's deadline check this
+        // iteration (the check is at iteration granularity anyway).
+        let now = Instant::now();
         for (i, slot) in lanes.iter_mut().enumerate() {
-            if let Some(lane) = slot.as_mut() {
-                lane.iters += 1;
-                lane.fevals += 1;
-                // Streaming: report this iteration's residual before any
-                // retirement decision, so the final progress frame always
-                // precedes the reply (the hook and the reply channel feed
-                // the same FIFO writer queue).
-                if let Some(hook) = &lane.req.progress {
-                    hook(lane.iters, rel[i]);
-                }
-                // Retirement is per-lane policy: this lane's own tol,
-                // iteration cap and (optional) feval budget.
-                let spec = &lane.req.spec;
-                if rel[i] < spec.tol
-                    || lane.iters >= spec.max_iter
-                    || (spec.max_fevals > 0 && lane.fevals >= spec.max_fevals)
-                {
-                    retire_mask[i] = true;
-                }
+            let Some(lane) = slot.as_mut() else { continue };
+            lane.iters += 1;
+            lane.fevals += 1;
+            // Streaming: report this iteration's residual before any
+            // retirement decision, so the final progress frame always
+            // precedes the reply (the hook and the reply channel feed
+            // the same FIFO writer queue).
+            if let Some(hook) = &lane.req.progress {
+                hook(lane.iters, rel[i]);
+            }
+            if !rel[i].is_finite() {
+                // Non-finite residual: quarantine this lane *alone* —
+                // every kernel is row-wise, so its bucket-mates' rows
+                // are untouched and keep iterating bit-identically.
+                // The request gets a terminal numerical-fault reply
+                // (its logits would be garbage), the lane frees, and
+                // its state is wiped.
+                let lane = slot.take().expect("lane checked occupied");
+                metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                let _ = lane.req.respond.send(Err(ServeFailure::numerical(
+                    format!("non-finite residual at iteration {}", lane.iters),
+                    lane.iters,
+                    lane.fevals,
+                )));
+                hist.clear_lane(i);
+                cell_inputs[z_slot].set_row_f32(i, &zero_row)?;
+                continue;
+            }
+            if lane.req.expired(now) {
+                // Deadline passed mid-solve: retire with the partial
+                // stats instead of burning more iterations on an answer
+                // nobody is waiting for.
+                let lane = slot.take().expect("lane checked occupied");
+                metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                let _ = lane.req.respond.send(Err(ServeFailure::deadline(
+                    lane.iters,
+                    lane.fevals,
+                )));
+                hist.clear_lane(i);
+                continue;
+            }
+            // Retirement is per-lane policy: this lane's own tol,
+            // iteration cap and (optional) feval budget.
+            let spec = &lane.req.spec;
+            if rel[i] < spec.tol
+                || lane.iters >= spec.max_iter
+                || (spec.max_fevals > 0 && lane.fevals >= spec.max_fevals)
+            {
+                retire_mask[i] = true;
             }
         }
 

@@ -1,0 +1,221 @@
+//! Replica supervision: the fault-tolerance layer between the router
+//! and its worker threads.
+//!
+//! Each replica worker (scheduler or batcher) runs its serve loop under
+//! `catch_unwind` and reports how it ended over an exit channel: `Clean`
+//! (shutdown or fatal-but-drained backend error) or `Crashed`, carrying
+//! the in-flight requests recovered from its lanes plus the panic text.
+//! The supervisor thread owns every worker `JoinHandle` and reacts:
+//!
+//!  * **Crashed** → join the dead thread, bump `replica_restarts`,
+//!    *redrive* each recovered request (push it back onto the shared
+//!    queue so any surviving replica picks it up) while its per-request
+//!    redrive budget lasts; an exhausted budget becomes a terminal
+//!    `internal` (retryable) reply, an expired deadline a
+//!    `deadline_exceeded` reply — **no waiter ever hangs** on a crashed
+//!    replica.  The replica is then respawned, unless the router is
+//!    shutting down.
+//!  * **Clean** → join and retire the handle.
+//!
+//! Redriven requests bypass `queue_cap`: they were already admitted
+//! once, and shedding an admitted request on a replica crash would turn
+//! an internal fault into client-visible backpressure.
+//!
+//! The supervisor exits once shutdown is raised and every worker handle
+//! has been joined — `Router::shutdown`/`Drop` join the supervisor only,
+//! never individual workers.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::model::ParamSet;
+use crate::runtime::Backend;
+use crate::server::replica::ReplicaSlots;
+use crate::server::{
+    drain_with_error, lock_unpoisoned, Queue, Request, RouterConfig,
+    ServeFailure, ServerMetrics,
+};
+
+/// Everything a replica worker needs to run, bundled so respawning a
+/// crashed replica is a single `replica::spawn(r, ctx, exits)` call.
+pub(crate) struct ReplicaCtx {
+    pub engine: Arc<dyn Backend>,
+    pub params: Arc<ParamSet>,
+    pub queue: Arc<Queue>,
+    pub metrics: Arc<ServerMetrics>,
+    pub cfg: RouterConfig,
+    pub buckets: Vec<usize>,
+    pub slots: Arc<ReplicaSlots>,
+}
+
+/// How one replica worker's serve loop ended.
+pub(crate) enum RunOutcome {
+    /// Shutdown drain, or a fatal backend error already reported to
+    /// every affected waiter.  Nothing to recover.
+    Clean,
+    /// The serve loop panicked.  `inflight` holds the requests that
+    /// were admitted to lanes (or drained into a batch) and not yet
+    /// answered — recovered for redrive.
+    Crashed { inflight: Vec<Request>, panic_msg: String },
+}
+
+/// A [`RunOutcome`] tagged with the replica that produced it, as sent
+/// over the exit channel.
+pub(crate) struct Exit {
+    pub replica: usize,
+    pub outcome: RunOutcome,
+}
+
+/// Human-readable panic payload (the `String`/`&str` cases cover every
+/// `panic!` in this codebase and the injected faults).
+pub(crate) fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The supervisor loop.  `handles[r]` is replica `r`'s join handle
+/// (`None` once joined); `keep_alive` is a sender clone held so `exits`
+/// can never disconnect while the supervisor runs, and the source of
+/// senders for respawned replicas.
+pub(crate) fn supervise(
+    ctx: Arc<ReplicaCtx>,
+    mut handles: Vec<Option<JoinHandle<()>>>,
+    exits: Receiver<Exit>,
+    keep_alive: Sender<Exit>,
+) {
+    loop {
+        match exits.recv_timeout(Duration::from_millis(100)) {
+            Ok(exit) => handle_exit(&ctx, &mut handles, exit, &keep_alive),
+            Err(RecvTimeoutError::Timeout) => {
+                // A thread that died without sending (e.g. killed by the
+                // OS, or a panic inside the exit send itself) would
+                // otherwise leave its handle dangling forever: sweep for
+                // finished-but-silent workers and treat them as crashed
+                // with nothing recoverable.
+                for r in 0..handles.len() {
+                    let finished =
+                        handles[r].as_ref().is_some_and(|h| h.is_finished());
+                    if finished {
+                        handle_exit(
+                            &ctx,
+                            &mut handles,
+                            Exit {
+                                replica: r,
+                                outcome: RunOutcome::Crashed {
+                                    inflight: Vec::new(),
+                                    panic_msg: "worker exited without reporting"
+                                        .to_string(),
+                                },
+                            },
+                            &keep_alive,
+                        );
+                    }
+                }
+            }
+            // Defensive: unreachable while `keep_alive` is held.
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+
+        let shutting_down = ctx.queue.shutdown.load(Ordering::SeqCst);
+        if shutting_down && handles.iter().all(Option::is_none) {
+            break;
+        }
+        if !shutting_down && handles.iter().all(Option::is_none) {
+            // Every replica is dead and could not be respawned: the
+            // router can never answer again.  Fail queued waiters
+            // explicitly instead of letting them block forever.
+            eprintln!("[server] all replicas dead; shutting the router down");
+            {
+                let mut q = lock_unpoisoned(&ctx.queue.items);
+                ctx.queue.shutdown.store(true, Ordering::SeqCst);
+                drain_with_error(&mut q, "server shutting down");
+            }
+            ctx.queue.signal.notify_all();
+            break;
+        }
+    }
+}
+
+fn handle_exit(
+    ctx: &Arc<ReplicaCtx>,
+    handles: &mut [Option<JoinHandle<()>>],
+    exit: Exit,
+    exit_tx: &Sender<Exit>,
+) {
+    let Exit { replica, outcome } = exit;
+    if let Some(h) = handles.get_mut(replica).and_then(Option::take) {
+        // The worker sent its exit as its last act; the join is
+        // immediate and only reclaims the thread.
+        let _ = h.join();
+    }
+    let RunOutcome::Crashed { inflight, panic_msg } = outcome else {
+        return;
+    };
+
+    eprintln!(
+        "[server] replica {replica} crashed ({} in flight): {panic_msg}",
+        inflight.len()
+    );
+    ctx.metrics.replica_restarts.fetch_add(1, Ordering::Relaxed);
+    redrive(ctx, replica, inflight, &panic_msg);
+
+    if !ctx.queue.shutdown.load(Ordering::SeqCst) {
+        match crate::server::replica::spawn(replica, ctx.clone(), exit_tx.clone())
+        {
+            Ok(h) => handles[replica] = Some(h),
+            // Spawn failure (thread exhaustion): leave the slot dead;
+            // the all-dead check above handles the terminal case.
+            Err(e) => eprintln!("[server] respawn of replica {replica} failed: {e:#}"),
+        }
+    }
+}
+
+/// Route each recovered in-flight request: terminal reply (shutdown,
+/// expired deadline, exhausted redrive budget) or back onto the queue.
+fn redrive(
+    ctx: &Arc<ReplicaCtx>,
+    replica: usize,
+    inflight: Vec<Request>,
+    panic_msg: &str,
+) {
+    if inflight.is_empty() {
+        return;
+    }
+    let now = Instant::now();
+    let shutting_down = ctx.queue.shutdown.load(Ordering::SeqCst);
+    let mut requeued = 0usize;
+    {
+        let mut q = lock_unpoisoned(&ctx.queue.items);
+        for mut req in inflight {
+            if shutting_down {
+                let _ = req.respond.send(Err(ServeFailure::error(
+                    "server shutting down",
+                )));
+            } else if req.expired(now) {
+                ctx.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(ServeFailure::deadline(0, 0)));
+            } else if req.redrives_left == 0 {
+                let _ = req.respond.send(Err(ServeFailure::internal(format!(
+                    "replica {replica} crashed while serving this request: \
+                     {panic_msg}"
+                ))));
+            } else {
+                req.redrives_left -= 1;
+                ctx.metrics.redrives.fetch_add(1, Ordering::Relaxed);
+                q.push(req);
+                requeued += 1;
+            }
+        }
+    }
+    if requeued > 0 {
+        ctx.queue.signal.notify_all();
+    }
+}

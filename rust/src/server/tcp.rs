@@ -123,7 +123,7 @@ fn handle_line(
         }
         Incoming::Cmd { cmd } => send(&run_cmd(router, &cmd)),
         Incoming::Infer(frame) => {
-            let InferFrame { id, image, overrides, stream } = frame;
+            let InferFrame { id, image, overrides, stream, deadline_ms } = frame;
             if inflight.load(Ordering::Acquire) >= max_inflight {
                 router.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 send(&protocol::overloaded_frame(
@@ -146,7 +146,9 @@ fn handle_line(
             } else {
                 None
             };
-            match router.try_submit(image, &overrides, progress) {
+            let deadline =
+                deadline_ms.map(std::time::Duration::from_millis);
+            match router.try_submit(image, &overrides, progress, deadline) {
                 Ok(rx) => {
                     inflight.fetch_add(1, Ordering::AcqRel);
                     let tx = out.clone();
@@ -156,8 +158,8 @@ fn handle_line(
                             Ok(Ok(resp)) => {
                                 protocol::response_frame(&resp, id.as_ref())
                             }
-                            Ok(Err(msg)) => {
-                                protocol::error_frame(&msg, id.as_ref())
+                            Ok(Err(fail)) => {
+                                protocol::failure_frame(&fail, id.as_ref())
                             }
                             Err(_) => protocol::error_frame(
                                 "router worker is not running (shut down or failed)",
@@ -192,6 +194,12 @@ fn run_cmd(router: &Router, cmd: &str) -> Json {
         "stats" => {
             let mut pairs = router.metrics.stat_pairs();
             pairs.push(("queue_now", json::num(router.queue_depth() as f64)));
+            // Nonzero only when a DEQ_FAULTS plan wraps the backend —
+            // chaos runs assert their plan actually fired through this.
+            pairs.push((
+                "faults_injected",
+                json::num(router.backend_faults_injected() as f64),
+            ));
             // Pack-cache + workspace health of the serving backend:
             // in steady state `pack_hits` grows while misses and
             // invalidations stay flat (invalidations move only when

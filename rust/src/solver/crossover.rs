@@ -118,6 +118,7 @@ mod tests {
             sample_iters: vec![n],
             sample_fevals: vec![n],
             sample_converged: vec![true],
+            sample_faulted: vec![false],
         }
     }
 
@@ -215,6 +216,7 @@ mod tests {
             sample_iters: vec![],
             sample_fevals: vec![],
             sample_converged: vec![],
+            sample_faulted: vec![],
         };
         let rep = analyze(&empty(SolverKind::Anderson), &empty(SolverKind::Forward));
         assert!(rep.crossover_residual.is_none());

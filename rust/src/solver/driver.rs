@@ -134,9 +134,12 @@ pub fn drive<P: SolvePolicy + ?Sized>(
     let (step_entry, step_evals) = policy.step_entry(engine, batch);
     let t0 = Instant::now();
 
+    // `all_settled` — converged OR quarantined — so one lane going
+    // non-finite cannot keep the whole cohort iterating forever (nor
+    // stall it: its NaN never reaches the cohort max-residual).
     while fevals < spec.max_iter
         && (spec.max_fevals == 0 || fevals < spec.max_fevals)
-        && !track.all_converged()
+        && !track.all_settled()
     {
         // --- one cell evaluation (possibly fused) + fused norms ---
         // `max_fevals` is a *hard* budget: a fused dispatch that would
@@ -170,9 +173,11 @@ pub fn drive<P: SolvePolicy + ?Sized>(
             fevals,
             mixed: false,
         });
-        if track.all_converged() {
-            // Lanes that converged this step take f as their terminal
-            // iterate; lanes frozen earlier already hold theirs.
+        if track.all_settled() {
+            // Lanes that converged (or faulted) this step take f as
+            // their terminal iterate; lanes frozen earlier already hold
+            // theirs.  A faulted lane's row is garbage either way — the
+            // report flags it via `sample_faulted`.
             cell_inputs[z_slot].overwrite_rows_where(&f, &freeze.newly_frozen)?;
             engine.recycle(vec![f]);
             break;

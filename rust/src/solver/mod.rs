@@ -156,6 +156,9 @@ pub struct ResidualTrack {
     fevals: Vec<usize>,
     iters: Vec<usize>,
     converged: Vec<bool>,
+    /// Quarantined lanes: a non-finite residual appeared, the lane was
+    /// retired alone, and nothing about it feeds cohort decisions again.
+    faulted: Vec<bool>,
 }
 
 impl ResidualTrack {
@@ -166,6 +169,7 @@ impl ResidualTrack {
             fevals: vec![0; batch],
             iters: vec![0; batch],
             converged: vec![false; batch],
+            faulted: vec![false; batch],
         }
     }
 
@@ -193,13 +197,18 @@ impl ResidualTrack {
             self.batch()
         );
         for (s, &r) in rel.iter().enumerate() {
-            if self.converged[s] {
+            if self.converged[s] || self.faulted[s] {
                 continue;
             }
             self.rel[s] = r;
             self.fevals[s] += evals;
             self.iters[s] += 1;
-            if r < self.tol {
+            if !r.is_finite() {
+                // Numerical breakdown: quarantine the lane the step the
+                // NaN/Inf appears, so it never reaches the cohort
+                // max-residual nor another Anderson history push.
+                self.faulted[s] = true;
+            } else if r < self.tol {
                 self.converged[s] = true;
             }
         }
@@ -217,12 +226,22 @@ impl ResidualTrack {
         lam: f32,
         evals: usize,
     ) -> Result<(Vec<f32>, FreezeTransition)> {
-        let frozen_before = self.converged.clone();
+        // "Frozen" for masking purposes means *settled* — converged or
+        // quarantined — so a faulted lane also stops being rewritten and
+        // stops feeding the history ring.
+        let frozen_before: Vec<bool> = self
+            .converged
+            .iter()
+            .zip(&self.faulted)
+            .map(|(&c, &f)| c || f)
+            .collect();
         let rel = self.observe(res_num, f_norm, lam, evals)?;
         let newly_frozen = frozen_before
             .iter()
-            .zip(&self.converged)
-            .map(|(before, now)| !before && *now)
+            .enumerate()
+            .map(|(s, &before)| {
+                !before && (self.converged[s] || self.faulted[s])
+            })
             .collect();
         Ok((rel, FreezeTransition { frozen_before, newly_frozen }))
     }
@@ -251,21 +270,52 @@ impl ResidualTrack {
         self.converged.iter().all(|&c| c)
     }
 
-    /// Lanes still iterating.
+    /// Per-sample quarantine flags — lanes retired on a non-finite
+    /// residual (see [`Self::observe`]).
+    pub fn faulted(&self) -> &[bool] {
+        &self.faulted
+    }
+
+    /// Lanes quarantined so far.
+    pub fn quarantined_count(&self) -> usize {
+        self.faulted.iter().filter(|&&f| f).count()
+    }
+
+    /// True when every lane is terminal — converged *or* quarantined.
+    /// Drive loops exit on this; [`Self::all_converged`] stays strict so
+    /// a report never claims convergence for a poisoned batch.
+    pub fn all_settled(&self) -> bool {
+        self.converged.iter().zip(&self.faulted).all(|(&c, &f)| c || f)
+    }
+
+    /// Lanes still iterating (neither converged nor quarantined).
     pub fn active_count(&self) -> usize {
-        self.converged.iter().filter(|&&c| !c).count()
+        self.active_mask().iter().filter(|&&a| a).count()
     }
 
     /// Per-sample still-active mask — the lanes whose Anderson history
-    /// should keep updating (the complement of [`Self::converged`]).
+    /// should keep updating (neither converged nor quarantined, so a
+    /// poisoned iterate never enters the history ring).
     pub fn active_mask(&self) -> Vec<bool> {
-        self.converged.iter().map(|c| !c).collect()
+        self.converged
+            .iter()
+            .zip(&self.faulted)
+            .map(|(&c, &f)| !c && !f)
+            .collect()
     }
 
-    /// Max residual over the whole batch (frozen lanes hold their
-    /// freeze-time value, which is below `tol` by construction).
+    /// Max residual over the non-quarantined lanes (frozen lanes hold
+    /// their freeze-time value, which is below `tol` by construction).
+    /// Faulted lanes are excluded explicitly: `f32::max` would ignore a
+    /// NaN but keep a +Inf, and either way one poisoned sample must not
+    /// drive cohort stagnation/restart decisions.
     pub fn max_rel(&self) -> f32 {
-        self.rel.iter().cloned().fold(0.0f32, f32::max)
+        self.rel
+            .iter()
+            .zip(&self.faulted)
+            .filter(|&(_, &f)| !f)
+            .map(|(&r, _)| r)
+            .fold(0.0f32, f32::max)
     }
 
     /// Total cell evaluations actually charged across the batch.
@@ -353,6 +403,11 @@ impl SolveStep {
                 .ok_or_else(|| anyhow!("'sample_residuals' is not an array"))?
                 .iter()
                 .map(|d| {
+                    // Non-finite residuals (quarantined lanes) serialize
+                    // as JSON null; read them back as NaN.
+                    if matches!(d, Json::Null) {
+                        return Ok(f32::NAN);
+                    }
                     d.as_f64()
                         .map(|f| f as f32)
                         .ok_or_else(|| anyhow!("bad sample residual"))
@@ -393,6 +448,9 @@ pub struct SolveReport {
     pub sample_fevals: Vec<usize>,
     /// Per-sample converged flags.
     pub sample_converged: Vec<bool>,
+    /// Per-sample quarantine flags (non-finite residual — the lane was
+    /// retired with a numerical fault; its `z_star` row is garbage).
+    pub sample_faulted: Vec<bool>,
 }
 
 impl SolveReport {
@@ -411,7 +469,13 @@ impl SolveReport {
             sample_iters: track.iters().to_vec(),
             sample_fevals: track.fevals().to_vec(),
             sample_converged: track.converged().to_vec(),
+            sample_faulted: track.faulted().to_vec(),
         }
+    }
+
+    /// Lanes quarantined on a numerical fault.
+    pub fn quarantined(&self) -> usize {
+        self.sample_faulted.iter().filter(|&&f| f).count()
     }
 
     pub fn iters(&self) -> usize {
@@ -478,10 +542,17 @@ impl SolveReport {
         let bools = |v: &[bool]| {
             Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect())
         };
-        json::obj(vec![
+        let mut fields = vec![
             ("converged", Json::Bool(self.converged)),
             ("kind", json::s(self.kind.name())),
             ("sample_converged", bools(&self.sample_converged)),
+        ];
+        // Quarantine flags are emitted only when a lane actually faulted,
+        // so fault-free traces stay byte-identical to the pinned goldens.
+        if self.sample_faulted.iter().any(|&f| f) {
+            fields.push(("sample_faulted", bools(&self.sample_faulted)));
+        }
+        fields.extend([
             ("sample_fevals", usizes(&self.sample_fevals)),
             ("sample_iters", usizes(&self.sample_iters)),
             ("steps", steps),
@@ -489,7 +560,8 @@ impl SolveReport {
                 "z_star",
                 json::obj(vec![("data", Json::Arr(data)), ("shape", Json::Arr(shape))]),
             ),
-        ])
+        ]);
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -539,18 +611,22 @@ impl SolveReport {
                 None => Ok(Vec::new()),
             }
         };
-        let sample_converged = match v.get("sample_converged") {
-            Some(arr) => arr
-                .as_arr()
-                .ok_or_else(|| anyhow!("'sample_converged' is not an array"))?
-                .iter()
-                .map(|d| {
-                    d.as_bool()
-                        .ok_or_else(|| anyhow!("bad 'sample_converged' value"))
-                })
-                .collect::<Result<Vec<_>>>()?,
-            None => Vec::new(),
+        let sample_bools = |key: &str| -> Result<Vec<bool>> {
+            match v.get(key) {
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_bool()
+                            .ok_or_else(|| anyhow!("bad '{key}' value"))
+                    })
+                    .collect(),
+                None => Ok(Vec::new()),
+            }
         };
+        let sample_converged = sample_bools("sample_converged")?;
+        let sample_faulted = sample_bools("sample_faulted")?;
         Ok(Self {
             kind,
             steps,
@@ -562,6 +638,7 @@ impl SolveReport {
             sample_iters: sample_usizes("sample_iters")?,
             sample_fevals: sample_usizes("sample_fevals")?,
             sample_converged,
+            sample_faulted,
         })
     }
 }
@@ -676,6 +753,51 @@ mod tests {
     }
 
     #[test]
+    fn residual_track_quarantines_non_finite_lanes() {
+        let mut tr = ResidualTrack::new(3, 0.5);
+        let den = HostTensor::f32(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
+        // Lane 1 goes NaN on step 1; lanes 0/2 keep iterating.
+        let num = HostTensor::f32(vec![3], vec![2.0, f32::NAN, 2.0]).unwrap();
+        let (rel, fr) = tr.observe_step(&num, &den, 0.0, 1).unwrap();
+        assert!(rel[1].is_nan());
+        assert_eq!(tr.faulted(), &[false, true, false]);
+        assert_eq!(tr.quarantined_count(), 1);
+        assert_eq!(tr.converged(), &[false, false, false]);
+        // The quarantined lane freezes like a converged one would, so
+        // drivers stop rewriting its rows and history pushes skip it.
+        assert_eq!(fr.newly_frozen, vec![false, true, false]);
+        assert_eq!(tr.active_mask(), vec![true, false, true]);
+        assert_eq!(tr.active_count(), 2);
+        // Cohort max-residual excludes the poisoned lane entirely.
+        assert!((tr.max_rel() - 2.0).abs() < 1e-6);
+        assert!(tr.max_rel().is_finite());
+        // The fault is charged its iteration (it cost a real step).
+        assert_eq!(tr.iters(), &[1, 1, 1]);
+        // Further steps leave the quarantined lane untouched even if the
+        // kernel reports a finite value for it again.
+        let num2 = HostTensor::f32(vec![3], vec![0.1, 0.1, 0.1]).unwrap();
+        tr.observe(&num2, &den, 0.0, 1).unwrap();
+        assert_eq!(tr.faulted(), &[false, true, false]);
+        assert!(tr.rel()[1].is_nan());
+        assert_eq!(tr.iters(), &[2, 1, 2]);
+        assert_eq!(tr.converged(), &[true, false, true]);
+        // Terminal state: settled (exit the loop) but NOT converged.
+        assert!(tr.all_settled());
+        assert!(!tr.all_converged());
+    }
+
+    #[test]
+    fn infinite_residual_quarantines_and_stays_out_of_max_rel() {
+        let mut tr = ResidualTrack::new(2, 0.5);
+        let den = HostTensor::f32(vec![2], vec![1.0, 1.0]).unwrap();
+        let num = HostTensor::f32(vec![2], vec![f32::INFINITY, 2.0]).unwrap();
+        tr.observe(&num, &den, 0.0, 1).unwrap();
+        assert_eq!(tr.faulted(), &[true, false]);
+        // f32::max would have kept the +Inf; quarantine must not.
+        assert!((tr.max_rel() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn observe_step_reports_freeze_transition_and_applies_it() {
         let mut tr = ResidualTrack::new(3, 0.5);
         let den = HostTensor::f32(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
@@ -709,6 +831,7 @@ mod tests {
             sample_iters: vec![],
             sample_fevals: vec![],
             sample_converged: vec![],
+            sample_faulted: vec![],
         };
         assert_eq!(r.iters(), 0);
         assert!(r.final_residual().is_nan());

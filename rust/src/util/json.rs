@@ -301,7 +301,12 @@ fn write_value(v: &Json, out: &mut String) {
         Json::Bool(true) => out.push_str("true"),
         Json::Bool(false) => out.push_str("false"),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Inf tokens; emitting them would make
+                // the document unparseable.  Non-finite numbers (e.g. a
+                // quarantined lane's residual) serialize as null.
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -365,6 +370,13 @@ pub fn s(text: &str) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Json::Num(f64::INFINITY)), "null");
+        assert_eq!(to_string(&Json::Num(f64::NEG_INFINITY)), "null");
+    }
 
     #[test]
     fn parses_scalars() {

@@ -1,0 +1,466 @@
+//! Chaos suite: deterministic fault injection ([`FaultPlan`]) driven
+//! through every robustness layer — solver-level non-finite quarantine,
+//! replica supervision with request redrive, per-request deadlines, and
+//! the TCP wire shapes of each failure.
+//!
+//! Every test here builds its *own* injector over a bare
+//! `NativeEngine::tiny()` rather than going through `backend_from_dir`:
+//! that path wraps the `DEQ_FAULTS` env plan, and the CI chaos job sets
+//! the var — these tests must stay deterministic regardless.  The one
+//! exception is the liveness test at the bottom, which deliberately
+//! rides the env plan when one is set.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use deq_anderson::data;
+use deq_anderson::infer;
+use deq_anderson::runtime::{
+    backend_from_dir, Backend, FaultInjector, FaultPlan, NativeEngine,
+};
+use deq_anderson::server::{
+    tcp, FailureKind, Router, RouterConfig, SchedMode,
+};
+use deq_anderson::solver::{SolveClamps, SolveOverrides, SolveSpec, SolverKind};
+use deq_anderson::util::json::{self, Json};
+
+/// Bare engine, immune to any `DEQ_FAULTS` the process carries.
+fn bare_engine() -> Arc<dyn Backend> {
+    Arc::new(NativeEngine::tiny())
+}
+
+/// Bare engine wrapped with an explicit, test-owned fault plan.
+fn faulted_engine(plan: &str) -> Arc<dyn Backend> {
+    let plan = FaultPlan::parse(plan).expect("fault plan");
+    Arc::new(FaultInjector::new(bare_engine(), plan))
+}
+
+fn start_router(
+    engine: Arc<dyn Backend>,
+    mode: SchedMode,
+    redrive_budget: u32,
+) -> (Arc<Router>, usize) {
+    let image_dim = engine.manifest().model.image_dim();
+    let params = Arc::new(engine.init_params().unwrap());
+    let cfg = RouterConfig {
+        solver: SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson),
+        clamps: SolveClamps::default(),
+        mode,
+        max_wait: Duration::from_millis(10),
+        queue_cap: 256,
+        replicas: 1,
+        default_deadline: None,
+        redrive_budget,
+    };
+    (Arc::new(Router::start(engine, params, cfg).unwrap()), image_dim)
+}
+
+/// Scale an image to modulate solve difficulty (see integration_server).
+fn scaled(image: &[f32], scale: f32) -> Vec<f32> {
+    image.iter().map(|&v| v * scale).collect()
+}
+
+/// Overrides for a request stiff enough to still be in flight when a
+/// mid-solve fault fires.
+fn stiff() -> SolveOverrides {
+    SolveOverrides {
+        tol: Some(1e-5),
+        max_iter: Some(400),
+        ..Default::default()
+    }
+}
+
+fn load(v: &std::sync::atomic::AtomicU64) -> u64 {
+    v.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Non-finite lane quarantine
+// ---------------------------------------------------------------------------
+
+/// The containment acceptance test: poisoning one lane of a batched
+/// solve quarantines that lane *alone* — every non-faulted bucket-mate's
+/// logits, prediction and per-sample counters are bit-identical to a
+/// fault-free run of the same batch (all kernels are row-wise, so a NaN
+/// row cannot bleed sideways).
+#[test]
+fn nan_fault_quarantines_one_lane_bucket_mates_bit_identical() {
+    let engine = bare_engine();
+    let params = engine.init_params().unwrap();
+    let spec = SolveSpec {
+        tol: 1e-4,
+        max_iter: 80,
+        ..SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson)
+    };
+    let (data, _, _) = data::load_auto(8, 8, 21);
+    // Lane 0 stiff so it is still active when the fault fires at call 3;
+    // the bucket-mates span easy to moderate.
+    let scales = [0.03f32, 3.0, 1.0, 0.4];
+    let images: Vec<Vec<f32>> = (0..4)
+        .map(|i| scaled(data.image(i), scales[i]))
+        .collect();
+    let flat: Vec<f32> = images.concat();
+
+    let clean = infer::infer(engine.as_ref(), &params, &flat, 4, &spec).unwrap();
+    assert!(
+        clean.sample_faulted.iter().all(|&f| !f),
+        "fault-free run reported a quarantine"
+    );
+
+    let inj =
+        FaultInjector::new(engine.clone(), FaultPlan::parse("nan@cell_step#3").unwrap());
+    let faulted = infer::infer(&inj, &params, &flat, 4, &spec).unwrap();
+    assert_eq!(inj.injected(), 1, "the plan must fire exactly once");
+    assert!(
+        faulted.sample_faulted[0],
+        "poisoned lane 0 not flagged: {:?}",
+        faulted.sample_faulted
+    );
+    for i in 1..4 {
+        assert!(!faulted.sample_faulted[i], "lane {i} wrongly quarantined");
+        assert_eq!(
+            faulted.logits[i], clean.logits[i],
+            "lane {i} logits not bit-identical to the fault-free run"
+        );
+        assert_eq!(faulted.predictions[i], clean.predictions[i]);
+        assert_eq!(faulted.sample_iters[i], clean.sample_iters[i]);
+        assert_eq!(faulted.sample_converged[i], clean.sample_converged[i]);
+    }
+}
+
+/// Serving-side quarantine: a lane that goes non-finite mid-solve gets a
+/// terminal `Numerical` reply with its partial stats, the `quarantined`
+/// counter moves, and the freed (wiped) lane serves the next request.
+#[test]
+fn scheduler_quarantines_nan_lane_and_keeps_serving() {
+    let (router, _) = start_router(
+        faulted_engine("nan@cell_step#5"),
+        SchedMode::IterationLevel,
+        1,
+    );
+    let (data, _, _) = data::load_auto(8, 8, 17);
+    let rx = router
+        .submit_with(scaled(data.image(0), 0.03), &stiff())
+        .unwrap();
+    let fail = rx
+        .recv()
+        .expect("terminal reply")
+        .expect_err("a poisoned lane must fail, not answer");
+    assert_eq!(fail.kind, FailureKind::Numerical);
+    // The lane was admitted at the first boundary, so its iteration
+    // count is exactly the faulting call index.
+    assert_eq!(fail.iters, 5, "partial stats drifted");
+    assert_eq!(fail.fevals, 5);
+    assert!(
+        fail.detail.contains("non-finite residual"),
+        "unexpected detail: {}",
+        fail.detail
+    );
+    assert_eq!(load(&router.metrics.quarantined), 1);
+    assert_eq!(load(&router.metrics.served), 0);
+    assert_eq!(router.backend_faults_injected(), 1);
+
+    // Exact-count plans fire once: the quarantined lane was wiped and
+    // the router serves normally afterwards.
+    let resp = router.infer_blocking(scaled(data.image(1), 3.0)).unwrap();
+    assert!(resp.converged);
+    assert_eq!(load(&router.metrics.served), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Replica supervision + redrive
+// ---------------------------------------------------------------------------
+
+/// A replica panic mid-solve is not the end of the requests it carried:
+/// the supervisor recovers them from the lanes, redrives them onto the
+/// queue, respawns the replica, and every waiter still gets its answer.
+#[test]
+fn replica_crash_redrives_inflight_requests_to_completion() {
+    let (router, _) = start_router(
+        faulted_engine("panic@cell_step#3"),
+        SchedMode::IterationLevel,
+        1,
+    );
+    let (data, _, _) = data::load_auto(8, 8, 13);
+    let rx1 = router
+        .submit_with(scaled(data.image(0), 0.03), &stiff())
+        .unwrap();
+    let rx2 = router
+        .submit_with(scaled(data.image(1), 0.03), &stiff())
+        .unwrap();
+    let r1 = rx1
+        .recv()
+        .expect("reply 1")
+        .expect("request 1 must survive the crash via redrive");
+    let r2 = rx2
+        .recv()
+        .expect("reply 2")
+        .expect("request 2 must survive the crash via redrive");
+    assert!(r1.converged && r2.converged);
+    assert_eq!(load(&router.metrics.replica_restarts), 1);
+    let redrives = load(&router.metrics.redrives);
+    // At least request 1 was in flight at the crash; request 2 may have
+    // still been queued (untouched) or share the lane set.
+    assert!(
+        (1..=2).contains(&redrives),
+        "unexpected redrive count {redrives}"
+    );
+    assert_eq!(router.backend_faults_injected(), 1);
+    assert_eq!(load(&router.metrics.served), 2);
+}
+
+/// With the redrive budget at zero a crash becomes a terminal
+/// `internal` (retryable) reply carrying the panic text — and the
+/// respawned replica keeps the router alive for new work.
+#[test]
+fn exhausted_redrive_budget_is_a_retryable_internal_reply() {
+    let (router, _) = start_router(
+        faulted_engine("panic@cell_step#2"),
+        SchedMode::IterationLevel,
+        0,
+    );
+    let (data, _, _) = data::load_auto(8, 8, 19);
+    let rx = router
+        .submit_with(scaled(data.image(0), 0.03), &stiff())
+        .unwrap();
+    let fail = rx
+        .recv()
+        .expect("terminal reply")
+        .expect_err("budget 0 must turn the crash into a failure reply");
+    assert_eq!(fail.kind, FailureKind::Internal);
+    assert!(fail.retryable(), "internal replies must be retryable");
+    assert!(
+        fail.detail.contains("crashed while serving"),
+        "unexpected detail: {}",
+        fail.detail
+    );
+    assert!(
+        fail.detail.contains("injected fault"),
+        "panic text missing from detail: {}",
+        fail.detail
+    );
+    assert_eq!(load(&router.metrics.replica_restarts), 1);
+    assert_eq!(load(&router.metrics.redrives), 0);
+
+    // The respawned replica serves fresh requests.
+    let resp = router.infer_blocking(scaled(data.image(1), 3.0)).unwrap();
+    assert!(resp.converged);
+}
+
+/// The batch-granular baseline rides the same supervision: a panic
+/// inside a fired batch recovers the whole group for redrive and the
+/// respawned batcher answers everyone.
+#[test]
+fn batcher_crash_redrives_batch_and_respawns() {
+    let (router, _) = start_router(
+        faulted_engine("panic@cell_step#1"),
+        SchedMode::BatchGranular,
+        1,
+    );
+    let (data, _, _) = data::load_auto(8, 8, 23);
+    let rx1 = router.submit(scaled(data.image(0), 3.0)).unwrap();
+    let rx2 = router.submit(scaled(data.image(1), 3.0)).unwrap();
+    let r1 = rx1.recv().expect("reply 1").expect("request 1 answered");
+    let r2 = rx2.recv().expect("reply 2").expect("request 2 answered");
+    assert!(r1.converged && r2.converged);
+    assert_eq!(load(&router.metrics.replica_restarts), 1);
+    assert!(load(&router.metrics.redrives) >= 1);
+    assert_eq!(load(&router.metrics.served), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Per-request deadlines
+// ---------------------------------------------------------------------------
+
+/// A stalled backend (injected latency on every cell step) trips the
+/// per-request deadline at an iteration boundary: the reply is
+/// `DeadlineExceeded` with the partial stats the lane accrued.
+#[test]
+fn stalled_backend_trips_deadline_with_partial_stats() {
+    let (router, _) = start_router(
+        faulted_engine("stall@cell_step%1:25ms"),
+        SchedMode::IterationLevel,
+        1,
+    );
+    let (data, _, _) = data::load_auto(8, 8, 29);
+    let ov = SolveOverrides {
+        tol: Some(1e-6),
+        max_iter: Some(400),
+        ..Default::default()
+    };
+    let rx = router
+        .try_submit(
+            scaled(data.image(0), 0.03),
+            &ov,
+            None,
+            Some(Duration::from_millis(150)),
+        )
+        .unwrap();
+    let fail = rx
+        .recv()
+        .expect("terminal reply")
+        .expect_err("a stalled solve must miss a 150ms deadline");
+    assert_eq!(fail.kind, FailureKind::DeadlineExceeded);
+    assert!(fail.iters >= 1, "partial stats missing: {} iters", fail.iters);
+    assert_eq!(fail.fevals, fail.iters);
+    assert_eq!(load(&router.metrics.deadline_exceeded), 1);
+    assert_eq!(load(&router.metrics.served), 0);
+    assert!(router.backend_faults_injected() >= 1, "stalls never fired");
+}
+
+/// A request whose deadline passed while it queued is shed at the
+/// admission boundary — before paying its encode — with zeroed stats.
+#[test]
+fn requests_expired_in_queue_are_shed_before_encode() {
+    let (router, dim) = start_router(bare_engine(), SchedMode::IterationLevel, 1);
+    let rx = router
+        .try_submit(
+            vec![0.0; dim],
+            &SolveOverrides::default(),
+            None,
+            Some(Duration::ZERO),
+        )
+        .unwrap();
+    let fail = rx
+        .recv()
+        .expect("terminal reply")
+        .expect_err("an already-expired request must be shed");
+    assert_eq!(fail.kind, FailureKind::DeadlineExceeded);
+    assert_eq!((fail.iters, fail.fevals), (0, 0), "shed before any solve work");
+    assert_eq!(load(&router.metrics.deadline_exceeded), 1);
+    assert_eq!(load(&router.metrics.served), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Wire shapes + counters over TCP
+// ---------------------------------------------------------------------------
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read frame");
+    json::parse(line.trim()).expect("parse frame")
+}
+
+/// End to end: `deadline_ms` on the wire, a stall-heavy plan underneath,
+/// the structured `deadline_exceeded` frame back, and the chaos counters
+/// visible through the `stats` command.
+#[test]
+fn tcp_deadline_reply_and_chaos_counters_end_to_end() {
+    let (router, dim) = start_router(
+        faulted_engine("stall@cell_step%1:25ms"),
+        SchedMode::IterationLevel,
+        1,
+    );
+    let addr = "127.0.0.1:17982";
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = tcp::serve_tcp(router, dim, addr);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let (data, _, _) = data::load_auto(8, 8, 31);
+    let img: Vec<String> = scaled(data.image(0), 0.03)
+        .iter()
+        .map(|v| format!("{v:.4}"))
+        .collect();
+    let req = format!(
+        "{{\"id\":1,\"image\":[{}],\"tol\":1e-6,\"max_iter\":400,\"deadline_ms\":120}}\n",
+        img.join(",")
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let v = read_frame(&mut reader);
+    assert_eq!(
+        v.get("error").and_then(Json::as_str),
+        Some("deadline_exceeded"),
+        "unexpected frame: {v:?}"
+    );
+    assert_eq!(v.get("id").and_then(Json::as_i64), Some(1));
+    let iters = v
+        .get("solver_iters")
+        .and_then(Json::as_i64)
+        .expect("deadline frame missing solver_iters");
+    assert!(iters >= 1, "partial stats missing from the wire frame");
+
+    stream.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let stats = read_frame(&mut reader);
+    assert!(
+        stats.get("deadline_exceeded").and_then(Json::as_f64).unwrap() >= 1.0,
+        "stats missing the deadline counter: {stats:?}"
+    );
+    assert!(
+        stats.get("faults_injected").and_then(Json::as_f64).unwrap() >= 1.0,
+        "stats missing injected-fault count: {stats:?}"
+    );
+    for key in ["replica_restarts", "redrives", "quarantined"] {
+        assert!(
+            stats.get(key).and_then(Json::as_f64).is_some(),
+            "stats missing counter {key}: {stats:?}"
+        );
+    }
+
+    // A malformed deadline is rejected at parse time, before admission
+    // (the image validates first, so it must be well-formed here).
+    let zeros = vec!["0"; dim].join(",");
+    stream
+        .write_all(
+            format!("{{\"id\":2,\"image\":[{zeros}],\"deadline_ms\":0}}\n")
+                .as_bytes(),
+        )
+        .unwrap();
+    let bad = read_frame(&mut reader);
+    assert_eq!(
+        bad.get("error").and_then(Json::as_str),
+        Some("'deadline_ms' must be a positive integer")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Env-plan liveness (the CI chaos job's entry point)
+// ---------------------------------------------------------------------------
+
+/// The one property every failure mode above feeds: **exactly one
+/// terminal reply per request, no waiter ever hangs**.  This test rides
+/// whatever `DEQ_FAULTS` plan the process carries (the CI chaos job runs
+/// it under a panic-heavy and a NaN-heavy plan, single replica); with
+/// the var unset it exercises the same liveness on a bare backend.
+#[test]
+fn every_request_gets_exactly_one_terminal_reply_under_env_plan() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = backend_from_dir(dir).expect("backend");
+    let params = Arc::new(engine.init_params().unwrap());
+    let cfg = RouterConfig {
+        solver: SolveSpec::from_manifest(engine.as_ref(), SolverKind::Anderson),
+        clamps: SolveClamps::default(),
+        mode: SchedMode::IterationLevel,
+        max_wait: Duration::from_millis(5),
+        queue_cap: 256,
+        replicas: 1,
+        default_deadline: Some(Duration::from_secs(30)),
+        redrive_budget: 2,
+    };
+    let router = Arc::new(Router::start(engine, params, cfg).unwrap());
+    let (data, _, _) = data::load_auto(8, 8, 3);
+    let receivers: Vec<_> = (0..8)
+        .map(|i| router.submit(data.image(i).to_vec()))
+        .collect();
+    for (i, submitted) in receivers.into_iter().enumerate() {
+        let rx = match submitted {
+            Ok(rx) => rx,
+            // A rejection at the door is itself a terminal answer.
+            Err(_) => continue,
+        };
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            // Ok response or structured failure — both are terminal.
+            Ok(_reply) => {}
+            Err(e) => panic!("request {i} hung without a terminal reply: {e}"),
+        }
+    }
+}

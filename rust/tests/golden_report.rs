@@ -48,6 +48,7 @@ fn fixture() -> SolveReport {
         sample_iters: vec![1, 2],
         sample_fevals: vec![1, 2],
         sample_converged: vec![true, true],
+        sample_faulted: vec![false, false],
     }
 }
 
@@ -112,6 +113,7 @@ fn empty_report_roundtrips() {
         sample_iters: vec![],
         sample_fevals: vec![],
         sample_converged: vec![],
+        sample_faulted: vec![],
     };
     let text = json::to_string(&rep.to_json());
     let back = SolveReport::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -120,6 +122,27 @@ fn empty_report_roundtrips() {
     assert_eq!(back.iters(), 0);
     assert!(back.z_star.is_empty());
     assert!(back.sample_iters.is_empty());
+}
+
+#[test]
+fn quarantined_report_emits_sample_faulted_and_roundtrips() {
+    // sample_faulted rides the wire only when a lane actually faulted —
+    // the fault-free GOLDEN above must never grow the key.
+    let mut rep = fixture();
+    rep.converged = false;
+    rep.sample_converged = vec![true, false];
+    rep.sample_faulted = vec![false, true];
+    rep.steps[1].sample_residuals = vec![0.25, f32::NAN];
+    let wire = json::to_string(&rep.to_json());
+    assert!(wire.contains("\"sample_faulted\":[false,true]"), "{wire}");
+    // The NaN residual of the quarantined lane serializes as null...
+    assert!(wire.contains("\"sample_residuals\":[0.25,null]"), "{wire}");
+    // ...and parses back as NaN, with the flags intact and byte-stable.
+    let back = SolveReport::from_json(&json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back.sample_faulted, vec![false, true]);
+    assert_eq!(back.quarantined(), 1);
+    assert!(back.steps[1].sample_residuals[1].is_nan());
+    assert_eq!(json::to_string(&back.to_json()), wire);
 }
 
 #[test]

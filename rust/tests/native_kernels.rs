@@ -374,6 +374,8 @@ fn serving_survives_rank_deficient_window() {
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
             replicas: 1,
+            default_deadline: None,
+            redrive_budget: 1,
         },
     )
     .unwrap();
@@ -426,6 +428,8 @@ fn scheduler_steady_state_allocates_nothing() {
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
             replicas: 1,
+            default_deadline: None,
+            redrive_budget: 1,
         },
     )
     .unwrap();
