@@ -9,10 +9,15 @@
 //!         [--replicas 1,2] [--loads 1,10,100] [--sat-requests 48] \
 //!         [--queue-cap 32] [--out BENCH_serving.json]
 //!
-//! The gate: at every offered load ≥ 10× capacity the server must shed
-//! (not crash) — some requests accepted, none errored, accepted-request
-//! p99 finite and bounded.  A violation exits nonzero so `bench-smoke`
-//! fails.
+//! Two gates, each exiting nonzero so `bench-smoke` fails:
+//!
+//!  * **graceful degradation** — at every offered load ≥ 10× capacity
+//!    the server must shed (not crash): some requests accepted, none
+//!    errored, accepted-request p99 finite and bounded;
+//!  * **auto-selection** — on the mixed workload, `--solver auto`
+//!    (per-lane forward↔Anderson crossover) must reach at least
+//!    90% of the best static kind's throughput and strictly beat the
+//!    worst (a wrong static guess), without being told the workload.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -30,6 +35,12 @@ use deq_anderson::util::json::{self, Json};
 /// Shed-rate aside, accepted-request p99 under overload must stay below
 /// this bound for the run to count as graceful.
 const P99_BOUND: Duration = Duration::from_secs(30);
+
+/// Auto-selection gate: auto throughput must reach this fraction of the
+/// best static solver kind's on the mixed workload (it pays a probe
+/// window per lane, so exact parity is not expected; 0.9 leaves room
+/// for that plus CI noise).
+const AUTO_MIN_FRAC: f64 = 0.9;
 
 fn mode_json(name: &str, o: &ModeOutcome) -> Json {
     json::obj(vec![
@@ -163,6 +174,56 @@ fn main() {
         }
     }
 
+    // --- part 3: auto-selection vs every static kind (gated) ---
+    // Same mixed workload as part 1.  This is Fig. 1's crossover made
+    // operational: no static kind wins every mix, so the per-lane
+    // controller must land near the best static kind and strictly beat
+    // the worst without being told the workload.
+    let drive_kind = |kind: SolverKind| {
+        let spec = SolveSpec {
+            tol: 1e-4,
+            max_iter: 80,
+            ..SolveSpec::from_manifest(engine.as_ref(), kind)
+        };
+        drive(&engine, &params, &images, SchedMode::IterationLevel, &spec, 1)
+            .expect("auto-gate drive")
+    };
+    let statics =
+        [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid];
+    let mut static_rows: Vec<Json> = Vec::new();
+    let mut best_static = f64::NEG_INFINITY;
+    let mut worst_static = f64::INFINITY;
+    for kind in statics {
+        let o = drive_kind(kind);
+        let tp = o.throughput();
+        println!(
+            "auto-gate {:<9} {tp:.0} req/s mean_fevals={:.1}",
+            kind.name(),
+            o.total_fevals as f64 / o.served.max(1) as f64
+        );
+        static_rows.push(json::obj(vec![
+            ("solver", json::s(kind.name())),
+            ("throughput_rps", json::num(tp)),
+            ("total_fevals", json::num(o.total_fevals as f64)),
+        ]));
+        best_static = best_static.max(tp);
+        worst_static = worst_static.min(tp);
+    }
+    let auto = drive_kind(SolverKind::Auto);
+    let auto_tp = auto.throughput();
+    let auto_ok =
+        auto_tp >= AUTO_MIN_FRAC * best_static && auto_tp > worst_static;
+    println!(
+        "auto-gate {:<9} {auto_tp:.0} req/s mean_fevals={:.1} switches={} \
+         ({:.2}x best static, {:.2}x worst){}",
+        "auto",
+        auto.total_fevals as f64 / auto.served.max(1) as f64,
+        auto.auto_switches,
+        auto_tp / best_static.max(1e-9),
+        auto_tp / worst_static.max(1e-9),
+        if auto_ok { "" } else { "  [GATE VIOLATED]" }
+    );
+
     // Replica scaling at overload: the acceptance story is that N > 1
     // replicas beat 1 on throughput once offered load exceeds one
     // replica's capacity.  Reported (JSON + stdout) but not gated — CI
@@ -200,6 +261,24 @@ fn main() {
         ("capacity_rps", json::num(capacity_rps)),
         ("saturation", Json::Arr(sat_rows)),
         ("overload_speedup", json::num(speedup)),
+        (
+            "auto_selection",
+            json::obj(vec![
+                ("statics", Json::Arr(static_rows)),
+                ("auto_throughput_rps", json::num(auto_tp)),
+                (
+                    "auto_total_fevals",
+                    json::num(auto.total_fevals as f64),
+                ),
+                ("auto_switches", json::num(auto.auto_switches as f64)),
+                ("vs_best_static", json::num(auto_tp / best_static.max(1e-9))),
+                (
+                    "vs_worst_static",
+                    json::num(auto_tp / worst_static.max(1e-9)),
+                ),
+                ("gate_ok", Json::Bool(auto_ok)),
+            ]),
+        ),
     ]);
     std::fs::write(&out_path, json::to_string(&summary) + "\n")
         .expect("write bench summary");
@@ -210,6 +289,15 @@ fn main() {
             "graceful-degradation gate FAILED: a ≥10x-load run crashed, \
              errored accepted requests, or blew the {P99_BOUND:?} p99 bound"
         );
+    }
+    if !auto_ok {
+        eprintln!(
+            "auto-selection gate FAILED: auto throughput {auto_tp:.1} req/s \
+             vs best static {best_static:.1} (needs >= {AUTO_MIN_FRAC}x) and \
+             worst static {worst_static:.1} (needs strictly more)"
+        );
+    }
+    if !gate_ok || !auto_ok {
         std::process::exit(1);
     }
 }

@@ -56,6 +56,9 @@ pub struct ModeOutcome {
     /// Fevals saved vs a lockstep solve over the same lanes (iteration-
     /// level mode only, else 0).
     pub fevals_saved: u64,
+    /// Forward↔Anderson switches taken by auto-selection lanes (0 for
+    /// static solver kinds).
+    pub auto_switches: u64,
 }
 
 impl ModeOutcome {
@@ -114,6 +117,10 @@ pub fn drive(
         occ.mean()
     };
     let fevals_saved = router.metrics.fevals_saved();
+    let auto_switches = router
+        .metrics
+        .auto_switches
+        .load(std::sync::atomic::Ordering::Relaxed);
     router.shutdown();
     Ok(ModeOutcome {
         served: predictions.len(),
@@ -133,6 +140,7 @@ pub fn drive(
         } else {
             0
         },
+        auto_switches,
     })
 }
 
@@ -364,6 +372,98 @@ pub fn run(engine: &Arc<dyn Backend>, opts: &ExpOptions) -> Result<()> {
     println!(
         "[serving] iteration-level strictly better on every mixed-difficulty mix: {}",
         if all_better { "YES" } else { "NO" }
+    );
+
+    auto_vs_static(engine, &params, total, opts)?;
+    Ok(())
+}
+
+/// A/B the online auto-selection controller against every static solver
+/// kind, per mix ratio, on the iteration-level scheduler.  The claim
+/// under test is Fig. 1 made operational: no single static kind wins
+/// every mix (forward wins pure-easy, Anderson wins pure-stiff), and the
+/// per-lane crossover controller should track the winner across the
+/// sweep without being told the workload.  Each run gets a fresh router
+/// (cold priors — the controller earns its keep from the probe window
+/// alone here; prior learning is exercised by the serving bench and the
+/// unit tests).  Writes `auto_vs_static.csv`.
+fn auto_vs_static(
+    engine: &Arc<dyn Backend>,
+    params: &Arc<ParamSet>,
+    total: usize,
+    opts: &ExpOptions,
+) -> Result<()> {
+    let kinds = [
+        SolverKind::Forward,
+        SolverKind::Anderson,
+        SolverKind::Hybrid,
+        SolverKind::Auto,
+    ];
+    let mut csv = Csv::new(&[
+        "stiff_frac",
+        "solver",
+        "served",
+        "mean_fevals",
+        "p50_ms",
+        "p95_ms",
+        "throughput_rps",
+        "auto_switches",
+    ]);
+    for &frac in &[0.0f32, 0.5, 1.0] {
+        let images = mixed_traffic(total, frac, opts.seed);
+        let mut best_static = f64::NEG_INFINITY;
+        let mut worst_static = f64::INFINITY;
+        let mut auto_tp = 0.0f64;
+        for kind in kinds {
+            let solver = SolveSpec {
+                tol: 1e-4,
+                max_iter: 80,
+                ..SolveSpec::from_manifest(engine.as_ref(), kind)
+            };
+            let o = drive(
+                engine,
+                params,
+                &images,
+                SchedMode::IterationLevel,
+                &solver,
+                1,
+            )?;
+            let tp = o.throughput();
+            if kind == SolverKind::Auto {
+                auto_tp = tp;
+            } else {
+                best_static = best_static.max(tp);
+                worst_static = worst_static.min(tp);
+            }
+            let mean_fevals = o.total_fevals as f64 / o.served.max(1) as f64;
+            println!(
+                "[serving] stiff={frac:.2}  {:>8}: mean_fevals={mean_fevals:.1} \
+                 p50={:.1}ms {tp:.0} req/s switches={}",
+                kind.name(),
+                o.p50.as_secs_f64() * 1e3,
+                o.auto_switches,
+            );
+            csv.row(&[
+                format!("{frac:.2}"),
+                kind.name().to_string(),
+                o.served.to_string(),
+                format!("{mean_fevals:.2}"),
+                format!("{:.3}", o.p50.as_secs_f64() * 1e3),
+                format!("{:.3}", o.p95.as_secs_f64() * 1e3),
+                format!("{tp:.1}"),
+                o.auto_switches.to_string(),
+            ]);
+        }
+        println!(
+            "[serving] stiff={frac:.2}  auto vs static: {:.2}x best, {:.2}x worst",
+            auto_tp / best_static.max(1e-9),
+            auto_tp / worst_static.max(1e-9),
+        );
+    }
+    csv.save(opts.out_dir.join("auto_vs_static.csv"))?;
+    println!(
+        "[serving] wrote {}",
+        opts.out_dir.join("auto_vs_static.csv").display()
     );
     Ok(())
 }

@@ -38,9 +38,9 @@ const USAGE: &str = "\
 usage: deq-anderson <command> [flags]
 
 commands:
-  train             --solver anderson|forward|hybrid --epochs N --train-size N
-                    --test-size N --batch N --backward jfb|neumann
-                    --checkpoint PATH --explicit
+  train             --solver anderson|forward|hybrid|auto --epochs N
+                    --train-size N --test-size N --batch N
+                    --backward jfb|neumann --checkpoint PATH --explicit
   infer             --n N [--checkpoint PATH]
   serve             --addr 127.0.0.1:7070 --max-wait-ms N
                     --sched iteration|batch (default iteration: lanes
@@ -55,6 +55,9 @@ commands:
                     don't send their own; 0 = none)
                     --redrive-budget N (times an in-flight request is
                     re-queued after a replica crash; default 1)
+                    --solver auto (per-lane forward/Anderson crossover
+                    auto-selection, seeded by learned per-bucket priors;
+                    clients may also send \"solver\":\"auto\" per request)
   experiment ID     table1|fig1|fig2|fig5|fig6|fig7|ablation|serving|all
                     --train-size N --test-size N --epochs N
   sweep             --windows 1,2,5,8 --betas 0.5,0.8,1.0 --dim N
@@ -118,7 +121,9 @@ fn apply_solver_flags(args: &Args, base: SolveSpec) -> Result<SolveSpec> {
 /// kind, plus the shared solver flags.
 fn spec_from(args: &Args, engine: &dyn Backend) -> Result<SolveSpec> {
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
-        .context("bad --solver (expected forward|anderson|hybrid)")?;
+        .with_context(|| {
+            format!("bad --solver (expected {})", SolverKind::expected())
+        })?;
     apply_solver_flags(args, SolveSpec::from_manifest(engine, kind))
 }
 
@@ -143,7 +148,9 @@ fn main() -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let engine = backend_from(args)?;
     let kind = SolverKind::parse(&args.str_or("solver", "anderson"))
-        .context("bad --solver")?;
+        .with_context(|| {
+            format!("bad --solver (expected {})", SolverKind::expected())
+        })?;
     let epochs = args.usize_or("epochs", 5);
     let mut cfg = default_config(&engine, kind, epochs);
     cfg.batch = args.usize_or("batch", 32);

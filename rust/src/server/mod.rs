@@ -79,7 +79,10 @@ use crate::infer;
 use crate::metrics::Stats;
 use crate::model::ParamSet;
 use crate::runtime::Backend;
-use crate::solver::{SolveClamps, SolveOverrides, SolveSpec};
+use crate::solver::{
+    ProfileStore, SolveClamps, SolveOverrides, SolveSpec, SolverKind,
+    WorkloadProfile,
+};
 use crate::util::json::{self, Json};
 
 /// Per-iteration streaming callback: `(iteration, relative residual)`,
@@ -349,6 +352,12 @@ pub struct ServerMetrics {
     /// push), so `queue_depth_p50`/`max` describe the backlog admitted
     /// requests actually waited behind.
     pub queue_depth: Mutex<Stats>,
+    /// Forward↔Anderson switches taken by auto-selection lanes (the
+    /// [`crate::solver::AutoPolicy`] controller), summed at retirement.
+    pub auto_switches: AtomicU64,
+    /// Lane-retirement histogram by effective solver kind, indexed in
+    /// [`SolverKind::ALL`] order (forward, anderson, hybrid, auto).
+    pub retired_by_kind: [AtomicU64; 4],
     /// Per-replica gauges, one slot per worker.  Empty under
     /// `Default`; sized by [`ServerMetrics::new`] (the router always
     /// uses `new`).
@@ -423,6 +432,16 @@ impl ServerMetrics {
     /// One lane retired after `solve` wallclock in its lane.
     pub fn record_retire(&self, solve: Duration) {
         lock_unpoisoned(&self.time_to_retire).push_duration(solve);
+    }
+
+    /// One request retired under effective solver `kind` — feeds the
+    /// per-kind retirement histogram in [`Self::stat_pairs`].
+    pub fn record_kind_retired(&self, kind: SolverKind) {
+        let idx = SolverKind::ALL
+            .iter()
+            .position(|k| *k == kind)
+            .expect("SolverKind::ALL covers every kind");
+        self.retired_by_kind[idx].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Cell evaluations saved vs a lockstep batch-granular solve of the
@@ -509,6 +528,20 @@ impl ServerMetrics {
             ("queue_depth_max", {
                 let v = if depth.count() == 0 { 0.0 } else { depth.max() };
                 json::num(v)
+            }),
+            (
+                "auto_switches",
+                json::num(self.auto_switches.load(Ordering::Relaxed) as f64),
+            ),
+            ("retired_by_kind", {
+                let kinds: Vec<(&'static str, Json)> = SolverKind::ALL
+                    .iter()
+                    .zip(&self.retired_by_kind)
+                    .map(|(k, n)| {
+                        (k.name(), json::num(n.load(Ordering::Relaxed) as f64))
+                    })
+                    .collect();
+                json::obj(kinds)
             }),
             ("summary", json::s(&summary)),
         ];
@@ -602,6 +635,10 @@ pub struct Router {
     /// The serving backend, kept so stats endpoints can surface its
     /// hot-path counters (workspace pool, packed-weight cache).
     backend: Arc<dyn Backend>,
+    /// Per-bucket workload profiles learned by the schedulers (decay
+    /// rates, mixing penalties, retirement mix) — seeds auto-selection
+    /// priors and feeds the TCP `stats` surface.
+    profiles: Arc<ProfileStore>,
 }
 
 impl Router {
@@ -634,6 +671,7 @@ impl Router {
         let image_dim = engine.manifest().model.image_dim();
         let backend = engine.clone();
         let slots = Arc::new(replica::ReplicaSlots::new(cfg.replicas, max_bucket));
+        let profiles = Arc::new(ProfileStore::new());
 
         let ctx = Arc::new(supervise::ReplicaCtx {
             engine,
@@ -643,6 +681,7 @@ impl Router {
             cfg: cfg.clone(),
             buckets,
             slots,
+            profiles: profiles.clone(),
         });
         // The supervisor keeps a sender clone alive, so `recv` on this
         // channel can never see Disconnected while it runs.
@@ -665,7 +704,15 @@ impl Router {
             image_dim,
             total_lanes,
             backend,
+            profiles,
         })
+    }
+
+    /// Snapshot of the per-bucket workload profiles the schedulers have
+    /// learned so far (empty until auto/learning traffic retires lanes)
+    /// — surfaced by the TCP `stats` command.
+    pub fn profile_snapshot(&self) -> Vec<(usize, WorkloadProfile)> {
+        self.profiles.snapshot()
     }
 
     /// Hot-path counters of the serving backend (workspace pool +
@@ -893,6 +940,7 @@ pub(crate) fn run_batch(
                 }
                 metrics.record(latency, count, bucket);
                 metrics.replica_served(replica);
+                metrics.record_kind_retired(req.spec.kind);
                 let _ = req.respond.send(Ok(Response {
                     id: req.id,
                     class: result.predictions[i],

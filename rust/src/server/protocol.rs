@@ -170,7 +170,12 @@ pub fn parse_overrides(parsed: &Json) -> Result<SolveOverrides, String> {
             .as_str()
             .ok_or_else(|| "override 'solver' must be a string".to_string())?;
         ov.kind = Some(SolverKind::parse(name).ok_or_else(|| {
-            format!("unknown solver '{name}' (expected forward|anderson|hybrid)")
+            // Derived from the kind enum so the accepted-name list can
+            // never drift from what `parse` actually takes.
+            format!(
+                "unknown solver '{name}' (expected {})",
+                SolverKind::expected()
+            )
         })?);
     }
     if let Some(v) = parsed.get("tol") {

@@ -55,7 +55,10 @@ use crate::server::{
 };
 use crate::solver::anderson::LaneHistory;
 use crate::solver::driver::damp_in_place;
-use crate::solver::{per_sample_rel, policy_for, LaneStep, SolvePolicy};
+use crate::solver::{
+    per_sample_rel, policy_for, AutoPolicy, LaneStep, ProfileStore,
+    SolvePolicy, SolverKind,
+};
 
 /// One occupied slot of the solve loop.
 struct Lane {
@@ -123,10 +126,13 @@ pub(crate) fn run(ctx: &ReplicaCtx, replica: usize) -> RunOutcome {
 /// fits, and splice each feature row + a zero initial iterate into its
 /// lane's slices of the persistent batch tensors.  Each admitted lane
 /// gets a fresh policy instance built from its request's effective spec
-/// (window clamped to the scheduler's shared history window).  Client-
-/// level problems (bad image size, encode failure) are replied inline
-/// and leave the lane free; only internal invariant violations propagate
-/// as `Err`.
+/// (window clamped to the scheduler's shared history window); `auto`
+/// lanes are seeded with the workload prior `profiles` has learned for
+/// `prior_bucket`, so the controller's crossover estimate starts from
+/// this workload's observed decay rate and mixing penalty instead of
+/// cold defaults.  Client-level problems (bad image size, encode
+/// failure) are replied inline and leave the lane free; only internal
+/// invariant violations propagate as `Err`.
 #[allow(clippy::too_many_arguments)] // flat splice over the loop's state
 fn admit_all(
     engine: &dyn Backend,
@@ -138,6 +144,8 @@ fn admit_all(
     lanes: &mut [Option<Lane>],
     admitted: Vec<(usize, Request)>,
     window: usize,
+    profiles: &ProfileStore,
+    prior_bucket: usize,
 ) -> Result<()> {
     if admitted.is_empty() {
         return Ok(());
@@ -181,7 +189,14 @@ fn admit_all(
         // echoed spec reflects that (an override can't widen a ring that
         // is allocated once for all lanes).
         req.spec.window = window;
-        let policy = policy_for(&req.spec);
+        let policy: Box<dyn SolvePolicy + Send> = if req.spec.kind == SolverKind::Auto {
+            Box::new(AutoPolicy::with_prior(
+                &req.spec,
+                profiles.prior(prior_bucket),
+            ))
+        } else {
+            policy_for(&req.spec)
+        };
         lanes[lane_idx] = Some(Lane {
             req,
             policy,
@@ -216,6 +231,7 @@ fn serve_loop(
     let params = ctx.params.as_ref();
     let queue = ctx.queue.as_ref();
     let metrics = ctx.metrics.as_ref();
+    let profiles = ctx.profiles.as_ref();
     let cfg = &ctx.cfg;
     let buckets = &ctx.buckets;
     let slots = ctx.slots.as_ref();
@@ -319,6 +335,11 @@ fn serve_loop(
             .collect();
         slots.set_free(replica, free.len() - admitted.len());
         {
+            // The workload-profile key is the lockstep bucket the lane
+            // set occupies after this admission wave — the same key
+            // retirements and iteration costs are recorded under below.
+            let occupied_after = bucket - (free.len() - admitted.len());
+            let prior_bucket = pick_bucket(buckets, occupied_after);
             let (head, tail) = cell_inputs.split_at_mut(x_slot);
             admit_all(
                 engine,
@@ -330,6 +351,8 @@ fn serve_loop(
                 lanes,
                 admitted,
                 window,
+                profiles,
+                prior_bucket,
             )?;
         }
         if lanes.iter().all(Option::is_none) {
@@ -337,6 +360,7 @@ fn serve_loop(
         }
 
         // --- one solve iteration over the whole lane set ---
+        let iter_t0 = Instant::now();
         let mut out = engine.execute("cell_step", bucket, &cell_inputs)?;
         let fnorm_t = out.pop().expect("cell_step returns 3 outputs");
         let res_t = out.pop().expect("cell_step returns 3 outputs");
@@ -344,7 +368,8 @@ fn serve_loop(
         let rel = per_sample_rel(&res_t, &fnorm_t, cfg.solver.lam)?;
         engine.recycle(vec![res_t, fnorm_t]);
         let occupied = lanes.iter().filter(|l| l.is_some()).count();
-        metrics.record_iteration(occupied, bucket, pick_bucket(buckets, occupied));
+        let lockstep = pick_bucket(buckets, occupied);
+        metrics.record_iteration(occupied, bucket, lockstep);
         metrics.replica_iteration(replica, occupied, bucket);
 
         retire_mask.fill(false);
@@ -424,6 +449,25 @@ fn serve_loop(
                 metrics.record(latency, occupied, bucket);
                 metrics.record_retire(lane.admitted.elapsed());
                 metrics.replica_served(replica);
+                metrics.record_kind_retired(lane.req.spec.kind);
+                // Feed the workload profile: every retirement updates
+                // the bucket's iteration/feval averages, and auto lanes
+                // additionally contribute their fitted decay rate,
+                // observed Anderson speedup and switch count — the
+                // prior the next auto lane in this bucket starts from.
+                let auto = lane.policy.auto_stats();
+                if let Some(a) = &auto {
+                    metrics
+                        .auto_switches
+                        .fetch_add(a.switches, Ordering::Relaxed);
+                }
+                profiles.record_retirement(
+                    lockstep,
+                    lane.req.spec.kind,
+                    lane.iters,
+                    lane.fevals,
+                    auto,
+                );
                 // Distinguishes tol-crossing retirement from a lane cut
                 // off at its iteration/feval budget.
                 let converged = rel[i] < lane.req.spec.tol;
@@ -476,6 +520,12 @@ fn serve_loop(
                     if let Some(rule) = lane.policy.window_rule() {
                         hist.adapt_lane(i, rule, cfg.solver.lam);
                     }
+                    // Auto lanes additionally cap the mixing depth at
+                    // the window their controller sized from the
+                    // predicted remaining decades.
+                    if let Some(depth) = lane.policy.window_depth() {
+                        hist.truncate_lane(i, depth);
+                    }
                     mix_mask[i] = true;
                 }
                 LaneStep::Restart => {
@@ -512,5 +562,16 @@ fn serve_loop(
             cell_inputs[z_slot].overwrite_rows_where(&f, &fwd_mask)?;
         }
         engine.recycle(vec![f]);
+        // Live mixing-penalty estimate: per-lane wallclock of this
+        // iteration, binned by whether any lane mixed — the ratio of
+        // the two EWMAs is the penalty `p` auto lanes price Anderson
+        // steps with (Fig. 1 crossover, measured in situ).
+        if occupied > 0 {
+            profiles.record_iteration_cost(
+                lockstep,
+                mix_mask.iter().any(|&b| b),
+                iter_t0.elapsed().as_secs_f64() / occupied as f64,
+            );
+        }
     }
 }

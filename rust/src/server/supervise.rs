@@ -38,6 +38,7 @@ use crate::server::{
     drain_with_error, lock_unpoisoned, Queue, Request, RouterConfig,
     ServeFailure, ServerMetrics,
 };
+use crate::solver::ProfileStore;
 
 /// Everything a replica worker needs to run, bundled so respawning a
 /// crashed replica is a single `replica::spawn(r, ctx, exits)` call.
@@ -49,6 +50,9 @@ pub(crate) struct ReplicaCtx {
     pub cfg: RouterConfig,
     pub buckets: Vec<usize>,
     pub slots: Arc<ReplicaSlots>,
+    /// Per-bucket workload learning (auto-selection priors), shared with
+    /// the router's stats surface.
+    pub profiles: Arc<ProfileStore>,
 }
 
 /// How one replica worker's serve loop ended.

@@ -200,6 +200,43 @@ fn run_cmd(router: &Router, cmd: &str) -> Json {
                 "faults_injected",
                 json::num(router.backend_faults_injected() as f64),
             ));
+            // Per-bucket workload profiles the schedulers have learned:
+            // the priors seeding each new auto-selection lane, surfaced
+            // so switch decisions are explainable from the outside.
+            // Empty until lanes retire; rate/penalty/speedup fields are
+            // omitted until at least one observation exists.
+            let profiles: Vec<Json> = router
+                .profile_snapshot()
+                .into_iter()
+                .map(|(bucket, p)| {
+                    let mut fields = vec![
+                        ("bucket", json::num(bucket as f64)),
+                        ("lanes", json::num(p.lanes as f64)),
+                        ("switches", json::num(p.switches as f64)),
+                        (
+                            "auto_on_anderson",
+                            json::num(p.auto_on_anderson as f64),
+                        ),
+                    ];
+                    if let Some(v) = p.mean_iters() {
+                        fields.push(("mean_iters", json::num(v as f64)));
+                    }
+                    if let Some(v) = p.mean_fevals() {
+                        fields.push(("mean_fevals", json::num(v as f64)));
+                    }
+                    if let Some(r) = p.decay_rate() {
+                        fields.push(("decay_rate", json::num(r as f64)));
+                    }
+                    if let Some(s) = p.anderson_speedup() {
+                        fields.push(("anderson_speedup", json::num(s as f64)));
+                    }
+                    if let Some(m) = p.mixing_penalty() {
+                        fields.push(("mixing_penalty", json::num(m as f64)));
+                    }
+                    json::obj(fields)
+                })
+                .collect();
+            pairs.push(("workload_profiles", Json::Arr(profiles)));
             // Pack-cache + workspace health of the serving backend:
             // in steady state `pack_hits` grows while misses and
             // invalidations stay flat (invalidations move only when

@@ -132,6 +132,11 @@ impl History {
         assert_eq!(fz.len(), self.batch * self.n);
         assert_eq!(active.len(), self.batch);
         let slot = self.count % self.m;
+        // A fresh push always re-arms its slot: depth truncation (see
+        // [`Self::truncate`]) may have dropped it on an earlier
+        // iteration, and unlike `adapt` — which rebuilds every keep flag
+        // per call — truncation leaves the other flags alone.
+        self.keep[slot] = true;
         for b in 0..self.batch {
             if !active[b] {
                 continue;
@@ -256,6 +261,37 @@ impl History {
             }
         }
         out
+    }
+
+    /// Cap the window at the `depth` newest kept slots (the
+    /// auto-selection controller sizes the mixing depth from a lane's
+    /// predicted remaining decades — see `solver::select`).  Runs on the
+    /// keep flags left by the last [`Self::adapt`] pass (all-true when
+    /// adaptation never ran), so call it after `adapt` and before
+    /// `fill_tensors`.  Returns the number of slots dropped; the newest
+    /// slot always survives.
+    pub fn truncate(&mut self, depth: usize) -> usize {
+        let depth = depth.max(1);
+        let nv = self.valid();
+        if nv == 0 {
+            return 0;
+        }
+        let mut kept = 0;
+        let mut dropped = 0;
+        // Walk slots newest-first; beyond `depth` kept ones, drop.
+        for age in 0..nv {
+            let slot = (self.count - 1 - age) % self.m;
+            if !self.keep[slot] {
+                continue;
+            }
+            if kept < depth {
+                kept += 1;
+            } else {
+                self.keep[slot] = false;
+                dropped += 1;
+            }
+        }
+        dropped
     }
 
     /// Mask vector over the padded slots: 1.0 for valid ring entries the
@@ -564,6 +600,37 @@ impl LaneHistory {
         out
     }
 
+    /// Cap one lane's live window at the `depth` newest distinct pairs —
+    /// the [`History::truncate`] twin for the scheduler, using the same
+    /// overwrite-with-newest drop idiom as [`Self::adapt_lane`] (the
+    /// shared kernel mask cannot carry per-lane holes).  Returns the
+    /// number of slots dropped; the newest slot always survives.  Call
+    /// after `adapt_lane` and before `fill_tensors`.
+    pub fn truncate_lane(&mut self, lane: usize, depth: usize) -> usize {
+        let depth = depth.max(1);
+        let c = self.count[lane];
+        if c == 0 {
+            return 0;
+        }
+        let newest = self.newest_slot(lane);
+        let base = lane * self.slots;
+        let mut kept = 0;
+        let mut dropped = 0;
+        for age in 0..c.min(self.m) {
+            let slot = (c - 1 - age) % self.m;
+            if !self.live[base + slot] {
+                continue;
+            }
+            if kept < depth {
+                kept += 1;
+            } else {
+                self.drop_slot(lane, slot, newest);
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
     /// Drop one slot of a lane: overwrite it with the lane's newest pair
     /// and mark it not-live.  The shared mask keeps covering the slot —
     /// the duplicate row just spreads mixing weight onto the newest
@@ -849,6 +916,53 @@ mod tests {
         let out = h.adapt(rule, 1e-3);
         assert_eq!(out.dropped(), 0);
         assert_eq!(h.mask(), fixed);
+    }
+
+    #[test]
+    fn history_truncate_keeps_newest_slots() {
+        let mut h = History::new(1, 4, 3);
+        for (k, norm) in [1.0, 2.0, 3.0, 4.0].into_iter().enumerate() {
+            push_with_norm(&mut h, norm, k);
+        }
+        // Depth 2 keeps the two newest pushes (ring slots 2 and 3).
+        assert_eq!(h.truncate(2), 2);
+        assert_eq!(h.mask(), vec![0.0, 0.0, 1.0, 1.0]);
+        // Depth 1 after adapt-reset: adapt rebuilds keep, truncate caps.
+        let rule = WindowRule {
+            errorfactor: 1e6,
+            cond_max: f32::INFINITY,
+            gram: GramMode::Exact,
+        };
+        h.adapt(rule, 1e-3);
+        assert_eq!(h.truncate(1), 3);
+        assert_eq!(h.mask(), vec![0.0, 0.0, 0.0, 1.0]);
+        // Depth 0 clamps to 1: the newest slot always survives.
+        h.adapt(rule, 1e-3);
+        assert_eq!(h.truncate(0), 3);
+        assert_eq!(h.mask().iter().sum::<f32>(), 1.0);
+        // Depth beyond the window is a no-op.
+        h.adapt(rule, 1e-3);
+        assert_eq!(h.truncate(10), 0);
+    }
+
+    #[test]
+    fn lane_truncate_drops_oldest_live_and_keeps_newest() {
+        let mut h = LaneHistory::new(2, 3, 3, 2);
+        h.push_lane(0, &[0.0, 0.0], &[1.0, 0.0]);
+        h.push_lane(0, &[0.0, 0.0], &[0.0, 2.0]);
+        h.push_lane(0, &[0.0, 0.0], &[3.0, 0.1]);
+        assert_eq!(h.live_slots(0), vec![0, 1, 2]);
+        assert_eq!(h.truncate_lane(0, 2), 1);
+        // The oldest live slot (0) was overwritten with the newest pair
+        // and marked not-live; the two newest survive.
+        assert_eq!(h.live_slots(0), vec![1, 2]);
+        assert_eq!(h.truncate_lane(0, 2), 0);
+        // Depth 0 clamps to 1 live slot (the newest).
+        assert_eq!(h.truncate_lane(0, 0), 1);
+        assert_eq!(h.live_slots(0), vec![2]);
+        // Untouched lane 1, and an empty lane is a no-op.
+        assert!(h.live_slots(1).is_empty());
+        assert_eq!(h.truncate_lane(1, 1), 0);
     }
 
     #[test]

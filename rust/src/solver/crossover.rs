@@ -232,4 +232,62 @@ mod tests {
         let rep = analyze(&a, &f);
         assert!((rep.mixing_penalty - 3.0).abs() < 1e-3);
     }
+
+    #[test]
+    fn time_to_target_pins_the_first_crossing_of_a_non_monotone_trace() {
+        // Residuals are not monotone in general (restarts, safeguarded
+        // steps): 1.0 → 0.05 (transient dip) → 0.5 → 0.01.  The contract
+        // is *first* crossing, so the dip at t=2µs is the answer for
+        // target 0.1 even though the trace rises above it afterwards.
+        let tr: Vec<TracePoint> = [1.0f32, 0.05, 0.5, 0.01]
+            .iter()
+            .enumerate()
+            .map(|(k, &r)| TracePoint {
+                t: Duration::from_micros(k as u64 + 1),
+                residual: r,
+            })
+            .collect();
+        assert_eq!(
+            time_to_target(&tr, 0.1),
+            Some(Duration::from_micros(2)),
+            "must take the transient dip, not the later stable crossing"
+        );
+        // A target below the dip but above the tail resolves to the tail.
+        assert_eq!(time_to_target(&tr, 0.02), Some(Duration::from_micros(4)));
+        assert_eq!(time_to_target(&tr, 1e-3), None);
+    }
+
+    #[test]
+    fn single_point_traces_analyze_without_panicking() {
+        let a = fake_report(SolverKind::Anderson, 300, 0.5, 1);
+        let f = fake_report(SolverKind::Forward, 100, 0.9, 1);
+        let rep = analyze(&a, &f);
+        // Both one-point traces sit at residual 1.0 (rate^0): every
+        // target is reached immediately by both, anderson is never
+        // *strictly* faster, and the penalty is the plain cost ratio.
+        assert_eq!(rep.targets.len(), rep.times.len());
+        assert!(rep.crossover_residual.is_none());
+        assert!((rep.mixing_penalty - 3.0).abs() < 1e-3);
+        let tr = trace(&a);
+        assert_eq!(time_to_target(&tr, 1.0), Some(Duration::from_micros(300)));
+        assert!(time_to_target(&tr, 0.5).is_none());
+    }
+
+    #[test]
+    fn no_crossover_when_anderson_never_reaches_any_deep_target() {
+        // Anderson stalls flat at its starting residual (rate 1.0) while
+        // forward descends: the (None, Some) and (None, None) detector
+        // arms must never claim a crossover.
+        let a = fake_report(SolverKind::Anderson, 300, 1.0, 10);
+        let f = fake_report(SolverKind::Forward, 100, 0.8, 40);
+        let rep = analyze(&a, &f);
+        assert!(rep.crossover_residual.is_none());
+        // Below anderson's flatline only forward ever arrives.
+        assert!(rep
+            .times
+            .iter()
+            .zip(&rep.targets)
+            .filter(|(_, &tg)| tg < 0.99)
+            .all(|((ta, tf), _)| ta.is_none() && tf.is_some()));
+    }
 }

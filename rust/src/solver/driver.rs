@@ -240,6 +240,13 @@ pub fn drive<P: SolvePolicy + ?Sized>(
                 if let Some(rule) = policy.window_rule() {
                     hist.adapt(rule, spec.lam);
                 }
+                // The auto-selection controller additionally caps the
+                // mixing depth at the window it sized from the predicted
+                // remaining decades; static policies return None and the
+                // mask is untouched.
+                if let Some(depth) = policy.window_depth() {
+                    hist.truncate(depth);
+                }
                 {
                     let [xh, fh, mask] = &mut *and_inputs;
                     hist.fill_tensors(xh, fh, mask)?;

@@ -34,6 +34,7 @@ pub mod anderson;
 pub mod crossover;
 pub mod driver;
 pub mod policy;
+pub mod select;
 pub mod spec;
 
 use std::time::Duration;
@@ -49,6 +50,9 @@ pub use policy::{
     policy_for, AdaptiveAndersonPolicy, AndersonPolicy, ForwardPolicy,
     LaneStep, SolvePolicy, WindowRule,
 };
+pub use select::{
+    AutoPolicy, AutoStats, ProfileStore, WorkloadPrior, WorkloadProfile,
+};
 pub use spec::{
     Damping, GramMode, SolveClamps, SolveOverrides, SolveSpec,
     SolveSpecBuilder, StagnationRule, DEFAULT_COND_MAX, DEFAULT_ERRORFACTOR,
@@ -61,14 +65,29 @@ pub enum SolverKind {
     Anderson,
     /// Anderson with stagnation fallback (paper §4).
     Hybrid,
+    /// Online auto-selection: probe forward, fit the contraction rate,
+    /// switch across the Fig. 1 crossover mid-solve (see [`select`]).
+    Auto,
 }
 
 impl SolverKind {
+    /// Every parseable kind, in canonical order.  The single source for
+    /// CLI/wire "expected ..." error messages — see [`Self::expected`].
+    pub const ALL: [Self; 4] =
+        [Self::Forward, Self::Anderson, Self::Hybrid, Self::Auto];
+
+    /// The accepted kind names, `|`-joined, for error payloads:
+    /// `"forward|anderson|hybrid|auto"`.
+    pub const fn expected() -> &'static str {
+        "forward|anderson|hybrid|auto"
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "forward" => Some(Self::Forward),
             "anderson" => Some(Self::Anderson),
             "hybrid" => Some(Self::Hybrid),
+            "auto" => Some(Self::Auto),
             _ => None,
         }
     }
@@ -78,6 +97,7 @@ impl SolverKind {
             Self::Forward => "forward",
             Self::Anderson => "anderson",
             Self::Hybrid => "hybrid",
+            Self::Auto => "auto",
         }
     }
 }
@@ -709,10 +729,19 @@ mod tests {
 
     #[test]
     fn kind_parse_roundtrip() {
-        for k in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+        for k in SolverKind::ALL {
             assert_eq!(SolverKind::parse(k.name()), Some(k));
         }
         assert_eq!(SolverKind::parse("nope"), None);
+        // The "expected ..." error string is derived from the same list,
+        // so the two can never drift apart.
+        for k in SolverKind::ALL {
+            assert!(SolverKind::expected().split('|').any(|n| n == k.name()));
+        }
+        assert_eq!(
+            SolverKind::expected().split('|').count(),
+            SolverKind::ALL.len()
+        );
     }
 
     #[test]

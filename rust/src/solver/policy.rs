@@ -27,6 +27,7 @@
 //! just per-lane policy state.
 
 use crate::runtime::Backend;
+use crate::solver::select::{AutoPolicy, AutoStats};
 use crate::solver::spec::{Damping, GramMode, SolveSpec};
 use crate::solver::SolverKind;
 
@@ -126,6 +127,24 @@ pub trait SolvePolicy {
     /// Fixed-window policies never override this, which is what keeps
     /// their traces bit-identical to the pre-adaptivity drivers.
     fn window_rule(&self) -> Option<WindowRule> {
+        None
+    }
+
+    /// Depth cap the caller should apply to the lane's history before
+    /// each mix (keep only the N newest distinct pairs); `None` (the
+    /// default) keeps the full window.  Only the auto-selection
+    /// controller overrides this — it sizes the window from the lane's
+    /// predicted remaining decades to `tol`.
+    fn window_depth(&self) -> Option<usize> {
+        None
+    }
+
+    /// Live introspection for the auto-selection controller
+    /// ([`AutoPolicy`](crate::solver::select::AutoPolicy)): switch
+    /// counts, fitted decay rate, observed speedup.  Static policies
+    /// report `None`; the scheduler harvests this at lane retirement to
+    /// feed the per-bucket workload profiles.
+    fn auto_stats(&self) -> Option<AutoStats> {
         None
     }
 }
@@ -469,10 +488,15 @@ impl SolvePolicy for AdaptiveAndersonPolicy {
 /// pre-redesign hybrid semantics).  Anderson-family specs with either
 /// adaptivity knob armed (`adaptive_window` / `safeguard`) get the
 /// [`AdaptiveAndersonPolicy`]; default knobs keep the fixed-window
-/// policies (and their bit-identical traces).
+/// policies (and their bit-identical traces).  `Auto` specs get the
+/// online crossover controller with the library-default prior — the
+/// scheduler's admission path builds
+/// [`AutoPolicy::with_prior`](crate::solver::select::AutoPolicy::with_prior)
+/// directly to seed from the bucket's learned workload profile.
 pub fn policy_for(spec: &SolveSpec) -> Box<dyn SolvePolicy + Send> {
     match spec.kind {
         SolverKind::Forward => Box::new(ForwardPolicy::new(spec)),
+        SolverKind::Auto => Box::new(AutoPolicy::new(spec)),
         SolverKind::Anderson | SolverKind::Hybrid
             if spec.adaptive_window || spec.safeguard =>
         {
@@ -607,10 +631,24 @@ mod tests {
 
     #[test]
     fn policy_for_matches_kind() {
-        for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+        for kind in SolverKind::ALL {
             let spec = SolveSpec::new(kind);
             assert_eq!(policy_for(&spec).kind(), kind);
         }
+    }
+
+    #[test]
+    fn static_policies_report_no_auto_state() {
+        for kind in
+            [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid]
+        {
+            let p = policy_for(&SolveSpec::new(kind));
+            assert!(p.auto_stats().is_none());
+            assert!(p.window_depth().is_none());
+        }
+        let auto = policy_for(&SolveSpec::new(SolverKind::Auto));
+        assert!(auto.uses_history());
+        assert!(auto.auto_stats().is_some());
     }
 
     #[test]

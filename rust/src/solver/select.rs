@@ -1,0 +1,767 @@
+//! Online forward↔Anderson auto-selection — the Fig. 1 crossover closed
+//! as a live, per-lane control loop.
+//!
+//! The paper's offline analysis ([`crate::solver::crossover`]) shows one
+//! crossover per workload: above a residual threshold the per-iteration
+//! mixing penalty makes plain forward iteration cheaper per wallclock,
+//! below it Anderson's iteration savings win.  This module makes that
+//! decision *during* a solve, per lane, with two layers:
+//!
+//!  * [`AutoPolicy`] — a [`SolvePolicy`] for [`SolverKind::Auto`].  It
+//!    runs a short forward probe, fits the lane's residual contraction
+//!    rate `ρ` from the early `observe(rel)` trace (the geometric-mean
+//!    rate estimate from Saad's fixed-point acceleration survey),
+//!    predicts which side of the crossover the lane sits on from the
+//!    remaining decades to `tol` and a mixing-penalty estimate, and
+//!    switches forward↔Anderson mid-solve.  The window depth it mixes
+//!    with is chosen from the predicted remaining decades, and every
+//!    mixed step is safeguarded exactly like
+//!    [`AdaptiveAndersonPolicy`](crate::solver::policy::AdaptiveAndersonPolicy):
+//!    a post-mix residual rise falls back to one plain damped step with
+//!    the window kept.
+//!  * [`ProfileStore`] / [`WorkloadProfile`] — the router-side learning
+//!    layer: per-bucket EWMAs of retired-lane decay rates, chosen kinds,
+//!    iters/fevals to converge, measured Anderson-vs-forward iteration
+//!    cost (the live mixing penalty, same semantics as the
+//!    `mixing_penalty` of
+//!    [`analyze`](crate::solver::crossover::analyze)), and switch
+//!    outcomes.  The store seeds each new
+//!    Auto lane's [`WorkloadPrior`] and is surfaced through the TCP
+//!    `stats` command.
+//!
+//! The crossover prediction compares expected remaining wallclock in
+//! forward-iteration units.  With `d` decades left to `tol`, a fitted
+//! forward rate `ρ_f` (so `d_f = −log₁₀ ρ_f` decades per forward step),
+//! a learned Anderson speedup `s` (decades per iteration, relative to
+//! forward) and mixing penalty `p` (Anderson-iteration cost over
+//! forward-iteration cost):
+//!
+//! ```text
+//! cost_forward  = d / d_f
+//! cost_anderson = p · (w + d / (s · d_f))      w = window warmup
+//! ```
+//!
+//! Anderson wins exactly when the lane is far enough from `tol` that the
+//! iteration savings amortize the per-iteration penalty — the Fig. 1
+//! threshold, evaluated live per lane.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::solver::policy::{LaneStep, SolvePolicy, WindowRule};
+use crate::solver::spec::{Damping, SolveSpec};
+use crate::solver::SolverKind;
+
+/// Forward probe length: residual observations collected before the
+/// first crossover decision (3 successive ratios).
+pub const PROBE_ITERS: usize = 4;
+
+/// Hard cap on forward↔Anderson switches per lane — the controller must
+/// not ping-pong on a noisy trajectory.
+pub const MAX_SWITCHES: u64 = 6;
+
+/// A fitted contraction rate at or above this is treated as
+/// non-contracting: forward iteration alone will not converge, so the
+/// crossover decision short-circuits to Anderson.
+const DIVERGENCE_RHO: f32 = 0.9995;
+
+/// Fit a residual contraction rate from a trace: the clamped geometric
+/// mean of successive ratios `r_{k+1}/r_k` (Saad's per-iteration decay
+/// estimate).  Non-finite and non-positive points are skipped; `None`
+/// when no usable ratio exists (fewer than two valid points).
+pub fn fit_rate(trace: &[f32]) -> Option<f32> {
+    let mut sum = 0.0f64;
+    let mut n = 0u32;
+    for w in trace.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if a.is_finite() && b.is_finite() && a > 0.0 && b > 0.0 {
+            sum += f64::from((b / a).clamp(1e-3, 1e3)).ln();
+            n += 1;
+        }
+    }
+    (n > 0).then(|| ((sum / f64::from(n)).exp() as f32).clamp(1e-2, 1e3))
+}
+
+/// The prior an Auto lane starts from — either the library defaults or a
+/// bucket's learned [`WorkloadProfile`] (see [`ProfileStore::prior`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadPrior {
+    /// Expected forward contraction rate ρ_f (residual multiplier per
+    /// forward iteration).
+    pub decay_rate: f32,
+    /// Anderson-iteration cost over forward-iteration cost (> 1; the
+    /// Fig. 1 mixing penalty, with the semantics of
+    /// [`analyze`](crate::solver::crossover::analyze)).
+    pub mixing_penalty: f32,
+    /// Decades-per-iteration multiplier Anderson achieves over forward.
+    pub anderson_speedup: f32,
+}
+
+impl Default for WorkloadPrior {
+    fn default() -> Self {
+        // Conservative seeds: a moderately stiff lane, the typical
+        // measured window-5 mixing penalty, and the several-fold
+        // iteration saving the paper's Fig. 1 regime exhibits.
+        Self { decay_rate: 0.9, mixing_penalty: 1.5, anderson_speedup: 4.0 }
+    }
+}
+
+/// Live introspection of one Auto lane, harvested by the scheduler at
+/// retirement (and by tests mid-solve).  Static policies report `None`
+/// from [`SolvePolicy::auto_stats`].
+#[derive(Debug, Clone, Copy)]
+pub struct AutoStats {
+    /// Forward↔Anderson switch decisions taken so far.
+    pub switches: u64,
+    /// The side of the crossover the lane currently iterates on.
+    pub active: SolverKind,
+    /// Fitted forward contraction rate ρ_f (None until the probe fit).
+    pub decay_rate: Option<f32>,
+    /// Observed Anderson speedup (decades/iter over forward) while the
+    /// lane mixed; None before enough mixed steps.
+    pub anderson_speedup: Option<f32>,
+    /// The window depth chosen at the last switch to Anderson.
+    pub window_depth: Option<usize>,
+}
+
+/// The in-solve half of the auto-selection subsystem (see the module
+/// docs for the decision rule).  One instance owns one lane's (or one
+/// batch cohort's) controller state.
+#[derive(Debug, Clone)]
+pub struct AutoPolicy {
+    tol: f32,
+    max_window: usize,
+    damping: Damping,
+    /// Condition-monitored window rule, armed only when the spec armed
+    /// `adaptive_window` (mirroring the adaptive Anderson policy).
+    rule: Option<WindowRule>,
+    prior: WorkloadPrior,
+    /// Residual trajectory of the *current* phase (cleared on switch).
+    trace: Vec<f32>,
+    /// True while the lane Anderson-mixes.
+    mixing: bool,
+    /// Fitted forward contraction rate, EWMA-refreshed while forward.
+    rho_f: Option<f32>,
+    /// Observed Anderson speedup (decades/iter over forward).
+    speedup_obs: Option<f32>,
+    prev: Option<f32>,
+    /// True while the last emitted step was a mix — the safeguard judges
+    /// only mixed steps, never its own fallback step.
+    last_mixed: bool,
+    fwd_steps: usize,
+    safeguard_steps: u64,
+    switches: u64,
+    /// Iterations to wait before the next crossover (re)evaluation.
+    cooldown: usize,
+    /// Window depth chosen at the last switch to Anderson.
+    depth: usize,
+}
+
+impl AutoPolicy {
+    /// Auto controller with the library-default prior.
+    pub fn new(spec: &SolveSpec) -> Self {
+        Self::with_prior(spec, WorkloadPrior::default())
+    }
+
+    /// Auto controller seeded from a learned per-bucket prior (the
+    /// scheduler's admission path — see [`ProfileStore::prior`]).
+    pub fn with_prior(spec: &SolveSpec, prior: WorkloadPrior) -> Self {
+        Self {
+            tol: spec.tol,
+            max_window: spec.window.max(1),
+            damping: spec.damping,
+            rule: spec.adaptive_window.then(|| WindowRule::from_spec(spec)),
+            prior,
+            trace: Vec::new(),
+            mixing: false,
+            rho_f: None,
+            speedup_obs: None,
+            prev: None,
+            last_mixed: false,
+            fwd_steps: 0,
+            safeguard_steps: 0,
+            switches: 0,
+            cooldown: PROBE_ITERS,
+            depth: spec.window.max(2),
+        }
+    }
+
+    /// Switch decisions taken so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// True while the lane Anderson-mixes.
+    pub fn is_mixing(&self) -> bool {
+        self.mixing
+    }
+
+    /// Safeguarded (post-mix fallback) steps taken so far.
+    pub fn safeguard_steps(&self) -> u64 {
+        self.safeguard_steps
+    }
+
+    /// Crossover prediction at residual `rel` given the fitted forward
+    /// rate: `Some(depth)` when the lane should mix (with the window
+    /// depth to mix at), `None` when forward is the cheaper side.
+    fn crossover(&self, rel: f32, rho: f32) -> Option<usize> {
+        let d_rem = (rel / self.tol).max(1.0).log10();
+        // Decades left ≘ the deepest useful window: each slot roughly
+        // buys one order of residual structure, so a lane two decades
+        // from tol has no use for a 10-deep window.
+        let depth =
+            (d_rem.ceil() as usize).clamp(2, self.max_window.max(2));
+        if rho >= DIVERGENCE_RHO {
+            // Forward iteration is not contracting — mixing is the only
+            // side of the crossover that terminates.
+            return Some(depth);
+        }
+        if d_rem <= 0.0 {
+            return None;
+        }
+        let df = -rho.max(1e-2).log10();
+        let s = self.prior.anderson_speedup.max(1.01);
+        let p = self.prior.mixing_penalty.max(1.0);
+        let cost_f = d_rem / df;
+        let cost_a = p * (depth as f32 + d_rem / (s * df));
+        (cost_a < cost_f).then_some(depth)
+    }
+
+    /// A plain damped forward step on the spec's schedule.
+    fn forward_step(&mut self) -> LaneStep {
+        let beta = self.damping.beta(self.fwd_steps);
+        self.fwd_steps += 1;
+        LaneStep::Forward { beta }
+    }
+}
+
+impl SolvePolicy for AutoPolicy {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Auto
+    }
+
+    fn uses_history(&self) -> bool {
+        true
+    }
+
+    fn reset(&mut self) {
+        self.trace.clear();
+        self.mixing = false;
+        self.rho_f = None;
+        self.speedup_obs = None;
+        self.prev = None;
+        self.last_mixed = false;
+        self.fwd_steps = 0;
+        self.safeguard_steps = 0;
+        self.switches = 0;
+        self.cooldown = PROBE_ITERS;
+        self.depth = self.max_window.max(2);
+    }
+
+    fn observe(&mut self, rel: f32) -> LaneStep {
+        let prev = self.prev.replace(rel);
+        let rose = prev.map(|p| rel > p).unwrap_or(false);
+        if self.mixing && self.last_mixed && rose {
+            // Safeguard (Stable Anderson Acceleration): the mixed step
+            // regressed — one plain damped step from the newest iterate,
+            // window kept, then mixing resumes.
+            self.trace.push(rel);
+            self.last_mixed = false;
+            self.safeguard_steps += 1;
+            return self.forward_step();
+        }
+        self.trace.push(rel);
+        self.cooldown = self.cooldown.saturating_sub(1);
+        if self.mixing {
+            // Judge the mixed regime once the window is warm: the
+            // observed speedup must beat the mixing penalty, or the lane
+            // crosses back to forward steps.
+            if self.cooldown == 0 && self.trace.len() >= PROBE_ITERS {
+                let tail = &self.trace[self.trace.len() - PROBE_ITERS..];
+                if let (Some(rho_a), Some(rho_f)) =
+                    (fit_rate(tail), self.rho_f)
+                {
+                    let da = -rho_a.min(0.9999).log10();
+                    let df = -rho_f.clamp(1e-2, 0.9999).log10();
+                    let s_obs = (da / df).max(0.0);
+                    self.speedup_obs = Some(s_obs);
+                    if s_obs < self.prior.mixing_penalty.max(1.0)
+                        && self.switches < MAX_SWITCHES
+                    {
+                        self.mixing = false;
+                        self.last_mixed = false;
+                        self.switches += 1;
+                        self.trace.clear();
+                        self.trace.push(rel);
+                        self.cooldown = PROBE_ITERS;
+                        return self.forward_step();
+                    }
+                    self.cooldown = PROBE_ITERS;
+                }
+            }
+            self.last_mixed = true;
+            return LaneStep::Mix;
+        }
+        // Forward side (probe or post-switch-back): keep the rate fit
+        // fresh and re-evaluate the crossover once per cooldown window.
+        if self.trace.len() >= 2 {
+            if let Some(fit) =
+                fit_rate(&self.trace[self.trace.len().saturating_sub(PROBE_ITERS)..])
+            {
+                self.rho_f = Some(match self.rho_f {
+                    // EWMA refresh: early fits are noisy, late fits see
+                    // the asymptotic rate.
+                    Some(r) => r + 0.5 * (fit - r),
+                    None => fit,
+                });
+            }
+        }
+        if self.cooldown == 0 && self.switches < MAX_SWITCHES {
+            if let Some(rho) = self.rho_f {
+                if let Some(depth) = self.crossover(rel, rho) {
+                    self.mixing = true;
+                    self.last_mixed = true;
+                    self.switches += 1;
+                    self.depth = depth;
+                    self.trace.clear();
+                    self.trace.push(rel);
+                    // Hold judgment until the chosen window is warm.
+                    self.cooldown = depth + 1;
+                    return LaneStep::Mix;
+                }
+            }
+            self.cooldown = 1;
+        }
+        self.forward_step()
+    }
+
+    fn window_rule(&self) -> Option<WindowRule> {
+        if self.mixing {
+            self.rule
+        } else {
+            None
+        }
+    }
+
+    fn window_depth(&self) -> Option<usize> {
+        self.mixing.then_some(self.depth)
+    }
+
+    fn auto_stats(&self) -> Option<AutoStats> {
+        Some(AutoStats {
+            switches: self.switches,
+            active: if self.mixing {
+                SolverKind::Anderson
+            } else {
+                SolverKind::Forward
+            },
+            decay_rate: self.rho_f,
+            anderson_speedup: self.speedup_obs,
+            window_depth: self.mixing.then_some(self.depth),
+        })
+    }
+}
+
+/// One EWMA gauge: first observation seeds, later ones blend at a fixed
+/// rate.  Non-finite observations are dropped.
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    v: f32,
+    n: u64,
+}
+
+impl Ewma {
+    const ALPHA: f32 = 0.2;
+
+    fn push(&mut self, x: f32) {
+        if !x.is_finite() {
+            return;
+        }
+        self.n += 1;
+        if self.n == 1 {
+            self.v = x;
+        } else {
+            self.v += Self::ALPHA * (x - self.v);
+        }
+    }
+
+    fn get(&self) -> Option<f32> {
+        (self.n > 0).then_some(self.v)
+    }
+}
+
+/// What the router has learned about one bucket's workload: EWMAs over
+/// retired lanes plus per-kind retirement counts.  Snapshot-visible via
+/// TCP `stats`; prior-visible via [`ProfileStore::prior`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkloadProfile {
+    decay: Ewma,
+    speedup: Ewma,
+    iters: Ewma,
+    fevals: Ewma,
+    /// EWMA wallclock per lane-iteration of forward-only iterations.
+    cost_fwd: Ewma,
+    /// EWMA wallclock per lane-iteration of iterations that mixed.
+    cost_mix: Ewma,
+    /// Retired lanes observed.
+    pub lanes: u64,
+    /// Switch decisions accumulated from retired Auto lanes.
+    pub switches: u64,
+    /// Per-kind retirement counts, [`SolverKind::ALL`] order.
+    pub retired: [u64; 4],
+    /// Auto lanes that retired on the Anderson side of the crossover.
+    pub auto_on_anderson: u64,
+}
+
+impl WorkloadProfile {
+    /// Learned forward contraction rate, if any Auto lane reported one.
+    pub fn decay_rate(&self) -> Option<f32> {
+        self.decay.get()
+    }
+
+    /// Learned Anderson speedup (decades/iter over forward).
+    pub fn anderson_speedup(&self) -> Option<f32> {
+        self.speedup.get()
+    }
+
+    /// Live mixing penalty: measured mixed-iteration cost over
+    /// forward-only iteration cost — the `mixing_penalty` of
+    /// [`analyze`](crate::solver::crossover::analyze), measured on the
+    /// serving loop instead of offline traces.
+    pub fn mixing_penalty(&self) -> Option<f32> {
+        match (self.cost_mix.get(), self.cost_fwd.get()) {
+            (Some(m), Some(f)) if f > 0.0 => Some(m / f),
+            _ => None,
+        }
+    }
+
+    /// Mean iterations to retire a lane.
+    pub fn mean_iters(&self) -> Option<f32> {
+        self.iters.get()
+    }
+
+    /// Mean cell evaluations to retire a lane.
+    pub fn mean_fevals(&self) -> Option<f32> {
+        self.fevals.get()
+    }
+
+    /// The prior this profile seeds new Auto lanes with: learned values
+    /// where available, library defaults elsewhere.  The penalty is
+    /// floored at 1 — a measurement below 1 means timing noise, not a
+    /// free Anderson step.
+    pub fn prior(&self) -> WorkloadPrior {
+        let d = WorkloadPrior::default();
+        WorkloadPrior {
+            decay_rate: self.decay.get().unwrap_or(d.decay_rate),
+            mixing_penalty: self
+                .mixing_penalty()
+                .map(|p| p.max(1.0))
+                .unwrap_or(d.mixing_penalty),
+            anderson_speedup: self
+                .speedup
+                .get()
+                .map(|s| s.max(1.01))
+                .unwrap_or(d.anderson_speedup),
+        }
+    }
+}
+
+fn kind_index(kind: SolverKind) -> usize {
+    SolverKind::ALL
+        .iter()
+        .position(|&k| k == kind)
+        .expect("SolverKind::ALL covers every kind")
+}
+
+/// The router-side learning layer: per-bucket [`WorkloadProfile`]s
+/// behind one mutex, shared (via `Arc`) between the replica schedulers
+/// (writers) and the TCP `stats` path (readers).
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    buckets: Mutex<BTreeMap<usize, WorkloadProfile>>,
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<usize, WorkloadProfile>> {
+        // A poisoned profile map only ever holds finished EWMA updates —
+        // recover the data rather than cascading the panic.
+        self.buckets.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The prior a new Auto lane in `bucket` should start from (library
+    /// defaults until the bucket has retired lanes).
+    pub fn prior(&self, bucket: usize) -> WorkloadPrior {
+        self.lock()
+            .get(&bucket)
+            .map(WorkloadProfile::prior)
+            .unwrap_or_default()
+    }
+
+    /// Record one retired lane: kind histogram, iters/fevals EWMAs, and
+    /// (for Auto lanes) the controller's fitted rate, observed speedup
+    /// and switch outcomes.
+    pub fn record_retirement(
+        &self,
+        bucket: usize,
+        kind: SolverKind,
+        iters: usize,
+        fevals: usize,
+        auto: Option<AutoStats>,
+    ) {
+        let mut map = self.lock();
+        let p = map.entry(bucket).or_default();
+        p.lanes += 1;
+        p.retired[kind_index(kind)] += 1;
+        p.iters.push(iters as f32);
+        p.fevals.push(fevals as f32);
+        if let Some(a) = auto {
+            p.switches += a.switches;
+            if a.active == SolverKind::Anderson {
+                p.auto_on_anderson += 1;
+            }
+            if let Some(r) = a.decay_rate {
+                p.decay.push(r);
+            }
+            if let Some(s) = a.anderson_speedup {
+                p.speedup.push(s);
+            }
+        }
+    }
+
+    /// Record one scheduler iteration's measured cost: `secs_per_lane`
+    /// wallclock divided by occupied lanes, attributed to the mixed or
+    /// forward-only cost EWMA.  The ratio of the two is the bucket's
+    /// live mixing penalty.
+    pub fn record_iteration_cost(
+        &self,
+        bucket: usize,
+        mixed: bool,
+        secs_per_lane: f64,
+    ) {
+        let mut map = self.lock();
+        let p = map.entry(bucket).or_default();
+        let cost = secs_per_lane as f32;
+        if mixed {
+            p.cost_mix.push(cost);
+        } else {
+            p.cost_fwd.push(cost);
+        }
+    }
+
+    /// Snapshot every bucket's profile (bucket-ascending) for stats.
+    pub fn snapshot(&self) -> Vec<(usize, WorkloadProfile)> {
+        self.lock().iter().map(|(&b, &p)| (b, p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn auto_spec(tol: f32, window: usize) -> SolveSpec {
+        SolveSpec { tol, window, ..SolveSpec::new(SolverKind::Auto) }
+    }
+
+    #[test]
+    fn fit_rate_recovers_geometric_decay() {
+        let trace: Vec<f32> = (0..6).map(|k| 0.5f32.powi(k)).collect();
+        let rho = fit_rate(&trace).unwrap();
+        assert!((rho - 0.5).abs() < 1e-3, "rho = {rho}");
+        assert!(fit_rate(&[1.0]).is_none());
+        assert!(fit_rate(&[]).is_none());
+        // Non-finite and non-positive points are skipped, not fatal.
+        let rho = fit_rate(&[1.0, f32::NAN, 0.0, 4.0, 2.0]).unwrap();
+        assert!((rho - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn probe_steps_are_forward() {
+        // Easy decay close to tol: the whole probe (and beyond) stays on
+        // the forward side, and the probe leaves a fitted rate behind.
+        let mut p = AutoPolicy::new(&auto_spec(1e-1, 5));
+        assert_eq!(p.kind(), SolverKind::Auto);
+        assert!(p.uses_history());
+        for k in 0..PROBE_ITERS {
+            let step = p.observe(0.5f32.powi(k as i32));
+            assert_eq!(step, LaneStep::Forward { beta: 1.0 }, "probe {k}");
+        }
+        let rho = p.auto_stats().unwrap().decay_rate.unwrap();
+        assert!((rho - 0.5).abs() < 0.05, "fitted rho = {rho}");
+    }
+
+    #[test]
+    fn easy_lane_stays_forward() {
+        // Fast decay, one decade to tol: the penalty never amortizes.
+        let mut p = AutoPolicy::new(&auto_spec(1e-1, 5));
+        for k in 0..12 {
+            let step = p.observe(0.5f32.powi(k));
+            assert!(
+                matches!(step, LaneStep::Forward { .. }),
+                "iter {k} switched: {step:?}"
+            );
+        }
+        assert_eq!(p.switches(), 0);
+        assert!(p.auto_stats().unwrap().window_depth.is_none());
+    }
+
+    #[test]
+    fn stiff_lane_crosses_to_anderson_with_bounded_depth() {
+        // Slow decay, six decades to tol: Anderson side of Fig. 1.
+        let mut p = AutoPolicy::new(&auto_spec(1e-6, 5));
+        let mut mixed_at = None;
+        for k in 0..20 {
+            if p.observe(0.99f32.powi(k)).mixes() {
+                mixed_at = Some(k);
+                break;
+            }
+        }
+        let k = mixed_at.expect("stiff lane never crossed to Anderson");
+        // The first crossover decision lands on observation PROBE_ITERS
+        // (index PROBE_ITERS − 1): never earlier.
+        assert!(k as usize >= PROBE_ITERS - 1, "switched inside the probe");
+        assert_eq!(p.switches(), 1);
+        let stats = p.auto_stats().unwrap();
+        assert_eq!(stats.active, SolverKind::Anderson);
+        let depth = stats.window_depth.unwrap();
+        assert!((2..=5).contains(&depth), "depth {depth} out of range");
+    }
+
+    #[test]
+    fn diverging_probe_forces_anderson() {
+        let mut p = AutoPolicy::new(&auto_spec(1e-3, 4));
+        let mut mixed = false;
+        for k in 0..10 {
+            // Residual growing: forward will never converge.
+            if p.observe(1.0 + 0.1 * k as f32).mixes() {
+                mixed = true;
+                break;
+            }
+        }
+        assert!(mixed, "non-contracting lane never switched to Anderson");
+    }
+
+    #[test]
+    fn post_mix_rise_takes_safeguarded_step_and_resumes() {
+        let mut p = AutoPolicy::new(&auto_spec(1e-6, 5));
+        let mut rel = 1.0f32;
+        // Drive to the Anderson side.
+        while !p.observe(rel).mixes() {
+            rel *= 0.99;
+        }
+        // A mixed step that regresses: plain damped step, window kept.
+        assert_eq!(p.observe(rel * 1.5), LaneStep::Forward { beta: 1.0 });
+        assert_eq!(p.safeguard_steps(), 1);
+        assert!(p.is_mixing(), "safeguard must not leave the mixed phase");
+        // The safeguard never judges its own step.
+        assert!(p.observe(rel * 1.6).mixes());
+    }
+
+    #[test]
+    fn unproductive_mixing_switches_back_to_forward() {
+        let mut p = AutoPolicy::new(&auto_spec(1e-6, 4));
+        let mut rel = 1.0f32;
+        while !p.observe(rel).mixes() {
+            rel *= 0.99;
+        }
+        // Anderson delivers no speedup at all: a slowly *decaying* flat
+        // trajectory (never rising, so the safeguard stays out of the
+        // way) whose rate matches plain forward.
+        let mut back = false;
+        for _ in 0..3 * PROBE_ITERS + p.depth {
+            rel *= 0.995;
+            if !p.observe(rel).mixes() {
+                back = true;
+                break;
+            }
+        }
+        assert!(back, "unproductive mixing never crossed back");
+        assert!(!p.is_mixing());
+        assert_eq!(p.switches(), 2);
+    }
+
+    #[test]
+    fn switch_count_is_capped() {
+        let mut p = AutoPolicy::new(&auto_spec(1e-6, 4));
+        // An adversarial trajectory that keeps re-crossing: slow decay
+        // everywhere, so forward always wants Anderson and mixing never
+        // delivers speedup.
+        let mut rel = 1.0f32;
+        for _ in 0..400 {
+            rel *= 0.999;
+            p.observe(rel);
+        }
+        assert!(p.switches() <= MAX_SWITCHES);
+    }
+
+    #[test]
+    fn reset_rearms_the_probe_and_keeps_the_prior() {
+        let prior = WorkloadPrior {
+            decay_rate: 0.95,
+            mixing_penalty: 2.0,
+            anderson_speedup: 6.0,
+        };
+        let mut p = AutoPolicy::with_prior(&auto_spec(1e-6, 5), prior);
+        let mut rel = 1.0f32;
+        while !p.observe(rel).mixes() {
+            rel *= 0.99;
+        }
+        assert!(p.switches() > 0);
+        p.reset();
+        assert_eq!(p.switches(), 0);
+        assert!(!p.is_mixing());
+        assert_eq!(p.prior, prior);
+        assert_eq!(p.observe(1.0), LaneStep::Forward { beta: 1.0 });
+    }
+
+    #[test]
+    fn profile_store_learns_and_seeds_priors() {
+        let store = ProfileStore::new();
+        // Unseen bucket: library defaults.
+        assert_eq!(store.prior(8), WorkloadPrior::default());
+        // Iteration costs: mixed iterations cost 2x forward ones.
+        for _ in 0..8 {
+            store.record_iteration_cost(8, false, 1e-4);
+            store.record_iteration_cost(8, true, 2e-4);
+        }
+        let auto = AutoStats {
+            switches: 1,
+            active: SolverKind::Anderson,
+            decay_rate: Some(0.97),
+            anderson_speedup: Some(5.0),
+            window_depth: Some(3),
+        };
+        store.record_retirement(8, SolverKind::Auto, 30, 31, Some(auto));
+        store.record_retirement(8, SolverKind::Anderson, 12, 13, None);
+        let prior = store.prior(8);
+        assert!((prior.decay_rate - 0.97).abs() < 1e-6);
+        assert!((prior.mixing_penalty - 2.0).abs() < 1e-2);
+        assert!((prior.anderson_speedup - 5.0).abs() < 1e-6);
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 1);
+        let (bucket, profile) = snap[0];
+        assert_eq!(bucket, 8);
+        assert_eq!(profile.lanes, 2);
+        assert_eq!(profile.switches, 1);
+        assert_eq!(profile.auto_on_anderson, 1);
+        assert_eq!(profile.retired[kind_index(SolverKind::Auto)], 1);
+        assert_eq!(profile.retired[kind_index(SolverKind::Anderson)], 1);
+        assert_eq!(profile.retired[kind_index(SolverKind::Forward)], 0);
+        assert!(profile.mean_iters().unwrap() > 0.0);
+        assert!(profile.mean_fevals().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn profile_penalty_is_floored_at_one_in_the_prior() {
+        let store = ProfileStore::new();
+        // Timing noise put the mixed cost *below* forward: the prior
+        // must not report a sub-1 penalty (a free Anderson step).
+        store.record_iteration_cost(0, false, 2e-4);
+        store.record_iteration_cost(0, true, 1e-4);
+        assert!(store.snapshot()[0].1.mixing_penalty().unwrap() < 1.0);
+        assert!(store.prior(0).mixing_penalty >= 1.0);
+    }
+}

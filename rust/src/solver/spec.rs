@@ -760,9 +760,17 @@ mod tests {
 
     #[test]
     fn defaults_validate() {
-        for kind in [SolverKind::Forward, SolverKind::Anderson, SolverKind::Hybrid] {
+        for kind in SolverKind::ALL {
             SolveSpec::new(kind).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn auto_spec_roundtrips_through_json() {
+        let spec = SolveSpec::new(SolverKind::Auto);
+        let back = SolveSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.kind, SolverKind::Auto);
+        back.validate().unwrap();
     }
 
     #[test]

@@ -529,7 +529,7 @@ fn tcp_error_replies_are_golden() {
     let with = |extra: &str| format!("{{\"image\":[{zeros}],{extra}}}");
     assert_eq!(
         reply(&with("\"solver\":\"warp\"")),
-        "{\"error\":\"unknown solver 'warp' (expected forward|anderson|hybrid)\"}"
+        "{\"error\":\"unknown solver 'warp' (expected forward|anderson|hybrid|auto)\"}"
     );
     assert_eq!(
         reply(&with("\"solver\":7")),
@@ -1206,7 +1206,77 @@ fn stats_reply_is_structured_json() {
         .map(|g| g.get("served").and_then(Json::as_f64).unwrap())
         .sum();
     assert_eq!(served_total, 1.0);
+    // Auto-selection observability: the switch counter, the per-kind
+    // retirement histogram (this one request retired under the router's
+    // default anderson spec), and the learned-profile array.
+    assert_eq!(v.get("auto_switches").and_then(Json::as_f64), Some(0.0));
+    let retired = v.get("retired_by_kind").expect("retired_by_kind");
+    assert_eq!(retired.get("anderson").and_then(Json::as_f64), Some(1.0));
+    for kind in ["forward", "hybrid", "auto"] {
+        assert_eq!(retired.get(kind).and_then(Json::as_f64), Some(0.0));
+    }
+    let profiles =
+        v.get("workload_profiles").and_then(Json::as_arr).expect("profiles");
+    assert!(!profiles.is_empty(), "retired lane recorded no profile");
+    let p = &profiles[0];
+    assert!(p.get("bucket").and_then(Json::as_f64).is_some());
+    assert_eq!(p.get("lanes").and_then(Json::as_f64), Some(1.0));
+    assert!(p.get("mean_iters").and_then(Json::as_f64).unwrap() > 0.0);
     // The legacy blob survives for old scrapers.
     let summary = v.get("summary").and_then(Json::as_str).expect("summary");
     assert!(summary.contains("served="), "summary blob drifted: {summary}");
+}
+
+/// End-to-end auto-selection: a `"solver":"auto"` override is accepted
+/// at the door, solved by the per-lane crossover controller, echoed back
+/// as `auto`, and its learning shows up in `stats` — switch decisions
+/// (a stiff near-linear input forces the forward→Anderson crossover)
+/// and the per-bucket learned prior fields.
+#[test]
+fn auto_solver_end_to_end_switches_and_learns() {
+    let (router, dim) = make_router(5, SchedMode::IterationLevel);
+    let (data, _, _) = data::load_auto(8, 8, 5);
+    let auto = SolveOverrides {
+        kind: Some(SolverKind::Auto),
+        tol: Some(1e-5),
+        max_iter: Some(300),
+        ..SolveOverrides::default()
+    };
+    // Stiff sample: small amplitude keeps the tanh cell near its linear
+    // regime, so plain forward iteration crawls at the cell's spectral
+    // radius and the controller must cross over to Anderson.
+    let stiff = router
+        .infer_blocking_with(scaled(data.image(0), 0.03), &auto)
+        .unwrap();
+    assert_eq!(stiff.spec.kind, SolverKind::Auto, "spec echo lost the kind");
+    assert!(stiff.converged, "auto failed to converge a stiff lane");
+    // Easy sample: saturated cell, converges in a handful of forward
+    // steps — no reason to ever pay the mixing penalty.
+    let easy = router
+        .infer_blocking_with(scaled(data.image(1), 3.0), &auto)
+        .unwrap();
+    assert!(easy.converged);
+    assert!(
+        easy.solver_iters < stiff.solver_iters,
+        "easy lane ({} iters) should retire before stiff ({} iters)",
+        easy.solver_iters,
+        stiff.solver_iters
+    );
+
+    let v = tcp::process_line(&router, dim, "{\"cmd\":\"stats\"}");
+    let switches = v.get("auto_switches").and_then(Json::as_f64).unwrap();
+    assert!(switches >= 1.0, "stiff auto lane never crossed over: {v:?}");
+    let retired = v.get("retired_by_kind").expect("retired_by_kind");
+    assert_eq!(retired.get("auto").and_then(Json::as_f64), Some(2.0));
+    let profiles =
+        v.get("workload_profiles").and_then(Json::as_arr).expect("profiles");
+    let learned = profiles.iter().find(|p| {
+        p.get("switches").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0
+    });
+    let p = learned.expect("no bucket profile recorded the switch");
+    // Auto retirements feed the prior: a fitted decay rate in (0, 1)
+    // (the probe saw a contraction) and a positive mean-iters estimate.
+    let rate = p.get("decay_rate").and_then(Json::as_f64).unwrap();
+    assert!(rate > 0.0 && rate < 1.0, "learned decay rate {rate} not in (0,1)");
+    assert!(p.get("mean_iters").and_then(Json::as_f64).unwrap() > 0.0);
 }
